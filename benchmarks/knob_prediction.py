@@ -1,0 +1,73 @@
+"""Paper Fig. 8 analogue: knob-prediction quality on random GEMMs.
+
+Train the 1-NN model on a shape lattice (paper: 1573 autotuned configs; we
+use a coarser lattice — same method), then evaluate on 100 random shapes:
+
+  autotune     exhaustive argmin over the (K_layers, k_block_factor) grid
+               under the exact simulator  (ground truth)
+  analytical   paper SSIII-C method 2
+  nn           paper SSIII-C method 3
+
+Reported: geometric-mean slowdown vs autotuned (paper: within 3-7%).
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.perf_model import (
+    NearestNeighborModel,
+    choose_knobs_analytical,
+    choose_knobs_autotune,
+)
+
+
+def run(n_workers: int = 256, n_eval: int = 40, seed: int = 0):
+    # training lattice (coarse version of the paper's 1573-point cuboid)
+    lattice = [
+        (m, n, k)
+        for m in (512, 1024, 2048, 4096, 8192, 16384)
+        for n in (512, 1024, 4096, 16384)
+        for k in (512, 2048, 8192)
+    ]
+    nn = NearestNeighborModel().fit_autotuned(lattice, n_workers)
+
+    rng = np.random.default_rng(seed)
+    slow_an, slow_nn = [], []
+    for i in range(n_eval):
+        m, n, k = (int(2 ** rng.uniform(9, 14)) // 256 * 256 or 256 for _ in range(3))
+        best, sweep = choose_knobs_autotune(m, n, k, n_workers)
+        t_best = sweep[best]
+        c_a, kbf_a = choose_knobs_analytical(m, n, k, n_workers)
+        t_an = sweep.get((c_a, kbf_a))
+        if t_an is None:
+            t_an = choose_knobs_autotune(m, n, k, n_workers, candidates_c=(c_a,), candidates_kbf=(kbf_a,))[1][(c_a, kbf_a)]
+        pred = nn.predict(m, n, k)
+        t_nn = sweep.get(pred, t_best)
+        slow_an.append(t_an / t_best)
+        slow_nn.append(t_nn / t_best)
+        if i < 10:
+            emit(
+                f"knob_prediction/{m}x{n}x{k}",
+                t_best * 1e6,
+                f"auto={best};analytical=({c_a},{kbf_a}):{t_an/t_best:.3f};"
+                f"nn={pred}:{t_nn/t_best:.3f}",
+            )
+    gm = lambda xs: float(np.exp(np.mean(np.log(xs))))
+    emit(
+        "knob_prediction/SUMMARY",
+        0.0,
+        f"analytical_geomean_slowdown={gm(slow_an):.3f};"
+        f"nn_geomean_slowdown={gm(slow_nn):.3f};n={n_eval}",
+    )
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

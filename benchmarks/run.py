@@ -1,0 +1,27 @@
+"""Benchmark runner — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows."""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (
+        data_movement,
+        distributed_gemm,
+        gemm_sweep,
+        knob_prediction,
+        llm_prefill,
+    )
+
+    print("name,us_per_call,derived")
+    gemm_sweep.main()        # paper Figs. 1 / 6 / 9
+    data_movement.main()     # paper Fig. 7
+    knob_prediction.main()   # paper Fig. 8
+    llm_prefill.main()       # paper Fig. 10
+    distributed_gemm.main()  # paper Fig. 11
+
+
+if __name__ == "__main__":
+    main()

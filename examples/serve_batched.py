@@ -1,0 +1,45 @@
+"""Serve a small model with batched requests through the continuous-batching
+engine, comparing GEMM backends (the paper's SSIV-D case study shape).
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import numpy as np
+import jax
+
+from repro.configs import get_config
+from repro.models.registry import build_model
+from repro.serving.engine import ServingEngine
+
+
+def main():
+    cfg = get_config("stablelm-1.6b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    # mixed prompt lengths exercise the batching scheduler
+    prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+               for n in (16, 16, 16, 24, 24, 8, 8, 8, 8)]
+
+    for backend in ("xla", "sfc_pallas"):
+        engine = ServingEngine(
+            cfg, params, max_batch=4, max_seq=64, gemm_backend=backend
+        )
+        reqs = engine.submit_many(prompts, max_new_tokens=8)
+        done = engine.run(reqs)
+        rep = engine.latency_report(done)
+        print(
+            f"[{backend:12s}] {rep['n_requests']} reqs  "
+            f"ttft {rep['ttft_mean_s']*1e3:7.1f} ms  "
+            f"{rep['tokens_per_s']:8.1f} tok/s"
+        )
+        if backend == "xla":
+            ref = [r.output for r in done]
+        else:
+            assert [r.output for r in done] == ref, "backends must agree"
+    print("outputs identical across backends — SFC-CA backend verified")
+
+
+if __name__ == "__main__":
+    main()

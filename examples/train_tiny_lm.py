@@ -1,0 +1,76 @@
+"""End-to-end driver: train a ~100M-parameter dense LM for a few hundred
+steps with checkpointing and fault tolerance, showing a decreasing loss.
+
+  PYTHONPATH=src python examples/train_tiny_lm.py [--steps 300]
+
+This is the deliverable-(b) end-to-end example: real config system, data
+pipeline, AdamW with schedule, atomic checkpoints + auto-resume.  On a mesh
+the same code path shards via --data-parallel/--model-parallel (see
+repro/launch/train.py, which this wraps).
+"""
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_config
+from repro.launch.train import build_trainer
+from repro.train.checkpoint import CheckpointManager
+from repro.train.fault_tolerance import StepWatchdog, TrainLoop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_tiny_lm")
+    args = ap.parse_args()
+    # NOTE: ~100M params x batch 16 x seq 128 is ~1.2 TFLOP/step — minutes
+    # per step on CPU. For a quick CPU demo use --batch 4 --seq 32.
+
+    # ~100M params: 15 layers, d=768, ff=2048.  Vocab 2048 (not 32k) so the
+    # synthetic affine token map is coverable by a few hundred CPU-scale
+    # steps — the point of the demo is the end-to-end loop, checkpointing
+    # and a visibly decreasing loss.
+    cfg = dataclasses.replace(
+        get_config("yi_6b"),
+        n_layers=15,
+        d_model=768,
+        n_heads=12,
+        kv_heads=4,
+        head_dim=64,
+        d_ff=2048,
+        vocab=2048,
+        q_chunk=64,
+        k_chunk=64,
+        param_dtype="float32",
+    )
+    per_layer = 768 * 12 * 64 + 2 * 768 * 4 * 64 + 12 * 64 * 768 + 3 * 768 * 2048
+    n_params = 15 * per_layer + 2 * 2048 * 768
+    print(f"model: ~{n_params/1e6:.0f}M params")
+
+    params, opt, step, batch_fn = build_trainer(
+        cfg, batch=args.batch, seq=args.seq, lr=1e-3, total_steps=args.steps,
+        remat="none",
+    )
+    loop = TrainLoop(
+        train_step=step,
+        batch_fn=batch_fn,
+        ckpt=CheckpointManager(args.ckpt_dir, interval=100),
+        watchdog=StepWatchdog(),
+    )
+    params, opt, history = loop.run(
+        params, opt, num_steps=args.steps, resume=True, log_every=25
+    )
+    import numpy as np
+
+    first = float(np.mean([l for _, l in history[:10]]))
+    last = float(np.mean([l for _, l in history[-10:]]))
+    print(f"loss (10-step means): {first:.3f} -> {last:.3f} over {len(history)} steps")
+    assert last < first - 0.2, "training must reduce loss"
+
+
+if __name__ == "__main__":
+    main()

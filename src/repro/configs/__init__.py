@@ -1,0 +1,35 @@
+"""Assigned-architecture configs (public literature; see each module's
+source tag) + the paper's own GEMM-shape config."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES
+
+ARCH_IDS = [
+    "xlstm_1_3b",
+    "stablelm_1_6b",
+    "qwen3_4b",
+    "qwen2_72b",
+    "yi_6b",
+    "seamless_m4t_medium",
+    "zamba2_1_2b",
+    "olmoe_1b_7b",
+    "qwen3_moe_30b_a3b",
+    "qwen2_vl_72b",
+]
+
+# hyphenated aliases (CLI --arch accepts both)
+ALIASES = {i.replace("_", "-"): i for i in ARCH_IDS}
+
+
+def get_config(name: str) -> ArchConfig:
+    mod_name = name.replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ArchConfig]:
+    return {n: get_config(n) for n in ARCH_IDS}

@@ -1,0 +1,10 @@
+"""The paper's own benchmark shape set (SS IV-A): the 125-shape cross product
+of M, N, K from {512, 1024, 2048, 4096, 8192} plus the two Fig.-7 L2-miss
+study shapes."""
+
+import itertools
+
+DIMS = (512, 1024, 2048, 4096, 8192)
+GEMM_SHAPES = list(itertools.product(DIMS, DIMS, DIMS))
+FIG7_SHAPES = [(4096, 1024, 4096), (4096, 8192, 4096)]
+KNOB_GRID = {"k_layers": (1, 2, 4, 8), "k_block_factor": (1, 2, 4, 8)}

@@ -1,0 +1,69 @@
+"""Pluggable GEMM backend for model projections (paper SSIV-D integration).
+
+The paper swaps the GEMM backend of an LLM inference stack (oneDNN /
+PARLOOPER / SFC-CA); here `matmul()` is the single call-site all dense
+projections in `repro.models` go through, and the active backend is a
+contextvar:
+
+  "xla"            jnp.dot — default; what the distributed dry-runs compile
+  "sfc_pallas"     the SFC-CA Pallas kernel (Mosaic on TPU, interpret on CPU)
+  "sfc_reference"  the Listing-1 pure-JAX reference
+
+Backend selection must be active *at trace time* (it changes the traced
+program).  Distribution note: the kernel backends are single-device
+primitives — inside pjit they apply per-shard only when the contraction dim
+is unsharded; the serving/benchmark paths that use them are single-host,
+matching the paper's single-socket case study.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["gemm_backend", "current_backend", "matmul"]
+
+_BACKEND: contextvars.ContextVar[str] = contextvars.ContextVar(
+    "gemm_backend", default="xla"
+)
+
+
+@contextlib.contextmanager
+def gemm_backend(name: str):
+    if name not in ("xla", "sfc_pallas", "sfc_reference"):
+        raise ValueError(f"unknown gemm backend {name}")
+    tok = _BACKEND.set(name)
+    try:
+        yield
+    finally:
+        _BACKEND.reset(tok)
+
+
+def current_backend() -> str:
+    return _BACKEND.get()
+
+
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """(..., K) @ (K, N) through the active backend."""
+    name = _BACKEND.get()
+    if name == "xla" or w.ndim != 2:
+        return x @ w
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    if name == "sfc_pallas":
+        from repro.kernels.ops import sfc_matmul
+
+        out = sfc_matmul(x2, w)
+    else:
+        from repro.core.sfc_gemm import sfc_ca_gemm_reference
+
+        bm = 32 if x2.shape[0] % 32 == 0 else x2.shape[0]
+        bn = 32 if w.shape[1] % 32 == 0 else w.shape[1]
+        bk = 32 if k % 32 == 0 else k
+        out = sfc_ca_gemm_reference(x2, w, bm=bm, bn=bn, bk=bk)
+    return out.reshape(*lead, w.shape[1])

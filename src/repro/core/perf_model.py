@@ -1,0 +1,433 @@
+"""Performance models for SFC-CA GEMM (paper §III-B, §III-C).
+
+Three layers of modelling, all host-side (no tracing):
+
+1. ``HardwareModel`` — (γ, β) pairs per memory level.  The paper extracts γ
+   (cycles/flop with operands in fast memory) and β (cycles/byte from slow
+   memory) from microbenchmarks; we parameterize with TPU v5e data-sheet
+   numbers (197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI) and express
+   times in *seconds* instead of cycles.
+
+2. ``simulate_patch_traversal`` — an *exact* event-level simulator of one
+   worker traversing its SFC patch, classifying every BRGEMM invocation as
+   BRGEMM₀/₁/₂/₃ (paper eqs. 1-4) under a finite fast-memory (VMEM) panel
+   cache with LRU eviction.  This is the "measured" ground truth that the
+   cheap analytical model and the NN model are validated against
+   (benchmarks/knob_prediction.py ≙ paper Fig. 8).
+
+3. ``analytical_time`` / ``choose_knobs_analytical`` / ``NearestNeighborModel``
+   — the paper's closed-form roofline (infinite fast memory + capacity
+   heuristic for k_block_factor) and its two knob predictors.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.decomposition import (
+    Decomposition,
+    divisor_factorizations,
+    sfc_decompose,
+    words_moved,
+)
+
+__all__ = [
+    "HardwareModel",
+    "TPU_V5E",
+    "BRGemmCounts",
+    "simulate_patch_traversal",
+    "simulate_gemm",
+    "analytical_time",
+    "roofline_best_time",
+    "choose_knobs_analytical",
+    "choose_knobs_autotune",
+    "NearestNeighborModel",
+    "gemm_flops",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    """γ/β cost model (paper §III-B), in seconds.
+
+    gamma:      sec/FLOP with operands in fast memory (1 / peak throughput)
+    beta:       sec/byte read from slow memory (1 / bandwidth)
+    fast_bytes: per-worker fast memory capacity (paper: L2; here: VMEM)
+    name:       label for reports
+    """
+
+    name: str
+    gamma: float
+    beta: float
+    fast_bytes: int
+    # chip-level network (used by the distributed CA model)
+    ici_beta: float = 0.0
+
+    @property
+    def peak_flops(self) -> float:
+        return 1.0 / self.gamma
+
+    @property
+    def mem_bw(self) -> float:
+        return 1.0 / self.beta
+
+    @property
+    def machine_balance(self) -> float:
+        """FLOP/byte needed to be compute bound."""
+        return self.beta / self.gamma
+
+
+# TPU v5e, per task spec: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/ICI-link,
+# 128 MiB VMEM (we budget 0.75 of it for panel residency, mirroring the
+# paper's "within a fraction (e.g. 0.5) of the per core L2 cache").
+TPU_V5E = HardwareModel(
+    name="tpu_v5e",
+    gamma=1.0 / 197e12,
+    beta=1.0 / 819e9,
+    fast_bytes=int(128 * 2**20 * 0.75),
+    ici_beta=1.0 / 50e9,
+)
+
+
+def gemm_flops(M: int, N: int, K: int) -> float:
+    return 2.0 * M * N * K
+
+
+@dataclasses.dataclass
+class BRGemmCounts:
+    """BRGEMM invocation census for one worker (paper §III-B taxonomy)."""
+
+    brgemm0: int = 0  # A and B both from slow memory
+    brgemm1: int = 0  # only A from slow memory
+    brgemm2: int = 0  # only B from slow memory
+    brgemm3: int = 0  # both resident in fast memory
+    time: float = 0.0  # modeled seconds on this worker's critical path
+    slow_bytes: float = 0.0  # bytes read from slow memory (A/B panels)
+
+    @property
+    def total(self) -> int:
+        return self.brgemm0 + self.brgemm1 + self.brgemm2 + self.brgemm3
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "brgemm0": self.brgemm0,
+            "brgemm1": self.brgemm1,
+            "brgemm2": self.brgemm2,
+            "brgemm3": self.brgemm3,
+            "time_s": self.time,
+            "slow_bytes": self.slow_bytes,
+        }
+
+
+class _PanelCache:
+    """LRU over (kind, row/col, k_chunk) panels with a byte budget."""
+
+    def __init__(self, capacity_bytes: int):
+        self.capacity = capacity_bytes
+        self.used = 0
+        self._lru: "OrderedDict[Tuple, int]" = OrderedDict()
+
+    def hit(self, key: Tuple) -> bool:
+        if key in self._lru:
+            self._lru.move_to_end(key)
+            return True
+        return False
+
+    def insert(self, key: Tuple, nbytes: int) -> None:
+        if nbytes > self.capacity:
+            return  # uncacheable panel: always streamed
+        while self.used + nbytes > self.capacity and self._lru:
+            _, sz = self._lru.popitem(last=False)
+            self.used -= sz
+        self._lru[key] = nbytes
+        self.used += nbytes
+
+
+def simulate_patch_traversal(
+    cells: np.ndarray,
+    *,
+    bm: int,
+    bn: int,
+    K: int,
+    k_layers: int,
+    k_block_factor: int,
+    hw: HardwareModel,
+    dtype_bytes: int = 2,
+    c_resident_bytes: int = 0,
+) -> BRGemmCounts:
+    """Exact BRGEMM taxonomy for one worker walking ``cells`` (SFC order).
+
+    Per C tile the worker performs ``k_block_factor`` BRGEMM calls, each
+    contracting a K/(k_layers*k_block_factor) slab.  Panel residency is
+    tracked with an LRU cache of ``hw.fast_bytes`` minus the worker's
+    persistent C-patch footprint (paper: C stays in fast memory).
+    """
+    k_per_layer = K // k_layers
+    k_chunk = max(1, k_per_layer // k_block_factor)
+    n_chunks = max(1, k_per_layer // k_chunk)
+    sa = bm * k_chunk * dtype_bytes  # A panel bytes per BRGEMM
+    sb = k_chunk * bn * dtype_bytes  # B panel bytes per BRGEMM
+    g = gemm_flops(bm, bn, k_chunk)  # FLOPs per BRGEMM
+
+    budget = max(0, hw.fast_bytes - c_resident_bytes)
+    cache = _PanelCache(budget)
+    out = BRGemmCounts()
+
+    for im, in_ in cells:
+        for kc in range(n_chunks):
+            a_key = ("A", int(im), kc)
+            b_key = ("B", int(in_), kc)
+            a_hit = cache.hit(a_key)
+            b_hit = cache.hit(b_key)
+            if a_hit and b_hit:
+                out.brgemm3 += 1
+                t = g * hw.gamma  # eq. (4)
+            elif a_hit:
+                out.brgemm2 += 1  # only B from slow memory
+                t = max(g * hw.gamma, hw.beta * sb)  # eq. (3)
+                out.slow_bytes += sb
+                cache.insert(b_key, sb)
+            elif b_hit:
+                out.brgemm1 += 1  # only A from slow memory
+                t = max(g * hw.gamma, hw.beta * sa)  # eq. (2)
+                out.slow_bytes += sa
+                cache.insert(a_key, sa)
+            else:
+                out.brgemm0 += 1
+                t = max(g * hw.gamma, hw.beta * (sa + sb))  # eq. (1)
+                out.slow_bytes += sa + sb
+                cache.insert(a_key, sa)
+                cache.insert(b_key, sb)
+            out.time += t
+    return out
+
+
+def simulate_gemm(
+    M: int,
+    N: int,
+    K: int,
+    *,
+    n_workers: int,
+    k_layers: int = 1,
+    k_block_factor: int = 1,
+    bm: int = 256,
+    bn: int = 256,
+    hw: HardwareModel = TPU_V5E,
+    dtype_bytes: int = 2,
+) -> Dict[str, float]:
+    """Whole-GEMM modeled time = max over workers of per-worker simulated time
+    plus the C read/write and (c>1) the layer reduction — paper §III-B tail.
+    Returns a dict with time, throughput and the taxonomy census.
+    """
+    mb_blocks, nb_blocks = M // bm, N // bn
+    d = sfc_decompose(mb_blocks, nb_blocks, n_workers, k_layers)
+    worst: Optional[BRGemmCounts] = None
+    total_slow = 0.0
+    census = BRGemmCounts()
+    for p in d.patches:
+        c_bytes = p.n_cells * bm * bn * dtype_bytes  # persistent C patch (paper §II-E)
+        r = simulate_patch_traversal(
+            p.cells,
+            bm=bm,
+            bn=bn,
+            K=K,
+            k_layers=k_layers,
+            k_block_factor=k_block_factor,
+            hw=hw,
+            dtype_bytes=dtype_bytes,
+            c_resident_bytes=c_bytes,
+        )
+        total_slow += r.slow_bytes
+        census.brgemm0 += r.brgemm0
+        census.brgemm1 += r.brgemm1
+        census.brgemm2 += r.brgemm2
+        census.brgemm3 += r.brgemm3
+        if worst is None or r.time > worst.time:
+            worst = r
+    assert worst is not None
+
+    # C traffic: read+write the output once; with c copies, add the reduce.
+    per_worker_c = (M * N / d.workers_per_layer) * dtype_bytes
+    c_time = 2 * per_worker_c * hw.beta
+    if k_layers > 1:
+        # each worker reads (c-1) partial copies of its final patch + writes 1
+        final_patch = (M * N / n_workers) * dtype_bytes
+        c_time += (k_layers - 1) * 2 * final_patch * hw.beta
+    time = worst.time + c_time
+    flops = gemm_flops(M, N, K)
+    return {
+        "time_s": time,
+        "tflops": flops / time / 1e12,
+        "gemm_time_s": worst.time,
+        "c_time_s": c_time,
+        "slow_bytes_total": total_slow,
+        **{k: v for k, v in census.as_dict().items() if k.startswith("brgemm")},
+    }
+
+
+def analytical_time(
+    M: int,
+    N: int,
+    K: int,
+    *,
+    tm: int,
+    tn: int,
+    c: int,
+    hw: HardwareModel = TPU_V5E,
+    dtype_bytes: int = 2,
+) -> float:
+    """Closed-form roofline (paper §III-B, infinite fast memory): per-worker
+    time = max(compute, slow-memory traffic) + C traffic."""
+    t = tm * tn * c
+    flops_per_worker = gemm_flops(M, N, K) / t
+    w = words_moved(M, N, K, tm, tn, c, dtype_bytes)
+    compute = flops_per_worker * hw.gamma
+    memory = (w["a_bytes"] + w["b_bytes"]) * hw.beta
+    c_traffic = w["c_bytes"] * hw.beta
+    return max(compute, memory) + c_traffic
+
+
+def roofline_best_time(
+    M: int,
+    N: int,
+    K: int,
+    n_workers: int,
+    *,
+    hw: HardwareModel = TPU_V5E,
+    dtype_bytes: int = 2,
+    max_c: int = 8,
+) -> Tuple[float, Tuple[int, int, int]]:
+    """Paper §III-B closing paragraph: iterate over all 2D/3D worker
+    decompositions, report the minimum modeled time (the *tight roofline*)."""
+    best = (math.inf, (n_workers, 1, 1))
+    for c in range(1, max_c + 1):
+        if n_workers % c:
+            continue
+        per_layer = n_workers // c
+        for tm_, tn_ in divisor_factorizations(per_layer):
+            t = analytical_time(
+                M, N, K, tm=tm_, tn=tn_, c=c, hw=hw, dtype_bytes=dtype_bytes
+            )
+            if t < best[0]:
+                best = (t, (tm_, tn_, c))
+    return best
+
+
+def choose_knobs_analytical(
+    M: int,
+    N: int,
+    K: int,
+    n_workers: int,
+    *,
+    hw: HardwareModel = TPU_V5E,
+    dtype_bytes: int = 2,
+    bm: int = 256,
+    bn: int = 256,
+    l2_fraction: float = 0.5,
+    max_c: int = 8,
+    max_kbf: int = 8,
+) -> Tuple[int, int]:
+    """Paper §III-C method (2): analytical model picks K_layers; then
+    k_block_factor is the smallest value whose A+B panel footprint fits
+    ``l2_fraction`` of fast memory."""
+    _, (tm, tn, c) = roofline_best_time(
+        M, N, K, n_workers, hw=hw, dtype_bytes=dtype_bytes, max_c=max_c
+    )
+    k_per_layer = max(1, K // c)
+    budget = hw.fast_bytes * l2_fraction
+    kbf = 1
+    while kbf < max_kbf:
+        k_chunk = max(1, k_per_layer // kbf)
+        footprint = (bm + bn) * k_chunk * dtype_bytes
+        if footprint <= budget:
+            break
+        kbf *= 2
+    return c, kbf
+
+
+def choose_knobs_autotune(
+    M: int,
+    N: int,
+    K: int,
+    n_workers: int,
+    *,
+    hw: HardwareModel = TPU_V5E,
+    dtype_bytes: int = 2,
+    bm: int = 256,
+    bn: int = 256,
+    candidates_c: Sequence[int] = (1, 2, 4, 8),
+    candidates_kbf: Sequence[int] = (1, 2, 4, 8),
+) -> Tuple[Tuple[int, int], Dict[Tuple[int, int], float]]:
+    """Paper §III-C method (1): exhaustively evaluate the (≤64) knob tuples.
+    Ground truth here is the exact patch-traversal simulator (the container
+    has no TPU to time): returns the argmin tuple and the full sweep."""
+    sweep: Dict[Tuple[int, int], float] = {}
+    for c in candidates_c:
+        if n_workers % c or K // c < 1:
+            continue
+        # small problems may leave workers idle — legal, just inefficient
+        for kbf in candidates_kbf:
+            r = simulate_gemm(
+                M,
+                N,
+                K,
+                n_workers=n_workers,
+                k_layers=c,
+                k_block_factor=kbf,
+                bm=bm,
+                bn=bn,
+                hw=hw,
+                dtype_bytes=dtype_bytes,
+            )
+            sweep[(c, kbf)] = r["time_s"]
+    best = min(sweep, key=sweep.get)
+    return best, sweep
+
+
+class NearestNeighborModel:
+    """Paper §III-C method (3): 1-NN classifier over (M, N, K) space.
+
+    Train: autotune a set of shapes (here: exact-simulator argmin).
+    Predict: nearest neighbour in log-coordinate space -> its knob tuple.
+    """
+
+    def __init__(self) -> None:
+        self._coords: Optional[np.ndarray] = None
+        self._labels: List[Tuple[int, int]] = []
+
+    @staticmethod
+    def _embed(shapes: np.ndarray) -> np.ndarray:
+        return np.log2(shapes.astype(np.float64))
+
+    def fit(
+        self,
+        shapes: Sequence[Tuple[int, int, int]],
+        labels: Sequence[Tuple[int, int]],
+    ) -> "NearestNeighborModel":
+        self._coords = self._embed(np.asarray(shapes, dtype=np.float64))
+        self._labels = list(labels)
+        return self
+
+    def predict(self, M: int, N: int, K: int) -> Tuple[int, int]:
+        if self._coords is None:
+            raise RuntimeError("NearestNeighborModel not fitted")
+        q = self._embed(np.asarray([[M, N, K]], dtype=np.float64))
+        d = np.linalg.norm(self._coords - q, axis=1)
+        return self._labels[int(np.argmin(d))]
+
+    def fit_autotuned(
+        self,
+        shapes: Sequence[Tuple[int, int, int]],
+        n_workers: int,
+        **kw,
+    ) -> "NearestNeighborModel":
+        labels = []
+        for (m, n, k) in shapes:
+            best, _ = choose_knobs_autotune(m, n, k, n_workers, **kw)
+            labels.append(best)
+        return self.fit(shapes, labels)

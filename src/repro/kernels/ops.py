@@ -1,0 +1,103 @@
+"""Jit'd public wrappers around the Pallas SFC-CA GEMM kernel.
+
+`sfc_matmul` is the user-facing entry point: it pads to block multiples,
+picks (K_layers, k_block_factor) with the paper's analytical model when not
+given, launches the SFC-ordered kernel, reduces the C copies and strips the
+padding.  On non-TPU backends it transparently switches to interpret mode so
+the same call sites work in tests/CPU containers.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.perf_model import TPU_V5E, choose_knobs_analytical
+from repro.kernels.sfc_gemm import add_reduce_pallas, sfc_gemm_pallas
+
+__all__ = ["sfc_matmul", "default_interpret", "pick_blocks"]
+
+
+def default_interpret() -> bool:
+    """Pallas->Mosaic requires a real TPU; everywhere else, interpret."""
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def pick_blocks(m: int, n: int, k: int) -> Tuple[int, int]:
+    """MXU-aligned (bm, bn): multiples of 128 when the problem allows, small
+    powers of two otherwise (tests use tiny shapes)."""
+
+    def pick(dim: int) -> int:
+        for cand in (256, 128, 64, 32, 16, 8):
+            if dim % cand == 0:
+                return cand
+        return dim
+    return pick(m), pick(n)
+
+
+def sfc_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+    k_layers: Optional[int] = None,
+    k_block_factor: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    out_dtype=None,
+) -> jax.Array:
+    """C = A @ B via the SFC-CA Pallas kernel.
+
+    Knobs left as None are filled in by the paper's analytical model
+    (K_layers, k_block_factor) and MXU alignment rules (bm, bn).  Arbitrary
+    M/N/K are handled by zero padding (curve still covers the padded grid;
+    padding contributes zeros to the contraction).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    out_dtype = out_dtype or a.dtype
+
+    if bm is None or bn is None:
+        pbm, pbn = pick_blocks(m, n, k)
+        bm = bm or pbm
+        bn = bn or pbn
+    if k_layers is None or k_block_factor is None:
+        # worker count 1: the kernel runs on one TensorCore; K_layers here
+        # trades VMEM-residency of panels against the copy reduction.
+        c, kbf = choose_knobs_analytical(
+            max(m, bm), max(n, bn), max(k, 1), 1, bm=bm, bn=bn, hw=TPU_V5E
+        )
+        k_layers = k_layers or c
+        k_block_factor = k_block_factor or kbf
+
+    mp = _round_up(m, bm)
+    np_ = _round_up(n, bn)
+    kp = _round_up(k, k_layers * k_block_factor)
+    a_p = jnp.pad(a, ((0, mp - m), (0, kp - k))) if (mp != m or kp != k) else a
+    b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n))) if (kp != k or np_ != n) else b
+
+    copies = sfc_gemm_pallas(
+        a_p,
+        b_p,
+        bm=bm,
+        bn=bn,
+        k_layers=k_layers,
+        k_block_factor=k_block_factor,
+        interpret=interpret,
+        out_dtype=out_dtype,
+    )
+    if k_layers > 1:
+        c_full = add_reduce_pallas(copies, bm=bm, bn=bn, interpret=interpret)
+    else:
+        c_full = copies[0]
+    return c_full[:m, :n]

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for the Pallas kernels in this package."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["matmul_ref", "partial_k_matmul_ref", "add_reduce_ref"]
+
+
+def matmul_ref(a: jax.Array, b: jax.Array, acc_dtype=jnp.float32) -> jax.Array:
+    """C = A @ B with f32 accumulation — oracle for sfc_gemm."""
+    return jnp.dot(a, b, preferred_element_type=acc_dtype).astype(a.dtype)
+
+
+def partial_k_matmul_ref(
+    a: jax.Array, b: jax.Array, k_layers: int, acc_dtype=jnp.float32
+) -> jax.Array:
+    """(K_layers, M, N) partial products over K slabs — oracle for the
+    replicated-C stage of the SFC-CA kernel (before add_reduce)."""
+    m, k = a.shape
+    kl = k // k_layers
+    parts = []
+    for layer in range(k_layers):
+        sl = slice(layer * kl, (layer + 1) * kl)
+        parts.append(jnp.dot(a[:, sl], b[sl, :], preferred_element_type=acc_dtype))
+    return jnp.stack(parts).astype(a.dtype)
+
+
+def add_reduce_ref(c_copies: jax.Array, acc_dtype=jnp.float32) -> jax.Array:
+    """(K_layers, M, N) -> (M, N) — oracle for add_reduce (add_reduce_tpp)."""
+    return c_copies.astype(acc_dtype).sum(axis=0).astype(c_copies.dtype)
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, T, Hkv, D)
+    v: jax.Array,  # (B, T, Hkv, D)
+    causal: bool = True,
+) -> jax.Array:
+    """Dense attention oracle for the flash kernel (f32 softmax).
+
+    Causal convention matches the kernel: q position i attends kv[0..i]
+    (start-aligned; callers with a cache pass absolute positions)."""
+    b, s, h, d = q.shape
+    _, t, hkv, _ = k.shape
+    groups = h // hkv
+    kk = jnp.repeat(k, groups, axis=2)
+    vv = jnp.repeat(v, groups, axis=2)
+    scores = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32)
+    ) / jnp.sqrt(jnp.float32(d))
+    if causal:
+        mask = jnp.tril(jnp.ones((s, t), bool))
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vv.astype(jnp.float32))
+    return o.astype(q.dtype)

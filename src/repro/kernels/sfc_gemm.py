@@ -1,0 +1,195 @@
+"""Pallas TPU kernel: SFC-ordered Communication-Avoiding GEMM.
+
+TPU adaptation of paper Listing 1 (see DESIGN.md §2.1).  The Pallas grid *is*
+the paper's fused task loop: one grid step per (K-layer, SFC-tile, K-chunk)
+task, visited in exactly the Listing-1 order
+
+    task t = i_layer * (Mb*Nb) + i_sfc        (layer-major, SFC within layer)
+
+with the (im, in) tile coordinates coming from a scalar-prefetched SFC table
+(the TPU analogue of `map_sfc_index`).  Because Mosaic only re-fetches a block
+whose `index_map` output changed between consecutive sequential grid steps,
+the gilbert-order traversal realises the paper's BRGEMM taxonomy in hardware:
+
+  * consecutive tiles share `im`  -> the A panel stays in VMEM (BRGEMM₂)
+  * consecutive tiles share `in`  -> the B panel stays in VMEM (BRGEMM₁)
+  * both change (quadrant hops)   -> BRGEMM₀, only O(√(Mb·Nb)) times.
+
+`K_layers > 1` replicates C into per-layer copies, each contracting a K/c
+slab (the 2.5D algorithm); `add_reduce` below is the `add_reduce_tpp`.
+`k_block_factor` chunks each layer's K range so the A/B panels fit VMEM
+(paper §II-E: the k' constant), accumulating in an f32 VMEM scratch.
+
+VMEM budget per step: bm*kc + kc*bn (+double-buffering) + bm*bn*4 (f32 acc)
+— `ops.py` picks the knobs so this fits, using the same analytical model the
+paper uses for its L2-capacity heuristic.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.sfc import create_sfc_map
+
+__all__ = ["sfc_gemm_pallas", "add_reduce_pallas", "build_task_table"]
+
+
+def build_task_table(mb: int, nb: int, k_layers: int) -> np.ndarray:
+    """(3, K_layers*Mb*Nb) int32: rows = (im, in, layer) per task, in
+    Listing-1 task order (layer-major, gilbert order within each layer)."""
+    sfc = create_sfc_map(mb, nb)
+    im = sfc.im_table()
+    in_ = sfc.in_table()
+    ims = np.tile(im, k_layers)
+    ins = np.tile(in_, k_layers)
+    layers = np.repeat(np.arange(k_layers, dtype=np.int32), mb * nb)
+    return np.stack([ims, ins, layers]).astype(np.int32)
+
+
+def _sfc_gemm_kernel(
+    tab_ref,  # scalar-prefetch: (3, n_tasks) SFC task table
+    a_ref,  # (bm, k_chunk) A panel in VMEM
+    b_ref,  # (k_chunk, bn) B panel in VMEM
+    o_ref,  # (1, bm, bn) C-copy tile in VMEM
+    acc_ref,  # (bm, bn) f32 scratch accumulator
+    *,
+    n_k_chunks: int,
+    out_dtype,
+):
+    del tab_ref  # consumed by the index maps
+    kc = pl.program_id(1)
+
+    @pl.when(kc == 0)
+    def _zero():  # zero_tpp (Listing 1 line 16)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # brgemm_tpp: one stride-based batch-reduce step on the MXU
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(kc == n_k_chunks - 1)
+    def _flush():
+        o_ref[0, ...] = acc_ref[...].astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "bm",
+        "bn",
+        "k_layers",
+        "k_block_factor",
+        "interpret",
+        "out_dtype",
+    ),
+)
+def sfc_gemm_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = 256,
+    bn: int = 256,
+    k_layers: int = 1,
+    k_block_factor: int = 1,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """Partial-product stage: returns the (K_layers, M, N) replicated C copies
+    (reduce with `add_reduce_pallas`; `ops.sfc_matmul` does both + padding).
+
+    Requires M % bm == N % bn == 0 and K % (k_layers * k_block_factor) == 0.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    if m % bm or n % bn:
+        raise ValueError(f"(M,N)=({m},{n}) not divisible by (bm,bn)=({bm},{bn})")
+    if k % (k_layers * k_block_factor):
+        raise ValueError(f"K={k} vs k_layers*kbf={k_layers * k_block_factor}")
+    out_dtype = out_dtype or a.dtype
+
+    mb_cnt, nb_cnt = m // bm, n // bn
+    k_per_layer = k // k_layers
+    k_chunk = k_per_layer // k_block_factor
+    n_k_chunks = k_block_factor
+    n_tasks = k_layers * mb_cnt * nb_cnt
+
+    tab = jnp.asarray(build_task_table(mb_cnt, nb_cnt, k_layers))
+
+    # Block index maps (units of blocks).  `t` walks Listing-1 task order;
+    # `kc` is the K-chunk (innermost, so the C tile is revisited/resident).
+    kc_per_layer = k_per_layer // k_chunk
+
+    def a_map(t, kc, tab):
+        return (tab[0, t], tab[2, t] * kc_per_layer + kc)
+
+    def b_map(t, kc, tab):
+        return (tab[2, t] * kc_per_layer + kc, tab[1, t])
+
+    def o_map(t, kc, tab):
+        return (tab[2, t], tab[0, t], tab[1, t])
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_tasks, n_k_chunks),
+        in_specs=[
+            pl.BlockSpec((bm, k_chunk), a_map),
+            pl.BlockSpec((k_chunk, bn), b_map),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), o_map),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+
+    kernel = functools.partial(
+        _sfc_gemm_kernel, n_k_chunks=n_k_chunks, out_dtype=out_dtype
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((k_layers, m, n), out_dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+    )(tab, a, b)
+
+
+def _add_reduce_kernel(c_ref, o_ref, *, acc_dtype):
+    # add_reduce_tpp: accumulate K_layers strided tiles (Listing 1 line 34)
+    o_ref[...] = c_ref[...].astype(acc_dtype).sum(axis=0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def add_reduce_pallas(
+    c_copies: jax.Array,
+    *,
+    bm: int = 256,
+    bn: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """(K_layers, M, N) -> (M, N) layer reduction (paper lines 26-35)."""
+    kl, m, n = c_copies.shape
+    bm = min(bm, m)
+    bn = min(bn, n)
+    if m % bm or n % bn:
+        raise ValueError(f"(M,N)=({m},{n}) not divisible by (bm,bn)=({bm},{bn})")
+    kernel = functools.partial(_add_reduce_kernel, acc_dtype=jnp.float32)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((kl, bm, bn), lambda i, j: (0, i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), c_copies.dtype),
+        interpret=interpret,
+    )(c_copies)

@@ -1,0 +1,44 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state.  The dry-run host exposes 512 placeholder devices
+(XLA_FLAGS set by dryrun.py before any jax import); the single-pod mesh uses
+the first 256 of them, the multi-pod mesh all 512.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+__all__ = ["make_production_mesh", "make_mesh_for"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, only {len(devices)} present "
+            "(dryrun.py must set --xla_force_host_platform_device_count)"
+        )
+    # more devices than needed (e.g. 512 present, single-pod wants 256)
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_mesh_for(n_data: int, n_model: int, n_pod: int = 1) -> Mesh:
+    """Arbitrary (pod, data, model) mesh from the available devices —
+    used by tests and the small-scale examples."""
+    n = n_pod * n_data * n_model
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devices)}")
+    arr = np.asarray(devices[:n])
+    if n_pod > 1:
+        return Mesh(arr.reshape(n_pod, n_data, n_model), ("pod", "data", "model"))
+    return Mesh(arr.reshape(n_data, n_model), ("data", "model"))

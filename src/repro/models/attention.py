@@ -1,0 +1,246 @@
+"""GQA multi-head attention block with RoPE variants, qk-norm, bias options,
+KV-cache decode, and cross-attention — covers every assigned transformer arch.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.gemm_backend import matmul as _bmm
+from repro.parallel.act_sharding import constrain
+from repro.models.layers import (
+    Params,
+    apply_rope,
+    blockwise_attention,
+    decode_attention,
+    dense_init,
+    rmsnorm,
+    rmsnorm_init,
+)
+
+
+def attention_init(
+    key,
+    *,
+    d_model: int,
+    n_heads: int,
+    kv_heads: int,
+    head_dim: Optional[int] = None,
+    qkv_bias: bool = False,
+    qk_norm: bool = False,
+    dtype=jnp.float32,
+) -> Params:
+    hd = head_dim or d_model // n_heads
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "wq": dense_init(ks[0], d_model, n_heads * hd, dtype),
+        "wk": dense_init(ks[1], d_model, kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], d_model, kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], n_heads * hd, d_model, dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((kv_heads * hd,), dtype)
+    if qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def _project_qkv(
+    params: Params,
+    x: jax.Array,
+    *,
+    n_heads: int,
+    kv_heads: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    b, s, _ = x.shape
+    q = _bmm(x, params["wq"])
+    k = _bmm(x, params["wk"])
+    v = _bmm(x, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    hd = q.shape[-1] // n_heads
+    q = constrain(q.reshape(b, s, n_heads, hd), ("dp", None, "tp", None))
+    k = constrain(k.reshape(b, s, kv_heads, hd), ("dp", None, "tp", None))
+    v = constrain(v.reshape(b, s, kv_heads, hd), ("dp", None, "tp", None))
+    if "q_norm" in params:  # per-head RMS (Qwen3)
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    return q, k, v
+
+
+def attention_forward(
+    params: Params,
+    x: jax.Array,  # (B, S, d)
+    *,
+    n_heads: int,
+    kv_heads: int,
+    positions: Optional[jax.Array] = None,  # (B, S)
+    rope_theta: float = 10000.0,
+    rotary_pct: float = 1.0,
+    mrope_sections: Optional[Tuple[int, ...]] = None,
+    mrope_positions: Optional[jax.Array] = None,
+    causal: bool = True,
+    q_chunk: int = 512,
+    k_chunk: int = 512,
+    attn_impl: str = "blockwise",
+) -> jax.Array:
+    """Self-attention for training / prefill (no cache returned)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(params, x, n_heads=n_heads, kv_heads=kv_heads)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    if rotary_pct > 0:
+        rope_kw = dict(
+            theta=rope_theta,
+            rotary_pct=rotary_pct,
+            mrope_sections=mrope_sections,
+            mrope_positions=mrope_positions,
+        )
+        q = apply_rope(q, positions, **rope_kw)
+        k = apply_rope(k, positions, **rope_kw)
+    if attn_impl == "flash_pallas":
+        from repro.kernels.flash_attention import flash_attention
+
+        o = flash_attention(q, k, v, causal=causal, q_chunk=q_chunk, k_chunk=k_chunk)
+    else:
+        o = blockwise_attention(
+            q, k, v, causal=causal, q_chunk=q_chunk, k_chunk=k_chunk
+        )
+    return _bmm(o.reshape(b, s, -1), params["wo"])
+
+
+def attention_prefill(
+    params: Params,
+    x: jax.Array,
+    *,
+    n_heads: int,
+    kv_heads: int,
+    cache_len: int,
+    positions: Optional[jax.Array] = None,
+    rope_theta: float = 10000.0,
+    rotary_pct: float = 1.0,
+    mrope_sections: Optional[Tuple[int, ...]] = None,
+    mrope_positions: Optional[jax.Array] = None,
+    q_chunk: int = 512,
+    k_chunk: int = 512,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Prefill: returns output and a right-padded KV cache of cache_len."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(params, x, n_heads=n_heads, kv_heads=kv_heads)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    if rotary_pct > 0:
+        rope_kw = dict(
+            theta=rope_theta,
+            rotary_pct=rotary_pct,
+            mrope_sections=mrope_sections,
+            mrope_positions=mrope_positions,
+        )
+        q = apply_rope(q, positions, **rope_kw)
+        k = apply_rope(k, positions, **rope_kw)
+    o = blockwise_attention(q, k, v, causal=True, q_chunk=q_chunk, k_chunk=k_chunk)
+    pad = cache_len - s
+    cache = {
+        "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+        "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+    }
+    return _bmm(o.reshape(b, s, -1), params["wo"]), cache
+
+
+def attention_decode(
+    params: Params,
+    x: jax.Array,  # (B, 1, d)
+    cache: Dict[str, jax.Array],  # k/v (B, T, Hkv, D)
+    index: jax.Array,  # () current length (scalar int)
+    *,
+    n_heads: int,
+    kv_heads: int,
+    rope_theta: float = 10000.0,
+    rotary_pct: float = 1.0,
+    mrope_sections: Optional[Tuple[int, ...]] = None,
+    mrope_positions: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode against (and updating) the KV cache."""
+    b = x.shape[0]
+    q, k, v = _project_qkv(params, x, n_heads=n_heads, kv_heads=kv_heads)
+    positions = jnp.broadcast_to(index[None, None], (b, 1))
+    if rotary_pct > 0:
+        rope_kw = dict(
+            theta=rope_theta,
+            rotary_pct=rotary_pct,
+            mrope_sections=mrope_sections,
+            mrope_positions=mrope_positions,
+        )
+        q = apply_rope(q, positions, **rope_kw)
+        k = apply_rope(k, positions, **rope_kw)
+    ck = lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), index, axis=1)
+    cv = lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), index, axis=1)
+    valid = jnp.full((b,), index + 1, jnp.int32)
+    o = decode_attention(q, ck, cv, valid)
+    return o.reshape(b, 1, -1) @ params["wo"], {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# cross-attention (enc-dec; seamless-m4t decoder)
+# ---------------------------------------------------------------------------
+
+
+def cross_attention_forward(
+    params: Params,
+    x: jax.Array,  # (B, S_dec, d) decoder side
+    memory: jax.Array,  # (B, S_enc, d) encoder output
+    *,
+    n_heads: int,
+    kv_heads: int,
+    q_chunk: int = 512,
+    k_chunk: int = 512,
+) -> jax.Array:
+    b, s, _ = x.shape
+    q = (x @ params["wq"]).reshape(b, s, n_heads, -1)
+    k = (memory @ params["wk"]).reshape(b, memory.shape[1], kv_heads, -1)
+    v = (memory @ params["wv"]).reshape(b, memory.shape[1], kv_heads, -1)
+    if "q_norm" in params:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    o = blockwise_attention(q, k, v, causal=False, q_chunk=q_chunk, k_chunk=k_chunk)
+    return o.reshape(b, s, -1) @ params["wo"]
+
+
+def cross_attention_decode(
+    params: Params,
+    x: jax.Array,  # (B, 1, d)
+    mem_kv: Dict[str, jax.Array],  # precomputed k/v of encoder memory
+    mem_len: jax.Array,
+    *,
+    n_heads: int,
+    kv_heads: int,
+) -> jax.Array:
+    b = x.shape[0]
+    q = (x @ params["wq"]).reshape(b, 1, n_heads, -1)
+    if "q_norm" in params:
+        q = rmsnorm(params["q_norm"], q)
+    valid = jnp.full((b,), mem_len, jnp.int32)
+    o = decode_attention(q, mem_kv["k"], mem_kv["v"], valid)
+    return o.reshape(b, 1, -1) @ params["wo"]
+
+
+def precompute_cross_kv(
+    params: Params, memory: jax.Array, *, kv_heads: int
+) -> Dict[str, jax.Array]:
+    b, t, _ = memory.shape
+    k = (memory @ params["wk"]).reshape(b, t, kv_heads, -1)
+    v = (memory @ params["wv"]).reshape(b, t, kv_heads, -1)
+    if "k_norm" in params:
+        k = rmsnorm(params["k_norm"], k)
+    return {"k": k, "v": v}

@@ -1,0 +1,247 @@
+"""Encoder-decoder transformer (seamless-m4t-medium backbone).
+
+The audio/text modality frontend is a STUB per the task spec: the encoder
+consumes precomputed frame embeddings (B, S_enc, d) from `input_specs()`.
+Encoder: bidirectional self-attention.  Decoder: causal self-attention +
+cross-attention to encoder memory; token embedding + LM head.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models.layers import (
+    Params,
+    cross_entropy_loss,
+    dense_init,
+    embed_init,
+    make_norm,
+    mlp,
+    mlp_init,
+)
+from repro.models.transformer import _maybe_remat
+
+
+class EncDecLM:
+    def __init__(self, cfg: ArchConfig):
+        assert cfg.is_encoder_decoder
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.param_dtype)
+        self.norm_init, self.norm_fn = make_norm(cfg.norm)
+
+    # ---------------- params ----------------
+
+    def _attn_init(self, key):
+        cfg = self.cfg
+        return attn.attention_init(
+            key,
+            d_model=cfg.d_model,
+            n_heads=cfg.n_heads,
+            kv_heads=cfg.kv_heads,
+            head_dim=cfg.head_dim_,
+            dtype=self.dtype,
+        )
+
+    def _enc_layer_init(self, key) -> Params:
+        ka, km = jax.random.split(key)
+        cfg = self.cfg
+        return {
+            "attn": self._attn_init(ka),
+            "norm1": self.norm_init(cfg.d_model, self.dtype),
+            "norm2": self.norm_init(cfg.d_model, self.dtype),
+            "mlp": mlp_init(km, cfg.d_model, cfg.d_ff, self.dtype, gated=cfg.gated_mlp),
+        }
+
+    def _dec_layer_init(self, key) -> Params:
+        ka, kx, km = jax.random.split(key, 3)
+        cfg = self.cfg
+        return {
+            "attn": self._attn_init(ka),
+            "cross": self._attn_init(kx),
+            "norm1": self.norm_init(cfg.d_model, self.dtype),
+            "norm_x": self.norm_init(cfg.d_model, self.dtype),
+            "norm2": self.norm_init(cfg.d_model, self.dtype),
+            "mlp": mlp_init(km, cfg.d_model, cfg.d_ff, self.dtype, gated=cfg.gated_mlp),
+        }
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        k_emb, k_head, k_enc, k_dec = jax.random.split(key, 4)
+        enc_keys = jax.random.split(k_enc, cfg.encoder_layers)
+        dec_keys = jax.random.split(k_dec, cfg.n_layers)
+        return {
+            "embed": embed_init(k_emb, cfg.vocab, cfg.d_model, self.dtype),
+            "encoder": jax.vmap(self._enc_layer_init)(enc_keys),
+            "decoder": jax.vmap(self._dec_layer_init)(dec_keys),
+            "enc_norm": self.norm_init(cfg.d_model, self.dtype),
+            "final_norm": self.norm_init(cfg.d_model, self.dtype),
+            "head": dense_init(k_head, cfg.d_model, cfg.vocab, self.dtype),
+        }
+
+    # ---------------- encoder ----------------
+
+    def encode(self, params: Params, src_embeds: jax.Array, *, remat: str = "dots"):
+        cfg = self.cfg
+        x = src_embeds.astype(self.dtype)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+        def layer_fn(x, layer):
+            h = self.norm_fn(layer["norm1"], x)
+            a = attn.attention_forward(
+                layer["attn"],
+                h,
+                n_heads=cfg.n_heads,
+                kv_heads=cfg.kv_heads,
+                positions=positions,
+                rope_theta=cfg.rope_theta,
+                causal=False,
+                q_chunk=cfg.q_chunk,
+                k_chunk=cfg.k_chunk,
+            )
+            x = x + a
+            h = self.norm_fn(layer["norm2"], x)
+            return x + mlp(layer["mlp"], h, act=cfg.act), None
+
+        x, _ = lax.scan(_maybe_remat(layer_fn, remat), x, params["encoder"])
+        return self.norm_fn(params["enc_norm"], x)
+
+    # ---------------- decoder ----------------
+
+    def _dec_block(self, layer, x, memory, positions, mode, cache_len=0):
+        cfg = self.cfg
+        kw = dict(
+            n_heads=cfg.n_heads,
+            kv_heads=cfg.kv_heads,
+            positions=positions,
+            rope_theta=cfg.rope_theta,
+            q_chunk=cfg.q_chunk,
+            k_chunk=cfg.k_chunk,
+        )
+        h = self.norm_fn(layer["norm1"], x)
+        if mode == "prefill":
+            a, cache = attn.attention_prefill(layer["attn"], h, cache_len=cache_len, **kw)
+        else:
+            a, cache = attn.attention_forward(layer["attn"], h, causal=True, **kw), None
+        x = x + a
+        h = self.norm_fn(layer["norm_x"], x)
+        c = attn.cross_attention_forward(
+            layer["cross"],
+            h,
+            memory,
+            n_heads=cfg.n_heads,
+            kv_heads=cfg.kv_heads,
+            q_chunk=cfg.q_chunk,
+            k_chunk=cfg.k_chunk,
+        )
+        x = x + c
+        h = self.norm_fn(layer["norm2"], x)
+        return x + mlp(layer["mlp"], h, act=cfg.act), cache
+
+    def forward(
+        self,
+        params: Params,
+        tokens: jax.Array,  # (B, S_dec) decoder input
+        src_embeds: jax.Array,  # (B, S_enc, d) stub frontend output
+        *,
+        remat: str = "dots",
+    ):
+        cfg = self.cfg
+        memory = self.encode(params, src_embeds, remat=remat)
+        b, s = tokens.shape
+        x = params["embed"][tokens]
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+        def layer_fn(x, layer):
+            x, _ = self._dec_block(layer, x, memory, positions, "forward")
+            return x, None
+
+        x, _ = lax.scan(_maybe_remat(layer_fn, remat), x, params["decoder"])
+        x = self.norm_fn(params["final_norm"], x)
+        return x @ params["head"], {}
+
+    def loss(self, params, batch, *, remat: str = "dots"):
+        logits, _ = self.forward(
+            params, batch["tokens"], batch["src_embeds"], remat=remat
+        )
+        return cross_entropy_loss(logits, batch["labels"])
+
+    def prefill(
+        self,
+        params,
+        tokens,
+        src_embeds,
+        *,
+        cache_len: int,
+        remat: str = "dots",
+    ):
+        cfg = self.cfg
+        memory = self.encode(params, src_embeds, remat=remat)
+        b, s = tokens.shape
+        x = params["embed"][tokens]
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+        def layer_fn(x, layer):
+            x, cache = self._dec_block(
+                layer, x, memory, positions, "prefill", cache_len=cache_len
+            )
+            # precompute the cross-attention KV once (decode reads it)
+            mem_kv = attn.precompute_cross_kv(
+                layer["cross"], memory, kv_heads=cfg.kv_heads
+            )
+            return x, (cache, mem_kv)
+
+        x, (self_kv, mem_kv) = lax.scan(layer_fn, x, params["decoder"])
+        logits = (self.norm_fn(params["final_norm"], x[:, -1:]) @ params["head"])[:, 0]
+        cache = {
+            "kv": self_kv,
+            "mem_kv": mem_kv,
+            "mem_len": jnp.asarray(memory.shape[1], jnp.int32),
+            "index": jnp.asarray(s, jnp.int32),
+        }
+        return logits, cache
+
+    def decode_step(self, params, token, cache):
+        cfg = self.cfg
+        x = params["embed"][token]
+        index = cache["index"]
+
+        def layer_fn(x, inp):
+            layer, self_kv, mem_kv = inp
+            h = self.norm_fn(layer["norm1"], x)
+            a, new_kv = attn.attention_decode(
+                layer["attn"],
+                h,
+                self_kv,
+                index,
+                n_heads=cfg.n_heads,
+                kv_heads=cfg.kv_heads,
+                rope_theta=cfg.rope_theta,
+            )
+            x = x + a
+            h = self.norm_fn(layer["norm_x"], x)
+            c = attn.cross_attention_decode(
+                layer["cross"],
+                h,
+                mem_kv,
+                cache["mem_len"],
+                n_heads=cfg.n_heads,
+                kv_heads=cfg.kv_heads,
+            )
+            x = x + c
+            h = self.norm_fn(layer["norm2"], x)
+            x = x + mlp(layer["mlp"], h, act=cfg.act)
+            return x, new_kv
+
+        x, new_kv = lax.scan(
+            layer_fn, x, (params["decoder"], cache["kv"], cache["mem_kv"])
+        )
+        logits = (self.norm_fn(params["final_norm"], x) @ params["head"])[:, 0]
+        return logits, {**cache, "kv": new_kv, "index": index + 1}

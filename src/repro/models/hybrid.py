@@ -1,0 +1,252 @@
+"""Zamba2-style hybrid LM: Mamba2 backbone + a *shared* attention block
+applied after every `attn_every` SSM layers (weight sharing across
+invocations is the Zamba trick — one attention block's params, n_attn uses).
+
+Structure: scan over groups of `attn_every` Mamba2 layers + one shared-attn
+application; remainder Mamba2 layers run after the grouped scan.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import ssm
+from repro.models.layers import (
+    Params,
+    cross_entropy_loss,
+    dense_init,
+    embed_init,
+    make_norm,
+    mlp,
+    mlp_init,
+)
+from repro.models.transformer import _maybe_remat
+
+
+class HybridLM:
+    def __init__(self, cfg: ArchConfig):
+        assert cfg.attn_every > 0 and cfg.ssm_state > 0
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.param_dtype)
+        self.norm_init, self.norm_fn = make_norm(cfg.norm)
+        self.n_groups = cfg.n_layers // cfg.attn_every
+        self.n_tail = cfg.n_layers - self.n_groups * cfg.attn_every
+
+    # ---------------- params ----------------
+
+    def _mamba_init(self, key) -> Params:
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        return {
+            "norm": self.norm_init(cfg.d_model, self.dtype),
+            "mixer": ssm.mamba2_init(
+                k1,
+                d_model=cfg.d_model,
+                d_state=cfg.ssm_state,
+                head_dim=cfg.ssm_head_dim,
+                expand=cfg.ssm_expand,
+                dtype=self.dtype,
+            ),
+        }
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        k_emb, k_head, k_attn, k_mlp, k_layers, k_tail = jax.random.split(key, 6)
+        group_keys = jax.random.split(k_layers, self.n_groups * cfg.attn_every).reshape(
+            self.n_groups, cfg.attn_every, 2
+        )
+        grouped = jax.vmap(jax.vmap(self._mamba_init))(group_keys)
+        params: Params = {
+            "embed": embed_init(k_emb, cfg.vocab, cfg.d_model, self.dtype),
+            "groups": grouped,
+            "shared_attn": {
+                "attn": attn.attention_init(
+                    k_attn,
+                    d_model=cfg.d_model,
+                    n_heads=cfg.n_heads,
+                    kv_heads=cfg.kv_heads,
+                    head_dim=cfg.head_dim_,
+                    dtype=self.dtype,
+                ),
+                "norm1": self.norm_init(cfg.d_model, self.dtype),
+                "norm2": self.norm_init(cfg.d_model, self.dtype),
+                "mlp": mlp_init(k_mlp, cfg.d_model, cfg.d_ff, self.dtype),
+            },
+            "final_norm": self.norm_init(cfg.d_model, self.dtype),
+            "head": dense_init(k_head, cfg.d_model, cfg.vocab, self.dtype),
+        }
+        if self.n_tail:
+            tail_keys = jax.random.split(k_tail, self.n_tail)
+            params["tail"] = jax.vmap(self._mamba_init)(tail_keys)
+        return params
+
+    # ---------------- blocks ----------------
+
+    def _mamba_block(self, layer: Params, x, *, state=None, return_state=False):
+        cfg = self.cfg
+        h = self.norm_fn(layer["norm"], x)
+        out = ssm.mamba2_forward(
+            layer["mixer"],
+            h,
+            d_state=cfg.ssm_state,
+            head_dim=cfg.ssm_head_dim,
+            chunk=cfg.ssm_chunk,
+            initial_state=state,
+            return_state=return_state,
+        )
+        if return_state:
+            out, st = out
+            return x + out, st
+        return x + out
+
+    def _mamba_block_decode(self, layer: Params, x, state):
+        cfg = self.cfg
+        h = self.norm_fn(layer["norm"], x)
+        out, st = ssm.mamba2_decode(
+            layer["mixer"], h, state, d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim
+        )
+        return x + out, st
+
+    def _attn_block(self, params: Params, x, *, positions, mode, cache_len=0):
+        cfg = self.cfg
+        h = self.norm_fn(params["norm1"], x)
+        kw = dict(
+            n_heads=cfg.n_heads,
+            kv_heads=cfg.kv_heads,
+            positions=positions,
+            rope_theta=cfg.rope_theta,
+            q_chunk=cfg.q_chunk,
+            k_chunk=cfg.k_chunk,
+        )
+        if mode == "prefill":
+            a, cache = attn.attention_prefill(params["attn"], h, cache_len=cache_len, **kw)
+        else:
+            a, cache = attn.attention_forward(params["attn"], h, causal=True, **kw), None
+        x = x + a
+        h = self.norm_fn(params["norm2"], x)
+        return x + mlp(params["mlp"], h, act=cfg.act), cache
+
+    # ---------------- entry points ----------------
+
+    def forward(self, params: Params, tokens: jax.Array, *, remat: str = "dots"):
+        cfg = self.cfg
+        b, s = tokens.shape
+        x = params["embed"][tokens]
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+        def group_fn(x, group):
+            def inner(x, layer):
+                return self._mamba_block(layer, x), None
+
+            x, _ = lax.scan(inner, x, group)
+            x, _ = self._attn_block(
+                params["shared_attn"], x, positions=positions, mode="forward"
+            )
+            return x, None
+
+        x, _ = lax.scan(_maybe_remat(group_fn, remat), x, params["groups"])
+        if self.n_tail:
+            def inner_tail(x, layer):
+                return self._mamba_block(layer, x), None
+
+            x, _ = lax.scan(_maybe_remat(inner_tail, remat), x, params["tail"])
+        x = self.norm_fn(params["final_norm"], x)
+        return x @ params["head"], {}
+
+    def loss(self, params, batch, *, remat: str = "dots"):
+        logits, _ = self.forward(params, batch["tokens"], remat=remat)
+        return cross_entropy_loss(logits, batch["labels"])
+
+    def prefill(self, params, tokens, *, cache_len: int, remat: str = "dots"):
+        cfg = self.cfg
+        b, s = tokens.shape
+        x = params["embed"][tokens]
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+        def group_fn(x, group):
+            def inner(x, layer):
+                x, st = self._mamba_block(layer, x, return_state=True)
+                return x, st
+
+            x, mamba_states = lax.scan(inner, x, group)
+            x, kv = self._attn_block(
+                params["shared_attn"],
+                x,
+                positions=positions,
+                mode="prefill",
+                cache_len=cache_len,
+            )
+            return x, (mamba_states, kv)
+
+        x, (mamba_states, kvs) = lax.scan(group_fn, x, params["groups"])
+        tail_states = None
+        if self.n_tail:
+            def inner_tail(x, layer):
+                x, st = self._mamba_block(layer, x, return_state=True)
+                return x, st
+
+            x, tail_states = lax.scan(inner_tail, x, params["tail"])
+        logits = (self.norm_fn(params["final_norm"], x[:, -1:]) @ params["head"])[:, 0]
+        cache = {
+            "mamba": mamba_states,  # (G, E, ...) pytree
+            "tail": tail_states,
+            "kv": kvs,  # (G, B, T, H, D)
+            "index": jnp.asarray(s, jnp.int32),
+        }
+        return logits, cache
+
+    def decode_step(self, params, token, cache):
+        cfg = self.cfg
+        x = params["embed"][token]
+        index = cache["index"]
+
+        def group_fn(x, inp):
+            group, states, kv = inp
+
+            def inner(x, layer_state):
+                layer, st = layer_state
+                x, st_new = self._mamba_block_decode(layer, x, st)
+                return x, st_new
+
+            x, states_new = lax.scan(inner, x, (group, states))
+            h = self.norm_fn(params["shared_attn"]["norm1"], x)
+            a, kv_new = attn.attention_decode(
+                params["shared_attn"]["attn"],
+                h,
+                kv,
+                index,
+                n_heads=cfg.n_heads,
+                kv_heads=cfg.kv_heads,
+                rope_theta=cfg.rope_theta,
+            )
+            x = x + a
+            h = self.norm_fn(params["shared_attn"]["norm2"], x)
+            x = x + mlp(params["shared_attn"]["mlp"], h, act=cfg.act)
+            return x, (states_new, kv_new)
+
+        x, (mamba_new, kv_new) = lax.scan(
+            group_fn, x, (params["groups"], cache["mamba"], cache["kv"])
+        )
+        tail_new = None
+        if self.n_tail:
+            def inner_tail(x, layer_state):
+                layer, st = layer_state
+                x, st_new = self._mamba_block_decode(layer, x, st)
+                return x, st_new
+
+            x, tail_new = lax.scan(inner_tail, x, (params["tail"], cache["tail"]))
+        logits = (self.norm_fn(params["final_norm"], x) @ params["head"])[:, 0]
+        return logits, {
+            "mamba": mamba_new,
+            "tail": tail_new,
+            "kv": kv_new,
+            "index": index + 1,
+        }

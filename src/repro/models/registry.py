@@ -1,0 +1,113 @@
+"""Model registry: ArchConfig -> model instance + ShapeDtypeStruct input specs.
+
+`input_specs(cfg, shape, mode)` returns the exact abstract inputs each step
+function takes — the dry-run lowers against these (no allocation).  Decode
+cache specs are derived with `jax.eval_shape` over the prefill path so every
+family's cache pytree is always in sync with the model code.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.encdec import EncDecLM
+from repro.models.hybrid import HybridLM
+from repro.models.transformer import DecoderLM
+from repro.models.xlstm_model import XLSTMLM
+
+__all__ = ["build_model", "param_specs", "input_specs", "abstract_batch", "VISION_TOKENS"]
+
+VISION_TOKENS = 1024  # stub frontend: patch embeddings on leading positions
+
+
+def build_model(cfg: ArchConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return DecoderLM(cfg)
+    if cfg.family == "ssm":
+        return XLSTMLM(cfg)
+    if cfg.family == "hybrid":
+        return HybridLM(cfg)
+    if cfg.family == "audio":
+        return EncDecLM(cfg)
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def param_specs(cfg: ArchConfig):
+    """Abstract parameter pytree (ShapeDtypeStructs) — no allocation."""
+    model = build_model(cfg)
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def abstract_batch(cfg: ArchConfig, batch: int, seq: int) -> Dict[str, Any]:
+    """Training-batch spec for one global batch of (batch, seq)."""
+    dt = jnp.dtype(cfg.param_dtype)
+    spec: Dict[str, Any] = {
+        "tokens": _sds((batch, seq), jnp.int32),
+        "labels": _sds((batch, seq), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        spec["mrope_positions"] = _sds((3, batch, seq), jnp.int32)
+        spec["vision_embeds"] = _sds((batch, min(VISION_TOKENS, seq), cfg.d_model), dt)
+    if cfg.family == "audio":
+        spec["src_embeds"] = _sds((batch, seq, cfg.d_model), dt)
+    return spec
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, mode: Optional[str] = None):
+    """Abstract inputs for the step function implied by `shape.mode`.
+
+    train   -> {"batch": {...}}
+    prefill -> {"tokens", ["src_embeds"|"vision_embeds"+"mrope_positions"]}
+    decode  -> {"token", "cache"}  (cache spec via eval_shape of prefill)
+    """
+    mode = mode or shape.mode
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.param_dtype)
+    model = build_model(cfg)
+
+    if mode == "train":
+        return {"batch": abstract_batch(cfg, b, s)}
+
+    if mode == "prefill":
+        spec: Dict[str, Any] = {"tokens": _sds((b, s), jnp.int32)}
+        if cfg.family == "audio":
+            spec["src_embeds"] = _sds((b, s, cfg.d_model), dt)
+        if cfg.family == "vlm":
+            spec["mrope_positions"] = _sds((3, b, s), jnp.int32)
+            spec["vision_embeds"] = _sds((b, min(VISION_TOKENS, s), cfg.d_model), dt)
+        return spec
+
+    if mode == "decode":
+        # cache spec = eval_shape of prefill over the full context length
+        params = param_specs(cfg)
+        pre = input_specs(cfg, shape, mode="prefill")
+
+        def run_prefill(params, spec):
+            if cfg.family == "audio":
+                return model.prefill(
+                    params, spec["tokens"], spec["src_embeds"], cache_len=s
+                )[1]
+            if cfg.family == "vlm":
+                return model.prefill(
+                    params,
+                    spec["tokens"],
+                    cache_len=s,
+                    mrope_positions=spec["mrope_positions"],
+                    vision_embeds=spec["vision_embeds"],
+                )[1]
+            return model.prefill(params, spec["tokens"], cache_len=s)[1]
+
+        cache = jax.eval_shape(run_prefill, params, pre)
+        return {"token": _sds((b, 1), jnp.int32), "cache": cache}
+
+    raise ValueError(f"unknown mode {mode}")

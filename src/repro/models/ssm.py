@@ -1,0 +1,258 @@
+"""Mamba2 (SSD) block — chunked-scan training/prefill + recurrent decode.
+
+The State-Space Dual form is implemented as a chunked linear attention with
+per-head scalar decay: intra-chunk contributions use a masked quadratic
+product, inter-chunk state is carried through a `lax.scan` — O(S·L) memory
+for chunk L instead of O(S²), which is what makes zamba2's `long_500k` cell
+runnable.  Decode is the O(1)/token recurrence on the (H, N, P) state.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.models.layers import Params, dense_init, rmsnorm
+
+CONV_WIDTH = 4
+
+
+def mamba2_init(
+    key,
+    *,
+    d_model: int,
+    d_state: int = 64,
+    head_dim: int = 64,
+    expand: int = 2,
+    n_groups: int = 1,
+    dtype=jnp.float32,
+) -> Params:
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    conv_dim = d_inner + 2 * n_groups * d_state
+    d_in_proj = 2 * d_inner + 2 * n_groups * d_state + n_heads
+    ks = jax.random.split(key, 3)
+    dt = jnp.exp(
+        jax.random.uniform(ks[2], (n_heads,)) * (math.log(0.1) - math.log(0.001))
+        + math.log(0.001)
+    )
+    return {
+        "in_proj": dense_init(ks[0], d_model, d_in_proj, dtype),
+        "conv_w": (jax.random.normal(ks[1], (CONV_WIDTH, conv_dim)) * 0.02).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),  # inv softplus
+        "norm_scale": jnp.ones((d_inner,), dtype),
+        "out_proj": dense_init(ks[0], d_inner, d_model, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, S, C) with taps (W, C)."""
+    pads = [jnp.pad(x, ((0, 0), (CONV_WIDTH - 1 - i, 0), (0, 0)))[:, : x.shape[1], :]
+            for i in range(CONV_WIDTH)]
+    out = sum(p * w[i] for i, p in enumerate(pads))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, S, H, P)   dt-scaled inputs
+    b_mat: jax.Array,  # (B, S, N)
+    c_mat: jax.Array,  # (B, S, N)
+    log_a: jax.Array,  # (B, S, H)   per-step log decay (<= 0)
+    *,
+    chunk: int = 64,
+    initial_state: Optional[jax.Array] = None,  # (B, H, N, P)
+    return_state: bool = False,
+):
+    """y_t = C_t · h_t with h_t = a_t h_{t-1} + B_t ⊗ x_t  (per head)."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    L = min(chunk, s)
+    nc = (s + L - 1) // L
+    sp = nc * L
+    pad = sp - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+
+    xc = x.reshape(bsz, nc, L, h, p)
+    bc = b_mat.reshape(bsz, nc, L, n)
+    cc = c_mat.reshape(bsz, nc, L, n)
+    la = log_a.reshape(bsz, nc, L, h).astype(jnp.float32)
+    cum = jnp.cumsum(la, axis=2)  # inclusive (B, NC, L, H)
+
+    # --- intra-chunk (masked quadratic with decay) ---
+    # vmem_fused: one SSD kernel on TPU; (L,L) weights stay in VMEM
+    with jax.named_scope("vmem_fused_ssd"):
+        scores = jnp.einsum("bcin,bcjn->bcij", cc, bc, preferred_element_type=jnp.float32)
+        decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,NC,i,j,H)
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        w = jnp.where(mask[None, None, :, :, None], jnp.exp(decay), 0.0)
+        w = w * scores[..., None]  # (B,NC,i,j,H)
+        y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w.astype(x.dtype), xc)
+
+        # --- chunk states ---
+        last = cum[:, :, -1:, :]  # (B,NC,1,H)
+        state_w = jnp.exp(last - cum)  # decay from step j to chunk end
+        s_chunk = jnp.einsum(
+            "bcjn,bcjh,bcjhp->bchnp", bc.astype(jnp.float32), state_w, xc.astype(jnp.float32)
+        )  # (B,NC,H,N,P)
+
+    s0 = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((bsz, h, n, p), jnp.float32)
+    )
+
+    def step(s_prev, inp):
+        cc_i, cum_i, s_c, last_i = inp  # (B,L,n), (B,L,H), (B,H,N,P), (B,1,H)
+        y_inter = jnp.einsum("bin,bhnp->bihp", cc_i.astype(jnp.float32), s_prev)
+        y_inter = y_inter * jnp.exp(cum_i)[..., None]
+        s_new = jnp.exp(last_i[:, 0, :, None, None]) * s_prev + s_c
+        return s_new, y_inter
+
+    xs = (
+        cc.transpose(1, 0, 2, 3),
+        cum.transpose(1, 0, 2, 3),
+        s_chunk.transpose(1, 0, 2, 3, 4),
+        last.transpose(1, 0, 2, 3),
+    )
+    s_fin, y_inter = lax.scan(step, s0, xs)
+    y_inter = y_inter.transpose(1, 0, 2, 3, 4)  # (B,NC,L,H,P)
+    y = (y_intra.astype(jnp.float32) + y_inter).reshape(bsz, sp, h, p)[:, :s]
+    if return_state:
+        return y, s_fin
+    return y
+
+
+def ssd_decode_step(
+    state: jax.Array,  # (B, H, N, P)
+    x: jax.Array,  # (B, H, P)
+    b_vec: jax.Array,  # (B, N)
+    c_vec: jax.Array,  # (B, N)
+    log_a: jax.Array,  # (B, H)
+) -> Tuple[jax.Array, jax.Array]:
+    a = jnp.exp(log_a.astype(jnp.float32))[:, :, None, None]
+    upd = jnp.einsum("bn,bhp->bhnp", b_vec.astype(jnp.float32), x.astype(jnp.float32))
+    s_new = a * state + upd
+    y = jnp.einsum("bn,bhnp->bhp", c_vec.astype(jnp.float32), s_new)
+    return s_new, y
+
+
+def _split_proj(z_xbcdt: jax.Array, d_inner: int, gn: int, n_heads: int):
+    z = z_xbcdt[..., :d_inner]
+    xbc = z_xbcdt[..., d_inner : 2 * d_inner + 2 * gn]
+    dt = z_xbcdt[..., 2 * d_inner + 2 * gn :]
+    assert dt.shape[-1] == n_heads
+    return z, xbc, dt
+
+
+def mamba2_forward(
+    params: Params,
+    x: jax.Array,  # (B, S, d_model)
+    *,
+    d_state: int = 64,
+    head_dim: int = 64,
+    n_groups: int = 1,
+    chunk: int = 64,
+    initial_state: Optional[Dict[str, jax.Array]] = None,
+    return_state: bool = False,
+):
+    """Full Mamba2 mixer. With return_state, also returns
+    {"ssm": (B,H,N,P), "conv": (B, W-1, conv_dim)} for decode continuation."""
+    bsz, s, d_model = x.shape
+    d_inner = params["norm_scale"].shape[0]
+    n_heads = params["A_log"].shape[0]
+    gn = n_groups * d_state
+
+    proj = x @ params["in_proj"]
+    z, xbc, dt_raw = _split_proj(proj, d_inner, gn, n_heads)
+
+    if initial_state is not None:
+        tail = initial_state["conv"]  # (B, W-1, conv_dim)
+        xbc_ext = jnp.concatenate([tail.astype(xbc.dtype), xbc], axis=1)
+        xbc_conv = _causal_conv(xbc_ext, params["conv_w"], params["conv_b"])[
+            :, CONV_WIDTH - 1 :
+        ]
+    else:
+        xbc_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    conv_tail = (
+        jnp.concatenate([jnp.zeros_like(xbc[:, :1]).repeat(CONV_WIDTH - 1, 1), xbc], 1)
+        [:, -(CONV_WIDTH - 1):]
+        if initial_state is None
+        else jnp.concatenate([initial_state["conv"].astype(xbc.dtype), xbc], axis=1)[
+            :, -(CONV_WIDTH - 1):
+        ]
+    )
+
+    xs = xbc_conv[..., :d_inner].reshape(bsz, s, n_heads, head_dim)
+    b_mat = xbc_conv[..., d_inner : d_inner + gn]
+    c_mat = xbc_conv[..., d_inner + gn :]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    log_a = -jnp.exp(params["A_log"])[None, None, :] * dt
+    x_scaled = xs * dt[..., None].astype(xs.dtype)
+
+    y = ssd_chunked(
+        x_scaled,
+        b_mat,
+        c_mat,
+        log_a,
+        chunk=chunk,
+        initial_state=None if initial_state is None else initial_state["ssm"],
+        return_state=return_state,
+    )
+    if return_state:
+        y, s_fin = y
+    y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+    y = rmsnorm({"scale": params["norm_scale"]}, y * jax.nn.silu(z))
+    out = y @ params["out_proj"]
+    if return_state:
+        return out, {"ssm": s_fin, "conv": conv_tail.astype(x.dtype)}
+    return out
+
+
+def mamba2_decode(
+    params: Params,
+    x: jax.Array,  # (B, 1, d_model)
+    state: Dict[str, jax.Array],  # {"ssm": (B,H,N,P), "conv": (B,W-1,conv)}
+    *,
+    d_state: int = 64,
+    head_dim: int = 64,
+    n_groups: int = 1,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    bsz = x.shape[0]
+    d_inner = params["norm_scale"].shape[0]
+    n_heads = params["A_log"].shape[0]
+    gn = n_groups * d_state
+
+    proj = x[:, 0] @ params["in_proj"]  # (B, proj)
+    z, xbc, dt_raw = _split_proj(proj, d_inner, gn, n_heads)
+
+    window = jnp.concatenate([state["conv"], xbc[:, None, :]], axis=1)  # (B, W, C)
+    conv_out = jnp.einsum("bwc,wc->bc", window, params["conv_w"]) + params["conv_b"]
+    conv_out = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:]
+
+    xs = conv_out[..., :d_inner].reshape(bsz, n_heads, head_dim)
+    b_vec = conv_out[..., d_inner : d_inner + gn]
+    c_vec = conv_out[..., d_inner + gn :]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    log_a = -jnp.exp(params["A_log"])[None, :] * dt
+    s_new, y = ssd_decode_step(state["ssm"], xs * dt[..., None].astype(xs.dtype), b_vec, c_vec, log_a)
+    y = y + params["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(bsz, d_inner).astype(x.dtype)
+    y = rmsnorm({"scale": params["norm_scale"]}, y * jax.nn.silu(z))
+    out = (y @ params["out_proj"])[:, None, :]
+    return out, {"ssm": s_new, "conv": new_conv}

@@ -1,0 +1,302 @@
+"""Decoder-only transformer LM (dense / MoE / VLM backbone).
+
+Layer stack is a `lax.scan` over parameters stacked on a leading layer axis —
+compile time is O(1) in depth, which is what makes the 80-layer 72B dry-runs
+tractable.  Remat policy is configurable per call site.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.core.gemm_backend import matmul as _bmm
+from repro.parallel.act_sharding import constrain
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models.layers import (
+    Params,
+    cross_entropy_loss,
+    dense_init,
+    embed_init,
+    make_norm,
+    mlp,
+    mlp_init,
+)
+
+REMAT_POLICIES = {
+    "none": None,
+    "full": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.checkpoint_dots,
+    "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+}
+
+
+def _maybe_remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    return jax.checkpoint(fn, policy=REMAT_POLICIES[policy])
+
+
+class DecoderLM:
+    """Dense or MoE decoder LM; with `mrope_sections` it is the Qwen2-VL
+    backbone (vision patch embeddings merged over the leading positions)."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.param_dtype)
+        self.norm_init, self.norm_fn = make_norm(cfg.norm)
+
+    # ---------------- params ----------------
+
+    def _layer_init(self, key) -> Params:
+        cfg = self.cfg
+        ka, km, kn = jax.random.split(key, 3)
+        p: Params = {
+            "attn": attn.attention_init(
+                ka,
+                d_model=cfg.d_model,
+                n_heads=cfg.n_heads,
+                kv_heads=cfg.kv_heads,
+                head_dim=cfg.head_dim_,
+                qkv_bias=cfg.qkv_bias,
+                qk_norm=cfg.qk_norm,
+                dtype=self.dtype,
+            ),
+            "norm1": self.norm_init(cfg.d_model, self.dtype),
+            "norm2": self.norm_init(cfg.d_model, self.dtype),
+        }
+        if cfg.n_experts:
+            p["moe"] = moe_lib.moe_init(
+                km,
+                d_model=cfg.d_model,
+                d_ff=cfg.d_ff,
+                n_experts=cfg.n_experts,
+                dtype=self.dtype,
+            )
+        else:
+            p["mlp"] = mlp_init(
+                km, cfg.d_model, cfg.d_ff, self.dtype, gated=cfg.gated_mlp
+            )
+        return p
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        k_emb, k_head, k_layers = jax.random.split(key, 3)
+        layer_keys = jax.random.split(k_layers, cfg.n_layers)
+        layers = jax.vmap(self._layer_init)(layer_keys)  # stacked on axis 0
+        params: Params = {
+            "embed": embed_init(k_emb, cfg.vocab, cfg.d_model, self.dtype),
+            "layers": layers,
+            "final_norm": self.norm_init(cfg.d_model, self.dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["head"] = dense_init(k_head, cfg.d_model, cfg.vocab, self.dtype)
+        return params
+
+    # ---------------- blocks ----------------
+
+    def _block(
+        self,
+        layer: Params,
+        x: jax.Array,
+        *,
+        positions: jax.Array,
+        mrope_positions: Optional[jax.Array],
+        mode: str,  # "forward" | "prefill"
+        cache_len: int = 0,
+    ):
+        cfg = self.cfg
+        h = self.norm_fn(layer["norm1"], x)
+        kw = dict(
+            n_heads=cfg.n_heads,
+            kv_heads=cfg.kv_heads,
+            positions=positions,
+            rope_theta=cfg.rope_theta,
+            rotary_pct=cfg.rotary_pct,
+            mrope_sections=cfg.mrope_sections,
+            mrope_positions=mrope_positions,
+            q_chunk=cfg.q_chunk,
+            k_chunk=cfg.k_chunk,
+        )
+        if mode == "prefill":
+            a, cache = attn.attention_prefill(layer["attn"], h, cache_len=cache_len, **kw)
+        else:
+            a = attn.attention_forward(
+                layer["attn"], h, causal=True, attn_impl=cfg.attn_impl, **kw
+            )
+            cache = None
+        x = x + a
+        h = self.norm_fn(layer["norm2"], x)
+        if cfg.n_experts:
+            m, aux = moe_lib.moe_forward(
+                layer["moe"],
+                h,
+                top_k=cfg.moe_top_k,
+                capacity_factor=cfg.capacity_factor,
+            )
+        else:
+            m = mlp(layer["mlp"], h, act=cfg.act)
+            aux = {
+                "moe_aux_loss": jnp.zeros((), jnp.float32),
+                "moe_z_loss": jnp.zeros((), jnp.float32),
+            }
+        return x + m, cache, aux
+
+    # ---------------- embedding / head ----------------
+
+    def _embed(
+        self,
+        params: Params,
+        tokens: jax.Array,
+        vision_embeds: Optional[jax.Array] = None,
+    ) -> jax.Array:
+        x = constrain(params["embed"][tokens], ("dp", None, None))
+        if vision_embeds is not None:
+            # VLM stub frontend: patch embeddings occupy the leading positions
+            n_img = vision_embeds.shape[1]
+            x = jnp.concatenate([vision_embeds.astype(x.dtype), x[:, n_img:]], axis=1)
+        return x
+
+    def _logits(self, params: Params, x: jax.Array) -> jax.Array:
+        x = self.norm_fn(params["final_norm"], x)
+        head = (
+            params["embed"].T if self.cfg.tie_embeddings else params["head"]
+        )
+        return constrain(_bmm(x, head), ("dp", None, "tp"))
+
+    # ---------------- entry points ----------------
+
+    def forward(
+        self,
+        params: Params,
+        tokens: jax.Array,  # (B, S)
+        *,
+        mrope_positions: Optional[jax.Array] = None,  # (3, B, S)
+        vision_embeds: Optional[jax.Array] = None,  # (B, n_img, d)
+        remat: str = "dots",
+    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Training forward: returns (logits, aux)."""
+        b, s = tokens.shape
+        x = self._embed(params, tokens, vision_embeds)
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+        def layer_fn(carry, layer):
+            x, aux_acc = carry
+            x, _, aux = self._block(
+                layer,
+                x,
+                positions=positions,
+                mrope_positions=mrope_positions,
+                mode="forward",
+            )
+            aux_acc = {k: aux_acc[k] + aux[k] for k in aux_acc}
+            return (x, aux_acc), None
+
+        aux0 = {
+            "moe_aux_loss": jnp.zeros((), jnp.float32),
+            "moe_z_loss": jnp.zeros((), jnp.float32),
+        }
+        (x, aux), _ = lax.scan(_maybe_remat(layer_fn, remat), (x, aux0), params["layers"])
+        return self._logits(params, x), aux
+
+    def loss(
+        self,
+        params: Params,
+        batch: Dict[str, jax.Array],
+        *,
+        remat: str = "dots",
+    ) -> jax.Array:
+        logits, aux = self.forward(
+            params,
+            batch["tokens"],
+            mrope_positions=batch.get("mrope_positions"),
+            vision_embeds=batch.get("vision_embeds"),
+            remat=remat,
+        )
+        return (
+            cross_entropy_loss(logits, batch["labels"])
+            + aux["moe_aux_loss"] / self.cfg.n_layers
+            + aux["moe_z_loss"] / self.cfg.n_layers
+        )
+
+    def prefill(
+        self,
+        params: Params,
+        tokens: jax.Array,  # (B, S)
+        *,
+        cache_len: int,
+        mrope_positions: Optional[jax.Array] = None,
+        vision_embeds: Optional[jax.Array] = None,
+        remat: str = "dots",
+    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Prefill: returns (last-position logits, stacked KV cache)."""
+        b, s = tokens.shape
+        x = self._embed(params, tokens, vision_embeds)
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+        def layer_fn(x, layer):
+            x, cache, _ = self._block(
+                layer,
+                x,
+                positions=positions,
+                mrope_positions=mrope_positions,
+                mode="prefill",
+                cache_len=cache_len,
+            )
+            return x, cache
+
+        x, caches = lax.scan(_maybe_remat(layer_fn, remat), x, params["layers"])
+        logits = self._logits(params, x[:, -1:])
+        return logits[:, 0], {"kv": caches, "index": jnp.asarray(s, jnp.int32)}
+
+    def decode_step(
+        self,
+        params: Params,
+        token: jax.Array,  # (B, 1)
+        cache: Dict[str, Any],
+        *,
+        mrope_positions: Optional[jax.Array] = None,
+    ) -> Tuple[jax.Array, Dict[str, Any]]:
+        """One-token decode; cache = {"kv": {k,v: (L,B,T,H,D)}, "index": i}."""
+        cfg = self.cfg
+        x = params["embed"][token]
+        index = cache["index"]
+
+        def layer_fn(x, inp):
+            layer, layer_cache = inp
+            h = self.norm_fn(layer["norm1"], x)
+            a, new_cache = attn.attention_decode(
+                layer["attn"],
+                h,
+                layer_cache,
+                index,
+                n_heads=cfg.n_heads,
+                kv_heads=cfg.kv_heads,
+                rope_theta=cfg.rope_theta,
+                rotary_pct=cfg.rotary_pct,
+                mrope_sections=cfg.mrope_sections,
+                mrope_positions=mrope_positions,
+            )
+            x = x + a
+            h = self.norm_fn(layer["norm2"], x)
+            if cfg.n_experts:
+                m, _ = moe_lib.moe_forward(
+                    layer["moe"],
+                    h,
+                    top_k=cfg.moe_top_k,
+                    capacity_factor=cfg.capacity_factor,
+                )
+            else:
+                m = mlp(layer["mlp"], h, act=cfg.act)
+            return x + m, new_cache
+
+        x, new_kv = lax.scan(layer_fn, x, (params["layers"], cache["kv"]))
+        logits = self._logits(params, x)
+        return logits[:, 0], {"kv": new_kv, "index": index + 1}

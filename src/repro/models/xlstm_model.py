@@ -1,0 +1,166 @@
+"""xLSTM LM assembly (xlstm-1.3b): groups of (slstm_every - 1) mLSTM blocks
+followed by one sLSTM block, scanned over groups (48 = 6 x 8 with
+slstm_every=8).  d_ff = 0: blocks carry their own projections, no extra MLP.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import xlstm
+from repro.models.layers import (
+    Params,
+    cross_entropy_loss,
+    dense_init,
+    embed_init,
+    make_norm,
+)
+from repro.models.transformer import _maybe_remat
+
+
+class XLSTMLM:
+    def __init__(self, cfg: ArchConfig):
+        assert cfg.slstm_every >= 2
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.param_dtype)
+        self.norm_init, self.norm_fn = make_norm(cfg.norm)
+        assert cfg.n_layers % cfg.slstm_every == 0, (
+            f"n_layers={cfg.n_layers} must divide by slstm_every={cfg.slstm_every}"
+        )
+        self.n_groups = cfg.n_layers // cfg.slstm_every
+        self.m_per_group = cfg.slstm_every - 1
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        k_emb, k_head, k_m, k_s = jax.random.split(key, 4)
+        m_keys = jax.random.split(k_m, self.n_groups * self.m_per_group).reshape(
+            self.n_groups, self.m_per_group, 2
+        )
+        s_keys = jax.random.split(k_s, self.n_groups)
+        mlstm_groups = jax.vmap(
+            jax.vmap(
+                lambda k: xlstm.mlstm_block_init(
+                    k, d_model=cfg.d_model, n_heads=cfg.n_heads, dtype=self.dtype
+                )
+            )
+        )(m_keys)
+        slstm_blocks = jax.vmap(
+            lambda k: xlstm.slstm_block_init(
+                k, d_model=cfg.d_model, n_heads=cfg.n_heads, dtype=self.dtype
+            )
+        )(s_keys)
+        return {
+            "embed": embed_init(k_emb, cfg.vocab, cfg.d_model, self.dtype),
+            "mlstm": mlstm_groups,
+            "slstm": slstm_blocks,
+            "final_norm": self.norm_init(cfg.d_model, self.dtype),
+            "head": dense_init(k_head, cfg.d_model, cfg.vocab, self.dtype),
+        }
+
+    # ---------------- entry points ----------------
+
+    def forward(self, params: Params, tokens: jax.Array, *, remat: str = "dots"):
+        cfg = self.cfg
+        x = params["embed"][tokens]
+
+        def group_fn(x, group):
+            m_group, s_block = group
+
+            def inner(x, layer):
+                return (
+                    xlstm.mlstm_block_forward(
+                        layer, x, n_heads=cfg.n_heads, chunk=cfg.ssm_chunk
+                    ),
+                    None,
+                )
+
+            x, _ = lax.scan(inner, x, m_group)
+            x = xlstm.slstm_block_forward(s_block, x, n_heads=cfg.n_heads)
+            return x, None
+
+        x, _ = lax.scan(
+            _maybe_remat(group_fn, remat), x, (params["mlstm"], params["slstm"])
+        )
+        x = self.norm_fn(params["final_norm"], x)
+        return x @ params["head"], {}
+
+    def loss(self, params, batch, *, remat: str = "dots"):
+        logits, _ = self.forward(params, batch["tokens"], remat=remat)
+        return cross_entropy_loss(logits, batch["labels"])
+
+    def prefill(self, params, tokens, *, cache_len: int = 0, remat: str = "dots"):
+        """Recurrent arch: "cache" is the (m/s)LSTM state, O(1) in seq_len
+        (cache_len is accepted for interface parity and ignored)."""
+        cfg = self.cfg
+        x = params["embed"][tokens]
+
+        def group_fn(x, group):
+            m_group, s_block = group
+
+            def inner(x, layer):
+                x, (core, conv_tail) = xlstm.mlstm_block_forward(
+                    layer,
+                    x,
+                    n_heads=cfg.n_heads,
+                    chunk=cfg.ssm_chunk,
+                    return_state=True,
+                )
+                return x, (core, conv_tail)
+
+            x, m_states = lax.scan(inner, x, m_group)
+            x, s_state = xlstm.slstm_block_forward(
+                s_block, x, n_heads=cfg.n_heads, return_state=True
+            )
+            return x, (m_states, s_state)
+
+        x, (m_states, s_states) = lax.scan(group_fn, x, (params["mlstm"], params["slstm"]))
+        logits = (self.norm_fn(params["final_norm"], x[:, -1:]) @ params["head"])[:, 0]
+        m_core, m_conv = m_states
+        cache = {
+            "mlstm_core": m_core,
+            "mlstm_conv": m_conv,
+            "slstm": s_states,
+            "index": jnp.asarray(tokens.shape[1], jnp.int32),
+        }
+        return logits, cache
+
+    def decode_step(self, params, token, cache):
+        cfg = self.cfg
+        x = params["embed"][token]
+
+        def group_fn(x, inp):
+            (m_group, s_block), (m_core, m_conv), s_state = inp
+
+            def inner(x, layer_state):
+                layer, core, conv = layer_state
+                x, (core_new, conv_new) = xlstm.mlstm_block_decode(
+                    layer, x, (core, conv), n_heads=cfg.n_heads
+                )
+                return x, (core_new, conv_new)
+
+            x, (m_core_new, m_conv_new) = lax.scan(inner, x, (m_group, m_core, m_conv))
+            x, s_new = xlstm.slstm_block_decode(s_block, x, s_state, n_heads=cfg.n_heads)
+            return x, ((m_core_new, m_conv_new), s_new)
+
+        x, ((m_core, m_conv), s_states) = lax.scan(
+            group_fn,
+            x,
+            (
+                (params["mlstm"], params["slstm"]),
+                (cache["mlstm_core"], cache["mlstm_conv"]),
+                cache["slstm"],
+            ),
+        )
+        logits = (self.norm_fn(params["final_norm"], x) @ params["head"])[:, 0]
+        return logits, {
+            "mlstm_core": m_core,
+            "mlstm_conv": m_conv,
+            "slstm": s_states,
+            "index": cache["index"] + 1,
+        }

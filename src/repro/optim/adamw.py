@@ -1,0 +1,114 @@
+"""AdamW with f32 master weights, global-norm clipping and LR schedules.
+
+Pure-JAX (no optax): state is a pytree mirroring params, so the same
+partition rules shard it (optimizer sharding comes for free).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    schedule: str = "cosine"  # cosine | linear | constant
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        decay = 1.0
+    else:
+        frac = jnp.clip(
+            (step - cfg.warmup_steps)
+            / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+            0.0,
+            1.0,
+        )
+        if cfg.schedule == "cosine":
+            decay = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        else:
+            decay = 1.0 - frac
+        decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * decay
+    return cfg.lr * warm * decay
+
+
+def adamw_init(params: Params) -> Dict[str, Any]:
+    # copy=True: when params are already f32, astype would alias the buffer
+    # and donating (params, opt_state) together would double-donate.
+    f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        "nu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        "master": jax.tree.map(f32, params),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(
+    cfg: AdamWConfig,
+    grads: Params,
+    state: Dict[str, Any],
+    params: Params,
+) -> Tuple[Params, Dict[str, Any], Dict[str, jax.Array]]:
+    """Returns (new_params, new_state, metrics). Params keep their dtype
+    (e.g. bf16) while the update runs on the f32 masters."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = lr_at(cfg, step)
+
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, mu, nu, master):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g)
+        mhat = mu / b1c
+        nhat = nu / b2c
+        step_v = mhat / (jnp.sqrt(nhat) + cfg.eps) + cfg.weight_decay * master
+        master = master - lr * step_v
+        return mu, nu, master
+
+    mu, nu, master = jax.tree.map(
+        upd,
+        grads,
+        state["mu"],
+        state["nu"],
+        state["master"],
+        is_leaf=lambda x: isinstance(x, jax.Array),
+    ), None, None
+    # jax.tree.map over 4 trees returns a single tree of tuples; unzip:
+    flat, treedef = jax.tree_util.tree_flatten(mu, is_leaf=lambda x: isinstance(x, tuple))
+    mus = jax.tree_util.tree_unflatten(treedef, [t[0] for t in flat])
+    nus = jax.tree_util.tree_unflatten(treedef, [t[1] for t in flat])
+    masters = jax.tree_util.tree_unflatten(treedef, [t[2] for t in flat])
+
+    new_params = jax.tree.map(lambda m, p: m.astype(p.dtype), masters, params)
+    new_state = {"step": step, "mu": mus, "nu": nus, "master": masters}
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics

@@ -1,0 +1,85 @@
+"""Gradient compression for the slow (cross-pod) axis.
+
+Error-feedback int8 quantization: each worker quantizes (grad + carried
+error) to int8 with a per-tensor scale, exchanges the int8 payload with an
+`all_gather` over the compression axis and de-quantizes/averages locally.
+Bytes on the wire drop ~8x vs an f32 all-reduce (int8 gather moves N bytes
+vs ~2N f32 ring all-reduce); the quantization residual is carried into the
+next step (error feedback), which keeps SGD/Adam convergence intact.
+
+This mirrors the paper's thesis at the gradient level: minimize *words on
+the critical path* of the slowest link.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+__all__ = ["quantize_int8", "dequantize_int8", "compressed_psum_mean", "ef_init", "ef_compress_grads"]
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization; returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum_mean(x: jax.Array, axis_name: str) -> jax.Array:
+    """Mean over a mesh axis with int8 payload (inside shard_map only)."""
+    q, scale = quantize_int8(x)
+    qs = lax.all_gather(q, axis_name)  # (axis, ...) int8 on the wire
+    scales = lax.all_gather(scale, axis_name)
+    deq = qs.astype(jnp.float32) * scales.reshape((-1,) + (1,) * x.ndim)
+    return jnp.mean(deq, axis=0)
+
+
+def ef_init(params) -> Any:
+    """Error-feedback buffers (f32 zeros mirroring params)."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def ef_compress_grads(
+    grads: Any,
+    error: Any,
+    axis_name: str,
+) -> Tuple[Any, Any]:
+    """Compress-and-exchange each gradient leaf over `axis_name` with error
+    feedback. Returns (synced_grads, new_error). Call inside shard_map with
+    grads already reduced over the fast in-pod axes."""
+
+    def leaf(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(corrected)
+        sent = dequantize_int8(q, scale)
+        new_e = corrected - sent  # residual carried to next step
+        synced = compressed_psum_mean_from_q(q, scale, axis_name)
+        return synced.astype(g.dtype), new_e
+
+    pairs = jax.tree.map(leaf, grads, error)
+    flat, treedef = jax.tree_util.tree_flatten(
+        pairs, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    synced = jax.tree_util.tree_unflatten(treedef, [t[0] for t in flat])
+    new_err = jax.tree_util.tree_unflatten(treedef, [t[1] for t in flat])
+    return synced, new_err
+
+
+def compressed_psum_mean_from_q(
+    q: jax.Array, scale: jax.Array, axis_name: str
+) -> jax.Array:
+    qs = lax.all_gather(q, axis_name)
+    scales = lax.all_gather(scale, axis_name)
+    deq = qs.astype(jnp.float32) * scales.reshape((-1,) + (1,) * q.ndim)
+    return jnp.mean(deq, axis=0)

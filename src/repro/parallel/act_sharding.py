@@ -1,0 +1,69 @@
+"""Activation-sharding policy: logical-axis constraints inside model code.
+
+Without explicit constraints, XLA SPMD loses the batch sharding across the
+chunked-attention `while` loops and replicates the whole attention compute
+over the data axis (observed 5x FLOP inflation on yi-6b train_4k — see
+EXPERIMENTS.md SSPerf iteration 0).  Model code therefore tags key
+intermediates with *logical* axes ("dp" = batch-like, "tp" = model-parallel,
+None = unsharded); the policy maps them to the active mesh.  When no policy
+is installed (single-device smoke tests) `constrain` is a no-op.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["activation_sharding", "constrain", "current_policy"]
+
+
+@dataclasses.dataclass(frozen=True)
+class _Policy:
+    mesh: Mesh
+    dp: Tuple[str, ...]
+    tp: Optional[str]
+
+
+_POLICY: contextvars.ContextVar[Optional[_Policy]] = contextvars.ContextVar(
+    "act_sharding_policy", default=None
+)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, dp: Sequence[str], tp: Optional[str]):
+    """Install the policy for the duration of a trace/lower call."""
+    tok = _POLICY.set(_Policy(mesh, tuple(dp), tp))
+    try:
+        yield
+    finally:
+        _POLICY.reset(tok)
+
+
+def current_policy() -> Optional[_Policy]:
+    return _POLICY.get()
+
+
+def constrain(x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+    """Apply a logical-axis sharding constraint; divisibility-checked, no-op
+    without a policy.  logical entries: "dp" | "tp" | None per dim."""
+    pol = _POLICY.get()
+    if pol is None:
+        return x
+    if len(logical) != x.ndim:
+        return x
+    dp_size = int(np.prod([pol.mesh.shape[a] for a in pol.dp])) if pol.dp else 1
+    spec = []
+    for ax, dim in zip(logical, x.shape):
+        if ax == "dp" and pol.dp and dp_size > 1 and dim % dp_size == 0:
+            spec.append(pol.dp if len(pol.dp) > 1 else pol.dp[0])
+        elif ax == "tp" and pol.tp and dim % pol.mesh.shape[pol.tp] == 0:
+            spec.append(pol.tp)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(pol.mesh, P(*spec)))

@@ -1,0 +1,221 @@
+"""Partition rules: parameter/activation PartitionSpecs per architecture.
+
+Two-stage engine:
+  1. regex rules bind the *intent* axis ("model" = TP/EP dim) to a trailing
+     dim of each param — Megatron column/row splits, expert axis for MoE;
+  2. a post-pass adds FSDP sharding over the data axes to the largest
+     still-unsharded dim of every large leaf (ZeRO-3-style), with
+     divisibility checks against the actual mesh.
+
+This combination is what lets the 72B-class archs fit 16 GB/chip on the
+16x16 production mesh: params 144 GB / 256 and AdamW f32 state / 256.
+
+Profiles:
+  baseline   TP over "model" + FSDP over ("pod","data") — the
+             paper-faithful starting point (SS Perf baseline).
+  ca_25d     beyond-paper: K-dims of the big row-parallel GEMMs
+             additionally sharded over "pod" (the CA K_layers axis of
+             DESIGN SS2.2) => partial-K GEMMs + one cross-pod psum.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+__all__ = [
+    "partition_rules",
+    "spec_for_tree",
+    "make_shardings",
+    "batch_specs",
+    "cache_specs",
+    "data_axes",
+    "FSDP_MIN_SIZE",
+]
+
+FSDP_MIN_SIZE = 1 << 20  # leaves >= 1M elements get FSDP sharding
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# (pattern, trailing-dims spec using the "model" axis; None = no TP intent)
+_TP_RULES: List[Tuple[str, Optional[Tuple[Optional[str], ...]]]] = [
+    (r"embed$", (None, "model")),
+    (r"head$", (None, "model")),
+    (r"(attn|cross)/w[qkv]$", (None, "model")),
+    (r"(attn|cross)/b[qkv]$", ("model",)),
+    (r"(attn|cross)/wo$", ("model", None)),
+    (r"mlp/w_(in|gate)$", (None, "model")),
+    (r"mlp/w_out$", ("model", None)),
+    (r"moe/router$", (None, None)),
+    (r"moe/w_(in|gate)$", ("model", None, None)),  # expert parallelism
+    (r"moe/w_out$", ("model", None, None)),
+    # SSM / xLSTM mixers: shard projection cols over model (pure layout for
+    # the fused [z|x|B|C|dt] projections; correctness is XLA SPMD's job)
+    (r"mixer/in_proj$", (None, "model")),
+    (r"mixer/out_proj$", ("model", None)),
+    (r"mixer/conv_[wb]$", None),
+    (r"(w_up|w_gates)$", (None, "model")),
+    # sLSTM recurrent kernel: replicated — the scan runs inside a dp-local
+    # shard_map (xlstm.slstm_scan), so its wgrad psum fires once per call,
+    # not once per time step (SSPerf xlstm iteration)
+    (r"slstm.*/r_kernel$", None),
+    (r"w_down$", ("model", None)),
+    (r"mlstm/w[qkv]$", (None, "model")),
+]
+
+_CA_RULES: List[Tuple[str, Tuple[Optional[str], ...]]] = [
+    # CA 2.5D: K-dim of row-parallel GEMMs also over "pod" (K_layers axis)
+    (r"(attn|cross)/wo$", (("pod", "model"), None)),
+    (r"mlp/w_out$", (("pod", "model"), None)),
+]
+
+
+def partition_rules(cfg: ArchConfig, profile: str = "baseline"):
+    if profile == "baseline":
+        return list(_TP_RULES)
+    if profile == "ca_25d":
+        return _CA_RULES + list(_TP_RULES)
+    raise ValueError(f"unknown sharding profile {profile}")
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+_NO_FSDP = re.compile(r"moe/w_(in|gate|out)$")
+
+
+def _leaf_spec(
+    path: str,
+    shape: Tuple[int, ...],
+    mesh: Mesh,
+    rules,
+    *,
+    fsdp: bool = True,
+) -> P:
+    if _NO_FSDP.search(path):
+        fsdp = False  # shard_map MoE needs whole (local) experts per chip
+    ndim = len(shape)
+    spec: List[Any] = [None] * ndim
+    for pat, dims in rules:
+        if re.search(pat, path):
+            if dims is not None:
+                pad = ndim - len(dims)
+                if pad >= 0:
+                    for i, ax in enumerate(dims):
+                        dim = pad + i
+                        if ax is not None and shape[dim] % _axis_size(mesh, ax) == 0:
+                            spec[dim] = ax
+            break
+    # FSDP post-pass: shard the largest unsharded dim over the data axes
+    if fsdp and int(np.prod(shape)) >= FSDP_MIN_SIZE:
+        dp = data_axes(mesh)
+        dp_size = _axis_size(mesh, tuple(dp))
+        order = sorted(range(ndim), key=lambda i: -shape[i])
+        for i in order:
+            if spec[i] is None and shape[i] % dp_size == 0:
+                spec[i] = dp if len(dp) > 1 else dp[0]
+                break
+    return P(*spec)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def spec_for_tree(tree, cfg: ArchConfig, mesh: Mesh, profile: str = "baseline", *, fsdp: bool = True):
+    """PartitionSpec pytree for params or optimizer state (same rules; the
+    optimizer mirrors params under mu/nu/master prefixes, which regex
+    `search` matches transparently)."""
+    rules = partition_rules(cfg, profile)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    specs = []
+    for path, leaf in flat:
+        shape = tuple(getattr(leaf, "shape", ()))
+        specs.append(_leaf_spec(_path_str(path), shape, mesh, rules, fsdp=fsdp))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def make_shardings(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# activation / input / cache rules
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg: ArchConfig, mesh: Mesh, batch: int) -> Dict[str, P]:
+    """Training / prefill batch shardings: batch dim over the DP axes (or
+    replicated when the batch is too small to split, e.g. long_500k B=1)."""
+    dp: Any = data_axes(mesh)
+    if batch % _axis_size(mesh, tuple(dp)):
+        dp = "data" if batch % mesh.shape["data"] == 0 else None
+    spec: Dict[str, P] = {
+        "tokens": P(dp, None),
+        "labels": P(dp, None),
+    }
+    if cfg.family == "vlm":
+        spec["mrope_positions"] = P(None, dp, None)
+        spec["vision_embeds"] = P(dp, None, None)
+    if cfg.family == "audio":
+        spec["src_embeds"] = P(dp, None, None)
+    return spec
+
+
+def cache_specs(cache_tree, cfg: ArchConfig, mesh: Mesh, batch: int):
+    """Decode-cache shardings: shard the batch dim (identified by size) over
+    the DP axes when divisible, else the longest divisible dim — which for
+    long_500k is the sequence/cache axis, i.e. context parallelism — else
+    replicate."""
+    dp = data_axes(mesh)
+    dp_size = _axis_size(mesh, tuple(dp))
+
+    def leaf_spec(leaf):
+        shape = tuple(leaf.shape)
+        if not shape:
+            return P()
+        spec: List[Any] = [None] * len(shape)
+        # leftmost dim that looks like the batch and splits evenly
+        for i, s in enumerate(shape):
+            if s == batch and s % dp_size == 0:
+                spec[i] = dp if len(dp) > 1 else dp[0]
+                return P(*spec)
+        # fall back: longest dim divisible by the full DP extent, then "data"
+        order = sorted(range(len(shape)), key=lambda i: -shape[i])
+        for i in order:
+            if shape[i] >= dp_size and shape[i] % dp_size == 0:
+                spec[i] = dp if len(dp) > 1 else dp[0]
+                return P(*spec)
+        for i in order:
+            if shape[i] >= mesh.shape["data"] and shape[i] % mesh.shape["data"] == 0:
+                spec[i] = "data"
+                return P(*spec)
+        return P(*spec)
+
+    return jax.tree.map(leaf_spec, cache_tree)

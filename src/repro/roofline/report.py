@@ -1,0 +1,99 @@
+"""SSRoofline report generator: reads results/dryrun/*.json and emits the
+per-(arch x shape x mesh) table for EXPERIMENTS.md.
+
+  PYTHONPATH=src python -m repro.roofline.report [--dir results/dryrun]
+      [--mesh 16x16] [--markdown]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+COLS = [
+    "arch", "shape", "mesh", "dominant",
+    "t_compute_s", "t_memory_s", "t_collective_s",
+    "roofline_frac", "useful_ratio", "mb",
+]
+
+
+def load(dir_: str) -> List[Dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        r = json.load(open(f))
+        recs.append(r)
+    return recs
+
+
+def rows(recs: List[Dict], mesh: str = None) -> List[Dict]:
+    out = []
+    for r in recs:
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skip":
+            out.append(
+                {
+                    "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+                    "dominant": "SKIP", "t_compute_s": "", "t_memory_s": "",
+                    "t_collective_s": "", "roofline_frac": "",
+                    "useful_ratio": "", "mb": "", "_reason": r.get("reason", ""),
+                }
+            )
+            continue
+        if r["status"] != "ok":
+            out.append({"arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+                        "dominant": "ERROR", "t_compute_s": "", "t_memory_s": "",
+                        "t_collective_s": "", "roofline_frac": "", "useful_ratio": "",
+                        "mb": ""})
+            continue
+        t = r["roofline"]
+        out.append(
+            {
+                "arch": r["arch"],
+                "shape": r["shape"],
+                "mesh": r["mesh"],
+                "dominant": t["dominant"],
+                "t_compute_s": f"{t['t_compute_s']:.3e}",
+                "t_memory_s": f"{t['t_memory_s']:.3e}",
+                "t_collective_s": f"{t['t_collective_s']:.3e}",
+                "roofline_frac": f"{t['roofline_fraction']:.3f}",
+                "useful_ratio": f"{r['useful_flops_ratio']:.2f}"
+                if r.get("useful_flops_ratio")
+                else "",
+                "mb": r.get("microbatches", ""),
+            }
+        )
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    out.sort(key=lambda x: (x["mesh"], x["arch"], order.get(x["shape"], 9)))
+    return out
+
+
+def markdown(rows_: List[Dict]) -> str:
+    head = "| " + " | ".join(COLS) + " |"
+    sep = "|" + "---|" * len(COLS)
+    lines = [head, sep]
+    for r in rows_:
+        lines.append("| " + " | ".join(str(r.get(c, "")) for c in COLS) + " |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    rs = rows(load(args.dir), args.mesh)
+    if args.markdown:
+        print(markdown(rs))
+    else:
+        print(",".join(COLS))
+        for r in rs:
+            print(",".join(str(r.get(c, "")) for c in COLS))
+
+
+if __name__ == "__main__":
+    main()

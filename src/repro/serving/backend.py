@@ -1,0 +1,5 @@
+"""Re-export of the GEMM-backend hook for serving call sites."""
+
+from repro.core.gemm_backend import current_backend, gemm_backend, matmul
+
+__all__ = ["gemm_backend", "current_backend", "matmul"]

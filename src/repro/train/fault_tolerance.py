@@ -1,0 +1,127 @@
+"""Fault tolerance for the training loop.
+
+Components:
+  * `TrainLoop` — checkpoint/restart orchestration: resumes from the latest
+    committed checkpoint, regenerates the data stream from the step index
+    (the synthetic pipeline is stateless-resumable), saves periodically and
+    on exit, and survives simulated preemptions (tests kill it mid-run and
+    assert the restarted loss trajectory is bitwise-identical).
+  * `StepWatchdog` — straggler mitigation: tracks a rolling step-time
+    distribution; steps exceeding `threshold x median` raise a
+    StragglerEvent for the orchestration layer (log + checkpoint + optional
+    abort-and-reschedule), mirroring large-fleet babysitting practice.
+  * `ElasticRestore` — via checkpoint.restore(shardings=...): a checkpoint
+    taken on one mesh restores onto any other (topology-free leaves).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.train.checkpoint import CheckpointManager
+
+__all__ = ["StragglerEvent", "StepWatchdog", "TrainLoop"]
+
+
+class StragglerEvent(RuntimeError):
+    def __init__(self, step: int, elapsed: float, median: float):
+        super().__init__(
+            f"step {step} took {elapsed:.3f}s (> threshold x median {median:.3f}s)"
+        )
+        self.step = step
+        self.elapsed = elapsed
+        self.median = median
+
+
+class StepWatchdog:
+    """Rolling-median step-time monitor."""
+
+    def __init__(self, threshold: float = 5.0, window: int = 50, min_samples: int = 5):
+        self.threshold = threshold
+        self.window = window
+        self.min_samples = min_samples
+        self._times: List[float] = []
+
+    def observe(self, step: int, elapsed: float) -> Optional[StragglerEvent]:
+        ev = None
+        if len(self._times) >= self.min_samples:
+            med = float(np.median(self._times))
+            if elapsed > self.threshold * med:
+                ev = StragglerEvent(step, elapsed, med)
+        self._times.append(elapsed)
+        if len(self._times) > self.window:
+            self._times.pop(0)
+        return ev
+
+
+@dataclasses.dataclass
+class TrainLoop:
+    """Restartable training loop around a jitted train_step.
+
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+    batch_fn(step) -> host batch (pure function of step)
+    """
+
+    train_step: Callable
+    batch_fn: Callable[[int], Dict[str, np.ndarray]]
+    ckpt: CheckpointManager
+    watchdog: Optional[StepWatchdog] = None
+    on_straggler: str = "log"  # log | checkpoint | raise
+
+    def run(
+        self,
+        params: Any,
+        opt_state: Any,
+        *,
+        num_steps: int,
+        start_step: int = 0,
+        resume: bool = True,
+        fail_at: Optional[int] = None,  # test hook: simulate preemption
+        log_every: int = 10,
+        logger: Callable[[str], None] = print,
+    ):
+        step = start_step
+        if resume:
+            got_step, tree = self.ckpt.resume(target={"params": params, "opt": opt_state})
+            if got_step is not None:
+                params, opt_state = tree["params"], tree["opt"]
+                step = got_step
+                logger(f"[ft] resumed from checkpoint at step {step}")
+
+        history = []
+        while step < num_steps:
+            if fail_at is not None and step == fail_at:
+                raise KeyboardInterrupt(f"simulated preemption at step {step}")
+            t0 = time.perf_counter()
+            batch = self.batch_fn(step)
+            params, opt_state, metrics = self.train_step(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            elapsed = time.perf_counter() - t0
+            step += 1
+            history.append((step, loss))
+            if self.watchdog is not None:
+                ev = self.watchdog.observe(step, elapsed)
+                if ev is not None:
+                    if self.on_straggler == "raise":
+                        self.ckpt.maybe_save(
+                            step, {"params": params, "opt": opt_state}, force=True
+                        )
+                        self.ckpt.wait()
+                        raise ev
+                    logger(f"[ft] straggler: {ev}")
+                    if self.on_straggler == "checkpoint":
+                        self.ckpt.maybe_save(
+                            step, {"params": params, "opt": opt_state}, force=True
+                        )
+            self.ckpt.maybe_save(step, {"params": params, "opt": opt_state})
+            if log_every and step % log_every == 0:
+                logger(f"[train] step={step} loss={loss:.4f} dt={elapsed*1e3:.1f}ms")
+
+        self.ckpt.maybe_save(step, {"params": params, "opt": opt_state}, force=True)
+        self.ckpt.wait()
+        return params, opt_state, history

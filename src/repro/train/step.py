@@ -1,0 +1,85 @@
+"""Train-step builder: loss -> grads -> AdamW, with microbatch gradient
+accumulation (overlaps the cross-pod reduce of microbatch i with compute of
+microbatch i+1 under XLA async collectives) and configurable remat."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.parallel.act_sharding import constrain
+
+__all__ = ["make_train_step", "make_eval_step"]
+
+
+def _split_microbatches(batch: Dict[str, jax.Array], k: int) -> Dict[str, jax.Array]:
+    def sp(x):
+        if x.ndim >= 2 and x.shape[0] % k == 0:
+            out = x.reshape(k, x.shape[0] // k, *x.shape[1:])
+        elif x.ndim >= 3 and x.shape[1] % k == 0:  # (3, B, S) mrope layout
+            out = x.transpose(1, 0, *range(2, x.ndim)).reshape(
+                k, x.shape[1] // k, x.shape[0], *x.shape[2:]
+            )
+        else:
+            raise ValueError(f"cannot microbatch shape {x.shape} by {k}")
+        # unambiguous scan-xs sharding: microbatch dim replicated, batch on dp
+        return constrain(out, (None, "dp") + (None,) * (out.ndim - 2))
+
+    return jax.tree.map(sp, batch)
+
+
+def _restore_mrope(x: jax.Array, key: str) -> jax.Array:
+    if key == "mrope_positions":  # (b, 3, S) -> (3, b, S)
+        return x.transpose(1, 0, *range(2, x.ndim))
+    return x
+
+
+def make_train_step(
+    model,
+    opt_cfg: AdamWConfig,
+    *,
+    remat: str = "dots",
+    microbatches: int = 1,
+) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, remat=remat)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            mb = _split_microbatches(batch, microbatches)
+
+            def acc(carry, mb_i):
+                loss_acc, g_acc = carry
+                mb_fixed = {k: _restore_mrope(v, k) for k, v in mb_i.items()}
+                l, g = jax.value_and_grad(loss_fn)(params, mb_fixed)
+                g_acc = jax.tree.map(lambda a, b: a + b, g_acc, g)
+                return (loss_acc + l, g_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = lax.scan(acc, (jnp.zeros(()), g0), mb)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+
+        new_params, new_state, opt_metrics = adamw_update(
+            opt_cfg, grads, opt_state, params
+        )
+        metrics = {"loss": loss, **opt_metrics}
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model, *, remat: str = "none") -> Callable:
+    def eval_step(params, batch):
+        return model.loss(params, batch, remat=remat)
+
+    return eval_step

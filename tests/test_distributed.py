@@ -1,0 +1,37 @@
+"""Multi-device integration tests.
+
+Each case runs in a subprocess with 8 forced host devices — the main pytest
+process must stay single-device (smoke tests and kernel interpret runs
+assume it)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.testing.dist_cases import CASES
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(case: str, timeout: int = 420) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.testing.dist_cases", case],
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+        env=env,
+    )
+    assert proc.returncode == 0, f"{case} failed:\n{proc.stdout}\n{proc.stderr[-3000:]}"
+    assert f"DIST_CASE_OK {case}" in proc.stdout
+    return proc.stdout
+
+
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_distributed_case(case):
+    _run(case)

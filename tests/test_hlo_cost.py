@@ -1,0 +1,97 @@
+"""HLO static-cost parser: validated against analytically-known programs
+(this is the cost source behind EXPERIMENTS.md SSRoofline)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Runs in a subprocess with 8 devices so the SPMD/collective paths are real.
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.roofline.hlo_cost import module_cost, parse_module
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+L, B, S, D = 5, 4, 32, 64
+
+def f(x, w):
+    def body(x, wi):
+        return jnp.tanh(x @ wi), None
+    x, _ = lax.scan(body, x, w)
+    return (x * x).sum()
+
+x = jax.ShapeDtypeStruct((B, S, D), jnp.float32)
+w = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
+with mesh:
+    comp = jax.jit(jax.grad(f, argnums=(0, 1)), in_shardings=(
+        NamedSharding(mesh, P("data", None, "model")),
+        NamedSharding(mesh, P(None, None, "model")))).lower(x, w).compile()
+c = module_cost(comp.as_text())
+# per device: fwd + dgrad + wgrad dots per layer, x L layers (loop-aware!)
+expect = L * 3 * 2 * (2 * 32) * 64 * 16
+ratio = c.flops / expect
+assert 0.95 < ratio < 1.1, f"flops ratio {ratio}"
+assert c.total_coll_bytes > 0, "collectives must be visible"
+assert c.bytes > 0
+
+# nested scans multiply
+def g(x, w):
+    def outer(x, wi):
+        def inner(x, _):
+            return jnp.tanh(x @ wi), None
+        x, _ = lax.scan(inner, x, None, length=3)
+        return x, None
+    x, _ = lax.scan(outer, x, w)
+    return x.sum()
+
+with mesh:
+    comp2 = jax.jit(g, in_shardings=(
+        NamedSharding(mesh, P("data", None, "model")),
+        NamedSharding(mesh, P(None, None, "model")))).lower(x, w).compile()
+c2 = module_cost(comp2.as_text())
+expect2 = L * 3 * 2 * (2 * 32) * 64 * 16
+ratio2 = c2.flops / expect2
+assert 0.9 < ratio2 < 1.2, f"nested ratio {ratio2}"
+print("HLO_COST_OK")
+"""
+
+
+def test_parser_exact_on_known_programs():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT], capture_output=True, text=True, timeout=420, env=env
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "HLO_COST_OK" in proc.stdout
+
+
+def test_parser_handles_metadata_parens():
+    """Regression: metadata strings contain parens; attrs must survive."""
+    from repro.roofline.hlo_cost import _parse_op_line
+
+    line = (
+        '  %w = f32[2]{0} fusion(%a, %b), kind=kLoop, calls=%comp, '
+        'metadata={op_name="jit(f)/jvp()/while/body/add" stack_frame_id=3}'
+    )
+    name, shape, opcode, args, attrs = _parse_op_line(line)
+    assert opcode == "fusion"
+    assert "calls=%comp" in attrs
+    assert args == "%a, %b"
+
+
+def test_trip_count_from_backend_config():
+    from repro.roofline.hlo_cost import Op, _trip_count
+
+    op = Op(
+        "w", "(s32[])", "while", ["%t"],
+        'condition=%c, body=%b, backend_config={"known_trip_count":{"n":"80"}}',
+    )
+    assert _trip_count({}, op, "c") == 80

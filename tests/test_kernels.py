@@ -1,0 +1,126 @@
+"""Pallas SFC-CA GEMM kernel: shape/dtype sweeps vs the pure-jnp oracle
+(interpret mode on CPU), plus the Listing-1 reference algorithm."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sfc_gemm import sfc_ca_gemm_reference
+from repro.kernels.ops import pick_blocks, sfc_matmul
+from repro.kernels.ref import add_reduce_ref, matmul_ref, partial_k_matmul_ref
+from repro.kernels.sfc_gemm import add_reduce_pallas, build_task_table, sfc_gemm_pallas
+
+def _mats(m, n, k, dtype):
+    rng = np.random.default_rng([m, n, k, np.dtype(dtype).itemsize])
+    a = jnp.asarray(rng.normal(size=(m, k)), dtype)
+    b = jnp.asarray(rng.normal(size=(k, n)), dtype)
+    return a, b
+
+
+SHAPES = [
+    # (m, n, k, bm, bn, k_layers, kbf)
+    (32, 32, 32, 16, 16, 1, 1),
+    (64, 32, 64, 16, 16, 2, 1),
+    (32, 64, 128, 16, 16, 1, 4),
+    (64, 64, 64, 32, 32, 2, 2),
+    (128, 32, 64, 16, 16, 4, 1),
+    (48, 80, 96, 16, 16, 2, 3),  # non-square, non-pow2 grid
+]
+
+
+@pytest.mark.parametrize("m,n,k,bm,bn,kl,kbf", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sfc_gemm_pallas_sweep(m, n, k, bm, bn, kl, kbf, dtype):
+    a, b = _mats(m, n, k, dtype)
+    got = sfc_matmul(a, b, bm=bm, bn=bn, k_layers=kl, k_block_factor=kbf, interpret=True)
+    want = matmul_ref(a, b)
+    tol = 2e-5 if dtype == jnp.float32 else 6e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_partial_copies_match_k_slabs():
+    """The (K_layers, M, N) replicated-C stage equals per-slab products."""
+    a, b = _mats(32, 32, 64, jnp.float32)
+    copies = sfc_gemm_pallas(a, b, bm=16, bn=16, k_layers=2, interpret=True)
+    want = partial_k_matmul_ref(a, b, 2)
+    np.testing.assert_allclose(np.asarray(copies), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_add_reduce_kernel():
+    rng = np.random.default_rng(7)
+    c = jnp.asarray(rng.normal(size=(4, 32, 48)), jnp.float32)
+    got = add_reduce_pallas(c, bm=16, bn=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(add_reduce_ref(c)), rtol=1e-6)
+
+
+def test_task_table_is_listing1_order():
+    """Task t = layer-major, gilbert order within layer (Listing 1 12-14)."""
+    tab = build_task_table(4, 4, 2)
+    assert tab.shape == (3, 32)
+    assert (tab[2, :16] == 0).all() and (tab[2, 16:] == 1).all()
+    assert (tab[:2, :16] == tab[:2, 16:]).all()  # same SFC order per layer
+    steps = np.abs(np.diff(tab[0, :16])) + np.abs(np.diff(tab[1, :16]))
+    assert (steps == 1).all()  # gilbert adjacency
+
+
+@given(
+    m=st.integers(2, 9).map(lambda e: 2**e // 2 * 2),
+    n=st.integers(8, 96),
+    k=st.integers(8, 96),
+)
+@settings(max_examples=12, deadline=None)
+def test_sfc_matmul_arbitrary_shapes_padding(m, n, k):
+    """Arbitrary (non-divisible) shapes via zero padding."""
+    a, b = _mats(m, n, k, jnp.float32)
+    got = sfc_matmul(a, b, bm=16, bn=16, k_layers=1, k_block_factor=1, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(a) @ np.asarray(b), rtol=3e-5, atol=3e-5
+    )
+
+
+def test_reference_matches_oracle_knob_grid():
+    """Listing-1 reference across the paper's (K_layers, kbf) knob grid."""
+    a, b = _mats(64, 64, 128, jnp.float32)
+    want = np.asarray(a) @ np.asarray(b)
+    for kl in (1, 2, 4):
+        for kbf in (1, 2):
+            got = sfc_ca_gemm_reference(
+                a, b, bm=16, bn=16, bk=16, k_layers=kl, k_block_factor=kbf
+            )
+            np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5, atol=2e-5)
+
+
+def test_pick_blocks_mxu_alignment():
+    assert pick_blocks(1024, 2048, 512) == (256, 256)
+    assert pick_blocks(48, 80, 96)[0] in (16, 48)
+
+
+@pytest.mark.parametrize(
+    "b,s,t,h,hkv,d,causal",
+    [
+        (2, 64, 64, 4, 2, 16, True),
+        (1, 96, 96, 2, 2, 32, True),
+        (2, 48, 48, 4, 1, 16, False),
+        (1, 40, 72, 2, 2, 16, True),
+        (2, 33, 50, 2, 1, 16, True),  # non-divisible: padding path
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, s, t, h, hkv, d, causal, dtype):
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.ref import flash_attention_ref
+
+    rng = np.random.default_rng(s + t + h)
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, t, hkv, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, t, hkv, d)), dtype)
+    got = flash_attention(q, k, v, causal=causal, q_chunk=16, k_chunk=16, interpret=True)
+    want = flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-5 if dtype == jnp.float32 else 6e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )

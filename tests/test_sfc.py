@@ -1,0 +1,140 @@
+"""Property tests for the generalized Hilbert curve and SFC decomposition —
+the invariants the whole system rests on (paper §II-B/§II-D/§II-E)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.decomposition import (
+    implied_worker_grid,
+    partition_curve,
+    sfc_decompose,
+    sfc_grid_factorization,
+    words_moved,
+)
+from repro.core.sfc import SFCMap, create_sfc_map, gilbert2d, sfc_coord_table, sfc_inverse_table
+
+sides = st.integers(min_value=1, max_value=48)
+
+
+@given(sides, sides)
+@settings(max_examples=60, deadline=None)
+def test_sfc_bijection(w, h):
+    """P0: the curve visits every cell of the W x H grid exactly once."""
+    cells = list(gilbert2d(w, h))
+    assert len(cells) == w * h
+    assert len(set(cells)) == w * h
+    for x, y in cells:
+        assert 0 <= x < w and 0 <= y < h
+
+
+@given(sides, sides)
+@settings(max_examples=60, deadline=None)
+def test_sfc_adjacency(w, h):
+    """P1: no jumps — Chebyshev distance 1 per step; diagonal steps (both
+    coords change) occur at most once per grid (odd-sided rectangles only,
+    a documented generalized-Hilbert property)."""
+    tab = sfc_coord_table(w, h)
+    if len(tab) < 2:
+        return
+    d = np.abs(np.diff(tab.astype(np.int64), axis=0))
+    assert (d.max(axis=1) == 1).all()  # never moves more than one cell
+    n_diag = int((d.sum(axis=1) == 2).sum())
+    assert n_diag <= 1
+    if w % 2 == 0 and h % 2 == 0:
+        assert n_diag == 0
+
+
+@given(sides, sides)
+@settings(max_examples=40, deadline=None)
+def test_sfc_inverse(w, h):
+    inv = sfc_inverse_table(w, h)
+    tab = sfc_coord_table(w, h)
+    for t in range(0, w * h, max(1, (w * h) // 17)):
+        x, y = tab[t]
+        assert inv[x, y] == t
+
+
+@given(
+    st.integers(min_value=2, max_value=32),
+    st.integers(min_value=2, max_value=32),
+    st.integers(min_value=1, max_value=16),
+)
+@settings(max_examples=40, deadline=None)
+def test_patch_connectivity(w, h, n_workers):
+    """P2: blockwise ranges of the curve are CONNECTED 2-D patches."""
+    if n_workers > w * h:
+        n_workers = w * h
+    for start, stop in partition_curve(w, h, n_workers):
+        if stop - start <= 1:
+            continue
+        cells = set(map(tuple, sfc_coord_table(w, h)[start:stop].tolist()))
+        # BFS from one cell must reach all (8-connectivity: the rare
+        # diagonal step still keeps the patch king-connected)
+        seen = set()
+        stack = [next(iter(cells))]
+        while stack:
+            c = stack.pop()
+            if c in seen:
+                continue
+            seen.add(c)
+            x, y = c
+            for dx in (-1, 0, 1):
+                for dy in (-1, 0, 1):
+                    nb = (x + dx, y + dy)
+                    if nb in cells and nb not in seen:
+                        stack.append(nb)
+        assert seen == cells
+
+
+def test_paper_fig2_patches():
+    """Paper §II-B: on 16x16, indices 0-31 form a contiguous 8x4 patch and
+    8-15 a 2x4 sub-patch."""
+    m = SFCMap(16, 16)
+    assert m.patch_bbox(0, 32) == (0, 8, 0, 4)
+    p = m.patch(0, 32)
+    assert len(set(map(tuple, p.tolist()))) == 32
+    im_lo, im_hi, in_lo, in_hi = m.patch_bbox(8, 16)
+    assert (im_hi - im_lo) * (in_hi - in_lo) == 8  # exact rectangle
+
+
+def test_paper_fig3_decompositions():
+    """Paper Fig. 3: 128x128 C blocks, 64 cores."""
+    assert implied_worker_grid(sfc_decompose(128, 128, 64, 1)) == (8, 8)
+    assert implied_worker_grid(sfc_decompose(128, 128, 64, 2)) == (8, 4)
+    assert implied_worker_grid(sfc_decompose(128, 128, 64, 4)) == (4, 4)
+
+
+def test_paper_fig4_aspect_ratios():
+    """Paper Fig. 4: worker grid AR tracks the C matrix AR."""
+    assert implied_worker_grid(sfc_decompose(512, 32, 64, 1)) == (32, 2)
+    assert implied_worker_grid(sfc_decompose(256, 64, 64, 1)) == (16, 4)
+    assert implied_worker_grid(sfc_decompose(128, 128, 64, 1)) == (8, 8)
+
+
+def test_non_power_of_two_workers():
+    """CARMA limitation the paper fixes: arbitrary core counts (e.g. 96)."""
+    d = sfc_decompose(128, 128, 96, 1)
+    tm, tn = implied_worker_grid(d)
+    assert tm * tn == 96
+    sizes = [p.n_cells for p in d.patches]
+    assert max(sizes) - min(sizes) <= 1  # balanced
+
+
+@given(st.integers(min_value=1, max_value=128))
+@settings(max_examples=30, deadline=None)
+def test_factorization_any_worker_count(t):
+    tm, tn = sfc_grid_factorization(t, 64, 64)
+    assert tm * tn == t
+
+
+def test_words_moved_lower_bound_scaling():
+    """§II-C: at fixed T, c=4 reduces A+B words by ~sqrt(c) vs c=1 for the
+    balanced decomposition."""
+    n, T = 8192, 64
+    w1 = words_moved(n, n, n, 8, 8, 1)
+    w4 = words_moved(n, n, n, 4, 4, 4)
+    ab1 = w1["a_bytes"] + w1["b_bytes"]
+    ab4 = w4["a_bytes"] + w4["b_bytes"]
+    assert ab4 < ab1
+    assert ab1 / ab4 == pytest.approx(2.0, rel=0.01)  # sqrt(4)
