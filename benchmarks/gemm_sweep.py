@@ -88,8 +88,39 @@ def run(full: bool = False, n_workers: int = 256):
         emit(f"gemm_cpu_check/{m}x{n}x{k}", t_ref, f"xla_us={t_xla:.1f}")
 
 
+def run_tune(shapes=None, cache_path=None):
+    """Empirical-tuner regime: sweep measured candidates for each shape,
+    persist winners, then demonstrate the warm path (second call = pure
+    cache hit).  CSV derived field records the winning knob tuple + source."""
+    import time
+
+    from repro.tune import KnobCache, tune_gemm
+
+    shapes = shapes or [(256, 256, 256), (512, 256, 512), (384, 640, 256)]
+    cache = KnobCache(cache_path) if cache_path else None
+    for (m, n, k) in shapes:
+        t0 = time.perf_counter()
+        knobs = tune_gemm(m, n, k, np.float32, cache=cache)
+        cold_us = (time.perf_counter() - t0) * 1e6
+        t0 = time.perf_counter()
+        hit = tune_gemm(m, n, k, np.float32, cache=cache)
+        warm_us = (time.perf_counter() - t0) * 1e6
+        emit(
+            f"gemm_tune/{m}x{n}x{k}",
+            cold_us,
+            f"bm={knobs.bm};bn={knobs.bn};c={knobs.k_layers};"
+            f"kbf={knobs.k_block_factor};source={knobs.source};"
+            f"hit_source={hit.source};hit_us={warm_us:.1f}",
+        )
+
+
 def main():
-    run()
+    import sys
+
+    if "--tune" in sys.argv:
+        run_tune()
+    else:
+        run(full="--full" in sys.argv)
 
 
 if __name__ == "__main__":

@@ -25,7 +25,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-__all__ = ["gemm_backend", "current_backend", "matmul"]
+__all__ = ["gemm_backend", "current_backend", "matmul", "grouped_matmul"]
 
 _BACKEND: contextvars.ContextVar[str] = contextvars.ContextVar(
     "gemm_backend", default="xla"
@@ -48,22 +48,74 @@ def current_backend() -> str:
 
 
 def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
-    """(..., K) @ (K, N) through the active backend."""
+    """(..., K) @ (K, N) through the active backend.
+
+    Rank-2 ``x`` launches the plain SFC kernel; rank >= 3 routes through the
+    batched kernel grid (one SFC traversal per batch element, weights panel
+    shared across the batch) instead of flattening tokens into one huge M —
+    the batched grid keeps each element's C patch VMEM-resident.
+    """
     name = _BACKEND.get()
     if name == "xla" or w.ndim != 2:
         return x @ w
-    lead = x.shape[:-1]
-    k = x.shape[-1]
-    x2 = x.reshape(-1, k)
     if name == "sfc_pallas":
         from repro.kernels.ops import sfc_matmul
 
-        out = sfc_matmul(x2, w)
+        if x.ndim == 1:
+            return sfc_matmul(x[None], w)[0]
+        if x.ndim > 2 and x.shape[-2] == 1:
+            # decode-shaped (B, 1, K): a batched grid would run one task per
+            # single-row element — flatten the batch into M instead
+            out = sfc_matmul(x.reshape(-1, x.shape[-1]), w)
+            return out.reshape(*x.shape[:-1], w.shape[1])
+        return sfc_matmul(x, w)
+    from repro.core.sfc_gemm import sfc_ca_gemm_reference
+
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    bm = 32 if x2.shape[0] % 32 == 0 else x2.shape[0]
+    bn = 32 if w.shape[1] % 32 == 0 else w.shape[1]
+    bk = 32 if k % 32 == 0 else k
+    out = sfc_ca_gemm_reference(x2, w, bm=bm, bn=bn, bk=bk)
+    return out.reshape(*lead, w.shape[1])
+
+
+def grouped_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Per-expert contraction ``(..., E, C, K) @ (E, K, N) -> (..., E, C, N)``
+    through the active backend.
+
+    This is the MoE expert-GEMM shape: C capacity rows per (batch-group,
+    expert).  The XLA backend keeps the einsum formulation (what the
+    distributed dry-runs compile, and the shape GSPMD knows how to shard);
+    the SFC backends reorder each expert's rows behind one grouped SFC
+    kernel launch (`ops.sfc_grouped_matmul`).
+    """
+    name = _BACKEND.get()
+    if name == "xla":
+        return jnp.einsum("...eck,ekn->...ecn", x, w)
+    e, c, k = x.shape[-3:]
+    lead = x.shape[:-3]
+    g = 1
+    for d in lead:
+        g *= d
+    # (..., E, C, K) -> rows grouped by expert: (E * g*C, K)
+    rows = x.reshape(g, e, c, k).transpose(1, 0, 2, 3).reshape(e * g * c, k)
+    if name == "sfc_pallas":
+        from repro.kernels.ops import sfc_grouped_matmul
+
+        out = sfc_grouped_matmul(rows, w, group_sizes=(g * c,) * e)
     else:
         from repro.core.sfc_gemm import sfc_ca_gemm_reference
 
-        bm = 32 if x2.shape[0] % 32 == 0 else x2.shape[0]
-        bn = 32 if w.shape[1] % 32 == 0 else w.shape[1]
-        bk = 32 if k % 32 == 0 else k
-        out = sfc_ca_gemm_reference(x2, w, bm=bm, bn=bn, bk=bk)
-    return out.reshape(*lead, w.shape[1])
+        n = w.shape[-1]
+        parts = []
+        for ei in range(e):
+            xe = rows[ei * g * c : (ei + 1) * g * c]
+            bm = 32 if xe.shape[0] % 32 == 0 else xe.shape[0]
+            bn = 32 if n % 32 == 0 else n
+            bk = 32 if k % 32 == 0 else k
+            parts.append(sfc_ca_gemm_reference(xe, w[ei], bm=bm, bn=bn, bk=bk))
+        out = jnp.concatenate(parts)
+    n = w.shape[-1]
+    return out.reshape(e, g, c, n).transpose(1, 0, 2, 3).reshape(*lead, e, c, n)

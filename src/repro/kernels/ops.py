@@ -1,24 +1,43 @@
-"""Jit'd public wrappers around the Pallas SFC-CA GEMM kernel.
+"""Jit'd public wrappers around the Pallas SFC-CA GEMM kernels.
 
-`sfc_matmul` is the user-facing entry point: it pads to block multiples,
-picks (K_layers, k_block_factor) with the paper's analytical model when not
-given, launches the SFC-ordered kernel, reduces the C copies and strips the
-padding.  On non-TPU backends it transparently switches to interpret mode so
-the same call sites work in tests/CPU containers.
+`sfc_matmul` is the user-facing entry point: it accepts arbitrary-rank
+operands — ``(M, K) @ (K, N)``, ``(..., M, K) @ (K, N)`` (shared weights)
+and ``(..., M, K) @ (..., K, N)`` — pads to block multiples, fills knobs
+from the persistent empirical tune cache (`repro.tune`) when a measured
+winner exists for the shape bucket and from the paper's analytical model
+otherwise, launches the SFC-ordered kernel (batched grid for rank > 2),
+reduces the C copies and strips the padding.
+
+`sfc_grouped_matmul` is the ragged companion for MoE expert GEMMs: rows
+grouped by expert against per-expert weight slabs, one SFC map per expert
+tile grid.
+
+On non-TPU backends both transparently switch to interpret mode so the same
+call sites work in tests/CPU containers.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.perf_model import TPU_V5E, choose_knobs_analytical
-from repro.kernels.sfc_gemm import add_reduce_pallas, sfc_gemm_pallas
+from repro.kernels.sfc_gemm import (
+    add_reduce_pallas,
+    sfc_gemm_batched,
+    sfc_gemm_grouped,
+    sfc_gemm_pallas,
+)
 
-__all__ = ["sfc_matmul", "default_interpret", "pick_blocks"]
+__all__ = [
+    "sfc_matmul",
+    "sfc_grouped_matmul",
+    "default_interpret",
+    "pick_blocks",
+]
 
 
 def default_interpret() -> bool:
@@ -42,31 +61,31 @@ def pick_blocks(m: int, n: int, k: int) -> Tuple[int, int]:
     return pick(m), pick(n)
 
 
-def sfc_matmul(
-    a: jax.Array,
-    b: jax.Array,
-    *,
-    bm: Optional[int] = None,
-    bn: Optional[int] = None,
-    k_layers: Optional[int] = None,
-    k_block_factor: Optional[int] = None,
-    interpret: Optional[bool] = None,
-    out_dtype=None,
-) -> jax.Array:
-    """C = A @ B via the SFC-CA Pallas kernel.
+def _resolve_knobs(
+    m: int,
+    n: int,
+    k: int,
+    dtype,
+    bm: Optional[int],
+    bn: Optional[int],
+    k_layers: Optional[int],
+    k_block_factor: Optional[int],
+) -> Tuple[int, int, int, int]:
+    """Fill unspecified knobs: measured tune-cache winner first (paper §III-C
+    method (1)), analytical model + MXU alignment rules as the fallback."""
+    if None in (bm, bn, k_layers, k_block_factor):
+        cached = None
+        try:
+            from repro.tune import lookup_knobs
 
-    Knobs left as None are filled in by the paper's analytical model
-    (K_layers, k_block_factor) and MXU alignment rules (bm, bn).  Arbitrary
-    M/N/K are handled by zero padding (curve still covers the padded grid;
-    padding contributes zeros to the contraction).
-    """
-    if interpret is None:
-        interpret = default_interpret()
-    m, k = a.shape
-    k2, n = b.shape
-    assert k == k2, (a.shape, b.shape)
-    out_dtype = out_dtype or a.dtype
-
+            cached = lookup_knobs(m, n, k, dtype)
+        except Exception:
+            cached = None
+        if cached is not None:
+            bm = bm or cached.bm
+            bn = bn or cached.bn
+            k_layers = k_layers or cached.k_layers
+            k_block_factor = k_block_factor or cached.k_block_factor
     if bm is None or bn is None:
         pbm, pbn = pick_blocks(m, n, k)
         bm = bm or pbm
@@ -79,25 +98,172 @@ def sfc_matmul(
         )
         k_layers = k_layers or c
         k_block_factor = k_block_factor or kbf
+    return bm, bn, k_layers, k_block_factor
+
+
+def sfc_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+    k_layers: Optional[int] = None,
+    k_block_factor: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    out_dtype=None,
+) -> jax.Array:
+    """C = A @ B via the SFC-CA Pallas kernel, any leading batch dims on A.
+
+    ``a``: (..., M, K); ``b``: (K, N) shared across the batch, or
+    (..., K, N) with leading dims matching ``a``'s.  Knobs left as None are
+    filled from the empirical tune cache when present, else by the paper's
+    analytical model (K_layers, k_block_factor) and MXU alignment rules
+    (bm, bn).  Arbitrary M/N/K are handled by zero padding (curve still
+    covers the padded grid; padding contributes zeros to the contraction).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    if a.ndim < 2 or b.ndim < 2:
+        raise ValueError(f"sfc_matmul needs matrices, got {a.shape} @ {b.shape}")
+
+    lead = a.shape[:-2]
+    m, k = a.shape[-2:]
+    k2, n = b.shape[-2:]
+    assert k == k2, (a.shape, b.shape)
+    b_batched = b.ndim > 2
+    if b_batched and b.shape[:-2] != lead:
+        raise ValueError(f"batch dims mismatch: {a.shape} @ {b.shape}")
+    out_dtype = out_dtype or a.dtype
+
+    bm, bn, k_layers, k_block_factor = _resolve_knobs(
+        m, n, k, a.dtype, bm, bn, k_layers, k_block_factor
+    )
 
     mp = _round_up(m, bm)
     np_ = _round_up(n, bn)
     kp = _round_up(k, k_layers * k_block_factor)
-    a_p = jnp.pad(a, ((0, mp - m), (0, kp - k))) if (mp != m or kp != k) else a
-    b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n))) if (kp != k or np_ != n) else b
 
-    copies = sfc_gemm_pallas(
-        a_p,
-        b_p,
-        bm=bm,
-        bn=bn,
-        k_layers=k_layers,
-        k_block_factor=k_block_factor,
-        interpret=interpret,
-        out_dtype=out_dtype,
-    )
-    if k_layers > 1:
-        c_full = add_reduce_pallas(copies, bm=bm, bn=bn, interpret=interpret)
+    if not lead:
+        a_p = jnp.pad(a, ((0, mp - m), (0, kp - k))) if (mp != m or kp != k) else a
+        b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n))) if (kp != k or np_ != n) else b
+        copies = sfc_gemm_pallas(
+            a_p, b_p,
+            bm=bm, bn=bn,
+            k_layers=k_layers, k_block_factor=k_block_factor,
+            interpret=interpret, out_dtype=out_dtype,
+        )
+        if k_layers > 1:
+            c_full = add_reduce_pallas(copies, bm=bm, bn=bn, interpret=interpret)
+        else:
+            c_full = copies[0]
+        return c_full[:m, :n]
+
+    # batched path: fold leading dims into one batch axis for the kernel grid
+    bsz = 1
+    for d in lead:
+        bsz *= d
+    a3 = a.reshape(bsz, m, k)
+    if mp != m or kp != k:
+        a3 = jnp.pad(a3, ((0, 0), (0, mp - m), (0, kp - k)))
+    if b_batched:
+        b3 = b.reshape(bsz, k, n)
+        if kp != k or np_ != n:
+            b3 = jnp.pad(b3, ((0, 0), (0, kp - k), (0, np_ - n)))
     else:
-        c_full = copies[0]
-    return c_full[:m, :n]
+        b3 = jnp.pad(b, ((0, kp - k), (0, np_ - n))) if (kp != k or np_ != n) else b
+
+    copies = sfc_gemm_batched(
+        a3, b3,
+        bm=bm, bn=bn,
+        k_layers=k_layers, k_block_factor=k_block_factor,
+        interpret=interpret, out_dtype=out_dtype,
+    )  # (B, K_layers, Mp, Np)
+    if k_layers > 1:
+        folded = copies.transpose(1, 0, 2, 3).reshape(k_layers, bsz * mp, np_)
+        c_full = add_reduce_pallas(
+            folded, bm=bm, bn=bn, interpret=interpret
+        ).reshape(bsz, mp, np_)
+    else:
+        c_full = copies[:, 0]
+    return c_full[:, :m, :n].reshape(*lead, m, n)
+
+
+def sfc_grouped_matmul(
+    a: jax.Array,  # (T, K) rows sorted by group
+    b: jax.Array,  # (E, K, N) per-group weights
+    group_sizes: Sequence[int],
+    *,
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+    k_block_factor: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    out_dtype=None,
+) -> jax.Array:
+    """Ragged grouped GEMM: ``out[rows of group e] = a[rows of e] @ b[e]``.
+
+    ``group_sizes`` are *static* per-group row counts summing to ``a``'s row
+    count (MoE callers know them at trace time: group×capacity).  Each
+    group's rows are zero-padded to a ``bm`` multiple, the groups'  tile
+    grids are concatenated into one SFC task table (one gilbert map per
+    group) and a single Pallas launch computes every expert's product; the
+    valid rows are sliced back out.  Groups with zero rows are legal.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    t, k = a.shape
+    e_cnt, k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    group_sizes = tuple(int(g) for g in group_sizes)
+    if len(group_sizes) != e_cnt:
+        raise ValueError(f"{len(group_sizes)} group sizes for {e_cnt} groups")
+    if sum(group_sizes) != t:
+        raise ValueError(f"group_sizes sum {sum(group_sizes)} != rows {t}")
+    out_dtype = out_dtype or a.dtype
+
+    max_g = max(group_sizes) if group_sizes else 1
+    pbm, pbn = pick_blocks(max(max_g, 1), n, k)
+    bm = bm or min(pbm, 128)
+    bn = bn or pbn
+    if k_block_factor is None:
+        # capacity heuristic only (no 2.5D layers for the ragged form)
+        _, k_block_factor = choose_knobs_analytical(
+            max(max_g, bm), max(n, bn), max(k, 1), 1, bm=bm, bn=bn, hw=TPU_V5E
+        )
+
+    kp = _round_up(k, k_block_factor)
+    np_ = _round_up(n, bn)
+
+    # pad each group's rows to a bm multiple and concatenate (host loop:
+    # group_sizes are static, so this unrolls into slices under jit)
+    row_blocks = tuple(_round_up(g, bm) // bm for g in group_sizes)
+    slabs = []
+    off = 0
+    for g, rb in zip(group_sizes, row_blocks):
+        if rb == 0:
+            continue
+        slab = a[off : off + g]
+        pad_rows = rb * bm - g
+        if pad_rows or kp != k:
+            slab = jnp.pad(slab, ((0, pad_rows), (0, kp - k)))
+        slabs.append(slab)
+        off += g
+    if not slabs:
+        return jnp.zeros((0, n), out_dtype)
+    a_p = jnp.concatenate(slabs) if len(slabs) > 1 else slabs[0]
+    b_p = jnp.pad(b, ((0, 0), (0, kp - k), (0, np_ - n))) if (kp != k or np_ != n) else b
+
+    out_p = sfc_gemm_grouped(
+        a_p, b_p,
+        row_blocks=row_blocks,
+        bm=bm, bn=bn,
+        k_block_factor=k_block_factor,
+        interpret=interpret, out_dtype=out_dtype,
+    )  # (sum(row_blocks)*bm, Np)
+
+    # slice the valid rows of each group back out
+    outs = []
+    poff = 0
+    for g, rb in zip(group_sizes, row_blocks):
+        outs.append(out_p[poff : poff + g, :n])
+        poff += rb * bm
+    return jnp.concatenate(outs) if len(outs) > 1 else outs[0]

@@ -1,0 +1,17 @@
+"""Version-compat shims for the Pallas TPU API surface."""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["CompilerParams"]
+
+# jax renamed TPUCompilerParams -> CompilerParams across 0.4.x/0.5.x
+CompilerParams = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)
+if CompilerParams is None:  # fail at import, not opaquely inside pallas_call
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; unsupported jax version"
+    )

@@ -38,8 +38,16 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.sfc import create_sfc_map
+from repro.kernels.pallas_compat import CompilerParams as _CompilerParams
 
-__all__ = ["sfc_gemm_pallas", "add_reduce_pallas", "build_task_table"]
+__all__ = [
+    "sfc_gemm_pallas",
+    "sfc_gemm_batched",
+    "sfc_gemm_grouped",
+    "add_reduce_pallas",
+    "build_task_table",
+    "build_grouped_task_table",
+]
 
 
 def build_task_table(mb: int, nb: int, k_layers: int) -> np.ndarray:
@@ -52,6 +60,33 @@ def build_task_table(mb: int, nb: int, k_layers: int) -> np.ndarray:
     ins = np.tile(in_, k_layers)
     layers = np.repeat(np.arange(k_layers, dtype=np.int32), mb * nb)
     return np.stack([ims, ins, layers]).astype(np.int32)
+
+
+def build_grouped_task_table(
+    row_blocks: Tuple[int, ...], nb: int
+) -> np.ndarray:
+    """(3, sum_e row_blocks[e]*nb) int32 task table for the grouped kernel.
+
+    Rows = (im_global, in, expert): each expert e owns its own ``row_blocks[e]
+    x nb`` tile grid, walked in gilbert order (one SFC map per expert), with
+    ``im_global`` offset by the padded row blocks of the experts before it.
+    Experts with zero rows contribute no tasks."""
+    ims: list = []
+    ins: list = []
+    exps: list = []
+    row_off = 0
+    for e, mb_e in enumerate(row_blocks):
+        if mb_e > 0:
+            sfc = create_sfc_map(mb_e, nb)
+            ims.append(sfc.im_table() + row_off)
+            ins.append(sfc.in_table())
+            exps.append(np.full(mb_e * nb, e, dtype=np.int32))
+        row_off += mb_e
+    if not ims:
+        return np.zeros((3, 0), np.int32)
+    return np.stack(
+        [np.concatenate(ims), np.concatenate(ins), np.concatenate(exps)]
+    ).astype(np.int32)
 
 
 def _sfc_gemm_kernel(
@@ -157,7 +192,254 @@ def sfc_gemm_pallas(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((k_layers, m, n), out_dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+    )(tab, a, b)
+
+
+def _sfc_gemm_batched_kernel(
+    tab_ref,  # scalar-prefetch: (3, n_tasks) SFC task table (shared by batch)
+    a_ref,  # (1, bm, k_chunk) A panel in VMEM
+    b_ref,  # (k_chunk, bn) or (1, k_chunk, bn) B panel in VMEM
+    o_ref,  # (1, 1, bm, bn) C-copy tile in VMEM
+    acc_ref,  # (bm, bn) f32 scratch accumulator
+    *,
+    n_k_chunks: int,
+    out_dtype,
+    b_batched: bool,
+):
+    del tab_ref
+    kc = pl.program_id(2)
+
+    @pl.when(kc == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    b_panel = b_ref[0] if b_batched else b_ref[...]
+    acc_ref[...] += jnp.dot(
+        a_ref[0], b_panel, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(kc == n_k_chunks - 1)
+    def _flush():
+        o_ref[0, 0, ...] = acc_ref[...].astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "bm",
+        "bn",
+        "k_layers",
+        "k_block_factor",
+        "interpret",
+        "out_dtype",
+    ),
+)
+def sfc_gemm_batched(
+    a: jax.Array,  # (B, M, K)
+    b: jax.Array,  # (K, N) shared weights, or (B, K, N) per-batch
+    *,
+    bm: int = 256,
+    bn: int = 256,
+    k_layers: int = 1,
+    k_block_factor: int = 1,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """Batched partial-product stage: (B, K_layers, M, N) replicated C copies.
+
+    The batch index is the outermost grid dimension; every batch element
+    replays the same scalar-prefetched SFC task table, so the table (and the
+    Mosaic index-map machinery) is built once for the whole batch.  With a
+    shared 2-D ``b`` the B-panel index map does not depend on the batch
+    coordinate — the weight panel that ends one batch element's traversal
+    stays resident into the next element's first task.
+
+    Requires M % bm == N % bn == 0 and K % (k_layers * k_block_factor) == 0
+    (``ops.sfc_matmul`` pads arbitrary shapes).
+    """
+    bsz, m, k = a.shape
+    b_batched = b.ndim == 3
+    if b_batched:
+        b2, k2, n = b.shape
+        assert b2 == bsz, (a.shape, b.shape)
+    else:
+        k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    if m % bm or n % bn:
+        raise ValueError(f"(M,N)=({m},{n}) not divisible by (bm,bn)=({bm},{bn})")
+    if k % (k_layers * k_block_factor):
+        raise ValueError(f"K={k} vs k_layers*kbf={k_layers * k_block_factor}")
+    out_dtype = out_dtype or a.dtype
+
+    mb_cnt, nb_cnt = m // bm, n // bn
+    k_per_layer = k // k_layers
+    k_chunk = k_per_layer // k_block_factor
+    n_k_chunks = k_block_factor
+    n_tasks = k_layers * mb_cnt * nb_cnt
+    kc_per_layer = k_per_layer // k_chunk
+
+    tab = jnp.asarray(build_task_table(mb_cnt, nb_cnt, k_layers))
+
+    def a_map(bi, t, kc, tab):
+        return (bi, tab[0, t], tab[2, t] * kc_per_layer + kc)
+
+    def o_map(bi, t, kc, tab):
+        return (bi, tab[2, t], tab[0, t], tab[1, t])
+
+    if b_batched:
+        def b_map(bi, t, kc, tab):
+            return (bi, tab[2, t] * kc_per_layer + kc, tab[1, t])
+
+        b_spec = pl.BlockSpec((1, k_chunk, bn), b_map)
+    else:
+        def b_map(bi, t, kc, tab):
+            return (tab[2, t] * kc_per_layer + kc, tab[1, t])
+
+        b_spec = pl.BlockSpec((k_chunk, bn), b_map)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bsz, n_tasks, n_k_chunks),
+        in_specs=[
+            pl.BlockSpec((1, bm, k_chunk), a_map),
+            b_spec,
+        ],
+        out_specs=pl.BlockSpec((1, 1, bm, bn), o_map),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+
+    kernel = functools.partial(
+        _sfc_gemm_batched_kernel,
+        n_k_chunks=n_k_chunks,
+        out_dtype=out_dtype,
+        b_batched=b_batched,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, k_layers, m, n), out_dtype),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
+        ),
+    )(tab, a, b)
+
+
+def _sfc_gemm_grouped_kernel(
+    tab_ref,  # scalar-prefetch: (3, n_tasks) grouped task table
+    a_ref,  # (bm, k_chunk) A panel (rows of this expert's padded slab)
+    b_ref,  # (1, k_chunk, bn) this expert's B panel
+    o_ref,  # (bm, bn) C tile
+    acc_ref,  # (bm, bn) f32 scratch accumulator
+    *,
+    n_k_chunks: int,
+    out_dtype,
+):
+    del tab_ref
+    kc = pl.program_id(1)
+
+    @pl.when(kc == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[0], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(kc == n_k_chunks - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "row_blocks",
+        "bm",
+        "bn",
+        "k_block_factor",
+        "interpret",
+        "out_dtype",
+    ),
+)
+def sfc_gemm_grouped(
+    a: jax.Array,  # (sum_e row_blocks[e]*bm, K) expert-grouped, padded rows
+    b: jax.Array,  # (E, K, N) per-expert weights
+    *,
+    row_blocks: Tuple[int, ...],
+    bm: int = 128,
+    bn: int = 128,
+    k_block_factor: int = 1,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """Grouped (ragged) SFC GEMM: per-expert row slabs against per-expert
+    weights, one SFC map per expert tile grid (paper's shape-obliviousness
+    applied to MoE expert GEMMs).
+
+    ``a`` holds the experts' rows concatenated, each expert's slab padded to
+    ``row_blocks[e] * bm`` rows; the task table walks expert e's
+    ``row_blocks[e] x (N/bn)`` grid in gilbert order before moving to e+1, so
+    B panels of one expert are fully consumed before the next expert's are
+    touched.  Returns the (sum_rows, N) padded product (callers slice the
+    per-expert valid rows back out).
+    """
+    m_total, k = a.shape
+    e_cnt, k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert len(row_blocks) == e_cnt, (row_blocks, e_cnt)
+    if m_total != sum(row_blocks) * bm:
+        raise ValueError(
+            f"A rows {m_total} != sum(row_blocks)*bm = {sum(row_blocks)}*{bm}"
+        )
+    if n % bn:
+        raise ValueError(f"N={n} not divisible by bn={bn}")
+    if k % k_block_factor:
+        raise ValueError(f"K={k} vs k_block_factor={k_block_factor}")
+    out_dtype = out_dtype or a.dtype
+
+    nb_cnt = n // bn
+    k_chunk = k // k_block_factor
+    n_k_chunks = k_block_factor
+
+    tab_np = build_grouped_task_table(tuple(row_blocks), nb_cnt)
+    n_tasks = tab_np.shape[1]
+    if n_tasks == 0:
+        return jnp.zeros((m_total, n), out_dtype)
+    tab = jnp.asarray(tab_np)
+
+    def a_map(t, kc, tab):
+        return (tab[0, t], kc)
+
+    def b_map(t, kc, tab):
+        return (tab[2, t], kc, tab[1, t])
+
+    def o_map(t, kc, tab):
+        return (tab[0, t], tab[1, t])
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_tasks, n_k_chunks),
+        in_specs=[
+            pl.BlockSpec((bm, k_chunk), a_map),
+            pl.BlockSpec((1, k_chunk, bn), b_map),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), o_map),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+
+    kernel = functools.partial(
+        _sfc_gemm_grouped_kernel, n_k_chunks=n_k_chunks, out_dtype=out_dtype
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m_total, n), out_dtype),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary"),
         ),
     )(tab, a, b)

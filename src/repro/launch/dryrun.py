@@ -189,6 +189,9 @@ def lower_cell(
     compile_s = time.time() - t0
     mem = compiled.memory_analysis()
     raw_cost = compiled.cost_analysis()
+    # jax < 0.5 returned [dict] (one per partition program), newer return dict
+    if isinstance(raw_cost, (list, tuple)):
+        raw_cost = raw_cost[0] if raw_cost else {}
 
     hlo = compiled.as_text()
     c = module_cost(hlo)  # loop-aware static cost (per-partition program)

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.core.gemm_backend import grouped_matmul
 from repro.models.layers import Params, dense_init
 from repro.parallel.act_sharding import constrain
 
@@ -137,12 +138,14 @@ def moe_forward(
         buf[:, :-1].reshape(groups, e, capacity, d), ("dp", "tp", None, None)
     )
 
-    # expert GEMMs: groups stay on dp, experts on model — this einsum is the
-    # only cross-device exchange (the all-to-all the dry-run should show)
-    h = jnp.einsum("gecd,edf->gecf", buf, params["w_in"])
-    g_ = jnp.einsum("gecd,edf->gecf", buf, params["w_gate"])
+    # expert GEMMs: groups stay on dp, experts on model — this contraction is
+    # the only cross-device exchange (the all-to-all the dry-run should show).
+    # Routed through the pluggable backend: einsum under "xla" (unchanged
+    # compiled program), the grouped SFC Pallas kernel under "sfc_pallas".
+    h = grouped_matmul(buf, params["w_in"])
+    g_ = grouped_matmul(buf, params["w_gate"])
     h = constrain(jax.nn.silu(g_) * h, ("dp", "tp", None, None))
-    out_buf = jnp.einsum("gecf,efd->gecd", h, params["w_out"])
+    out_buf = grouped_matmul(h, params["w_out"])
     out_buf = out_buf.reshape(groups, e * capacity, d)
     out_buf = jnp.concatenate(
         [out_buf, jnp.zeros((groups, 1, d), out_buf.dtype)], axis=1
@@ -228,10 +231,10 @@ def _moe_shard_map(
         # rows — (E, C, d) -> (E_loc, tp*C, d)
         buf_x = lax.all_to_all(buf, tp, split_axis=0, concat_axis=1, tiled=True)
 
-        h = jnp.einsum("ecd,edf->ecf", buf_x, w_in)
-        g_ = jnp.einsum("ecd,edf->ecf", buf_x, w_gate)
+        h = grouped_matmul(buf_x, w_in)
+        g_ = grouped_matmul(buf_x, w_gate)
         h = jax.nn.silu(g_) * h
-        out_x = jnp.einsum("ecf,efd->ecd", h, w_out)
+        out_x = grouped_matmul(h, w_out)
 
         out_buf = lax.all_to_all(out_x, tp, split_axis=1, concat_axis=0, tiled=True)
         out_buf = out_buf.reshape(e * capacity, d)

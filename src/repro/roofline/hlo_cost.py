@@ -149,10 +149,21 @@ def parse_module(hlo_text: str) -> Dict[str, Computation]:
         if not parsed:
             continue
         name, shape, opcode, args, attrs = parsed
-        operands = [
-            a[1:].split(" ")[0] if a.startswith("%") else a
-            for a in _split_top_commas(args)
-        ]
+        # Operand forms across XLA versions: "%name", "name", and the
+        # shape-prefixed "f32[2,4]{1,0} %name" — for the last, record the
+        # inline shape so dot-K recovery and byte accounting can resolve
+        # operands that are defined in another computation.
+        operands = []
+        for a in _split_top_commas(args):
+            m = re.search(r"%([\w.\-]+)", a)
+            if m:
+                oname = m.group(1)
+                prefix = a[: m.start()].strip()
+                if prefix and oname not in cur.shapes:
+                    cur.shapes[oname] = prefix
+                operands.append(oname)
+            else:
+                operands.append(a)
         cur.ops[name] = Op(name, shape, opcode, operands, attrs)
         cur.shapes[name] = shape
     return comps

@@ -1,0 +1,27 @@
+"""Empirical knob tuning for SFC-CA GEMM (measured, cached, persistent).
+
+`tune_gemm` sweeps candidates seeded by the analytical model and persists
+the winner; `lookup_knobs` is the measurement-free cache consult used by
+`repro.kernels.ops.sfc_matmul`.
+"""
+
+from repro.tune.cache import KnobCache, Knobs, default_cache_path, shape_bucket
+from repro.tune.tuner import (
+    candidate_knobs,
+    default_cache,
+    lookup_knobs,
+    measure_candidate,
+    tune_gemm,
+)
+
+__all__ = [
+    "KnobCache",
+    "Knobs",
+    "candidate_knobs",
+    "default_cache",
+    "default_cache_path",
+    "lookup_knobs",
+    "measure_candidate",
+    "shape_bucket",
+    "tune_gemm",
+]

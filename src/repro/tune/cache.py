@@ -1,0 +1,145 @@
+"""Persistent knob cache for the empirical SFC-GEMM tuner.
+
+Winners are stored in a JSON file keyed by ``(shape-bucket, dtype, backend)``
+where the shape bucket rounds (M, N, K) up to the next power of two — the
+knob landscape is smooth on a log grid (paper §III-C: the NN predictor works
+in log-coordinates), so one measurement serves every shape in its bucket.
+
+The file layout is a flat ``{key: knob-dict}`` object so it diffs cleanly
+and can be checked in / shipped with a model. Writes are atomic
+(tmp + rename) so concurrent benchmark processes can share one cache file.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Dict, Optional, Tuple
+
+__all__ = ["Knobs", "KnobCache", "shape_bucket", "default_cache_path"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Knobs:
+    """One winning SFC-GEMM configuration.
+
+    ``source`` records provenance: "analytical" (model-picked seed),
+    "measured" (won an empirical sweep), or "cached" (read back from disk).
+    ``time_s`` is the measured/modeled time that made it the winner.
+    """
+
+    bm: int
+    bn: int
+    k_layers: int
+    k_block_factor: int
+    source: str = "analytical"
+    time_s: float = 0.0
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "Knobs":
+        return cls(
+            bm=int(d["bm"]),
+            bn=int(d["bn"]),
+            k_layers=int(d["k_layers"]),
+            k_block_factor=int(d["k_block_factor"]),
+            source=str(d.get("source", "cached")),
+            time_s=float(d.get("time_s", 0.0)),
+        )
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, (int(x) - 1).bit_length())
+
+
+def shape_bucket(m: int, n: int, k: int) -> Tuple[int, int, int]:
+    """Round each GEMM extent up to the next power of two."""
+    return (_next_pow2(m), _next_pow2(n), _next_pow2(k))
+
+
+def default_cache_path() -> str:
+    env = os.environ.get("REPRO_SFC_TUNE_CACHE")
+    if env:
+        return env
+    return str(Path.home() / ".cache" / "repro" / "sfc_knobs.json")
+
+
+class KnobCache:
+    """JSON-backed ``(shape-bucket, dtype, backend) -> Knobs`` map."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = str(path) if path is not None else default_cache_path()
+        self._entries: Optional[Dict[str, Dict]] = None
+
+    @staticmethod
+    def key(m: int, n: int, k: int, dtype, backend: str) -> str:
+        bm_, bn_, bk_ = shape_bucket(m, n, k)
+        import numpy as np
+
+        return f"{bm_}x{bn_}x{bk_}|{np.dtype(dtype).name}|{backend}"
+
+    # ---------------- storage ----------------
+
+    def _load(self) -> Dict[str, Dict]:
+        if self._entries is None:
+            try:
+                with open(self.path) as f:
+                    self._entries = dict(json.load(f))
+            except (OSError, ValueError):
+                self._entries = {}
+        return self._entries
+
+    def _save(self) -> None:
+        # merge the current file contents under our entries first: another
+        # process may have persisted winners since our _load, and a plain
+        # rewrite of our snapshot would silently drop them (rename gives
+        # atomicity, not isolation)
+        entries = dict(self._entries or {})
+        try:
+            with open(self.path) as f:
+                on_disk = dict(json.load(f))
+            on_disk.update(entries)
+            entries = on_disk
+        except (OSError, ValueError):
+            pass
+        self._entries = entries
+        d = os.path.dirname(self.path) or "."
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".json.tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(entries, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    # ---------------- API ----------------
+
+    def get(self, m: int, n: int, k: int, dtype, backend: str) -> Optional[Knobs]:
+        d = self._load().get(self.key(m, n, k, dtype, backend))
+        if d is None:
+            return None
+        return dataclasses.replace(Knobs.from_dict(d), source="cached")
+
+    def put(self, m: int, n: int, k: int, dtype, backend: str, knobs: Knobs) -> None:
+        self._load()[self.key(m, n, k, dtype, backend)] = knobs.as_dict()
+        self._save()
+
+    def clear(self) -> None:
+        self._entries = {}
+        try:
+            os.unlink(self.path)
+        except OSError:
+            pass
+
+    def __len__(self) -> int:
+        return len(self._load())

@@ -1,0 +1,61 @@
+"""Shared pytest configuration.
+
+Registers the ``slow`` marker workflow: tests marked ``@pytest.mark.slow``
+(long subprocess integration runs, heavy per-arch compiles) are deselected
+by default so the tier-1 command finishes in well under two minutes on CPU;
+``--runslow`` opts back in (nightly / pre-release runs).
+"""
+
+import os
+
+import pytest
+
+# tier-1 is XLA-compile-bound (dozens of tiny jitted model graphs); backend
+# optimization buys nothing at toy sizes, so trade compiled-code quality for
+# compile latency.  Respect an explicit caller override.
+if "--xla_backend_optimization_level" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " --xla_backend_optimization_level=0"
+    ).strip()
+
+
+@pytest.fixture(autouse=True, scope="session")
+def isolated_tune_cache(tmp_path_factory):
+    """Point the SFC knob cache at a per-session temp file so test runs never
+    read or pollute the developer's ~/.cache tuning results."""
+    os.environ["REPRO_SFC_TUNE_CACHE"] = str(
+        tmp_path_factory.mktemp("tune") / "knobs.json"
+    )
+    try:
+        import repro.tune.tuner as tuner
+
+        tuner._DEFAULT_CACHE = None
+    except ImportError:
+        pass
+    yield
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--runslow",
+        action="store_true",
+        default=False,
+        help="also run tests marked slow (deselected by default)",
+    )
+
+
+def pytest_configure(config):
+    # registered here as well as pyproject.toml so bare invocations
+    # (no rootdir config) never warn on unknown markers
+    config.addinivalue_line(
+        "markers", "slow: long-running test, deselected unless --runslow"
+    )
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip_slow = pytest.mark.skip(reason="slow: pass --runslow to run")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)

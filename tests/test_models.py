@@ -28,7 +28,27 @@ def _batch_for(cfg, key, b=2, s=32):
     return batch
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+# per-arch grad-graph compiles dominate tier-1 wall-clock; the heaviest
+# stacks and same-family config variants (yi/qwen2 are dense-transformer
+# siblings of qwen3_4b/stablelm) run under --runslow — their prefill/decode
+# smoke below still runs everywhere
+_SLOW_TRAIN_SMOKE = {
+    "xlstm_1_3b",
+    "zamba2_1_2b",
+    "seamless_m4t_medium",
+    "yi_6b",
+    "qwen2_72b",
+}
+
+
+def _arch_params(slow_set):
+    return [
+        pytest.param(a, marks=pytest.mark.slow) if a in slow_set else a
+        for a in ARCH_IDS
+    ]
+
+
+@pytest.mark.parametrize("arch", _arch_params(_SLOW_TRAIN_SMOKE))
 def test_smoke_forward_and_train_step(arch):
     cfg = get_config(arch).reduced()
     model = build_model(cfg)
@@ -44,7 +64,9 @@ def test_smoke_forward_and_train_step(arch):
     assert np.isfinite(gnorm) and gnorm > 0
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+# zamba2's fast-tier coverage is the (strictly stronger) prefill/decode
+# consistency test below; its standalone smoke runs under --runslow
+@pytest.mark.parametrize("arch", _arch_params({"zamba2_1_2b"}))
 def test_smoke_prefill_decode(arch):
     cfg = get_config(arch).reduced()
     model = build_model(cfg)
@@ -77,7 +99,10 @@ def test_smoke_prefill_decode(arch):
     assert np.isfinite(np.asarray(logits2, np.float32)).all()
 
 
-@pytest.mark.parametrize("arch", ["yi_6b", "zamba2_1_2b", "xlstm_1_3b"])
+@pytest.mark.parametrize(
+    "arch",
+    ["yi_6b", "zamba2_1_2b", pytest.param("xlstm_1_3b", marks=pytest.mark.slow)],
+)
 def test_prefill_decode_consistency_with_forward(arch):
     """Greedy decode after prefill == argmax of teacher-forced forward."""
     cfg = get_config(arch).reduced()
@@ -107,7 +132,7 @@ def test_prefill_decode_consistency_with_forward(arch):
 def test_mamba2_chunked_matches_sequential():
     from repro.models.ssm import ssd_chunked, ssd_decode_step
 
-    B, S, H, P, N = 2, 23, 3, 8, 8
+    B, S, H, P, N = 2, 13, 3, 8, 8
     ks = jax.random.split(jax.random.PRNGKey(2), 4)
     xs = jax.random.normal(ks[0], (B, S, H, P)) * 0.3
     bm = jax.random.normal(ks[1], (B, S, N)) * 0.3
@@ -119,7 +144,7 @@ def test_mamba2_chunked_matches_sequential():
         st, y = ssd_decode_step(st, xs[:, t], bm[:, t], cm[:, t], la[:, t])
         outs.append(y)
     want = jnp.stack(outs, 1)
-    for chunk in (5, 8, 23):
+    for chunk in (5, 13):
         got = ssd_chunked(xs, bm, cm, la, chunk=chunk)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
 
@@ -127,7 +152,7 @@ def test_mamba2_chunked_matches_sequential():
 def test_mlstm_chunked_matches_sequential():
     from repro.models.xlstm import mlstm_chunked, mlstm_decode_step
 
-    B, S, H, P = 2, 21, 3, 8
+    B, S, H, P = 2, 13, 3, 8
     ks = jax.random.split(jax.random.PRNGKey(3), 5)
     q, k, v = (jax.random.normal(ks[i], (B, S, H, P)) * 0.5 for i in range(3))
     ig = jax.random.normal(ks[3], (B, S, H)) * 2.0
@@ -142,7 +167,7 @@ def test_mlstm_chunked_matches_sequential():
         st, h = mlstm_decode_step(st, q[:, t], k[:, t], v[:, t], ig[:, t], fg[:, t])
         outs.append(h)
     want = jnp.stack(outs, 1)
-    for chunk in (5, 21, 64):
+    for chunk in (5, 13):
         got = mlstm_chunked(q, k, v, ig, fg, chunk=chunk)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
 

@@ -2,7 +2,11 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hypothesis optional: property test skips, rest run
+    given = settings = st = None
 
 from repro.core.decomposition import sfc_decompose
 from repro.core.perf_model import (
@@ -90,14 +94,31 @@ def test_roofline_never_exceeds_peak():
     assert tm * tn * c == 256
 
 
-@given(
-    st.sampled_from([512, 1024, 2048, 4096]),
-    st.sampled_from([512, 1024, 2048, 4096]),
-    st.sampled_from([512, 1024, 2048, 4096]),
-)
-@settings(max_examples=10, deadline=None)
-def test_simulated_throughput_bounded_by_roofline(m, n, k):
+def _check_throughput_bounded(m, n, k):
     best, sweep = choose_knobs_autotune(m, n, k, 64)
     t_roof, _ = roofline_best_time(m, n, k, 64)
     # simulator can't beat the infinite-memory roofline by more than noise
     assert min(sweep.values()) >= t_roof * 0.8
+
+
+@pytest.mark.parametrize("m,n,k", [(512, 512, 512), (2048, 1024, 4096)])
+def test_simulated_throughput_bounded_smoke(m, n, k):
+    """Hypothesis-free sample of the roofline-bound property."""
+    _check_throughput_bounded(m, n, k)
+
+
+if st is None:
+
+    def test_roofline_property_needs_hypothesis():
+        pytest.importorskip("hypothesis")  # visible skip, not silent drop
+
+else:
+
+    @given(
+        st.sampled_from([512, 1024, 2048, 4096]),
+        st.sampled_from([512, 1024, 2048, 4096]),
+        st.sampled_from([512, 1024, 2048, 4096]),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_simulated_throughput_bounded_by_roofline(m, n, k):
+        _check_throughput_bounded(m, n, k)

@@ -1,9 +1,18 @@
 """Property tests for the generalized Hilbert curve and SFC decomposition —
-the invariants the whole system rests on (paper §II-B/§II-D/§II-E)."""
+the invariants the whole system rests on (paper §II-B/§II-D/§II-E).
+
+`hypothesis` is optional: the property tests run only when it is installed;
+`test_sfc_invariants_smoke` re-checks P0/P1/P2 deterministically on a fixed
+grid sample so the curve invariants are exercised in every environment.
+"""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip; smoke coverage below still runs
+    given = settings = st = None
 
 from repro.core.decomposition import (
     implied_worker_grid,
@@ -14,12 +23,8 @@ from repro.core.decomposition import (
 )
 from repro.core.sfc import SFCMap, create_sfc_map, gilbert2d, sfc_coord_table, sfc_inverse_table
 
-sides = st.integers(min_value=1, max_value=48)
 
-
-@given(sides, sides)
-@settings(max_examples=60, deadline=None)
-def test_sfc_bijection(w, h):
+def _check_bijection(w, h):
     """P0: the curve visits every cell of the W x H grid exactly once."""
     cells = list(gilbert2d(w, h))
     assert len(cells) == w * h
@@ -28,9 +33,7 @@ def test_sfc_bijection(w, h):
         assert 0 <= x < w and 0 <= y < h
 
 
-@given(sides, sides)
-@settings(max_examples=60, deadline=None)
-def test_sfc_adjacency(w, h):
+def _check_adjacency(w, h):
     """P1: no jumps — Chebyshev distance 1 per step; diagonal steps (both
     coords change) occur at most once per grid (odd-sided rectangles only,
     a documented generalized-Hilbert property)."""
@@ -45,26 +48,9 @@ def test_sfc_adjacency(w, h):
         assert n_diag == 0
 
 
-@given(sides, sides)
-@settings(max_examples=40, deadline=None)
-def test_sfc_inverse(w, h):
-    inv = sfc_inverse_table(w, h)
-    tab = sfc_coord_table(w, h)
-    for t in range(0, w * h, max(1, (w * h) // 17)):
-        x, y = tab[t]
-        assert inv[x, y] == t
-
-
-@given(
-    st.integers(min_value=2, max_value=32),
-    st.integers(min_value=2, max_value=32),
-    st.integers(min_value=1, max_value=16),
-)
-@settings(max_examples=40, deadline=None)
-def test_patch_connectivity(w, h, n_workers):
+def _check_patch_connectivity(w, h, n_workers):
     """P2: blockwise ranges of the curve are CONNECTED 2-D patches."""
-    if n_workers > w * h:
-        n_workers = w * h
+    n_workers = min(n_workers, w * h)
     for start, stop in partition_curve(w, h, n_workers):
         if stop - start <= 1:
             continue
@@ -85,6 +71,63 @@ def test_patch_connectivity(w, h, n_workers):
                     if nb in cells and nb not in seen:
                         stack.append(nb)
         assert seen == cells
+
+
+@pytest.mark.parametrize(
+    "w,h",
+    [(1, 1), (1, 7), (8, 8), (16, 16), (5, 3), (13, 29), (32, 6), (2, 48)],
+)
+def test_sfc_invariants_smoke(w, h):
+    """Hypothesis-free P0/P1/P2 check on a fixed sample of grid shapes —
+    square/rectangular, odd/even, degenerate — so the curve invariants are
+    always verified even without the property-testing dependency."""
+    _check_bijection(w, h)
+    _check_adjacency(w, h)
+    for n_workers in (1, 3, 4):
+        _check_patch_connectivity(w, h, n_workers)
+
+
+if st is None:
+
+    def test_property_tests_need_hypothesis():
+        pytest.importorskip("hypothesis")
+
+else:
+    sides = st.integers(min_value=1, max_value=48)
+
+    @given(sides, sides)
+    @settings(max_examples=60, deadline=None)
+    def test_sfc_bijection(w, h):
+        _check_bijection(w, h)
+
+    @given(sides, sides)
+    @settings(max_examples=60, deadline=None)
+    def test_sfc_adjacency(w, h):
+        _check_adjacency(w, h)
+
+    @given(sides, sides)
+    @settings(max_examples=40, deadline=None)
+    def test_sfc_inverse(w, h):
+        inv = sfc_inverse_table(w, h)
+        tab = sfc_coord_table(w, h)
+        for t in range(0, w * h, max(1, (w * h) // 17)):
+            x, y = tab[t]
+            assert inv[x, y] == t
+
+    @given(
+        st.integers(min_value=2, max_value=32),
+        st.integers(min_value=2, max_value=32),
+        st.integers(min_value=1, max_value=16),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_patch_connectivity(w, h, n_workers):
+        _check_patch_connectivity(w, h, n_workers)
+
+    @given(st.integers(min_value=1, max_value=128))
+    @settings(max_examples=30, deadline=None)
+    def test_factorization_any_worker_count(t):
+        tm, tn = sfc_grid_factorization(t, 64, 64)
+        assert tm * tn == t
 
 
 def test_paper_fig2_patches():
@@ -121,11 +164,11 @@ def test_non_power_of_two_workers():
     assert max(sizes) - min(sizes) <= 1  # balanced
 
 
-@given(st.integers(min_value=1, max_value=128))
-@settings(max_examples=30, deadline=None)
-def test_factorization_any_worker_count(t):
-    tm, tn = sfc_grid_factorization(t, 64, 64)
-    assert tm * tn == t
+def test_grid_factorization_smoke():
+    """Deterministic stand-in for the hypothesis factorization property."""
+    for t in (1, 2, 7, 24, 96, 128):
+        tm, tn = sfc_grid_factorization(t, 64, 64)
+        assert tm * tn == t
 
 
 def test_words_moved_lower_bound_scaling():

@@ -101,6 +101,7 @@ def test_checkpoint_restore_with_target_treedef(tmp_path):
     assert jax.tree_util.tree_structure(got) == jax.tree_util.tree_structure(tree)
 
 
+@pytest.mark.slow
 def test_preemption_resume_bitwise_identical(tmp_path):
     """Kill at step 12, restart, and the final params must be IDENTICAL to an
     uninterrupted run (checkpoint + deterministic data = exact resume)."""
