@@ -1,17 +1,33 @@
-"""Shared benchmark utilities: CSV emission + wall-clock timing."""
+"""Shared benchmark utilities: CSV emission + JSON recording + timing."""
 
 from __future__ import annotations
 
 import time
-from typing import Callable, Iterable
+from typing import Callable, Dict, Iterable, List
 
 import jax
 import numpy as np
+
+# every emit() lands here too, so `run.py --json` can persist the rows the
+# CSV stream printed (the per-PR BENCH_*.json perf-trajectory artifact)
+_RECORDS: List[Dict] = []
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     """Uniform CSV contract: name,us_per_call,derived."""
     print(f"{name},{us_per_call:.3f},{derived}")
+    _RECORDS.append(
+        {"name": name, "us_per_call": float(us_per_call), "derived": derived}
+    )
+
+
+def records() -> List[Dict]:
+    """Rows emitted so far in this process (insertion order)."""
+    return list(_RECORDS)
+
+
+def reset_records() -> None:
+    _RECORDS.clear()
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:

@@ -5,6 +5,13 @@ c in {1,2,4}: replication cuts GEMM-phase misses while adding C-reduction
 traffic.  Without hardware counters we report the *exact* words-moved census
 from the BRGEMM-taxonomy simulator, split GEMM-phase vs reduction — the
 same decomposition the paper's figure makes.
+
+`run_glu` extends the figure to the fused gated-MLP (SwiGLU) prefill
+projection: modeled HBM bytes for the unfused pipeline (two GEMMs, each
+writing its (M, ff) product, then an elementwise pass re-reading both and
+writing the gated output) vs the fused dual-B kernel (one A traversal, two
+B streams, one C write, epilogue in VMEM) — the traffic the fused-epilogue
+kernels delete.
 """
 
 from __future__ import annotations
@@ -14,6 +21,8 @@ import numpy as np
 from benchmarks.common import emit
 from repro.configs.paper_gemm import FIG7_SHAPES
 from repro.core.perf_model import TPU_V5E, simulate_gemm
+
+DTYPE_BYTES = 2  # bf16 activations/weights
 
 
 def run(n_workers: int = 256):
@@ -35,8 +44,56 @@ def run(n_workers: int = 256):
             )
 
 
+# (tokens, d_model, d_ff) gated-MLP prefill cells: a small-model shape, the
+# paper-study 4k-token shape, and a 7B-class projection
+GLU_SHAPES = [
+    (2048, 2048, 5632),
+    (4096, 4096, 11008),
+    (8192, 4096, 14336),
+]
+
+
+def glu_movement_model(
+    m: int, d: int, ff: int, *, n_workers: int = 256, dtype_bytes: int = DTYPE_BYTES
+):
+    """Modeled HBM bytes for one gated up-projection, unfused vs fused.
+
+    unfused: gate GEMM + value GEMM (each streams A and its B and writes an
+    (M, ff) product to HBM), then the SwiGLU elementwise pass reads both
+    products back and writes the gated output — three more (M, ff) trips.
+    fused:   the dual-B kernel streams A once with both B panels
+    (`simulate_gemm(n_b_mats=2)`), accumulates in VMEM and writes the gated
+    (M, ff) output once; the epilogue never touches HBM.
+    """
+    single = simulate_gemm(
+        m, ff, d, n_workers=n_workers, k_layers=1, k_block_factor=2,
+        dtype_bytes=dtype_bytes,
+    )
+    dual = simulate_gemm(
+        m, ff, d, n_workers=n_workers, k_layers=1, k_block_factor=2,
+        dtype_bytes=dtype_bytes, n_b_mats=2,
+    )
+    c_bytes = m * ff * dtype_bytes  # one (M, ff) product write
+    unfused = 2 * single["slow_bytes_total"] + 2 * c_bytes + 3 * c_bytes
+    fused = dual["slow_bytes_total"] + c_bytes
+    return unfused, fused, single, dual
+
+
+def run_glu(n_workers: int = 256):
+    for (m, d, ff) in GLU_SHAPES:
+        unfused, fused, _, dual = glu_movement_model(m, d, ff, n_workers=n_workers)
+        emit(
+            f"data_movement/glu_mlp/{m}x{d}x{ff}",
+            dual["time_s"] * 1e6,
+            f"unfused_GB={unfused/1e9:.3f};fused_GB={fused/1e9:.3f};"
+            f"hbm_reduction={unfused/fused:.2f}x;"
+            f"fused_tflops={dual['tflops']:.0f}",
+        )
+
+
 def main():
     run()
+    run_glu()
 
 
 if __name__ == "__main__":

@@ -44,8 +44,13 @@ def _row_major_time(M, N, K, n_workers, hw=TPU_V5E) -> float:
     return worst + c_traffic
 
 
-def run(full: bool = False, n_workers: int = 256):
-    shapes = GEMM_SHAPES if full else GEMM_SHAPES[:: len(GEMM_SHAPES) // 25]
+def run(full: bool = False, n_workers: int = 256, smoke: bool = False):
+    if smoke:
+        shapes = GEMM_SHAPES[:: max(1, len(GEMM_SHAPES) // 6)]
+    elif full:
+        shapes = GEMM_SHAPES
+    else:
+        shapes = GEMM_SHAPES[:: len(GEMM_SHAPES) // 25]
     whm_num = whm_den_sfc = whm_den_rm = 0.0
     for (m, n, k) in shapes:
         best, sweep = choose_knobs_autotune(m, n, k, n_workers)
@@ -78,7 +83,8 @@ def run(full: bool = False, n_workers: int = 256):
     from repro.core.sfc_gemm import sfc_ca_gemm_reference
 
     rng = np.random.default_rng(0)
-    for (m, n, k) in [(256, 256, 256), (512, 256, 512)]:
+    cpu_shapes = [(256, 256, 256)] if smoke else [(256, 256, 256), (512, 256, 512)]
+    for (m, n, k) in cpu_shapes:
         a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
         b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
         t_ref = time_fn(

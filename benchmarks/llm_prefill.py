@@ -23,13 +23,14 @@ from repro.core.gemm_backend import gemm_backend
 from repro.models.registry import build_model
 
 
-def run():
+def run(smoke: bool = False):
     cfg = get_config("yi_6b").reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
 
-    for batch, seq in [(1, 128), (4, 128), (8, 256)]:
+    cells = [(1, 64)] if smoke else [(1, 128), (4, 128), (8, 256)]
+    for batch, seq in cells:
         tokens = jnp.asarray(rng.integers(0, cfg.vocab, size=(batch, seq)), jnp.int32)
         results = {}
         for backend in ("xla", "sfc_reference"):

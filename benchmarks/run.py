@@ -1,12 +1,57 @@
 """Benchmark runner — one function per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV rows."""
+
+Prints ``name,us_per_call,derived`` CSV rows; with ``--json PATH`` the same
+rows are also written as a JSON document (the ``BENCH_*.json`` artifact CI
+uploads so the perf trajectory is tracked across PRs).  ``--smoke`` runs a
+reduced gemm_sweep + data-movement + llm_prefill subset that finishes in CI
+minutes.
+
+    python benchmarks/run.py                              # full CSV stream
+    python benchmarks/run.py --smoke --json BENCH_gemm.json
+"""
 
 from __future__ import annotations
 
+import argparse
+import json
+import platform
 import sys
 
 
-def main() -> None:
+def _write_json(path: str) -> None:
+    from benchmarks.common import records
+
+    try:
+        import jax
+
+        backend = jax.default_backend()
+        jax_version = jax.__version__
+    except Exception:  # records are host-side; don't lose them over metadata
+        backend = jax_version = "unknown"
+    doc = {
+        "schema": "repro-bench-v1",
+        "backend": backend,
+        "jax": jax_version,
+        "python": platform.python_version(),
+        "rows": records(),
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {len(doc['rows'])} rows to {path}", file=sys.stderr)
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--json", metavar="PATH", default=None,
+                   help="also write the emitted rows as JSON (BENCH_*.json)")
+    p.add_argument("--smoke", action="store_true",
+                   help="fast CI subset: gemm_sweep + data movement + one "
+                        "llm_prefill cell")
+    p.add_argument("--full", action="store_true",
+                   help="full 125-shape gemm sweep")
+    args = p.parse_args(argv)
+
     from benchmarks import (
         data_movement,
         distributed_gemm,
@@ -16,11 +61,20 @@ def main() -> None:
     )
 
     print("name,us_per_call,derived")
-    gemm_sweep.main()        # paper Figs. 1 / 6 / 9
-    data_movement.main()     # paper Fig. 7
-    knob_prediction.main()   # paper Fig. 8
-    llm_prefill.main()       # paper Fig. 10
-    distributed_gemm.main()  # paper Fig. 11
+    if args.smoke:
+        gemm_sweep.run(smoke=True)       # paper Figs. 1 / 6 / 9 (subset)
+        data_movement.run()              # paper Fig. 7
+        data_movement.run_glu()          # fused gated-MLP HBM model
+        llm_prefill.run(smoke=True)      # paper Fig. 10 (one cell)
+    else:
+        gemm_sweep.run(full=args.full)   # paper Figs. 1 / 6 / 9
+        data_movement.main()             # paper Fig. 7 + fused gated-MLP
+        knob_prediction.main()           # paper Fig. 8
+        llm_prefill.main()               # paper Fig. 10
+        distributed_gemm.main()          # paper Fig. 11
+
+    if args.json:
+        _write_json(args.json)
 
 
 if __name__ == "__main__":

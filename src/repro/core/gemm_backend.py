@@ -9,6 +9,15 @@ contextvar:
   "sfc_pallas"     the SFC-CA Pallas kernel (Mosaic on TPU, interpret on CPU)
   "sfc_reference"  the Listing-1 pure-JAX reference
 
+Every entry point carries the **fused epilogue** surface — ``bias``,
+``activation`` (silu/gelu/relu), ``out_scale``, ``residual`` — plus the
+gated dual-B forms `glu_matmul` / `grouped_glu_matmul`.  Under "sfc_pallas"
+the epilogue (and, for GLU, the second weight panel) runs inside the
+kernel's flush step, so the projection output makes exactly one HBM trip;
+under "xla" the same math is expressed as plain jnp ops (XLA fuses them
+itself, and the distributed dry-runs keep compiling the einsum/dot
+formulation GSPMD knows how to shard).
+
 Backend selection must be active *at trace time* (it changes the traced
 program).  Distribution note: the kernel backends are single-device
 primitives — inside pjit they apply per-shard only when the contraction dim
@@ -25,7 +34,14 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-__all__ = ["gemm_backend", "current_backend", "matmul", "grouped_matmul"]
+__all__ = [
+    "gemm_backend",
+    "current_backend",
+    "matmul",
+    "glu_matmul",
+    "grouped_matmul",
+    "grouped_glu_matmul",
+]
 
 _BACKEND: contextvars.ContextVar[str] = contextvars.ContextVar(
     "gemm_backend", default="xla"
@@ -47,75 +63,245 @@ def current_backend() -> str:
     return _BACKEND.get()
 
 
-def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
-    """(..., K) @ (K, N) through the active backend.
+def _act(name: Optional[str]):
+    from repro.kernels.sfc_gemm import activation_fn
+
+    return activation_fn(name)
+
+
+def _epilogue(y, *, bias=None, activation=None, out_scale=None, residual=None):
+    """jnp epilogue for the xla/reference paths (compute-dtype math — the
+    program the distributed dry-runs already compile)."""
+    if bias is not None:
+        y = y + bias
+    if activation is not None:
+        y = _act(activation)(y)
+    if out_scale is not None:
+        y = y * out_scale
+    if residual is not None:
+        y = y + residual
+    return y
+
+
+def _reference_matmul(x2: jax.Array, w: jax.Array, op: str = "gemm") -> jax.Array:
+    """Listing-1 reference with knobs from the shared resolver (tune cache /
+    analytical model, divisor-clipped) instead of a hardcoded 32.  ``op``
+    selects the tune-cache namespace so a measured GLU winner applies to
+    the reference backend's gate/value GEMMs too."""
+    from repro.core.sfc_gemm import sfc_ca_gemm_reference
+    from repro.kernels.ops import reference_knobs
+
+    m, k = x2.shape
+    bm, bn, bk, kl, kbf = reference_knobs(m, w.shape[1], k, x2.dtype, op)
+    return sfc_ca_gemm_reference(
+        x2, w, bm=bm, bn=bn, bk=bk, k_layers=kl, k_block_factor=kbf
+    )
+
+
+def matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    bias: Optional[jax.Array] = None,
+    activation: Optional[str] = None,
+    out_scale: Optional[float] = None,
+    residual: Optional[jax.Array] = None,
+) -> jax.Array:
+    """epilogue((..., K) @ (K, N)) through the active backend.
 
     Rank-2 ``x`` launches the plain SFC kernel; rank >= 3 routes through the
     batched kernel grid (one SFC traversal per batch element, weights panel
     shared across the batch) instead of flattening tokens into one huge M —
-    the batched grid keeps each element's C patch VMEM-resident.
+    the batched grid keeps each element's C patch VMEM-resident.  The
+    epilogue runs inside the kernel flush under "sfc_pallas".
     """
     name = _BACKEND.get()
     if name == "xla" or w.ndim != 2:
-        return x @ w
+        return _epilogue(
+            x @ w, bias=bias, activation=activation,
+            out_scale=out_scale, residual=residual,
+        )
     if name == "sfc_pallas":
         from repro.kernels.ops import sfc_matmul
 
+        kw = dict(
+            bias=bias, activation=activation,
+            out_scale=out_scale, residual=residual,
+        )
         if x.ndim == 1:
-            return sfc_matmul(x[None], w)[0]
+            if residual is not None:
+                kw["residual"] = residual[None]
+            return sfc_matmul(x[None], w, **kw)[0]
         if x.ndim > 2 and x.shape[-2] == 1:
             # decode-shaped (B, 1, K): a batched grid would run one task per
             # single-row element — flatten the batch into M instead
-            out = sfc_matmul(x.reshape(-1, x.shape[-1]), w)
+            if residual is not None:
+                kw["residual"] = residual.reshape(-1, w.shape[1])
+            out = sfc_matmul(x.reshape(-1, x.shape[-1]), w, **kw)
             return out.reshape(*x.shape[:-1], w.shape[1])
-        return sfc_matmul(x, w)
-    from repro.core.sfc_gemm import sfc_ca_gemm_reference
+        return sfc_matmul(x, w, **kw)
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    out = _reference_matmul(x.reshape(-1, k), w).reshape(*lead, w.shape[1])
+    return _epilogue(
+        out, bias=bias, activation=activation,
+        out_scale=out_scale, residual=residual,
+    )
 
+
+def glu_matmul(
+    x: jax.Array,
+    w_gate: jax.Array,
+    w_val: jax.Array,
+    *,
+    activation: str = "silu",
+    bias: Optional[jax.Array] = None,
+    gate_bias: Optional[jax.Array] = None,
+    out_scale: Optional[float] = None,
+    residual: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Gated projection ``act(x@w_gate) * (x@w_val)`` through the active
+    backend.  Under "sfc_pallas" the dual-B kernel traverses ``x`` once —
+    two weight panels, two f32 accumulators, one fused flush — instead of
+    two full GEMMs plus an elementwise HBM round-trip."""
+    name = _BACKEND.get()
+    if name == "xla" or w_val.ndim != 2:
+        g = x @ w_gate
+        if gate_bias is not None:
+            g = g + gate_bias
+        h = x @ w_val
+        if bias is not None:
+            h = h + bias
+        return _epilogue(
+            _act(activation)(g) * h, out_scale=out_scale, residual=residual
+        )
+    if name == "sfc_pallas":
+        from repro.kernels.ops import sfc_glu_matmul
+
+        kw = dict(
+            activation=activation, bias=bias, gate_bias=gate_bias,
+            out_scale=out_scale, residual=residual,
+        )
+        if x.ndim == 1:
+            if residual is not None:
+                kw["residual"] = residual[None]
+            return sfc_glu_matmul(x[None], w_gate, w_val, **kw)[0]
+        if x.ndim > 2 and x.shape[-2] == 1:
+            if residual is not None:
+                kw["residual"] = residual.reshape(-1, w_val.shape[1])
+            out = sfc_glu_matmul(x.reshape(-1, x.shape[-1]), w_gate, w_val, **kw)
+            return out.reshape(*x.shape[:-1], w_val.shape[1])
+        return sfc_glu_matmul(x, w_gate, w_val, **kw)
     lead = x.shape[:-1]
     k = x.shape[-1]
     x2 = x.reshape(-1, k)
-    bm = 32 if x2.shape[0] % 32 == 0 else x2.shape[0]
-    bn = 32 if w.shape[1] % 32 == 0 else w.shape[1]
-    bk = 32 if k % 32 == 0 else k
-    out = sfc_ca_gemm_reference(x2, w, bm=bm, bn=bn, bk=bk)
-    return out.reshape(*lead, w.shape[1])
+    g = _reference_matmul(x2, w_gate, op="glu").reshape(*lead, w_gate.shape[1])
+    h = _reference_matmul(x2, w_val, op="glu").reshape(*lead, w_val.shape[1])
+    if gate_bias is not None:
+        g = g + gate_bias
+    if bias is not None:
+        h = h + bias
+    return _epilogue(
+        _act(activation)(g) * h, out_scale=out_scale, residual=residual
+    )
 
 
-def grouped_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
-    """Per-expert contraction ``(..., E, C, K) @ (E, K, N) -> (..., E, C, N)``
-    through the active backend.
-
-    This is the MoE expert-GEMM shape: C capacity rows per (batch-group,
-    expert).  The XLA backend keeps the einsum formulation (what the
-    distributed dry-runs compile, and the shape GSPMD knows how to shard);
-    the SFC backends reorder each expert's rows behind one grouped SFC
-    kernel launch (`ops.sfc_grouped_matmul`).
-    """
-    name = _BACKEND.get()
-    if name == "xla":
-        return jnp.einsum("...eck,ekn->...ecn", x, w)
+def _rows_by_expert(x: jax.Array):
+    """(..., E, C, K) -> ((E*g*C, K) rows grouped by expert, restore fn)."""
     e, c, k = x.shape[-3:]
     lead = x.shape[:-3]
     g = 1
     for d in lead:
         g *= d
-    # (..., E, C, K) -> rows grouped by expert: (E * g*C, K)
     rows = x.reshape(g, e, c, k).transpose(1, 0, 2, 3).reshape(e * g * c, k)
+
+    def restore(out, n):
+        return out.reshape(e, g, c, n).transpose(1, 0, 2, 3).reshape(*lead, e, c, n)
+
+    return rows, (g, e, c), restore
+
+
+def grouped_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    bias: Optional[jax.Array] = None,
+    activation: Optional[str] = None,
+    out_scale: Optional[float] = None,
+) -> jax.Array:
+    """Per-expert contraction ``(..., E, C, K) @ (E, K, N) -> (..., E, C, N)``
+    through the active backend, with an optional per-expert epilogue
+    (``bias`` (E, N), ``activation``, ``out_scale``).
+
+    This is the MoE expert-GEMM shape: C capacity rows per (batch-group,
+    expert).  The XLA backend keeps the einsum formulation (what the
+    distributed dry-runs compile, and the shape GSPMD knows how to shard);
+    the SFC backends reorder each expert's rows behind one grouped SFC
+    kernel launch (`ops.sfc_grouped_matmul`) with the epilogue fused into
+    the flush.
+    """
+    name = _BACKEND.get()
+    if name == "xla":
+        y = jnp.einsum("...eck,ekn->...ecn", x, w)
+        if bias is not None:
+            y = y + bias[..., :, None, :]
+        return _epilogue(y, activation=activation, out_scale=out_scale)
+    rows, (g, e, c), restore = _rows_by_expert(x)
+    n = w.shape[-1]
     if name == "sfc_pallas":
         from repro.kernels.ops import sfc_grouped_matmul
 
-        out = sfc_grouped_matmul(rows, w, group_sizes=(g * c,) * e)
+        out = sfc_grouped_matmul(
+            rows, w, group_sizes=(g * c,) * e,
+            bias=bias, activation=activation, out_scale=out_scale,
+        )
     else:
-        from repro.core.sfc_gemm import sfc_ca_gemm_reference
-
-        n = w.shape[-1]
         parts = []
         for ei in range(e):
             xe = rows[ei * g * c : (ei + 1) * g * c]
-            bm = 32 if xe.shape[0] % 32 == 0 else xe.shape[0]
-            bn = 32 if n % 32 == 0 else n
-            bk = 32 if k % 32 == 0 else k
-            parts.append(sfc_ca_gemm_reference(xe, w[ei], bm=bm, bn=bn, bk=bk))
-        out = jnp.concatenate(parts)
-    n = w.shape[-1]
-    return out.reshape(e, g, c, n).transpose(1, 0, 2, 3).reshape(*lead, e, c, n)
+            ye = _reference_matmul(xe, w[ei])
+            if bias is not None:
+                ye = ye + bias[ei]
+            parts.append(ye)
+        out = _epilogue(
+            jnp.concatenate(parts), activation=activation, out_scale=out_scale
+        )
+    return restore(out, n)
+
+
+def grouped_glu_matmul(
+    x: jax.Array,
+    w_gate: jax.Array,
+    w_val: jax.Array,
+    *,
+    activation: str = "silu",
+    out_scale: Optional[float] = None,
+) -> jax.Array:
+    """Per-expert gated MLP ``act(x@w_gate[e]) * (x@w_val[e])`` over
+    ``(..., E, C, K)`` dispatch buffers.  Under "sfc_pallas" the dual-B
+    grouped kernel traverses the dispatched rows once for both expert
+    weight stacks — the MoE SwiGLU's second read of the capacity buffer
+    (and the elementwise round-trip) never touches HBM."""
+    name = _BACKEND.get()
+    if name == "xla":
+        g_ = jnp.einsum("...eck,ekn->...ecn", x, w_gate)
+        h = jnp.einsum("...eck,ekn->...ecn", x, w_val)
+        return _epilogue(_act(activation)(g_) * h, out_scale=out_scale)
+    rows, (g, e, c), restore = _rows_by_expert(x)
+    n = w_val.shape[-1]
+    if name == "sfc_pallas":
+        from repro.kernels.ops import sfc_grouped_glu_matmul
+
+        out = sfc_grouped_glu_matmul(
+            rows, w_gate, w_val, group_sizes=(g * c,) * e,
+            activation=activation, out_scale=out_scale,
+        )
+    else:
+        parts = []
+        for ei in range(e):
+            xe = rows[ei * g * c : (ei + 1) * g * c]
+            ge = _reference_matmul(xe, w_gate[ei], op="glu")
+            he = _reference_matmul(xe, w_val[ei], op="glu")
+            parts.append(_act(activation)(ge) * he)
+        out = _epilogue(jnp.concatenate(parts), out_scale=out_scale)
+    return restore(out, n)

@@ -159,6 +159,7 @@ def simulate_patch_traversal(
     hw: HardwareModel,
     dtype_bytes: int = 2,
     c_resident_bytes: int = 0,
+    n_b_mats: int = 1,
 ) -> BRGemmCounts:
     """Exact BRGEMM taxonomy for one worker walking ``cells`` (SFC order).
 
@@ -166,13 +167,17 @@ def simulate_patch_traversal(
     contracting a K/(k_layers*k_block_factor) slab.  Panel residency is
     tracked with an LRU cache of ``hw.fast_bytes`` minus the worker's
     persistent C-patch footprint (paper: C stays in fast memory).
+
+    ``n_b_mats > 1`` models the fused dual-B (GLU) kernel: each task
+    streams that many B panels per A panel (they live and die together in
+    the cache) and performs the matching multiple of FLOPs.
     """
     k_per_layer = K // k_layers
     k_chunk = max(1, k_per_layer // k_block_factor)
     n_chunks = max(1, k_per_layer // k_chunk)
     sa = bm * k_chunk * dtype_bytes  # A panel bytes per BRGEMM
-    sb = k_chunk * bn * dtype_bytes  # B panel bytes per BRGEMM
-    g = gemm_flops(bm, bn, k_chunk)  # FLOPs per BRGEMM
+    sb = k_chunk * bn * dtype_bytes * n_b_mats  # B panel bytes per BRGEMM
+    g = gemm_flops(bm, bn, k_chunk) * n_b_mats  # FLOPs per BRGEMM
 
     budget = max(0, hw.fast_bytes - c_resident_bytes)
     cache = _PanelCache(budget)
@@ -219,10 +224,13 @@ def simulate_gemm(
     bn: int = 256,
     hw: HardwareModel = TPU_V5E,
     dtype_bytes: int = 2,
+    n_b_mats: int = 1,
 ) -> Dict[str, float]:
     """Whole-GEMM modeled time = max over workers of per-worker simulated time
     plus the C read/write and (c>1) the layer reduction — paper §III-B tail.
     Returns a dict with time, throughput and the taxonomy census.
+    ``n_b_mats=2`` models the fused dual-B GLU kernel (see
+    `simulate_patch_traversal`).
     """
     mb_blocks, nb_blocks = M // bm, N // bn
     d = sfc_decompose(mb_blocks, nb_blocks, n_workers, k_layers)
@@ -241,6 +249,7 @@ def simulate_gemm(
             hw=hw,
             dtype_bytes=dtype_bytes,
             c_resident_bytes=c_bytes,
+            n_b_mats=n_b_mats,
         )
         total_slow += r.slow_bytes
         census.brgemm0 += r.brgemm0
@@ -259,7 +268,7 @@ def simulate_gemm(
         final_patch = (M * N / n_workers) * dtype_bytes
         c_time += (k_layers - 1) * 2 * final_patch * hw.beta
     time = worst.time + c_time
-    flops = gemm_flops(M, N, K)
+    flops = gemm_flops(M, N, K) * n_b_mats
     return {
         "time_s": time,
         "tflops": flops / time / 1e12,

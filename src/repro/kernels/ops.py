@@ -5,15 +5,26 @@ operands — ``(M, K) @ (K, N)``, ``(..., M, K) @ (K, N)`` (shared weights)
 and ``(..., M, K) @ (..., K, N)`` — pads to block multiples, fills knobs
 from the persistent empirical tune cache (`repro.tune`) when a measured
 winner exists for the shape bucket and from the paper's analytical model
-otherwise, launches the SFC-ordered kernel (batched grid for rank > 2),
-reduces the C copies and strips the padding.
+otherwise, and launches **one fused-epilogue SFC kernel**: the 2.5D layer
+reduction happens inside the kernel's f32 accumulator (layer-inner grid)
+and the optional epilogue — ``bias``, ``activation`` (silu/gelu/relu),
+``out_scale``, ``residual`` — is applied in the flush step, so C touches
+HBM exactly once.  `sfc_glu_matmul` is the dual-B gated form (one A
+traversal feeds gate and value accumulators; flush writes
+``act(A@Wg) * (A@Wv)``).
 
-`sfc_grouped_matmul` is the ragged companion for MoE expert GEMMs: rows
-grouped by expert against per-expert weight slabs, one SFC map per expert
-tile grid.
+The replicated `(K_layers, M, N)` + `add_reduce_pallas` two-launch pipeline
+survives as a fallback (``fuse=False``, or automatically when the fused
+VMEM footprint exceeds the budget) and for the distributed `ca_matmul`
+psum path; the fallback applies the same epilogue with jnp ops after the
+reduction.
 
-On non-TPU backends both transparently switch to interpret mode so the same
-call sites work in tests/CPU containers.
+`sfc_grouped_matmul` / `sfc_grouped_glu_matmul` are the ragged companions
+for MoE expert GEMMs: rows grouped by expert against per-expert weight
+slabs, one SFC map per expert tile grid, same fused epilogue.
+
+On non-TPU backends everything transparently switches to interpret mode so
+the same call sites work in tests/CPU containers.
 """
 
 from __future__ import annotations
@@ -26,18 +37,31 @@ import jax.numpy as jnp
 
 from repro.core.perf_model import TPU_V5E, choose_knobs_analytical
 from repro.kernels.sfc_gemm import (
+    activation_fn,
     add_reduce_pallas,
     sfc_gemm_batched,
+    sfc_gemm_batched_fused,
+    sfc_gemm_fused,
     sfc_gemm_grouped,
     sfc_gemm_pallas,
 )
 
 __all__ = [
     "sfc_matmul",
+    "sfc_glu_matmul",
     "sfc_grouped_matmul",
+    "sfc_grouped_glu_matmul",
     "default_interpret",
     "pick_blocks",
+    "resolve_knobs",
+    "reference_knobs",
+    "fused_path_fits_vmem",
 ]
+
+# Mosaic VMEM is ~16 MiB/core on current TPUs; when the fused step's working
+# set (double-buffered A/B panels + f32 accumulator(s) + C/epilogue tiles)
+# exceeds this, `sfc_matmul` falls back to the replicated two-launch path.
+_FUSED_VMEM_BYTES = 16 * 2**20
 
 
 def default_interpret() -> bool:
@@ -49,16 +73,17 @@ def _round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
 
 
-def pick_blocks(m: int, n: int, k: int) -> Tuple[int, int]:
-    """MXU-aligned (bm, bn): multiples of 128 when the problem allows, small
-    powers of two otherwise (tests use tiny shapes)."""
+def pick_blocks(m: int, n: int, k: int) -> Tuple[int, int, int]:
+    """MXU-aligned (bm, bn, bk): multiples of 128 when the problem allows,
+    small powers of two otherwise (tests use tiny shapes)."""
 
     def pick(dim: int) -> int:
         for cand in (256, 128, 64, 32, 16, 8):
             if dim % cand == 0:
                 return cand
         return dim
-    return pick(m), pick(n)
+
+    return pick(m), pick(n), pick(k)
 
 
 def _resolve_knobs(
@@ -70,15 +95,17 @@ def _resolve_knobs(
     bn: Optional[int],
     k_layers: Optional[int],
     k_block_factor: Optional[int],
+    op: str = "gemm",
 ) -> Tuple[int, int, int, int]:
     """Fill unspecified knobs: measured tune-cache winner first (paper §III-C
-    method (1)), analytical model + MXU alignment rules as the fallback."""
+    method (1)), analytical model + MXU alignment rules as the fallback.
+    ``op`` selects the tune-cache namespace ("gemm" or the dual-B "glu")."""
     if None in (bm, bn, k_layers, k_block_factor):
         cached = None
         try:
             from repro.tune import lookup_knobs
 
-            cached = lookup_knobs(m, n, k, dtype)
+            cached = lookup_knobs(m, n, k, dtype, op=op)
         except Exception:
             cached = None
         if cached is not None:
@@ -87,7 +114,7 @@ def _resolve_knobs(
             k_layers = k_layers or cached.k_layers
             k_block_factor = k_block_factor or cached.k_block_factor
     if bm is None or bn is None:
-        pbm, pbn = pick_blocks(m, n, k)
+        pbm, pbn, _ = pick_blocks(m, n, k)
         bm = bm or pbm
         bn = bn or pbn
     if k_layers is None or k_block_factor is None:
@@ -101,31 +128,134 @@ def _resolve_knobs(
     return bm, bn, k_layers, k_block_factor
 
 
-def sfc_matmul(
-    a: jax.Array,
-    b: jax.Array,
+def resolve_knobs(
+    m: int,
+    n: int,
+    k: int,
+    dtype,
     *,
     bm: Optional[int] = None,
     bn: Optional[int] = None,
     k_layers: Optional[int] = None,
     k_block_factor: Optional[int] = None,
-    interpret: Optional[bool] = None,
+    op: str = "gemm",
+) -> Tuple[int, int, int, int]:
+    """Public knob resolution: tune cache -> analytical model -> alignment.
+
+    The single source of truth every backend path (Pallas kernels, the
+    Listing-1 reference, the tuner's candidate seeding) consults, so a
+    measured winner applies everywhere."""
+    return _resolve_knobs(m, n, k, dtype, bm, bn, k_layers, k_block_factor, op)
+
+
+def _divisor_block(dim: int, cap: int) -> int:
+    """Largest aligned block <= cap that divides dim, else the dim itself —
+    the reference implementation does not pad, and one whole-extent block
+    beats a degenerate unit block."""
+    for cand in (256, 128, 64, 32, 16, 8):
+        if cand <= cap and dim % cand == 0:
+            return cand
+    return dim
+
+
+def reference_knobs(
+    m: int, n: int, k: int, dtype, op: str = "gemm"
+) -> Tuple[int, int, int, int, int]:
+    """(bm, bn, bk, k_layers, k_block_factor) for `sfc_ca_gemm_reference`.
+
+    Resolves through the same tune-cache/analytical pipeline as the Pallas
+    path, then clips each block to a divisor of its extent (the reference
+    implementation does not pad) and drops the K knobs to (1, 1) when K's
+    block count cannot accommodate them."""
+    bm, bn, k_layers, k_block_factor = _resolve_knobs(
+        m, n, k, dtype, None, None, None, None, op
+    )
+    bm = _divisor_block(m, bm)
+    bn = _divisor_block(n, bn)
+    _, _, bk = pick_blocks(m, n, k)
+    kb_cnt = max(k // bk, 1)
+    if kb_cnt % (k_layers * k_block_factor):
+        k_layers = k_block_factor = 1
+    return bm, bn, bk, k_layers, k_block_factor
+
+
+def fused_path_fits_vmem(
+    bm: int,
+    bn: int,
+    k_chunk: int,
+    dtype_bytes: int,
+    out_bytes: int,
+    *,
+    glu: bool = False,
+    has_residual: bool = False,
+) -> bool:
+    """Does one fused grid step's working set fit the VMEM budget?
+
+    Double-buffered A + B (x2 for GLU) panels, one f32 accumulator per B,
+    the output tile and any resident epilogue operands."""
+    n_b = 2 if glu else 1
+    panels = (bm * k_chunk + n_b * k_chunk * bn) * dtype_bytes * 2
+    accs = bm * bn * 4 * n_b
+    tiles = bm * bn * out_bytes
+    if has_residual:
+        tiles += bm * bn * dtype_bytes
+    tiles += 2 * bn * dtype_bytes  # bias / gate-bias rows (negligible)
+    return panels + accs + tiles <= _FUSED_VMEM_BYTES
+
+
+def _epilogue_jnp(
+    y: jax.Array,
+    *,
+    gate: Optional[jax.Array] = None,
+    bias: Optional[jax.Array] = None,
+    gate_bias: Optional[jax.Array] = None,
+    activation: Optional[str] = None,
+    out_scale: Optional[float] = None,
+    residual: Optional[jax.Array] = None,
     out_dtype=None,
 ) -> jax.Array:
-    """C = A @ B via the SFC-CA Pallas kernel, any leading batch dims on A.
+    """The fallback path's epilogue: same math as the kernel flush (f32)."""
+    acc = y.astype(jnp.float32)
+    if bias is not None:
+        acc = acc + bias.astype(jnp.float32)
+    if gate is not None:
+        g = gate.astype(jnp.float32)
+        if gate_bias is not None:
+            g = g + gate_bias.astype(jnp.float32)
+        acc = activation_fn(activation)(g) * acc
+    elif activation is not None:
+        acc = activation_fn(activation)(acc)
+    if out_scale is not None:
+        acc = acc * out_scale
+    if residual is not None:
+        acc = acc + residual.astype(jnp.float32)
+    return acc.astype(out_dtype or y.dtype)
 
-    ``a``: (..., M, K); ``b``: (K, N) shared across the batch, or
-    (..., K, N) with leading dims matching ``a``'s.  Knobs left as None are
-    filled from the empirical tune cache when present, else by the paper's
-    analytical model (K_layers, k_block_factor) and MXU alignment rules
-    (bm, bn).  Arbitrary M/N/K are handled by zero padding (curve still
-    covers the padded grid; padding contributes zeros to the contraction).
-    """
+
+def _matmul_impl(
+    a: jax.Array,
+    b: jax.Array,
+    b_gate: Optional[jax.Array],
+    *,
+    bias: Optional[jax.Array],
+    gate_bias: Optional[jax.Array],
+    residual: Optional[jax.Array],
+    activation: Optional[str],
+    out_scale: Optional[float],
+    bm: Optional[int],
+    bn: Optional[int],
+    k_layers: Optional[int],
+    k_block_factor: Optional[int],
+    interpret: Optional[bool],
+    out_dtype,
+    fuse: Optional[bool],
+) -> jax.Array:
     if interpret is None:
         interpret = default_interpret()
     if a.ndim < 2 or b.ndim < 2:
         raise ValueError(f"sfc_matmul needs matrices, got {a.shape} @ {b.shape}")
 
+    glu = b_gate is not None
     lead = a.shape[:-2]
     m, k = a.shape[-2:]
     k2, n = b.shape[-2:]
@@ -133,19 +263,95 @@ def sfc_matmul(
     b_batched = b.ndim > 2
     if b_batched and b.shape[:-2] != lead:
         raise ValueError(f"batch dims mismatch: {a.shape} @ {b.shape}")
+    if glu:
+        if b_gate.ndim != 2 or b_gate.shape != b.shape[-2:]:
+            raise ValueError(
+                f"GLU gate weights must be (K, N)={b.shape[-2:]}, "
+                f"got {b_gate.shape}"
+            )
+        if b_batched:
+            raise ValueError("GLU form requires shared 2-D value weights")
+    for name, vec in (("bias", bias), ("gate_bias", gate_bias)):
+        if vec is not None and vec.shape not in ((n,), (1, n)):
+            raise ValueError(f"{name} must be (N,) or (1, N) with N={n}, got {vec.shape}")
+    if residual is not None and residual.shape != (*lead, m, n):
+        raise ValueError(
+            f"residual shape {residual.shape} != output {(*lead, m, n)}"
+        )
     out_dtype = out_dtype or a.dtype
 
+    op = "glu" if glu else "gemm"
     bm, bn, k_layers, k_block_factor = _resolve_knobs(
-        m, n, k, a.dtype, bm, bn, k_layers, k_block_factor
+        m, n, k, a.dtype, bm, bn, k_layers, k_block_factor, op
     )
 
     mp = _round_up(m, bm)
     np_ = _round_up(n, bn)
     kp = _round_up(k, k_layers * k_block_factor)
 
+    if fuse is None:
+        fuse = fused_path_fits_vmem(
+            bm,
+            bn,
+            kp // (k_layers * k_block_factor),
+            jnp.dtype(a.dtype).itemsize,
+            jnp.dtype(out_dtype).itemsize,
+            glu=glu,
+            has_residual=residual is not None,
+        )
+    if not fuse and glu:
+        # unfused GLU: two independent products + jnp epilogue
+        val = _matmul_impl(
+            a, b, None,
+            bias=None, gate_bias=None, residual=None,
+            activation=None, out_scale=None,
+            bm=bm, bn=bn, k_layers=k_layers, k_block_factor=k_block_factor,
+            interpret=interpret, out_dtype=jnp.float32, fuse=False,
+        )
+        gate = _matmul_impl(
+            a, b_gate, None,
+            bias=None, gate_bias=None, residual=None,
+            activation=None, out_scale=None,
+            bm=bm, bn=bn, k_layers=k_layers, k_block_factor=k_block_factor,
+            interpret=interpret, out_dtype=jnp.float32, fuse=False,
+        )
+        return _epilogue_jnp(
+            val, gate=gate, bias=bias, gate_bias=gate_bias,
+            activation=activation, out_scale=out_scale, residual=residual,
+            out_dtype=out_dtype,
+        )
+
+    # pad operands to block multiples (curve still covers the padded grid;
+    # padding contributes zeros to the contraction and is sliced back off)
+    bias_p = gate_bias_p = None
+    if fuse:
+        if bias is not None:
+            bias_p = jnp.pad(bias.reshape(1, n), ((0, 0), (0, np_ - n)))
+        if gate_bias is not None:
+            gate_bias_p = jnp.pad(
+                gate_bias.reshape(1, n), ((0, 0), (0, np_ - n))
+            )
+    b_gate_p = None
+    if glu and (kp != k or np_ != n):
+        b_gate_p = jnp.pad(b_gate, ((0, kp - k), (0, np_ - n)))
+    elif glu:
+        b_gate_p = b_gate
+
     if not lead:
         a_p = jnp.pad(a, ((0, mp - m), (0, kp - k))) if (mp != m or kp != k) else a
         b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n))) if (kp != k or np_ != n) else b
+        if fuse:
+            res_p = None
+            if residual is not None:
+                res_p = jnp.pad(residual, ((0, mp - m), (0, np_ - n)))
+            c_full = sfc_gemm_fused(
+                a_p, b_p, b_gate_p, bias_p, gate_bias_p, res_p,
+                activation=activation, out_scale=out_scale,
+                bm=bm, bn=bn,
+                k_layers=k_layers, k_block_factor=k_block_factor,
+                interpret=interpret, out_dtype=out_dtype,
+            )
+            return c_full[:m, :n]
         copies = sfc_gemm_pallas(
             a_p, b_p,
             bm=bm, bn=bn,
@@ -156,7 +362,10 @@ def sfc_matmul(
             c_full = add_reduce_pallas(copies, bm=bm, bn=bn, interpret=interpret)
         else:
             c_full = copies[0]
-        return c_full[:m, :n]
+        return _epilogue_jnp(
+            c_full[:m, :n], bias=bias, activation=activation,
+            out_scale=out_scale, residual=residual, out_dtype=out_dtype,
+        )
 
     # batched path: fold leading dims into one batch axis for the kernel grid
     bsz = 1
@@ -172,6 +381,22 @@ def sfc_matmul(
     else:
         b3 = jnp.pad(b, ((0, kp - k), (0, np_ - n))) if (kp != k or np_ != n) else b
 
+    if fuse:
+        res_p = None
+        if residual is not None:
+            res_p = jnp.pad(
+                residual.reshape(bsz, m, n),
+                ((0, 0), (0, mp - m), (0, np_ - n)),
+            )
+        c_full = sfc_gemm_batched_fused(
+            a3, b3, b_gate_p, bias_p, gate_bias_p, res_p,
+            activation=activation, out_scale=out_scale,
+            bm=bm, bn=bn,
+            k_layers=k_layers, k_block_factor=k_block_factor,
+            interpret=interpret, out_dtype=out_dtype,
+        )  # (B, Mp, Np)
+        return c_full[:, :m, :n].reshape(*lead, m, n)
+
     copies = sfc_gemm_batched(
         a3, b3,
         bm=bm, bn=bn,
@@ -179,49 +404,129 @@ def sfc_matmul(
         interpret=interpret, out_dtype=out_dtype,
     )  # (B, K_layers, Mp, Np)
     if k_layers > 1:
-        folded = copies.transpose(1, 0, 2, 3).reshape(k_layers, bsz * mp, np_)
-        c_full = add_reduce_pallas(
-            folded, bm=bm, bn=bn, interpret=interpret
-        ).reshape(bsz, mp, np_)
+        # reduce per batch element in place — no transpose+reshape HBM copy
+        c_full = add_reduce_pallas(copies, bm=bm, bn=bn, interpret=interpret)
     else:
         c_full = copies[:, 0]
-    return c_full[:, :m, :n].reshape(*lead, m, n)
+    out = c_full[:, :m, :n].reshape(*lead, m, n)
+    return _epilogue_jnp(
+        out, bias=bias, activation=activation,
+        out_scale=out_scale, residual=residual, out_dtype=out_dtype,
+    )
 
 
-def sfc_grouped_matmul(
-    a: jax.Array,  # (T, K) rows sorted by group
-    b: jax.Array,  # (E, K, N) per-group weights
-    group_sizes: Sequence[int],
+def sfc_matmul(
+    a: jax.Array,
+    b: jax.Array,
     *,
+    bias: Optional[jax.Array] = None,
+    activation: Optional[str] = None,
+    out_scale: Optional[float] = None,
+    residual: Optional[jax.Array] = None,
     bm: Optional[int] = None,
     bn: Optional[int] = None,
+    k_layers: Optional[int] = None,
     k_block_factor: Optional[int] = None,
     interpret: Optional[bool] = None,
     out_dtype=None,
+    fuse: Optional[bool] = None,
 ) -> jax.Array:
-    """Ragged grouped GEMM: ``out[rows of group e] = a[rows of e] @ b[e]``.
+    """C = epilogue(A @ B) via the SFC-CA Pallas kernel, any leading batch
+    dims on A.
 
-    ``group_sizes`` are *static* per-group row counts summing to ``a``'s row
-    count (MoE callers know them at trace time: group×capacity).  Each
-    group's rows are zero-padded to a ``bm`` multiple, the groups'  tile
-    grids are concatenated into one SFC task table (one gilbert map per
-    group) and a single Pallas launch computes every expert's product; the
-    valid rows are sliced back out.  Groups with zero rows are legal.
+    ``a``: (..., M, K); ``b``: (K, N) shared across the batch, or
+    (..., K, N) with leading dims matching ``a``'s.  The epilogue —
+    ``bias`` (N,), ``activation`` in {"silu", "gelu", "relu"},
+    ``out_scale`` (python float) and ``residual`` (..., M, N) — is fused
+    into the kernel flush: ``C = act(A@B + bias) * out_scale + residual``
+    computed on the f32 accumulator, one HBM write.
+
+    Knobs left as None are filled from the empirical tune cache when
+    present, else by the paper's analytical model (K_layers,
+    k_block_factor) and MXU alignment rules (bm, bn).  ``fuse=None`` (auto)
+    uses the single-launch layer-inner kernel whenever its VMEM working set
+    fits; ``fuse=False`` forces the replicated (K_layers, M, N) +
+    `add_reduce_pallas` two-launch fallback with a jnp epilogue.  Arbitrary
+    M/N/K are handled by zero padding (curve still covers the padded grid;
+    padding contributes zeros to the contraction).
     """
+    return _matmul_impl(
+        a, b, None,
+        bias=bias, gate_bias=None, residual=residual,
+        activation=activation, out_scale=out_scale,
+        bm=bm, bn=bn, k_layers=k_layers, k_block_factor=k_block_factor,
+        interpret=interpret, out_dtype=out_dtype, fuse=fuse,
+    )
+
+
+def sfc_glu_matmul(
+    a: jax.Array,
+    b_gate: jax.Array,
+    b_val: jax.Array,
+    *,
+    activation: str = "silu",
+    bias: Optional[jax.Array] = None,
+    gate_bias: Optional[jax.Array] = None,
+    out_scale: Optional[float] = None,
+    residual: Optional[jax.Array] = None,
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+    k_layers: Optional[int] = None,
+    k_block_factor: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    out_dtype=None,
+    fuse: Optional[bool] = None,
+) -> jax.Array:
+    """Gated-MLP projection: ``act(A@Wg + gate_bias) * (A@Wv + bias)`` in
+    one SFC traversal of A (dual-B kernel: two weight panels, two f32
+    accumulators, one C write).  ``a``: (..., M, K); weights are shared 2-D
+    (K, N).  Same knob resolution/padding contract as `sfc_matmul`; the GLU
+    variant has its own tune-cache namespace (op="glu")."""
+    return _matmul_impl(
+        a, b_val, b_gate,
+        bias=bias, gate_bias=gate_bias, residual=residual,
+        activation=activation, out_scale=out_scale,
+        bm=bm, bn=bn, k_layers=k_layers, k_block_factor=k_block_factor,
+        interpret=interpret, out_dtype=out_dtype, fuse=fuse,
+    )
+
+
+def _grouped_impl(
+    a: jax.Array,  # (T, K) rows sorted by group
+    b: jax.Array,  # (E, K, N) per-group weights
+    b_gate: Optional[jax.Array],  # (E, K, N) per-group gate weights
+    group_sizes: Sequence[int],
+    *,
+    bias: Optional[jax.Array],
+    gate_bias: Optional[jax.Array],
+    activation: Optional[str],
+    out_scale: Optional[float],
+    bm: Optional[int],
+    bn: Optional[int],
+    k_block_factor: Optional[int],
+    interpret: Optional[bool],
+    out_dtype,
+) -> jax.Array:
     if interpret is None:
         interpret = default_interpret()
+    glu = b_gate is not None
     t, k = a.shape
     e_cnt, k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
+    if glu and b_gate.shape != b.shape:
+        raise ValueError(f"gate weights {b_gate.shape} != {b.shape}")
     group_sizes = tuple(int(g) for g in group_sizes)
     if len(group_sizes) != e_cnt:
         raise ValueError(f"{len(group_sizes)} group sizes for {e_cnt} groups")
     if sum(group_sizes) != t:
         raise ValueError(f"group_sizes sum {sum(group_sizes)} != rows {t}")
+    for name, vec in (("bias", bias), ("gate_bias", gate_bias)):
+        if vec is not None and vec.shape != (e_cnt, n):
+            raise ValueError(f"{name} must be (E, N)=({e_cnt},{n}), got {vec.shape}")
     out_dtype = out_dtype or a.dtype
 
     max_g = max(group_sizes) if group_sizes else 1
-    pbm, pbn = pick_blocks(max(max_g, 1), n, k)
+    pbm, pbn, _ = pick_blocks(max(max_g, 1), n, k)
     bm = bm or min(pbm, 128)
     bn = bn or pbn
     if k_block_factor is None:
@@ -229,6 +534,16 @@ def sfc_grouped_matmul(
         _, k_block_factor = choose_knobs_analytical(
             max(max_g, bm), max(n, bn), max(k, 1), 1, bm=bm, bn=bn, hw=TPU_V5E
         )
+        # the grouped form has no replicated fallback — if the (possibly
+        # dual-B) working set overflows the VMEM budget, shrink the K chunk.
+        # Only auto-resolved knobs are adjusted; explicit ones are honored.
+        dtype_bytes = jnp.dtype(a.dtype).itemsize
+        out_bytes = jnp.dtype(out_dtype).itemsize
+        while k_block_factor < max(k, 1) and not fused_path_fits_vmem(
+            bm, bn, _round_up(k, k_block_factor) // k_block_factor,
+            dtype_bytes, out_bytes, glu=glu,
+        ):
+            k_block_factor *= 2
 
     kp = _round_up(k, k_block_factor)
     np_ = _round_up(n, bn)
@@ -250,11 +565,24 @@ def sfc_grouped_matmul(
     if not slabs:
         return jnp.zeros((0, n), out_dtype)
     a_p = jnp.concatenate(slabs) if len(slabs) > 1 else slabs[0]
-    b_p = jnp.pad(b, ((0, 0), (0, kp - k), (0, np_ - n))) if (kp != k or np_ != n) else b
+
+    def pad_w(w):
+        if kp != k or np_ != n:
+            return jnp.pad(w, ((0, 0), (0, kp - k), (0, np_ - n)))
+        return w
+
+    b_p = pad_w(b)
+    bg_p = pad_w(b_gate) if glu else None
+
+    def pad_vec(v):
+        if v is None:
+            return None
+        return jnp.pad(v.reshape(e_cnt, 1, n), ((0, 0), (0, 0), (0, np_ - n)))
 
     out_p = sfc_gemm_grouped(
-        a_p, b_p,
+        a_p, b_p, bg_p, pad_vec(bias), pad_vec(gate_bias),
         row_blocks=row_blocks,
+        activation=activation, out_scale=out_scale,
         bm=bm, bn=bn,
         k_block_factor=k_block_factor,
         interpret=interpret, out_dtype=out_dtype,
@@ -267,3 +595,67 @@ def sfc_grouped_matmul(
         outs.append(out_p[poff : poff + g, :n])
         poff += rb * bm
     return jnp.concatenate(outs) if len(outs) > 1 else outs[0]
+
+
+def sfc_grouped_matmul(
+    a: jax.Array,  # (T, K) rows sorted by group
+    b: jax.Array,  # (E, K, N) per-group weights
+    group_sizes: Sequence[int],
+    *,
+    bias: Optional[jax.Array] = None,
+    activation: Optional[str] = None,
+    out_scale: Optional[float] = None,
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+    k_block_factor: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    out_dtype=None,
+) -> jax.Array:
+    """Ragged grouped GEMM: ``out[rows of group e] = epilogue(a[rows of e] @
+    b[e])``.
+
+    ``group_sizes`` are *static* per-group row counts summing to ``a``'s row
+    count (MoE callers know them at trace time: group×capacity).  Each
+    group's rows are zero-padded to a ``bm`` multiple, the groups' tile
+    grids are concatenated into one SFC task table (one gilbert map per
+    group) and a single Pallas launch computes every expert's product —
+    epilogue (per-expert ``bias`` (E, N), ``activation``, ``out_scale``)
+    included; the valid rows are sliced back out.  Groups with zero rows
+    are legal.
+    """
+    return _grouped_impl(
+        a, b, None, group_sizes,
+        bias=bias, gate_bias=None,
+        activation=activation, out_scale=out_scale,
+        bm=bm, bn=bn, k_block_factor=k_block_factor,
+        interpret=interpret, out_dtype=out_dtype,
+    )
+
+
+def sfc_grouped_glu_matmul(
+    a: jax.Array,  # (T, K) rows sorted by group
+    b_gate: jax.Array,  # (E, K, N) per-group gate weights
+    b_val: jax.Array,  # (E, K, N) per-group value weights
+    group_sizes: Sequence[int],
+    *,
+    activation: str = "silu",
+    bias: Optional[jax.Array] = None,
+    gate_bias: Optional[jax.Array] = None,
+    out_scale: Optional[float] = None,
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+    k_block_factor: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    out_dtype=None,
+) -> jax.Array:
+    """Ragged grouped gated-MLP: ``act(a@b_gate[e]) * (a@b_val[e])`` per
+    group, one SFC traversal of the dispatched rows (dual-B grouped kernel).
+    The MoE expert SwiGLU reads each row slab from HBM once instead of
+    twice."""
+    return _grouped_impl(
+        a, b_val, b_gate, group_sizes,
+        bias=bias, gate_bias=gate_bias,
+        activation=activation, out_scale=out_scale,
+        bm=bm, bn=bn, k_block_factor=k_block_factor,
+        interpret=interpret, out_dtype=out_dtype,
+    )

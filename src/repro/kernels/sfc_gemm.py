@@ -1,34 +1,51 @@
 """Pallas TPU kernel: SFC-ordered Communication-Avoiding GEMM.
 
 TPU adaptation of paper Listing 1 (see DESIGN.md §2.1).  The Pallas grid *is*
-the paper's fused task loop: one grid step per (K-layer, SFC-tile, K-chunk)
-task, visited in exactly the Listing-1 order
-
-    task t = i_layer * (Mb*Nb) + i_sfc        (layer-major, SFC within layer)
-
-with the (im, in) tile coordinates coming from a scalar-prefetched SFC table
-(the TPU analogue of `map_sfc_index`).  Because Mosaic only re-fetches a block
-whose `index_map` output changed between consecutive sequential grid steps,
-the gilbert-order traversal realises the paper's BRGEMM taxonomy in hardware:
+the paper's fused task loop: one grid step per (SFC-tile, K-layer, K-chunk)
+task, visited in exactly the Listing-1 order, with the (im, in) tile
+coordinates coming from a scalar-prefetched SFC table (the TPU analogue of
+`map_sfc_index`).  Because Mosaic only re-fetches a block whose `index_map`
+output changed between consecutive sequential grid steps, the gilbert-order
+traversal realises the paper's BRGEMM taxonomy in hardware:
 
   * consecutive tiles share `im`  -> the A panel stays in VMEM (BRGEMM₂)
   * consecutive tiles share `in`  -> the B panel stays in VMEM (BRGEMM₁)
   * both change (quadrant hops)   -> BRGEMM₀, only O(√(Mb·Nb)) times.
 
-`K_layers > 1` replicates C into per-layer copies, each contracting a K/c
-slab (the 2.5D algorithm); `add_reduce` below is the `add_reduce_tpp`.
+Two families of kernels live here:
+
+**Fused (layer-inner) forms** — `sfc_gemm_fused`, `sfc_gemm_batched_fused`,
+`sfc_gemm_grouped`.  On a single TensorCore the 2.5D algorithm's replicated
+C copies buy nothing: there is no second worker to hand a partial copy to,
+so the grid is `(n_sfc_tasks, K_layers, n_k_chunks)` with the *layer as an
+inner dimension*.  The f32 VMEM accumulator carries the full-K reduction
+across layers — `add_reduce_tpp` degenerates into the accumulator itself —
+and C is written to HBM exactly once.  No `(K_layers, M, N)` intermediate,
+no second launch.  The flush step optionally applies a **fused epilogue**
+(bias add, silu/gelu/relu activation, output scale, residual add) and a
+**dual-B GLU form** (two B panels share one A traversal; flush writes
+`act(acc_gate) * acc_val`) so gated-MLP projections never round-trip the
+`(M, N)` output through HBM between the GEMM and its elementwise tail.
+
+**Replicated (2.5D) forms** — `sfc_gemm_pallas`, `sfc_gemm_batched`, each
+returning the `(K_layers, M, N)` C copies reduced by `add_reduce_pallas`.
+These remain for the *distributed* `ca_matmul` path, where K_layers is a
+mesh axis and the copies are combined with a psum (the true
+`add_reduce_tpp`), and as the fallback when the fused accumulator footprint
+does not fit VMEM (`ops.sfc_matmul` decides).
+
 `k_block_factor` chunks each layer's K range so the A/B panels fit VMEM
 (paper §II-E: the k' constant), accumulating in an f32 VMEM scratch.
-
-VMEM budget per step: bm*kc + kc*bn (+double-buffering) + bm*bn*4 (f32 acc)
-— `ops.py` picks the knobs so this fits, using the same analytical model the
-paper uses for its L2-capacity heuristic.
+VMEM budget per step: bm*kc*(1+n_B) panels (+double-buffering) + bm*bn*4
+per f32 accumulator — `ops.py` picks the knobs so this fits, using the same
+analytical model the paper uses for its L2-capacity heuristic.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,10 +60,14 @@ from repro.kernels.pallas_compat import CompilerParams as _CompilerParams
 __all__ = [
     "sfc_gemm_pallas",
     "sfc_gemm_batched",
+    "sfc_gemm_fused",
+    "sfc_gemm_batched_fused",
     "sfc_gemm_grouped",
     "add_reduce_pallas",
     "build_task_table",
     "build_grouped_task_table",
+    "activation_fn",
+    "ACTIVATIONS",
 ]
 
 
@@ -87,6 +108,404 @@ def build_grouped_task_table(
     return np.stack(
         [np.concatenate(ims), np.concatenate(ins), np.concatenate(exps)]
     ).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# fused epilogues
+# ---------------------------------------------------------------------------
+
+ACTIVATIONS = ("silu", "gelu", "relu")
+
+
+def activation_fn(name: Optional[str]):
+    """f32 -> f32 elementwise activation used in the kernel flush step."""
+    if name is None:
+        return lambda x: x
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu":
+        return lambda x: jnp.maximum(x, 0.0)
+    raise ValueError(f"unknown activation {name!r}; pick from {ACTIVATIONS}")
+
+
+@dataclasses.dataclass(frozen=True)
+class _FusedSpec:
+    """Static layout/epilogue description for one fused-kernel build."""
+
+    mode: str  # "plain" | "batched" | "grouped"
+    glu: bool
+    has_bias: bool
+    has_gate_bias: bool
+    has_residual: bool
+    b_batched: bool
+    n_layers: int
+    n_k_chunks: int
+    activation: Optional[str]
+    out_scale: Optional[float]
+    out_dtype: Any
+
+
+def _fused_kernel(*refs, spec: _FusedSpec):
+    """Shared body for all three fused kernels.
+
+    Ref order: tab, A, B_val, [B_gate], [bias], [gate_bias], [residual],
+    O, acc, [acc_gate].  The zero step runs at the first (layer, k-chunk)
+    of each C tile, the accumulate step on every grid step, and the flush —
+    epilogue included — exactly once, at the last (layer, k-chunk): C and
+    the epilogue operands touch HBM once per output tile.
+    """
+    it = iter(refs)
+    next(it)  # tab: consumed by the index maps
+    a_ref = next(it)
+    b_ref = next(it)
+    bg_ref = next(it) if spec.glu else None
+    bias_ref = next(it) if spec.has_bias else None
+    gbias_ref = next(it) if spec.has_gate_bias else None
+    res_ref = next(it) if spec.has_residual else None
+    o_ref = next(it)
+    acc_ref = next(it)
+    accg_ref = next(it) if spec.glu else None
+
+    if spec.mode == "plain":
+        lyr, kc = pl.program_id(1), pl.program_id(2)
+    elif spec.mode == "batched":
+        lyr, kc = pl.program_id(2), pl.program_id(3)
+    else:  # grouped: no 2.5D layer dimension
+        lyr, kc = None, pl.program_id(1)
+
+    first = kc == 0 if lyr is None else (lyr == 0) & (kc == 0)
+    last = kc == spec.n_k_chunks - 1
+    if lyr is not None:
+        last = (lyr == spec.n_layers - 1) & last
+
+    @pl.when(first)
+    def _zero():  # zero_tpp (Listing 1 line 16) — once per C tile
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        if spec.glu:
+            accg_ref[...] = jnp.zeros_like(accg_ref)
+
+    a = a_ref[0] if spec.mode == "batched" else a_ref[...]
+    if spec.mode == "grouped" or (spec.mode == "batched" and spec.b_batched):
+        b = b_ref[0]
+    else:
+        b = b_ref[...]
+    # brgemm_tpp: one stride-based batch-reduce step on the MXU
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+    if spec.glu:
+        bg = bg_ref[0] if spec.mode == "grouped" else bg_ref[...]
+        accg_ref[...] += jnp.dot(a, bg, preferred_element_type=jnp.float32)
+
+    @pl.when(last)
+    def _flush():
+        acc = acc_ref[...]
+        if spec.has_bias:
+            bias = bias_ref[0] if spec.mode == "grouped" else bias_ref[...]
+            acc = acc + bias.astype(jnp.float32)
+        if spec.glu:
+            g = accg_ref[...]
+            if spec.has_gate_bias:
+                gb = gbias_ref[0] if spec.mode == "grouped" else gbias_ref[...]
+                g = g + gb.astype(jnp.float32)
+            y = activation_fn(spec.activation)(g) * acc
+        elif spec.activation is not None:
+            y = activation_fn(spec.activation)(acc)
+        else:
+            y = acc
+        if spec.out_scale is not None:
+            y = y * spec.out_scale
+        if spec.has_residual:
+            r = res_ref[0] if spec.mode == "batched" else res_ref[...]
+            y = y + r.astype(jnp.float32)
+        out = y.astype(spec.out_dtype)
+        if spec.mode == "batched":
+            o_ref[0, ...] = out
+        else:
+            o_ref[...] = out
+
+
+def _fused_call(
+    *,
+    spec: _FusedSpec,
+    tab: jax.Array,
+    grid: Tuple[int, ...],
+    inputs: list,
+    in_specs: list,
+    out_spec: pl.BlockSpec,
+    out_shape: jax.ShapeDtypeStruct,
+    bm: int,
+    bn: int,
+    interpret: bool,
+):
+    scratch = [pltpu.VMEM((bm, bn), jnp.float32)]
+    if spec.glu:
+        scratch.append(pltpu.VMEM((bm, bn), jnp.float32))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        scratch_shapes=scratch,
+    )
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, spec=spec),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",) * len(grid),
+        ),
+    )(tab, *inputs)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "bm",
+        "bn",
+        "k_layers",
+        "k_block_factor",
+        "activation",
+        "out_scale",
+        "interpret",
+        "out_dtype",
+    ),
+)
+def sfc_gemm_fused(
+    a: jax.Array,  # (M, K)
+    b: jax.Array,  # (K, N)
+    b_gate: Optional[jax.Array] = None,  # (K, N) GLU gate weights
+    bias: Optional[jax.Array] = None,  # (1, N)
+    gate_bias: Optional[jax.Array] = None,  # (1, N)
+    residual: Optional[jax.Array] = None,  # (M, N)
+    *,
+    activation: Optional[str] = None,
+    out_scale: Optional[float] = None,
+    bm: int = 256,
+    bn: int = 256,
+    k_layers: int = 1,
+    k_block_factor: int = 1,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """Single-launch SFC GEMM with in-kernel 2.5D reduction + fused epilogue.
+
+    Grid `(Mb*Nb, K_layers, k_block_factor)`: layer is an *inner* dimension,
+    so the f32 accumulator carries the full-K contraction and C = epilogue(
+    A @ B) is written to HBM exactly once — the `(K_layers, M, N)` copies of
+    the replicated form never materialize.  With ``b_gate`` the kernel runs
+    the dual-B GLU form: one A traversal feeds two accumulators and the
+    flush writes ``activation(A@b_gate [+gate_bias]) * (A@b [+bias])``.
+
+    Epilogue order: ``y = act(acc + bias) [* act-gate] * out_scale +
+    residual``; everything is applied to the f32 accumulator before the
+    single cast to ``out_dtype``.
+
+    Requires M % bm == N % bn == 0 and K % (k_layers * k_block_factor) == 0
+    (`ops.sfc_matmul` pads arbitrary shapes).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    if m % bm or n % bn:
+        raise ValueError(f"(M,N)=({m},{n}) not divisible by (bm,bn)=({bm},{bn})")
+    if k % (k_layers * k_block_factor):
+        raise ValueError(f"K={k} vs k_layers*kbf={k_layers * k_block_factor}")
+    out_dtype = out_dtype or a.dtype
+
+    mb_cnt, nb_cnt = m // bm, n // bn
+    k_chunk = k // (k_layers * k_block_factor)
+    n_k_chunks = k_block_factor
+
+    tab = jnp.asarray(build_task_table(mb_cnt, nb_cnt, 1))
+    spec = _FusedSpec(
+        mode="plain",
+        glu=b_gate is not None,
+        has_bias=bias is not None,
+        has_gate_bias=gate_bias is not None,
+        has_residual=residual is not None,
+        b_batched=False,
+        n_layers=k_layers,
+        n_k_chunks=n_k_chunks,
+        activation=activation,
+        out_scale=out_scale,
+        out_dtype=out_dtype,
+    )
+
+    # Block index maps (units of blocks).  `t` walks gilbert order; layer
+    # `l` then chunk `kc` are innermost, so the C tile (and both epilogue
+    # operands) are resident across the whole contraction.
+    def a_map(t, l, kc, tab):
+        return (tab[0, t], l * n_k_chunks + kc)
+
+    def b_map(t, l, kc, tab):
+        return (l * n_k_chunks + kc, tab[1, t])
+
+    def o_map(t, l, kc, tab):
+        return (tab[0, t], tab[1, t])
+
+    def col_map(t, l, kc, tab):  # (1, N) epilogue vectors
+        return (0, tab[1, t])
+
+    inputs = [a, b]
+    in_specs = [
+        pl.BlockSpec((bm, k_chunk), a_map),
+        pl.BlockSpec((k_chunk, bn), b_map),
+    ]
+    if b_gate is not None:
+        inputs.append(b_gate)
+        in_specs.append(pl.BlockSpec((k_chunk, bn), b_map))
+    if bias is not None:
+        inputs.append(bias)
+        in_specs.append(pl.BlockSpec((1, bn), col_map))
+    if gate_bias is not None:
+        inputs.append(gate_bias)
+        in_specs.append(pl.BlockSpec((1, bn), col_map))
+    if residual is not None:
+        inputs.append(residual)
+        in_specs.append(pl.BlockSpec((bm, bn), o_map))
+
+    return _fused_call(
+        spec=spec,
+        tab=tab,
+        grid=(mb_cnt * nb_cnt, k_layers, n_k_chunks),
+        inputs=inputs,
+        in_specs=in_specs,
+        out_spec=pl.BlockSpec((bm, bn), o_map),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        bm=bm,
+        bn=bn,
+        interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "bm",
+        "bn",
+        "k_layers",
+        "k_block_factor",
+        "activation",
+        "out_scale",
+        "interpret",
+        "out_dtype",
+    ),
+)
+def sfc_gemm_batched_fused(
+    a: jax.Array,  # (B, M, K)
+    b: jax.Array,  # (K, N) shared weights, or (B, K, N) per-batch
+    b_gate: Optional[jax.Array] = None,  # (K, N) shared GLU gate weights
+    bias: Optional[jax.Array] = None,  # (1, N)
+    gate_bias: Optional[jax.Array] = None,  # (1, N)
+    residual: Optional[jax.Array] = None,  # (B, M, N)
+    *,
+    activation: Optional[str] = None,
+    out_scale: Optional[float] = None,
+    bm: int = 256,
+    bn: int = 256,
+    k_layers: int = 1,
+    k_block_factor: int = 1,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """Batched fused form: (B, M, N) written once, no replicated copies.
+
+    The batch index is the outermost grid dimension; every batch element
+    replays the same scalar-prefetched SFC task table.  With shared 2-D
+    ``b`` (and ``b_gate``) the weight-panel index maps do not depend on the
+    batch coordinate, so panels stay resident across batch boundaries.  The
+    GLU form requires shared 2-D gate weights (projection weights are shared
+    across the batch in every model call site).
+    """
+    bsz, m, k = a.shape
+    b_batched = b.ndim == 3
+    if b_batched:
+        b2, k2, n = b.shape
+        assert b2 == bsz, (a.shape, b.shape)
+        assert b_gate is None, "GLU form requires shared 2-D weights"
+    else:
+        k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    if m % bm or n % bn:
+        raise ValueError(f"(M,N)=({m},{n}) not divisible by (bm,bn)=({bm},{bn})")
+    if k % (k_layers * k_block_factor):
+        raise ValueError(f"K={k} vs k_layers*kbf={k_layers * k_block_factor}")
+    out_dtype = out_dtype or a.dtype
+
+    mb_cnt, nb_cnt = m // bm, n // bn
+    k_chunk = k // (k_layers * k_block_factor)
+    n_k_chunks = k_block_factor
+
+    tab = jnp.asarray(build_task_table(mb_cnt, nb_cnt, 1))
+    spec = _FusedSpec(
+        mode="batched",
+        glu=b_gate is not None,
+        has_bias=bias is not None,
+        has_gate_bias=gate_bias is not None,
+        has_residual=residual is not None,
+        b_batched=b_batched,
+        n_layers=k_layers,
+        n_k_chunks=n_k_chunks,
+        activation=activation,
+        out_scale=out_scale,
+        out_dtype=out_dtype,
+    )
+
+    def a_map(bi, t, l, kc, tab):
+        return (bi, tab[0, t], l * n_k_chunks + kc)
+
+    def o_map(bi, t, l, kc, tab):
+        return (bi, tab[0, t], tab[1, t])
+
+    def col_map(bi, t, l, kc, tab):
+        return (0, tab[1, t])
+
+    if b_batched:
+        def b_map(bi, t, l, kc, tab):
+            return (bi, l * n_k_chunks + kc, tab[1, t])
+
+        b_spec = pl.BlockSpec((1, k_chunk, bn), b_map)
+    else:
+        def b_map(bi, t, l, kc, tab):
+            return (l * n_k_chunks + kc, tab[1, t])
+
+        b_spec = pl.BlockSpec((k_chunk, bn), b_map)
+
+    inputs = [a, b]
+    in_specs = [pl.BlockSpec((1, bm, k_chunk), a_map), b_spec]
+    if b_gate is not None:
+        inputs.append(b_gate)
+        in_specs.append(pl.BlockSpec((k_chunk, bn), b_map))
+    if bias is not None:
+        inputs.append(bias)
+        in_specs.append(pl.BlockSpec((1, bn), col_map))
+    if gate_bias is not None:
+        inputs.append(gate_bias)
+        in_specs.append(pl.BlockSpec((1, bn), col_map))
+    if residual is not None:
+        inputs.append(residual)
+        in_specs.append(pl.BlockSpec((1, bm, bn), o_map))
+
+    return _fused_call(
+        spec=spec,
+        tab=tab,
+        grid=(bsz, mb_cnt * nb_cnt, k_layers, n_k_chunks),
+        inputs=inputs,
+        in_specs=in_specs,
+        out_spec=pl.BlockSpec((1, bm, bn), o_map),
+        out_shape=jax.ShapeDtypeStruct((bsz, m, n), out_dtype),
+        bm=bm,
+        bn=bn,
+        interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# replicated (2.5D) forms — kept for the distributed psum path and as the
+# fallback when the fused accumulator footprint does not fit VMEM
+# ---------------------------------------------------------------------------
 
 
 def _sfc_gemm_kernel(
@@ -139,7 +558,8 @@ def sfc_gemm_pallas(
     out_dtype=None,
 ) -> jax.Array:
     """Partial-product stage: returns the (K_layers, M, N) replicated C copies
-    (reduce with `add_reduce_pallas`; `ops.sfc_matmul` does both + padding).
+    (reduce with `add_reduce_pallas`).  Kept for the distributed `ca_matmul`
+    psum path; single-core callers want `sfc_gemm_fused`.
 
     Requires M % bm == N % bn == 0 and K % (k_layers * k_block_factor) == 0.
     """
@@ -328,32 +748,6 @@ def sfc_gemm_batched(
     )(tab, a, b)
 
 
-def _sfc_gemm_grouped_kernel(
-    tab_ref,  # scalar-prefetch: (3, n_tasks) grouped task table
-    a_ref,  # (bm, k_chunk) A panel (rows of this expert's padded slab)
-    b_ref,  # (1, k_chunk, bn) this expert's B panel
-    o_ref,  # (bm, bn) C tile
-    acc_ref,  # (bm, bn) f32 scratch accumulator
-    *,
-    n_k_chunks: int,
-    out_dtype,
-):
-    del tab_ref
-    kc = pl.program_id(1)
-
-    @pl.when(kc == 0)
-    def _zero():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    acc_ref[...] += jnp.dot(
-        a_ref[...], b_ref[0], preferred_element_type=jnp.float32
-    )
-
-    @pl.when(kc == n_k_chunks - 1)
-    def _flush():
-        o_ref[...] = acc_ref[...].astype(out_dtype)
-
-
 @functools.partial(
     jax.jit,
     static_argnames=(
@@ -361,6 +755,8 @@ def _sfc_gemm_grouped_kernel(
         "bm",
         "bn",
         "k_block_factor",
+        "activation",
+        "out_scale",
         "interpret",
         "out_dtype",
     ),
@@ -368,8 +764,13 @@ def _sfc_gemm_grouped_kernel(
 def sfc_gemm_grouped(
     a: jax.Array,  # (sum_e row_blocks[e]*bm, K) expert-grouped, padded rows
     b: jax.Array,  # (E, K, N) per-expert weights
+    b_gate: Optional[jax.Array] = None,  # (E, K, N) per-expert gate weights
+    bias: Optional[jax.Array] = None,  # (E, 1, N) per-expert bias
+    gate_bias: Optional[jax.Array] = None,  # (E, 1, N)
     *,
     row_blocks: Tuple[int, ...],
+    activation: Optional[str] = None,
+    out_scale: Optional[float] = None,
     bm: int = 128,
     bn: int = 128,
     k_block_factor: int = 1,
@@ -378,7 +779,9 @@ def sfc_gemm_grouped(
 ) -> jax.Array:
     """Grouped (ragged) SFC GEMM: per-expert row slabs against per-expert
     weights, one SFC map per expert tile grid (paper's shape-obliviousness
-    applied to MoE expert GEMMs).
+    applied to MoE expert GEMMs), with the same fused epilogue / dual-B GLU
+    flush as `sfc_gemm_fused` — the SwiGLU expert MLP reads each dispatched
+    row slab from HBM once.
 
     ``a`` holds the experts' rows concatenated, each expert's slab padded to
     ``row_blocks[e] * bm`` rows; the task table walks expert e's
@@ -410,6 +813,19 @@ def sfc_gemm_grouped(
     if n_tasks == 0:
         return jnp.zeros((m_total, n), out_dtype)
     tab = jnp.asarray(tab_np)
+    spec = _FusedSpec(
+        mode="grouped",
+        glu=b_gate is not None,
+        has_bias=bias is not None,
+        has_gate_bias=gate_bias is not None,
+        has_residual=False,
+        b_batched=False,
+        n_layers=1,
+        n_k_chunks=n_k_chunks,
+        activation=activation,
+        out_scale=out_scale,
+        out_dtype=out_dtype,
+    )
 
     def a_map(t, kc, tab):
         return (tab[0, t], kc)
@@ -420,34 +836,47 @@ def sfc_gemm_grouped(
     def o_map(t, kc, tab):
         return (tab[0, t], tab[1, t])
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(n_tasks, n_k_chunks),
-        in_specs=[
-            pl.BlockSpec((bm, k_chunk), a_map),
-            pl.BlockSpec((1, k_chunk, bn), b_map),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), o_map),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-    )
+    def col_map(t, kc, tab):  # (E, 1, N) per-expert epilogue vectors
+        return (tab[2, t], 0, tab[1, t])
 
-    kernel = functools.partial(
-        _sfc_gemm_grouped_kernel, n_k_chunks=n_k_chunks, out_dtype=out_dtype
-    )
-    return pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
+    inputs = [a, b]
+    in_specs = [
+        pl.BlockSpec((bm, k_chunk), a_map),
+        pl.BlockSpec((1, k_chunk, bn), b_map),
+    ]
+    if b_gate is not None:
+        inputs.append(b_gate)
+        in_specs.append(pl.BlockSpec((1, k_chunk, bn), b_map))
+    if bias is not None:
+        inputs.append(bias)
+        in_specs.append(pl.BlockSpec((1, 1, bn), col_map))
+    if gate_bias is not None:
+        inputs.append(gate_bias)
+        in_specs.append(pl.BlockSpec((1, 1, bn), col_map))
+
+    return _fused_call(
+        spec=spec,
+        tab=tab,
+        grid=(n_tasks, n_k_chunks),
+        inputs=inputs,
+        in_specs=in_specs,
+        out_spec=pl.BlockSpec((bm, bn), o_map),
         out_shape=jax.ShapeDtypeStruct((m_total, n), out_dtype),
+        bm=bm,
+        bn=bn,
         interpret=interpret,
-        compiler_params=_CompilerParams(
-            dimension_semantics=("arbitrary", "arbitrary"),
-        ),
-    )(tab, a, b)
+    )
 
 
 def _add_reduce_kernel(c_ref, o_ref, *, acc_dtype):
     # add_reduce_tpp: accumulate K_layers strided tiles (Listing 1 line 34)
     o_ref[...] = c_ref[...].astype(acc_dtype).sum(axis=0).astype(o_ref.dtype)
+
+
+def _add_reduce_batched_kernel(c_ref, o_ref, *, acc_dtype):
+    # (1, K_layers, bm, bn) -> (1, bm, bn): reduce per batch element, no
+    # HBM transpose/reshape of the copies
+    o_ref[0, ...] = c_ref[0].astype(acc_dtype).sum(axis=0).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
@@ -458,7 +887,31 @@ def add_reduce_pallas(
     bn: int = 256,
     interpret: bool = False,
 ) -> jax.Array:
-    """(K_layers, M, N) -> (M, N) layer reduction (paper lines 26-35)."""
+    """(K_layers, M, N) -> (M, N) layer reduction (paper lines 26-35), or
+    (B, K_layers, M, N) -> (B, M, N) with the batch as an outer grid axis —
+    the batched form reads each element's copies in place instead of first
+    folding the batch into M via an HBM transpose+reshape copy."""
+    if c_copies.ndim == 4:
+        bsz, kl, m, n = c_copies.shape
+        bm = min(bm, m)
+        bn = min(bn, n)
+        if m % bm or n % bn:
+            raise ValueError(
+                f"(M,N)=({m},{n}) not divisible by (bm,bn)=({bm},{bn})"
+            )
+        kernel = functools.partial(
+            _add_reduce_batched_kernel, acc_dtype=jnp.float32
+        )
+        return pl.pallas_call(
+            kernel,
+            grid=(bsz, m // bm, n // bn),
+            in_specs=[
+                pl.BlockSpec((1, kl, bm, bn), lambda b, i, j: (b, 0, i, j)),
+            ],
+            out_specs=pl.BlockSpec((1, bm, bn), lambda b, i, j: (b, i, j)),
+            out_shape=jax.ShapeDtypeStruct((bsz, m, n), c_copies.dtype),
+            interpret=interpret,
+        )(c_copies)
     kl, m, n = c_copies.shape
     bm = min(bm, m)
     bn = min(bn, n)

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.core.gemm_backend import matmul as _bmm
+from repro.core.gemm_backend import glu_matmul as _bglu, matmul as _bmm
 from repro.parallel.act_sharding import constrain
 
 Params = Dict[str, Any]
@@ -299,12 +299,15 @@ def mlp_init(key, d_model: int, d_ff: int, dtype, *, gated: bool = True) -> Para
 
 
 def mlp(params: Params, x: jax.Array, *, act: str = "silu") -> jax.Array:
-    h = constrain(_bmm(x, params["w_in"]), ("dp", None, "tp"))
+    # activation (and, when gated, the whole SwiGLU pattern) is fused into
+    # the projection call: under the sfc_pallas backend the dual-B kernel
+    # traverses x once and the elementwise tail never round-trips HBM; under
+    # xla the same math is plain jnp ops (XLA fuses them itself).
     if "w_gate" in params:
-        g = constrain(_bmm(x, params["w_gate"]), ("dp", None, "tp"))
-        h = jax.nn.silu(g) * h if act == "silu" else jax.nn.gelu(g) * h
+        h = _bglu(x, params["w_gate"], params["w_in"], activation=act)
     else:
-        h = jax.nn.silu(h) if act == "silu" else jax.nn.gelu(h)
+        h = _bmm(x, params["w_in"], activation=act)
+    h = constrain(h, ("dp", None, "tp"))
     return _bmm(h, params["w_out"])
 
 

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.core.gemm_backend import grouped_matmul
+from repro.core.gemm_backend import grouped_glu_matmul, grouped_matmul
 from repro.models.layers import Params, dense_init
 from repro.parallel.act_sharding import constrain
 
@@ -141,10 +141,11 @@ def moe_forward(
     # expert GEMMs: groups stay on dp, experts on model — this contraction is
     # the only cross-device exchange (the all-to-all the dry-run should show).
     # Routed through the pluggable backend: einsum under "xla" (unchanged
-    # compiled program), the grouped SFC Pallas kernel under "sfc_pallas".
-    h = grouped_matmul(buf, params["w_in"])
-    g_ = grouped_matmul(buf, params["w_gate"])
-    h = constrain(jax.nn.silu(g_) * h, ("dp", "tp", None, None))
+    # compiled program), the grouped dual-B SFC Pallas kernel under
+    # "sfc_pallas" (one traversal of the dispatch buffer computes both the
+    # gate and value products with the SwiGLU fused into the flush).
+    h = grouped_glu_matmul(buf, params["w_gate"], params["w_in"])
+    h = constrain(h, ("dp", "tp", None, None))
     out_buf = grouped_matmul(h, params["w_out"])
     out_buf = out_buf.reshape(groups, e * capacity, d)
     out_buf = jnp.concatenate(
@@ -231,9 +232,7 @@ def _moe_shard_map(
         # rows — (E, C, d) -> (E_loc, tp*C, d)
         buf_x = lax.all_to_all(buf, tp, split_axis=0, concat_axis=1, tiled=True)
 
-        h = grouped_matmul(buf_x, w_in)
-        g_ = grouped_matmul(buf_x, w_gate)
-        h = jax.nn.silu(g_) * h
+        h = grouped_glu_matmul(buf_x, w_gate, w_in)
         out_x = grouped_matmul(h, w_out)
 
         out_buf = lax.all_to_all(out_x, tp, split_axis=1, concat_axis=0, tiled=True)

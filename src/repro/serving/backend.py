@@ -1,5 +1,19 @@
 """Re-export of the GEMM-backend hook for serving call sites."""
 
-from repro.core.gemm_backend import current_backend, gemm_backend, matmul
+from repro.core.gemm_backend import (
+    current_backend,
+    gemm_backend,
+    glu_matmul,
+    grouped_glu_matmul,
+    grouped_matmul,
+    matmul,
+)
 
-__all__ = ["gemm_backend", "current_backend", "matmul"]
+__all__ = [
+    "gemm_backend",
+    "current_backend",
+    "matmul",
+    "glu_matmul",
+    "grouped_matmul",
+    "grouped_glu_matmul",
+]

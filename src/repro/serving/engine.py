@@ -76,31 +76,37 @@ class ServingEngine:
 
     # ---------------- warmup / tuning ----------------
 
-    def projection_gemm_shapes(self, prompt_len: int) -> List[Tuple[int, int, int]]:
-        """(M, N, K) of the dominant prefill projection GEMMs at this batch
-        size: attention/ffn projections (per sequence, M=prompt_len) and the
-        LM head."""
+    def projection_gemm_shapes(
+        self, prompt_len: int
+    ) -> List[Tuple[str, int, int, int]]:
+        """(op, M, N, K) of the dominant prefill projection GEMMs at this
+        batch size: attention/ffn projections (per sequence, M=prompt_len)
+        and the LM head.  ``op`` is "glu" for the gated up-projection (the
+        fused dual-B kernel has its own knob landscape — two B panels share
+        the A traversal) and "gemm" otherwise."""
         d, ff, v = self.cfg.d_model, self.cfg.d_ff, self.cfg.vocab
-        shapes = [(prompt_len, d, d)]
+        shapes = [("gemm", prompt_len, d, d)]
         if ff:
-            shapes += [(prompt_len, ff, d), (prompt_len, d, ff)]
-        shapes.append((self.max_batch, v, d))
+            up_op = "glu" if getattr(self.cfg, "gated_mlp", True) else "gemm"
+            shapes += [(up_op, prompt_len, ff, d), ("gemm", prompt_len, d, ff)]
+        shapes.append(("gemm", self.max_batch, v, d))
         return shapes
 
     def warmup(self, prompt_len: int = 32, *, tune: bool = False) -> None:
         """Compile the prefill/decode programs for one prompt length before
         traffic arrives; with ``tune=True`` first run the empirical knob
-        tuner for this model's projection GEMM shapes so the SFC backend
-        traces with measured winners (a second warmup for the same shape
-        bucket is a pure cache hit — no re-measurement)."""
+        tuner for this model's projection GEMM shapes — the fused GLU
+        variant included — so the SFC backend traces with measured winners
+        (a second warmup for the same shape bucket is a pure cache hit — no
+        re-measurement)."""
         if tune and self.backend == "sfc_pallas":
             from repro.tune import tune_gemm
 
             # key the cache by the dtype the projections will actually trace
             # with (activations follow param_dtype), or the lookup misses
             dtype = jnp.dtype(self.cfg.param_dtype)
-            for (m, n, k) in self.projection_gemm_shapes(prompt_len):
-                tune_gemm(m, n, k, dtype)
+            for (op, m, n, k) in self.projection_gemm_shapes(prompt_len):
+                tune_gemm(m, n, k, dtype, op=op)
         tokens = jnp.zeros((self.max_batch, prompt_len), jnp.int32)
         logits, cache = self._prefill(self.params, tokens)
         tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)

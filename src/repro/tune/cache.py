@@ -77,11 +77,15 @@ class KnobCache:
         self._entries: Optional[Dict[str, Dict]] = None
 
     @staticmethod
-    def key(m: int, n: int, k: int, dtype, backend: str) -> str:
+    def key(m: int, n: int, k: int, dtype, backend: str, op: str = "gemm") -> str:
         bm_, bn_, bk_ = shape_bucket(m, n, k)
         import numpy as np
 
-        return f"{bm_}x{bn_}x{bk_}|{np.dtype(dtype).name}|{backend}"
+        base = f"{bm_}x{bn_}x{bk_}|{np.dtype(dtype).name}|{backend}"
+        # fused-op namespace: the dual-B GLU kernel has its own knob
+        # landscape; plain "gemm" keeps the legacy key so existing cache
+        # files stay valid
+        return base if op == "gemm" else f"{base}|{op}"
 
     # ---------------- storage ----------------
 
@@ -124,14 +128,19 @@ class KnobCache:
 
     # ---------------- API ----------------
 
-    def get(self, m: int, n: int, k: int, dtype, backend: str) -> Optional[Knobs]:
-        d = self._load().get(self.key(m, n, k, dtype, backend))
+    def get(
+        self, m: int, n: int, k: int, dtype, backend: str, op: str = "gemm"
+    ) -> Optional[Knobs]:
+        d = self._load().get(self.key(m, n, k, dtype, backend, op))
         if d is None:
             return None
         return dataclasses.replace(Knobs.from_dict(d), source="cached")
 
-    def put(self, m: int, n: int, k: int, dtype, backend: str, knobs: Knobs) -> None:
-        self._load()[self.key(m, n, k, dtype, backend)] = knobs.as_dict()
+    def put(
+        self, m: int, n: int, k: int, dtype, backend: str, knobs: Knobs,
+        op: str = "gemm",
+    ) -> None:
+        self._load()[self.key(m, n, k, dtype, backend, op)] = knobs.as_dict()
         self._save()
 
     def clear(self) -> None:

@@ -18,6 +18,7 @@ still a model; the paper's headline autotuner *measures*.  This tuner:
 
 from __future__ import annotations
 
+import functools
 import time as _time
 from typing import Callable, List, Optional, Sequence, Tuple
 
@@ -73,7 +74,7 @@ def candidate_knobs(
     always survives clipping — it is the fallback if measurement fails)."""
     from repro.kernels.ops import pick_blocks
 
-    bm0, bn0 = pick_blocks(m, n, k)
+    bm0, bn0, _ = pick_blocks(m, n, k)
     c0, kbf0 = choose_knobs_analytical(
         max(m, bm0), max(n, bn0), max(k, 1), 1,
         bm=bm0, bn=bn0, hw=TPU_V5E, dtype_bytes=dtype_bytes,
@@ -98,53 +99,59 @@ def candidate_knobs(
     return out[:max_candidates]
 
 
-def _measure_wallclock(m, n, k, dtype, knobs: Knobs, *, iters: int = 3) -> float:
+def _op_call(op: str, knobs: Knobs, *, interpret: bool = False):
+    """Shape the measured call for the tuned op: the plain fused GEMM or
+    the dual-B GLU kernel (its knob landscape differs — two B panels share
+    one A traversal, doubling the streamed weight bytes per task)."""
+    from repro.kernels.ops import sfc_glu_matmul, sfc_matmul
+
+    kw = dict(
+        bm=knobs.bm, bn=knobs.bn,
+        k_layers=knobs.k_layers, k_block_factor=knobs.k_block_factor,
+    )
+    if interpret:
+        kw["interpret"] = True
+    if op == "glu":
+        return lambda a, b, bg: sfc_glu_matmul(a, bg, b, **kw)
+    return lambda a, b, bg: sfc_matmul(a, b, **kw)
+
+
+def _measure_wallclock(
+    m, n, k, dtype, knobs: Knobs, *, op: str = "gemm", iters: int = 3
+) -> float:
     """Median wall-clock of the real jitted kernel (TPU path)."""
     import jax
     import jax.numpy as jnp
 
-    from repro.kernels.ops import sfc_matmul
-
     rng = np.random.default_rng(0)
     a = jnp.asarray(rng.normal(size=(m, k)), dtype)
     b = jnp.asarray(rng.normal(size=(k, n)), dtype)
+    bg = jnp.asarray(rng.normal(size=(k, n)), dtype) if op == "glu" else None
+    call = _op_call(op, knobs)
 
-    def call():
-        return sfc_matmul(
-            a, b,
-            bm=knobs.bm, bn=knobs.bn,
-            k_layers=knobs.k_layers, k_block_factor=knobs.k_block_factor,
-        )
-
-    jax.block_until_ready(call())  # compile
+    jax.block_until_ready(call(a, b, bg))  # compile
     ts = []
     for _ in range(iters):
         t0 = _time.perf_counter()
-        jax.block_until_ready(call())
+        jax.block_until_ready(call(a, b, bg))
         ts.append(_time.perf_counter() - t0)
     return float(np.median(ts))
 
 
-def _measure_hlo_cost(m, n, k, dtype, knobs: Knobs) -> float:
+def _measure_hlo_cost(m, n, k, dtype, knobs: Knobs, *, op: str = "gemm") -> float:
     """Modeled seconds from the loop-aware HLO cost walker over the
     interpret-mode lowering, weighted by the γ/β hardware model."""
     import jax
 
-    from repro.kernels.ops import sfc_matmul
     from repro.roofline.hlo_cost import module_cost
 
-    fn = jax.jit(
-        lambda a, b: sfc_matmul(
-            a, b,
-            bm=knobs.bm, bn=knobs.bn,
-            k_layers=knobs.k_layers, k_block_factor=knobs.k_block_factor,
-            interpret=True,
-        )
-    )
-    args = (
+    call = _op_call(op, knobs, interpret=True)
+    args = [
         jax.ShapeDtypeStruct((m, k), dtype),
         jax.ShapeDtypeStruct((k, n), dtype),
-    )
+        jax.ShapeDtypeStruct((k, n), dtype) if op == "glu" else None,
+    ]
+    fn = jax.jit(call)
     text = fn.lower(*args).compile().as_text()
     cost = module_cost(text)
     if cost.flops <= 0:
@@ -152,7 +159,7 @@ def _measure_hlo_cost(m, n, k, dtype, knobs: Knobs) -> float:
     return max(cost.flops * TPU_V5E.gamma, cost.bytes * TPU_V5E.beta)
 
 
-def _measure_simulated(m, n, k, dtype, knobs: Knobs) -> float:
+def _measure_simulated(m, n, k, dtype, knobs: Knobs, *, op: str = "gemm") -> float:
     """Exact BRGEMM-taxonomy simulator fallback (always available)."""
     dtype_bytes = np.dtype(dtype).itemsize
     mp = ((m + knobs.bm - 1) // knobs.bm) * knobs.bm
@@ -164,26 +171,30 @@ def _measure_simulated(m, n, k, dtype, knobs: Knobs) -> float:
         k_block_factor=knobs.k_block_factor,
         bm=knobs.bm, bn=knobs.bn,
         hw=TPU_V5E, dtype_bytes=dtype_bytes,
+        n_b_mats=2 if op == "glu" else 1,
     )
     return float(r["time_s"])
 
 
-def measure_candidate(m: int, n: int, k: int, dtype, knobs: Knobs) -> float:
+def measure_candidate(
+    m: int, n: int, k: int, dtype, knobs: Knobs, *, op: str = "gemm"
+) -> float:
     """Backend-appropriate score (seconds, lower is better)."""
     if _backend_name() == "tpu":
-        return _measure_wallclock(m, n, k, dtype, knobs)
+        return _measure_wallclock(m, n, k, dtype, knobs, op=op)
     try:
-        return _measure_hlo_cost(m, n, k, dtype, knobs)
+        return _measure_hlo_cost(m, n, k, dtype, knobs, op=op)
     except Exception:
-        return _measure_simulated(m, n, k, dtype, knobs)
+        return _measure_simulated(m, n, k, dtype, knobs, op=op)
 
 
 def lookup_knobs(
-    m: int, n: int, k: int, dtype, *, cache: Optional[KnobCache] = None
+    m: int, n: int, k: int, dtype, *,
+    cache: Optional[KnobCache] = None, op: str = "gemm",
 ) -> Optional[Knobs]:
     """Cache-only consult (never measures) — the `sfc_matmul` fast path."""
     cache = cache if cache is not None else default_cache()
-    return cache.get(m, n, k, dtype, _backend_name())
+    return cache.get(m, n, k, dtype, _backend_name(), op)
 
 
 def tune_gemm(
@@ -196,21 +207,47 @@ def tune_gemm(
     measure_fn: Optional[Callable[[int, int, int, object, Knobs], float]] = None,
     max_candidates: int = 12,
     force: bool = False,
+    op: str = "gemm",
 ) -> Knobs:
     """Tune (or fetch) the knobs for one GEMM shape bucket.
 
     A cache hit returns immediately without any measurement (unless
     ``force``); a miss sweeps `candidate_knobs` with ``measure_fn``
-    (default: `measure_candidate`) and persists the winner.
+    (default: `measure_candidate`) and persists the winner.  ``op`` selects
+    the tuned kernel variant — "gemm" (default) or the fused dual-B "glu" —
+    each with its own cache namespace.
     """
     cache = cache if cache is not None else default_cache()
     backend = _backend_name()
     if not force:
-        hit = cache.get(m, n, k, dtype, backend)
+        hit = cache.get(m, n, k, dtype, backend, op)
         if hit is not None:
             return hit
 
-    measure = measure_fn or measure_candidate
+    if measure_fn is None:
+        measure = functools.partial(measure_candidate, op=op)
+    else:
+        measure = measure_fn
+        if op != "gemm":
+            # thread the op through when the custom measurer can take it, so
+            # a GLU sweep is not silently scored with the single-B kernel
+            import inspect
+
+            try:
+                params = inspect.signature(measure_fn).parameters
+                takes_op = "op" in params or any(
+                    p.kind == inspect.Parameter.VAR_KEYWORD
+                    for p in params.values()
+                )
+            except (TypeError, ValueError):
+                takes_op = False
+            if not takes_op:
+                raise ValueError(
+                    f"measure_fn {measure_fn!r} does not accept op=; a "
+                    f"{op!r} sweep scored with the single-B measurement "
+                    "would persist a mis-scored winner"
+                )
+            measure = functools.partial(measure_fn, op=op)
     dtype_bytes = np.dtype(dtype).itemsize
     best: Optional[Knobs] = None
     for cand in candidate_knobs(m, n, k, dtype_bytes=dtype_bytes,
@@ -234,5 +271,5 @@ def tune_gemm(
             k_layers=cand.k_layers, k_block_factor=cand.k_block_factor,
             source="analytical",
         )
-    cache.put(m, n, k, dtype, backend, best)
+    cache.put(m, n, k, dtype, backend, best, op)
     return best

@@ -33,17 +33,17 @@ def test_matmul_nd_routes_to_batched_kernel(lead, monkeypatch):
     import repro.kernels.ops as ops
 
     calls = []
-    real = ops.sfc_gemm_batched
+    real = ops.sfc_gemm_batched_fused
 
-    def spy(a, b, **kw):
+    def spy(a, b, *args, **kw):
         calls.append(a.shape)
-        return real(a, b, **kw)
+        return real(a, b, *args, **kw)
 
-    monkeypatch.setattr(ops, "sfc_gemm_batched", spy)
+    monkeypatch.setattr(ops, "sfc_gemm_batched_fused", spy)
     x, w = _rand(*lead, 12, 32), _rand(32, 20, seed=2)
     with gemm_backend("sfc_pallas"):
         got = matmul(x, w)
-    assert calls, "n-D matmul must go through sfc_gemm_batched"
+    assert calls, "n-D matmul must go through sfc_gemm_batched_fused"
     assert calls[0] == (int(np.prod(lead)), 12, 32)  # leading dims folded
     np.testing.assert_allclose(
         np.asarray(got), np.asarray(x @ w), rtol=3e-5, atol=3e-5

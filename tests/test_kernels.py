@@ -213,7 +213,7 @@ def test_reference_matches_oracle_knob_grid():
 
 
 def test_pick_blocks_mxu_alignment():
-    assert pick_blocks(1024, 2048, 512) == (256, 256)
+    assert pick_blocks(1024, 2048, 512) == (256, 256, 256)
     assert pick_blocks(48, 80, 96)[0] in (16, 48)
 
 
