@@ -1,0 +1,162 @@
+"""Perf-regression gate: compare two ``BENCH_*.json`` documents.
+
+CI's ``bench-smoke`` job re-emits the smoke benchmark and runs
+
+    python benchmarks/compare.py BENCH_gemm.json BENCH_new.json
+
+failing (exit 1) when any comparable row's ``us_per_call`` regresses by
+more than ``--threshold`` (default 25%) against the committed baseline, and
+printing a markdown delta table (also appended to ``$GITHUB_STEP_SUMMARY``
+when set, so the table lands in the job summary).
+
+What is comparable:
+
+  * modeled rows (simulator / roofline outputs) are deterministic — any
+    delta at all is a real model/knob change, and a >threshold regression
+    fails the gate;
+  * measured wall-clock rows (``gemm_cpu_check/``, ``llm_prefill/``) vary
+    with the runner's hardware and load, so they are reported but never
+    gated (``--gate-measured`` opts back in for same-machine A/B runs);
+  * rows with a zero/near-zero baseline (summary rows like
+    ``gemm_sweep/WHM``) carry their signal in ``derived`` and are skipped;
+  * rows missing from the new emission fail the gate (a silently dropped
+    benchmark is a regression of coverage); new rows are reported as added.
+
+Updating the committed baseline after an *intentional* model change is the
+explicit override: re-run ``benchmarks/run.py --smoke --json BENCH_gemm.json``
+and commit the diff alongside the change that explains it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+# name prefixes of rows measured in wall-clock on the host — not
+# reproducible across runners, reported but not gated by default
+MEASURED_PREFIXES = ("gemm_cpu_check/", "llm_prefill/", "gemm_tune/")
+
+# below this many microseconds the ratio is numerically meaningless
+MIN_BASELINE_US = 1e-9
+
+
+def load_rows(path: str) -> Dict[str, Dict]:
+    with open(path) as f:
+        doc = json.load(f)
+    rows = doc if isinstance(doc, list) else doc.get("rows")
+    if not rows:
+        # a baseline with no rows must not let the gate pass vacuously
+        raise SystemExit(f"{path}: no benchmark rows found")
+    return {r["name"]: r for r in rows}
+
+
+def is_measured(name: str) -> bool:
+    return any(name.startswith(p) for p in MEASURED_PREFIXES)
+
+
+def compare(
+    baseline: Dict[str, Dict],
+    new: Dict[str, Dict],
+    *,
+    threshold: float = 0.25,
+    gate_measured: bool = False,
+) -> Tuple[List[Dict], List[str]]:
+    """Returns (per-row delta records, failure messages)."""
+    deltas: List[Dict] = []
+    failures: List[str] = []
+    for name, base_row in sorted(baseline.items()):
+        new_row = new.get(name)
+        if new_row is None:
+            failures.append(f"row disappeared from the new emission: {name}")
+            deltas.append({"name": name, "status": "missing"})
+            continue
+        b = float(base_row["us_per_call"])
+        n = float(new_row["us_per_call"])
+        rec = {"name": name, "base_us": b, "new_us": n, "status": "ok"}
+        if b <= MIN_BASELINE_US:
+            rec["status"] = "skipped (zero baseline)"
+        else:
+            ratio = n / b
+            rec["ratio"] = ratio
+            gated = gate_measured or not is_measured(name)
+            if not gated:
+                rec["status"] = "measured (not gated)"
+            elif ratio > 1.0 + threshold:
+                rec["status"] = f"REGRESSION {100 * (ratio - 1):+.1f}%"
+                failures.append(
+                    f"{name}: {b:.3f}us -> {n:.3f}us "
+                    f"({100 * (ratio - 1):+.1f}% > +{100 * threshold:.0f}%)"
+                )
+            elif ratio < 1.0 - threshold:
+                rec["status"] = f"improved {100 * (ratio - 1):+.1f}%"
+        deltas.append(rec)
+    for name in sorted(set(new) - set(baseline)):
+        deltas.append(
+            {
+                "name": name,
+                "new_us": float(new[name]["us_per_call"]),
+                "status": "added",
+            }
+        )
+    return deltas, failures
+
+
+def delta_table(deltas: List[Dict]) -> str:
+    """Markdown delta table (rendered in the GitHub job summary)."""
+    lines = [
+        "| row | baseline us | new us | delta | status |",
+        "|---|---:|---:|---:|---|",
+    ]
+    for d in deltas:
+        base = f"{d['base_us']:.3f}" if "base_us" in d else "—"
+        new = f"{d['new_us']:.3f}" if "new_us" in d else "—"
+        delta = f"{100 * (d['ratio'] - 1):+.1f}%" if "ratio" in d else "—"
+        lines.append(f"| `{d['name']}` | {base} | {new} | {delta} | {d['status']} |")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("baseline", help="committed BENCH_*.json")
+    p.add_argument("new", help="freshly emitted BENCH_*.json")
+    p.add_argument(
+        "--threshold", type=float, default=0.25,
+        help="fail on us_per_call regressions above this fraction (default 0.25)",
+    )
+    p.add_argument(
+        "--gate-measured", action="store_true",
+        help="also gate wall-clock rows (same-machine A/B runs only)",
+    )
+    args = p.parse_args(argv)
+
+    deltas, failures = compare(
+        load_rows(args.baseline),
+        load_rows(args.new),
+        threshold=args.threshold,
+        gate_measured=args.gate_measured,
+    )
+    table = delta_table(deltas)
+    print(table)
+    summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path:
+        with open(summary_path, "a") as f:
+            f.write("## Bench smoke vs committed baseline\n\n")
+            f.write(table + "\n\n")
+            if failures:
+                f.write("### Regressions\n\n")
+                for msg in failures:
+                    f.write(f"- {msg}\n")
+    if failures:
+        print(f"\nFAIL: {len(failures)} perf regression(s):", file=sys.stderr)
+        for msg in failures:
+            print(f"  {msg}", file=sys.stderr)
+        return 1
+    print(f"\nOK: {len(deltas)} rows within +{100 * args.threshold:.0f}%")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,6 +12,12 @@ writing its (M, ff) product, then an elementwise pass re-reading both and
 writing the gated output) vs the fused dual-B kernel (one A traversal, two
 B streams, one C write, epilogue in VMEM) — the traffic the fused-epilogue
 kernels delete.
+
+`run_train` extends it to the *training* step: forward plus the two
+backward GEMMs (dA = dC·Bᵀ via the NT kernel, dB = Aᵀ·dC via TN), each
+simulated on its own output tile grid — the backward traffic the NT/TN
+custom-VJP path launches, vs the naive backward that first materializes
+Aᵀ/Bᵀ in HBM (one extra read+write of each transposed operand).
 """
 
 from __future__ import annotations
@@ -20,7 +26,7 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.configs.paper_gemm import FIG7_SHAPES
-from repro.core.perf_model import TPU_V5E, simulate_gemm
+from repro.core.perf_model import TPU_V5E, simulate_gemm, simulate_train_gemm
 
 DTYPE_BYTES = 2  # bf16 activations/weights
 
@@ -91,9 +97,37 @@ def run_glu(n_workers: int = 256):
         )
 
 
+# (M, N, K) projection train cells: a square baseline, the d_ff
+# up-projection of a 7B-class model, and the tall-skinny LM head
+TRAIN_SHAPES = [
+    (4096, 4096, 4096),
+    (8192, 14336, 4096),
+    (8192, 32000, 4096),
+]
+
+
+def run_train(n_workers: int = 256):
+    for (m, n, k) in TRAIN_SHAPES:
+        r = simulate_train_gemm(m, n, k, n_workers=n_workers, k_block_factor=2)
+        # naive backward: materialize Bᵀ (K,N) and Aᵀ (M,K) in HBM first —
+        # one read + one write of each transposed operand on top of the
+        # same GEMM traffic
+        transpose_bytes = 2 * (k * n + m * k) * DTYPE_BYTES
+        nt_tn_bytes = r["nt_bytes"] + r["tn_bytes"]
+        emit(
+            f"data_movement/train/{m}x{n}x{k}",
+            r["total_time_s"] * 1e6,
+            f"fwd_GB={r['fwd_bytes']/1e9:.2f};bwd_GB={nt_tn_bytes/1e9:.2f};"
+            f"bwd_to_fwd={r['bwd_to_fwd']:.2f};"
+            f"transpose_GB_avoided={transpose_bytes/1e9:.2f};"
+            f"train_tflops={r['tflops']:.0f}",
+        )
+
+
 def main():
     run()
     run_glu()
+    run_train()
 
 
 if __name__ == "__main__":

@@ -8,6 +8,18 @@ Two regimes per shape:
     Listing-1 SFC-CA reference against jnp.dot (both jitted, same device),
     as a semantics-speed sanity check rather than a perf claim.
 
+The modeled time is ``per-worker critical path + compulsory-streaming
+floor``: the gilbert partition hands every worker a square-ish patch, so
+the per-worker census alone is (deliberately) shape-oblivious and
+equal-area shapes used to emit byte-identical ``us_per_call`` rows — the
+measurement looked keyed by flop count instead of the full (M, N, K).  The
+floor (`perf_model.shared_memory_floor`) charges each operand's footprint
+once against the shared slow-memory interface — traffic no traversal order
+can avoid and which *does* depend on the full shape (512x8192x512 streams
+2x the operand bytes of 2048x2048x512); the per-worker term keeps the
+traversal-quality signal (SFC quadrants vs row-major strips).  Both phases
+are charged serially — the conservative no-overlap bound.
+
 CSV columns: name,us_per_call,derived.
 """
 
@@ -23,6 +35,7 @@ from repro.core.perf_model import (
     choose_knobs_autotune,
     gemm_flops,
     roofline_best_time,
+    shared_memory_floor,
     simulate_gemm,
     simulate_patch_traversal,
 )
@@ -54,16 +67,21 @@ def run(full: bool = False, n_workers: int = 256, smoke: bool = False):
     whm_num = whm_den_sfc = whm_den_rm = 0.0
     for (m, n, k) in shapes:
         best, sweep = choose_knobs_autotune(m, n, k, n_workers)
-        t_sfc = sweep[best]
-        t_rm = _row_major_time(m, n, k, n_workers)
+        # key the modeled time by the full (M, N, K): the compulsory
+        # streaming phase is serial with the per-worker critical path
+        # (see module docstring)
+        floor = shared_memory_floor(m, n, k)
+        t_sfc = sweep[best] + floor
+        t_rm = _row_major_time(m, n, k, n_workers) + floor
         t_roof, _ = roofline_best_time(m, n, k, n_workers)
+        t_roof = t_roof + floor
         fl = gemm_flops(m, n, k)
         emit(
             f"gemm_sweep/{m}x{n}x{k}",
             t_sfc * 1e6,
             f"sfc_tflops={fl/t_sfc/1e12:.1f};rm_tflops={fl/t_rm/1e12:.1f};"
             f"roofline_tflops={fl/t_roof/1e12:.1f};knobs=c{best[0]}k{best[1]};"
-            f"roofline_frac={t_roof/t_sfc:.2f}",
+            f"roofline_frac={t_roof/t_sfc:.2f};floor_us={floor*1e6:.3f}",
         )
         whm_num += fl
         whm_den_sfc += fl * t_sfc / fl
@@ -94,12 +112,18 @@ def run(full: bool = False, n_workers: int = 256, smoke: bool = False):
         emit(f"gemm_cpu_check/{m}x{n}x{k}", t_ref, f"xla_us={t_xla:.1f}")
 
 
-def run_tune(shapes=None, cache_path=None):
+def run_tune(shapes=None, cache_path=None, backward: bool = True):
     """Empirical-tuner regime: sweep measured candidates for each shape,
     persist winners, then demonstrate the warm path (second call = pure
-    cache hit).  CSV derived field records the winning knob tuple + source."""
+    cache hit).  CSV derived field records the winning knob tuple + source.
+
+    With ``backward`` (default) each forward shape's two backward GEMM
+    buckets are tuned too — the ``op="nt"`` / ``op="tn"`` namespaces a
+    train step's custom VJP consults (`perf_model.backward_gemm_shapes`).
+    """
     import time
 
+    from repro.core.perf_model import backward_gemm_shapes
     from repro.tune import KnobCache, tune_gemm
 
     shapes = shapes or [(256, 256, 256), (512, 256, 512), (384, 640, 256)]
@@ -118,6 +142,18 @@ def run_tune(shapes=None, cache_path=None):
             f"kbf={knobs.k_block_factor};source={knobs.source};"
             f"hit_source={hit.source};hit_us={warm_us:.1f}",
         )
+        if not backward:
+            continue
+        for op, (bm_, bn_, bk_) in backward_gemm_shapes(m, n, k).items():
+            t0 = time.perf_counter()
+            kb = tune_gemm(bm_, bn_, bk_, np.float32, cache=cache, op=op)
+            us = (time.perf_counter() - t0) * 1e6
+            emit(
+                f"gemm_tune/{m}x{n}x{k}/{op}",
+                us,
+                f"bucket={bm_}x{bn_}x{bk_};bm={kb.bm};bn={kb.bn};"
+                f"c={kb.k_layers};kbf={kb.k_block_factor};source={kb.source}",
+            )
 
 
 def main():

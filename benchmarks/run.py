@@ -65,6 +65,7 @@ def main(argv=None) -> None:
         gemm_sweep.run(smoke=True)       # paper Figs. 1 / 6 / 9 (subset)
         data_movement.run()              # paper Fig. 7
         data_movement.run_glu()          # fused gated-MLP HBM model
+        data_movement.run_train()        # fwd + NT/TN backward traffic
         llm_prefill.run(smoke=True)      # paper Fig. 10 (one cell)
     else:
         gemm_sweep.run(full=args.full)   # paper Figs. 1 / 6 / 9

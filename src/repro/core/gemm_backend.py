@@ -18,6 +18,17 @@ under "xla" the same math is expressed as plain jnp ops (XLA fuses them
 itself, and the distributed dry-runs keep compiling the einsum/dot
 formulation GSPMD knows how to shard).
 
+**Training** goes through the same switch: the sfc_pallas entry points
+carry `jax.custom_vjp`s whose backward GEMMs are the SFC NT/TN kernels
+(`ops.sfc_matmul_nt` / `ops.sfc_matmul_tn` and grouped companions), so
+`jax.value_and_grad` of a model loss under ``gemm_backend("sfc_pallas")``
+launches no `dot_general` in either direction — every projection model
+call site (`models/layers.py`, `models/attention.py`, `models/moe.py`
+including the router, `train/step.py`) routes through here.  The
+"sfc_reference" backend differentiates through the Listing-1 jaxpr (plain
+autodiff; its backward is XLA dots — it is the semantics oracle, not the
+fast path).
+
 Backend selection must be active *at trace time* (it changes the traced
 program).  Distribution note: the kernel backends are single-device
 primitives — inside pjit they apply per-shard only when the contraction dim

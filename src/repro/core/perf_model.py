@@ -42,8 +42,12 @@ __all__ = [
     "BRGemmCounts",
     "simulate_patch_traversal",
     "simulate_gemm",
+    "simulate_train_gemm",
+    "shared_memory_floor",
+    "backward_gemm_shapes",
     "analytical_time",
     "roofline_best_time",
+    "train_roofline_time",
     "choose_knobs_analytical",
     "choose_knobs_autotune",
     "NearestNeighborModel",
@@ -279,6 +283,96 @@ def simulate_gemm(
     }
 
 
+def shared_memory_floor(
+    M: int,
+    N: int,
+    K: int,
+    *,
+    hw: HardwareModel = TPU_V5E,
+    dtype_bytes: int = 2,
+    n_b_mats: int = 1,
+) -> float:
+    """Aggregate compulsory-traffic bound: every A and B element crosses the
+    shared slow-memory interface at least once and C is written once,
+    regardless of per-worker locality.
+
+    The per-worker simulator is (by design) nearly shape-oblivious: gilbert
+    partitions hand every worker a square-ish patch, so equal-area shapes
+    produce identical per-worker censuses.  The *footprints* M·K and K·N do
+    depend on the full (M, N, K) — this floor is what keys the modeled time
+    by shape.  Callers compose it explicitly: `benchmarks/gemm_sweep.py`
+    charges it *serially* (per-worker time + floor, the conservative
+    no-overlap bound it documents), while `simulate_train_gemm` treats it
+    as a lower bound (max(per-phase time, floor)).
+    """
+    bytes_ = (M * K + n_b_mats * K * N + M * N) * dtype_bytes
+    return bytes_ * hw.beta
+
+
+def backward_gemm_shapes(M: int, N: int, K: int) -> Dict[str, Tuple[int, int, int]]:
+    """Resolver buckets of the two backward GEMMs of C(M,N) = A(M,K)·B(K,N):
+
+      nt:  dA(M,K) = dC(M,N) · B(K,N)ᵀ   -> bucket (M, K, N)
+      tn:  dB(K,N) = A(M,K)ᵀ · dC(M,N)   -> bucket (K, N, M)
+
+    These are the ``op="nt"`` / ``op="tn"`` tune-cache namespaces: the
+    backward contracts over N (resp. M), so its panel geometry — and its
+    knob winners — differ from the forward's.
+    """
+    return {"nt": (M, K, N), "tn": (K, N, M)}
+
+
+def simulate_train_gemm(
+    M: int,
+    N: int,
+    K: int,
+    *,
+    n_workers: int,
+    k_layers: int = 1,
+    k_block_factor: int = 1,
+    bm: int = 256,
+    bn: int = 256,
+    hw: HardwareModel = TPU_V5E,
+    dtype_bytes: int = 2,
+) -> Dict[str, float]:
+    """Model one projection's *training* step: forward GEMM plus the two
+    backward GEMMs (dA via NT, dB via TN), each simulated on its own output
+    tile grid — the backward traffic the roofline/benchmarks report.
+
+    Returns per-phase times/bytes and totals; ``bwd_to_fwd`` is the modeled
+    backward:forward cost ratio (≈2 for square shapes, higher when a
+    backward bucket is more bandwidth-bound than the forward)."""
+    phases = {"fwd": (M, N, K), **backward_gemm_shapes(M, N, K)}
+    out: Dict[str, float] = {}
+    total_t = total_b = 0.0
+    for name, (m, n, k) in phases.items():
+        mb = bm if m % bm == 0 else max(1, math.gcd(m, bm))
+        nb = bn if n % bn == 0 else max(1, math.gcd(n, bn))
+        r = simulate_gemm(
+            m, n, k,
+            n_workers=n_workers,
+            k_layers=k_layers, k_block_factor=k_block_factor,
+            bm=mb, bn=nb, hw=hw, dtype_bytes=dtype_bytes,
+        )
+        t = max(
+            r["time_s"],
+            shared_memory_floor(m, n, k, hw=hw, dtype_bytes=dtype_bytes),
+        )
+        out[f"{name}_time_s"] = t
+        out[f"{name}_bytes"] = r["slow_bytes_total"]
+        total_t += t
+        total_b += r["slow_bytes_total"]
+    out["total_time_s"] = total_t
+    out["total_bytes"] = total_b
+    out["bwd_to_fwd"] = (
+        (out["nt_time_s"] + out["tn_time_s"]) / out["fwd_time_s"]
+        if out["fwd_time_s"] > 0
+        else 0.0
+    )
+    out["tflops"] = 3 * gemm_flops(M, N, K) / total_t / 1e12
+    return out
+
+
 def analytical_time(
     M: int,
     N: int,
@@ -325,6 +419,34 @@ def roofline_best_time(
             if t < best[0]:
                 best = (t, (tm_, tn_, c))
     return best
+
+
+def train_roofline_time(
+    M: int,
+    N: int,
+    K: int,
+    n_workers: int,
+    *,
+    hw: HardwareModel = TPU_V5E,
+    dtype_bytes: int = 2,
+    max_c: int = 8,
+) -> Dict[str, float]:
+    """Tight roofline for the full train step of one projection: the best
+    worker decomposition of each of the three GEMMs (forward, NT, TN)
+    independently — each backward bucket gets its own (tm, tn, c), exactly
+    as each gets its own tune-cache namespace in the real kernels."""
+    out: Dict[str, float] = {}
+    total = 0.0
+    phases = {"fwd": (M, N, K), **backward_gemm_shapes(M, N, K)}
+    for name, (m, n, k) in phases.items():
+        t, _ = roofline_best_time(
+            m, n, k, n_workers, hw=hw, dtype_bytes=dtype_bytes, max_c=max_c
+        )
+        out[f"{name}_s"] = t
+        total += t
+    out["total_s"] = total
+    out["tflops"] = 3 * gemm_flops(M, N, K) / total / 1e12
+    return out
 
 
 def choose_knobs_analytical(

@@ -23,17 +23,26 @@ reduction.
 for MoE expert GEMMs: rows grouped by expert against per-expert weight
 slabs, one SFC map per expert tile grid, same fused epilogue.
 
+**Training**: every entry point carries a `jax.custom_vjp` whose backward
+pass is itself SFC GEMMs — `sfc_matmul_nt` (dA = dC·Bᵀ) and
+`sfc_matmul_tn` (dB = Aᵀ·dC), plus their grouped companions — so
+`jax.value_and_grad` under `gemm_backend("sfc_pallas")` never falls back
+to `dot_general` in either direction.  Backward shapes resolve knobs from
+their own ``op="nt"`` / ``op="tn"`` tune-cache namespaces.
+
 On non-TPU backends everything transparently switches to interpret mode so
 the same call sites work in tests/CPU containers.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Optional, Sequence, Tuple
+from typing import Any, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.perf_model import TPU_V5E, choose_knobs_analytical
 from repro.kernels.sfc_gemm import (
@@ -43,7 +52,11 @@ from repro.kernels.sfc_gemm import (
     sfc_gemm_batched_fused,
     sfc_gemm_fused,
     sfc_gemm_grouped,
+    sfc_gemm_grouped_nt,
+    sfc_gemm_grouped_tn,
+    sfc_gemm_nt,
     sfc_gemm_pallas,
+    sfc_gemm_tn,
 )
 
 __all__ = [
@@ -51,6 +64,10 @@ __all__ = [
     "sfc_glu_matmul",
     "sfc_grouped_matmul",
     "sfc_grouped_glu_matmul",
+    "sfc_matmul_nt",
+    "sfc_matmul_tn",
+    "sfc_grouped_matmul_nt",
+    "sfc_grouped_matmul_tn",
     "default_interpret",
     "pick_blocks",
     "resolve_knobs",
@@ -249,11 +266,17 @@ def _matmul_impl(
     interpret: Optional[bool],
     out_dtype,
     fuse: Optional[bool],
+    preact: bool = False,
 ) -> jax.Array:
     if interpret is None:
         interpret = default_interpret()
     if a.ndim < 2 or b.ndim < 2:
         raise ValueError(f"sfc_matmul needs matrices, got {a.shape} @ {b.shape}")
+    if preact:
+        # training-forward GLU mode: return both biased pre-activations
+        # (value, gate) instead of the activated epilogue
+        assert b_gate is not None and activation is None and residual is None
+        assert out_scale is None
 
     glu = b_gate is not None
     lead = a.shape[:-2]
@@ -315,6 +338,12 @@ def _matmul_impl(
             bm=bm, bn=bn, k_layers=k_layers, k_block_factor=k_block_factor,
             interpret=interpret, out_dtype=jnp.float32, fuse=False,
         )
+        if preact:
+            if bias is not None:
+                val = val + bias.reshape(1, n).astype(jnp.float32)
+            if gate_bias is not None:
+                gate = gate + gate_bias.reshape(1, n).astype(jnp.float32)
+            return val.astype(out_dtype), gate.astype(out_dtype)
         return _epilogue_jnp(
             val, gate=gate, bias=bias, gate_bias=gate_bias,
             activation=activation, out_scale=out_scale, residual=residual,
@@ -350,7 +379,11 @@ def _matmul_impl(
                 bm=bm, bn=bn,
                 k_layers=k_layers, k_block_factor=k_block_factor,
                 interpret=interpret, out_dtype=out_dtype,
+                preact_out=preact,
             )
+            if preact:
+                h_full, g_full = c_full
+                return h_full[:m, :n], g_full[:m, :n]
             return c_full[:m, :n]
         copies = sfc_gemm_pallas(
             a_p, b_p,
@@ -394,7 +427,14 @@ def _matmul_impl(
             bm=bm, bn=bn,
             k_layers=k_layers, k_block_factor=k_block_factor,
             interpret=interpret, out_dtype=out_dtype,
+            preact_out=preact,
         )  # (B, Mp, Np)
+        if preact:
+            h_full, g_full = c_full
+            return (
+                h_full[:, :m, :n].reshape(*lead, m, n),
+                g_full[:, :m, :n].reshape(*lead, m, n),
+            )
         return c_full[:, :m, :n].reshape(*lead, m, n)
 
     copies = sfc_gemm_batched(
@@ -413,6 +453,487 @@ def _matmul_impl(
         out, bias=bias, activation=activation,
         out_scale=out_scale, residual=residual, out_dtype=out_dtype,
     )
+
+
+# ---------------------------------------------------------------------------
+# backward (NT / TN) entry points
+# ---------------------------------------------------------------------------
+
+
+def _bump_kbf_to_fit(
+    bm: int,
+    bn: int,
+    contract: int,
+    k_layers: int,
+    kbf: int,
+    dtype,
+    out_dtype,
+    *,
+    dual: bool,
+) -> int:
+    """The backward kernels have no replicated fallback: if the working set
+    of one grid step overflows the VMEM budget, chunk the contraction
+    harder (mirrors the grouped forward path's auto-resolution)."""
+    dtype_bytes = jnp.dtype(dtype).itemsize
+    out_bytes = jnp.dtype(out_dtype).itemsize
+    while kbf < max(contract, 1) and not fused_path_fits_vmem(
+        bm, bn, _round_up(contract, k_layers * kbf) // (k_layers * kbf),
+        dtype_bytes, out_bytes, glu=dual,
+    ):
+        kbf *= 2
+    return kbf
+
+
+def sfc_matmul_nt(
+    a: jax.Array,  # (..., M, K)
+    b: jax.Array,  # (N, K) — consumed as bᵀ without an HBM transpose
+    a2: Optional[jax.Array] = None,  # (..., M, K) second addend
+    b2: Optional[jax.Array] = None,  # (N, K)
+    *,
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+    k_layers: Optional[int] = None,
+    k_block_factor: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    out_dtype=None,
+) -> jax.Array:
+    """C = A @ Bᵀ (+ A2 @ B2ᵀ) via the SFC NT kernel — the dA backward GEMM
+    (``dA = dC @ Wᵀ``; the dual form is the GLU ``dg·Wgᵀ + dh·Wvᵀ`` in one
+    traversal).  Leading batch dims of ``a`` fold into M (the (N, K) operand
+    is shared), and arbitrary shapes are zero-padded.
+
+    Knobs left as None resolve through the ``op="nt"`` tune-cache namespace:
+    backward shapes differ from forward and deserve their own winners.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    lead = a.shape[:-2]
+    a2d = a.reshape(-1, a.shape[-1])
+    a22d = a2.reshape(-1, a2.shape[-1]) if a2 is not None else None
+    m, k = a2d.shape
+    n, k2 = b.shape
+    assert k == k2, (a.shape, b.shape)
+    dual = a2 is not None
+    out_dtype = out_dtype or a.dtype
+
+    auto_kbf = k_block_factor is None
+    bm, bn, k_layers, k_block_factor = _resolve_knobs(
+        m, n, k, a.dtype, bm, bn, k_layers, k_block_factor, "nt"
+    )
+    if auto_kbf:
+        k_block_factor = _bump_kbf_to_fit(
+            bm, bn, k, k_layers, k_block_factor, a.dtype, out_dtype, dual=dual
+        )
+
+    mp = _round_up(m, bm)
+    np_ = _round_up(n, bn)
+    kp = _round_up(k, k_layers * k_block_factor)
+
+    def pad2(x, rows, cols):
+        r, c = x.shape
+        if r != rows or c != cols:
+            return jnp.pad(x, ((0, rows - r), (0, cols - c)))
+        return x
+
+    out = sfc_gemm_nt(
+        pad2(a2d, mp, kp),
+        pad2(b, np_, kp),
+        pad2(a22d, mp, kp) if dual else None,
+        pad2(b2, np_, kp) if dual else None,
+        bm=bm, bn=bn,
+        k_layers=k_layers, k_block_factor=k_block_factor,
+        interpret=interpret, out_dtype=out_dtype,
+    )
+    return out[:m, :n].reshape(*lead, a.shape[-2], n)
+
+
+def sfc_matmul_tn(
+    a: jax.Array,  # (..., M, K) — consumed as aᵀ without an HBM transpose
+    b: jax.Array,  # (..., M, N)
+    b2: Optional[jax.Array] = None,  # (..., M, N) second operand
+    *,
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+    k_layers: Optional[int] = None,
+    k_block_factor: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    out_dtype=None,
+):
+    """C = Aᵀ @ B (and Aᵀ @ B2) via the SFC TN kernel — the dW backward GEMM
+    (``dW = Aᵀ @ dC``); with ``b2`` one activation traversal flushes both
+    weight grads (the GLU dWv/dWg pair).  Leading batch dims fold into the
+    contraction (the weight grad sums over them); arbitrary shapes are
+    zero-padded.  Knobs resolve through the ``op="tn"`` namespace.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    a2d = a.reshape(-1, a.shape[-1])
+    b2d = b.reshape(-1, b.shape[-1])
+    b22d = b2.reshape(-1, b2.shape[-1]) if b2 is not None else None
+    m, k = a2d.shape
+    m2, n = b2d.shape
+    assert m == m2, (a.shape, b.shape)
+    dual = b2 is not None
+    out_dtype = out_dtype or a.dtype
+
+    auto_kbf = k_block_factor is None
+    # the output is (K, N); the contraction runs over M
+    bm, bn, k_layers, k_block_factor = _resolve_knobs(
+        k, n, m, a.dtype, bm, bn, k_layers, k_block_factor, "tn"
+    )
+    if auto_kbf:
+        k_block_factor = _bump_kbf_to_fit(
+            bm, bn, m, k_layers, k_block_factor, a.dtype, out_dtype, dual=dual
+        )
+
+    kp = _round_up(k, bm)
+    np_ = _round_up(n, bn)
+    mp = _round_up(m, k_layers * k_block_factor)
+
+    def pad2(x, rows, cols):
+        r, c = x.shape
+        if r != rows or c != cols:
+            return jnp.pad(x, ((0, rows - r), (0, cols - c)))
+        return x
+
+    out = sfc_gemm_tn(
+        pad2(a2d, mp, kp),
+        pad2(b2d, mp, np_),
+        pad2(b22d, mp, np_) if dual else None,
+        bm=bm, bn=bn,
+        k_layers=k_layers, k_block_factor=k_block_factor,
+        interpret=interpret, out_dtype=out_dtype,
+    )
+    if dual:
+        return out[0][:k, :n], out[1][:k, :n]
+    return out[:k, :n]
+
+
+def _grouped_row_pad(
+    a: jax.Array, group_sizes: Tuple[int, ...], unit: int, kp: int
+):
+    """Pad each group's rows to a ``unit`` multiple (and K to ``kp``) and
+    concatenate — the packing every grouped kernel consumes."""
+    k = a.shape[1]
+    row_blocks = tuple(_round_up(g, unit) // unit for g in group_sizes)
+    slabs = []
+    off = 0
+    for g, rb in zip(group_sizes, row_blocks):
+        if rb == 0:
+            continue
+        slab = a[off : off + g]
+        pad_rows = rb * unit - g
+        if pad_rows or kp != k:
+            slab = jnp.pad(slab, ((0, pad_rows), (0, kp - k)))
+        slabs.append(slab)
+        off += g
+    if not slabs:
+        return None, row_blocks
+    return (jnp.concatenate(slabs) if len(slabs) > 1 else slabs[0]), row_blocks
+
+
+def _grouped_row_unpad(out_p, group_sizes, row_blocks, unit: int, n: int):
+    outs = []
+    poff = 0
+    for g, rb in zip(group_sizes, row_blocks):
+        outs.append(out_p[poff : poff + g, :n])
+        poff += rb * unit
+    return jnp.concatenate(outs) if len(outs) > 1 else outs[0]
+
+
+def sfc_grouped_matmul_nt(
+    a: jax.Array,  # (T, Kc) rows sorted by group (e.g. the dC rows)
+    b: jax.Array,  # (E, N, Kc) per-group operand, consumed as b[e]ᵀ
+    group_sizes: Sequence[int],
+    a2: Optional[jax.Array] = None,
+    b2: Optional[jax.Array] = None,
+    *,
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+    k_block_factor: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    out_dtype=None,
+) -> jax.Array:
+    """Grouped NT: ``out[rows of e] = a[rows of e] @ b[e]ᵀ`` — the grouped
+    dA backward (per-expert weights read as stored).  Same ragged-row
+    contract as `sfc_grouped_matmul`."""
+    if interpret is None:
+        interpret = default_interpret()
+    t, k = a.shape
+    e_cnt, n, k2 = b.shape
+    assert k == k2, (a.shape, b.shape)
+    dual = a2 is not None
+    group_sizes = tuple(int(g) for g in group_sizes)
+    assert sum(group_sizes) == t, (group_sizes, t)
+    out_dtype = out_dtype or a.dtype
+
+    max_g = max(group_sizes) if group_sizes else 1
+    pbm, pbn, _ = pick_blocks(max(max_g, 1), n, k)
+    bm = bm or min(pbm, 128)
+    bn = bn or pbn
+    if k_block_factor is None:
+        _, k_block_factor = choose_knobs_analytical(
+            max(max_g, bm), max(n, bn), max(k, 1), 1, bm=bm, bn=bn, hw=TPU_V5E
+        )
+        k_block_factor = _bump_kbf_to_fit(
+            bm, bn, k, 1, k_block_factor, a.dtype, out_dtype, dual=dual
+        )
+
+    kp = _round_up(k, k_block_factor)
+    np_ = _round_up(n, bn)
+    a_p, row_blocks = _grouped_row_pad(a, group_sizes, bm, kp)
+    if a_p is None:
+        return jnp.zeros((0, n), out_dtype)
+    a2_p = None
+    if dual:
+        a2_p, _ = _grouped_row_pad(a2, group_sizes, bm, kp)
+
+    def pad_w(w):
+        if w is None:
+            return None
+        if kp != k or np_ != n:
+            return jnp.pad(w, ((0, 0), (0, np_ - n), (0, kp - k)))
+        return w
+
+    out_p = sfc_gemm_grouped_nt(
+        a_p, pad_w(b), a2_p, pad_w(b2),
+        row_blocks=row_blocks,
+        bm=bm, bn=bn, k_block_factor=k_block_factor,
+        interpret=interpret, out_dtype=out_dtype,
+    )
+    return _grouped_row_unpad(out_p, group_sizes, row_blocks, bm, n)
+
+
+def sfc_grouped_matmul_tn(
+    a: jax.Array,  # (T, K) rows sorted by group (the forward activations)
+    b: jax.Array,  # (T, N) rows sorted by group (the dC rows)
+    group_sizes: Sequence[int],
+    b2: Optional[jax.Array] = None,  # (T, N) second dC (GLU gate grad)
+    *,
+    row_block: Optional[int] = None,
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    out_dtype=None,
+):
+    """Grouped TN: ``dW[e] = a[rows of e]ᵀ @ b[rows of e]`` for every group
+    in one launch — the grouped dW backward.  With ``b2`` the activation
+    slab streams once for both weight-grad stacks."""
+    if interpret is None:
+        interpret = default_interpret()
+    t, k = a.shape
+    t2, n = b.shape
+    assert t == t2, (a.shape, b.shape)
+    dual = b2 is not None
+    group_sizes = tuple(int(g) for g in group_sizes)
+    e_cnt = len(group_sizes)
+    assert sum(group_sizes) == t, (group_sizes, t)
+    out_dtype = out_dtype or a.dtype
+
+    if bm is None or bn is None:
+        pbm, pbn, _ = pick_blocks(k, n, max(t, 1))
+        bm = bm or min(pbm, 128)
+        bn = bn or min(pbn, 128)
+    if row_block is None:
+        max_g = max(group_sizes) if group_sizes else 1
+        row_block = min(128, _round_up(max(max_g, 8), 8))
+        dtype_bytes = jnp.dtype(a.dtype).itemsize
+        out_bytes = jnp.dtype(out_dtype).itemsize
+        while row_block > 8 and not fused_path_fits_vmem(
+            bm, bn, row_block, dtype_bytes, out_bytes, glu=dual,
+        ):
+            row_block //= 2
+
+    kp = _round_up(k, bm)
+    np_ = _round_up(n, bn)
+    a_p, row_blocks = _grouped_row_pad(a, group_sizes, row_block, kp)
+    if a_p is None:
+        zero = jnp.zeros((e_cnt, k, n), out_dtype)
+        return (zero, zero) if dual else zero
+    b_p, _ = _grouped_row_pad(b, group_sizes, row_block, np_)
+    b2_p = None
+    if dual:
+        b2_p, _ = _grouped_row_pad(b2, group_sizes, row_block, np_)
+
+    out = sfc_gemm_grouped_tn(
+        a_p, b_p, b2_p,
+        row_blocks=row_blocks, row_block=row_block,
+        bm=bm, bn=bn,
+        interpret=interpret, out_dtype=out_dtype,
+    )
+    if dual:
+        return out[0][:, :k, :n], out[1][:, :k, :n]
+    return out[:, :k, :n]
+
+
+# ---------------------------------------------------------------------------
+# custom VJPs: the backward pass is itself SFC GEMMs
+#
+# `jax.value_and_grad` through `sfc_matmul`/`sfc_glu_matmul` (and the
+# grouped forms) routes both backward GEMMs — dA = dC·Bᵀ and dB = Aᵀ·dC —
+# through the NT/TN kernels above, with their own tune-cache namespaces.
+# The epilogue derivatives (activation', the GLU gating terms, bias/residual
+# reductions) are cheap elementwise/reduce ops computed once on dC before
+# the kernels consume it: precomputing dZ in HBM costs one write + one read,
+# while fusing act'(z) into the NT/TN panel loads would re-stream the saved
+# pre-activation once per tile revisit — strictly more traffic.
+#
+# Training forward differs from inference forward only for the activated
+# forms: the kernel flushes the biased *pre-activation* (for GLU, both
+# accumulators via `preact_out` — still one A traversal) and the activation
+# runs outside, because the backward needs act'(z) and recomputing z would
+# double the backward GEMM count.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _VjpCfg:
+    glu: bool
+    activation: Optional[str]
+    out_scale: Optional[float]
+    bm: Optional[int]
+    bn: Optional[int]
+    k_layers: Optional[int]
+    k_block_factor: Optional[int]
+    interpret: Optional[bool]
+    out_dtype: Any
+    fuse: Optional[bool]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _matmul_core(cfg, a, b, b_gate, bias, gate_bias, residual):
+    return _matmul_impl(
+        a, b, b_gate,
+        bias=bias, gate_bias=gate_bias, residual=residual,
+        activation=cfg.activation, out_scale=cfg.out_scale,
+        bm=cfg.bm, bn=cfg.bn,
+        k_layers=cfg.k_layers, k_block_factor=cfg.k_block_factor,
+        interpret=cfg.interpret, out_dtype=cfg.out_dtype, fuse=cfg.fuse,
+    )
+
+
+def _matmul_core_fwd(cfg, a, b, b_gate, bias, gate_bias, residual):
+    out_dtype = cfg.out_dtype or a.dtype
+    kw = dict(
+        bm=cfg.bm, bn=cfg.bn,
+        k_layers=cfg.k_layers, k_block_factor=cfg.k_block_factor,
+        interpret=cfg.interpret, fuse=cfg.fuse,
+    )
+    h_pre = g_pre = None
+    if cfg.glu:
+        h_pre, g_pre = _matmul_impl(
+            a, b, b_gate, bias=bias, gate_bias=gate_bias, residual=None,
+            activation=None, out_scale=None, out_dtype=None, preact=True, **kw,
+        )
+        y = activation_fn(cfg.activation)(g_pre.astype(jnp.float32)) * (
+            h_pre.astype(jnp.float32)
+        )
+    elif cfg.activation is not None:
+        h_pre = _matmul_impl(
+            a, b, None, bias=bias, gate_bias=None, residual=None,
+            activation=None, out_scale=None, out_dtype=None, **kw,
+        )
+        y = activation_fn(cfg.activation)(h_pre.astype(jnp.float32))
+    else:
+        # linear epilogue: the fully fused primal path is the training
+        # forward too (no pre-activation residual needed)
+        out = _matmul_impl(
+            a, b, None, bias=bias, gate_bias=None, residual=residual,
+            activation=None, out_scale=cfg.out_scale, out_dtype=cfg.out_dtype,
+            **kw,
+        )
+        y = None
+    if y is not None:
+        if cfg.out_scale is not None:
+            y = y * cfg.out_scale
+        if residual is not None:
+            y = y + residual.astype(jnp.float32)
+        out = y.astype(out_dtype)
+    res_meta = (
+        jnp.zeros((), residual.dtype) if residual is not None else None
+    )
+    return out, (a, b, b_gate, h_pre, g_pre, bias, gate_bias, res_meta)
+
+
+def _matmul_core_bwd(cfg, saved, dy):
+    a, b, b_gate, h_pre, g_pre, bias, gate_bias, res_meta = saved
+    interp = cfg.interpret
+    dyf = dy.astype(jnp.float32)
+    dres = dy.astype(res_meta.dtype) if res_meta is not None else None
+    if cfg.out_scale is not None:
+        dyf = dyf * cfg.out_scale
+
+    if cfg.glu:
+        act = activation_fn(cfg.activation)
+        ag, act_vjp = jax.vjp(act, g_pre.astype(jnp.float32))
+        dh = dyf * ag
+        dg = act_vjp(dyf * h_pre.astype(jnp.float32))[0]
+    elif cfg.activation is not None:
+        act = activation_fn(cfg.activation)
+        _, act_vjp = jax.vjp(act, h_pre.astype(jnp.float32))
+        dh = act_vjp(dyf)[0]
+        dg = None
+    else:
+        dh, dg = dyf, None
+
+    cdt = a.dtype  # backward kernels run in the forward compute dtype
+    dh_c = dh.astype(cdt)
+    dg_c = dg.astype(cdt) if dg is not None else None
+
+    if b.ndim > 2:
+        # per-batch weights (no model call site; GLU excluded by the fwd
+        # validation): backward through the forward kernels on materialized
+        # transposes — still the SFC path, one extra HBM copy each
+        da = sfc_matmul(
+            dh_c, jnp.swapaxes(b, -1, -2), interpret=interp,
+            out_dtype=jnp.float32,
+        )
+        db = sfc_matmul(
+            jnp.swapaxes(a, -1, -2), dh_c, interpret=interp,
+            out_dtype=jnp.float32,
+        )
+        dbg = None
+    else:
+        da = sfc_matmul_nt(
+            dh_c, b,
+            dg_c, b_gate if dg_c is not None else None,
+            interpret=interp, out_dtype=jnp.float32,
+        )
+        n = b.shape[-1]
+        a2d = a.reshape(-1, a.shape[-1])
+        if dg_c is not None:
+            db, dbg = sfc_matmul_tn(
+                a2d, dh_c.reshape(-1, n), dg_c.reshape(-1, n),
+                interpret=interp, out_dtype=jnp.float32,
+            )
+        else:
+            db = sfc_matmul_tn(
+                a2d, dh_c.reshape(-1, n), interpret=interp,
+                out_dtype=jnp.float32,
+            )
+            dbg = None
+
+    lead_axes = tuple(range(dh.ndim - 1))
+    dbias = None
+    if bias is not None:
+        dbias = dh.sum(axis=lead_axes).reshape(bias.shape).astype(bias.dtype)
+    dgbias = None
+    if gate_bias is not None:
+        dgbias = (
+            dg.sum(axis=lead_axes).reshape(gate_bias.shape)
+            .astype(gate_bias.dtype)
+        )
+    return (
+        da.astype(a.dtype),
+        db.astype(b.dtype),
+        dbg.astype(b_gate.dtype) if b_gate is not None else None,
+        dbias,
+        dgbias,
+        dres,
+    )
+
+
+_matmul_core.defvjp(_matmul_core_fwd, _matmul_core_bwd)
 
 
 def sfc_matmul(
@@ -449,14 +970,17 @@ def sfc_matmul(
     `add_reduce_pallas` two-launch fallback with a jnp epilogue.  Arbitrary
     M/N/K are handled by zero padding (curve still covers the padded grid;
     padding contributes zeros to the contraction).
+
+    Differentiable end-to-end on the SFC backend: a `jax.custom_vjp` routes
+    the backward GEMMs through `sfc_matmul_nt`/`sfc_matmul_tn` (transposes
+    stay in VMEM, knobs from the "nt"/"tn" tune namespaces).
     """
-    return _matmul_impl(
-        a, b, None,
-        bias=bias, gate_bias=None, residual=residual,
-        activation=activation, out_scale=out_scale,
+    cfg = _VjpCfg(
+        glu=False, activation=activation, out_scale=out_scale,
         bm=bm, bn=bn, k_layers=k_layers, k_block_factor=k_block_factor,
         interpret=interpret, out_dtype=out_dtype, fuse=fuse,
     )
+    return _matmul_core(cfg, a, b, None, bias, None, residual)
 
 
 def sfc_glu_matmul(
@@ -481,14 +1005,17 @@ def sfc_glu_matmul(
     one SFC traversal of A (dual-B kernel: two weight panels, two f32
     accumulators, one C write).  ``a``: (..., M, K); weights are shared 2-D
     (K, N).  Same knob resolution/padding contract as `sfc_matmul`; the GLU
-    variant has its own tune-cache namespace (op="glu")."""
-    return _matmul_impl(
-        a, b_val, b_gate,
-        bias=bias, gate_bias=gate_bias, residual=residual,
-        activation=activation, out_scale=out_scale,
+    variant has its own tune-cache namespace (op="glu").
+
+    Differentiable: the VJP computes dA = dg·Wgᵀ + dh·Wvᵀ in one dual NT
+    launch and (dWv, dWg) in one dual TN launch — four backward GEMMs, two
+    SFC traversals, no transposed HBM copies."""
+    cfg = _VjpCfg(
+        glu=True, activation=activation, out_scale=out_scale,
         bm=bm, bn=bn, k_layers=k_layers, k_block_factor=k_block_factor,
         interpret=interpret, out_dtype=out_dtype, fuse=fuse,
     )
+    return _matmul_core(cfg, a, b_val, b_gate, bias, gate_bias, residual)
 
 
 def _grouped_impl(
@@ -506,10 +1033,13 @@ def _grouped_impl(
     k_block_factor: Optional[int],
     interpret: Optional[bool],
     out_dtype,
+    preact: bool = False,
 ) -> jax.Array:
     if interpret is None:
         interpret = default_interpret()
     glu = b_gate is not None
+    if preact:
+        assert glu and activation is None and out_scale is None
     t, k = a.shape
     e_cnt, k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
@@ -550,21 +1080,10 @@ def _grouped_impl(
 
     # pad each group's rows to a bm multiple and concatenate (host loop:
     # group_sizes are static, so this unrolls into slices under jit)
-    row_blocks = tuple(_round_up(g, bm) // bm for g in group_sizes)
-    slabs = []
-    off = 0
-    for g, rb in zip(group_sizes, row_blocks):
-        if rb == 0:
-            continue
-        slab = a[off : off + g]
-        pad_rows = rb * bm - g
-        if pad_rows or kp != k:
-            slab = jnp.pad(slab, ((0, pad_rows), (0, kp - k)))
-        slabs.append(slab)
-        off += g
-    if not slabs:
-        return jnp.zeros((0, n), out_dtype)
-    a_p = jnp.concatenate(slabs) if len(slabs) > 1 else slabs[0]
+    a_p, row_blocks = _grouped_row_pad(a, group_sizes, bm, kp)
+    if a_p is None:
+        zero = jnp.zeros((0, n), out_dtype)
+        return (zero, zero) if preact else zero
 
     def pad_w(w):
         if kp != k or np_ != n:
@@ -586,15 +1105,143 @@ def _grouped_impl(
         bm=bm, bn=bn,
         k_block_factor=k_block_factor,
         interpret=interpret, out_dtype=out_dtype,
-    )  # (sum(row_blocks)*bm, Np)
+        preact_out=preact,
+    )  # (sum(row_blocks)*bm, Np), or the (value, gate) preact pair
 
     # slice the valid rows of each group back out
-    outs = []
-    poff = 0
-    for g, rb in zip(group_sizes, row_blocks):
-        outs.append(out_p[poff : poff + g, :n])
-        poff += rb * bm
-    return jnp.concatenate(outs) if len(outs) > 1 else outs[0]
+    def unpad(full):
+        return _grouped_row_unpad(full, group_sizes, row_blocks, bm, n)
+
+    if preact:
+        return unpad(out_p[0]), unpad(out_p[1])
+    return unpad(out_p)
+
+
+@dataclasses.dataclass(frozen=True)
+class _GroupedVjpCfg:
+    group_sizes: Tuple[int, ...]
+    glu: bool
+    activation: Optional[str]
+    out_scale: Optional[float]
+    bm: Optional[int]
+    bn: Optional[int]
+    k_block_factor: Optional[int]
+    interpret: Optional[bool]
+    out_dtype: Any
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _grouped_core(cfg, a, b, b_gate, bias, gate_bias):
+    return _grouped_impl(
+        a, b, b_gate, cfg.group_sizes,
+        bias=bias, gate_bias=gate_bias,
+        activation=cfg.activation, out_scale=cfg.out_scale,
+        bm=cfg.bm, bn=cfg.bn, k_block_factor=cfg.k_block_factor,
+        interpret=cfg.interpret, out_dtype=cfg.out_dtype,
+    )
+
+
+def _grouped_core_fwd(cfg, a, b, b_gate, bias, gate_bias):
+    out_dtype = cfg.out_dtype or a.dtype
+    kw = dict(
+        bm=cfg.bm, bn=cfg.bn, k_block_factor=cfg.k_block_factor,
+        interpret=cfg.interpret,
+    )
+    # per-expert bias enters the kernel as (E, N); the preact paths fold it
+    h_pre = g_pre = None
+    if cfg.glu:
+        h_pre, g_pre = _grouped_impl(
+            a, b, b_gate, cfg.group_sizes,
+            bias=bias, gate_bias=gate_bias,
+            activation=None, out_scale=None, out_dtype=None, preact=True, **kw,
+        )
+        y = activation_fn(cfg.activation)(g_pre.astype(jnp.float32)) * (
+            h_pre.astype(jnp.float32)
+        )
+    elif cfg.activation is not None:
+        h_pre = _grouped_impl(
+            a, b, None, cfg.group_sizes,
+            bias=bias, gate_bias=None,
+            activation=None, out_scale=None, out_dtype=None, **kw,
+        )
+        y = activation_fn(cfg.activation)(h_pre.astype(jnp.float32))
+    else:
+        out = _grouped_impl(
+            a, b, None, cfg.group_sizes,
+            bias=bias, gate_bias=None,
+            activation=None, out_scale=cfg.out_scale,
+            out_dtype=cfg.out_dtype, **kw,
+        )
+        y = None
+    if y is not None:
+        if cfg.out_scale is not None:
+            y = y * cfg.out_scale
+        out = y.astype(out_dtype)
+    return out, (a, b, b_gate, h_pre, g_pre, bias, gate_bias)
+
+
+def _grouped_core_bwd(cfg, saved, dy):
+    a, b, b_gate, h_pre, g_pre, bias, gate_bias = saved
+    interp = cfg.interpret
+    gs = cfg.group_sizes
+    dyf = dy.astype(jnp.float32)
+    if cfg.out_scale is not None:
+        dyf = dyf * cfg.out_scale
+
+    if cfg.glu:
+        act = activation_fn(cfg.activation)
+        ag, act_vjp = jax.vjp(act, g_pre.astype(jnp.float32))
+        dh = dyf * ag
+        dg = act_vjp(dyf * h_pre.astype(jnp.float32))[0]
+    elif cfg.activation is not None:
+        act = activation_fn(cfg.activation)
+        _, act_vjp = jax.vjp(act, h_pre.astype(jnp.float32))
+        dh = act_vjp(dyf)[0]
+        dg = None
+    else:
+        dh, dg = dyf, None
+
+    cdt = a.dtype
+    dh_c = dh.astype(cdt)
+    dg_c = dg.astype(cdt) if dg is not None else None
+
+    da = sfc_grouped_matmul_nt(
+        dh_c, b, gs,
+        dg_c, b_gate if dg_c is not None else None,
+        interpret=interp, out_dtype=jnp.float32,
+    )
+    if dg_c is not None:
+        db, dbg = sfc_grouped_matmul_tn(
+            a, dh_c, gs, dg_c, interpret=interp, out_dtype=jnp.float32,
+        )
+    else:
+        db = sfc_grouped_matmul_tn(
+            a, dh_c, gs, interpret=interp, out_dtype=jnp.float32,
+        )
+        dbg = None
+
+    e_cnt = len(gs)
+    seg = jnp.asarray(np.repeat(np.arange(e_cnt), gs), jnp.int32)
+    dbias = None
+    if bias is not None:
+        dbias = jax.ops.segment_sum(dh, seg, num_segments=e_cnt).astype(
+            bias.dtype
+        )
+    dgbias = None
+    if gate_bias is not None:
+        dgbias = jax.ops.segment_sum(dg, seg, num_segments=e_cnt).astype(
+            gate_bias.dtype
+        )
+    return (
+        da.astype(a.dtype),
+        db.astype(b.dtype),
+        dbg.astype(b_gate.dtype) if b_gate is not None else None,
+        dbias,
+        dgbias,
+    )
+
+
+_grouped_core.defvjp(_grouped_core_fwd, _grouped_core_bwd)
 
 
 def sfc_grouped_matmul(
@@ -622,14 +1269,17 @@ def sfc_grouped_matmul(
     epilogue (per-expert ``bias`` (E, N), ``activation``, ``out_scale``)
     included; the valid rows are sliced back out.  Groups with zero rows
     are legal.
+
+    Differentiable: the VJP runs the grouped NT/TN kernels (per-expert
+    dA/dW in one launch each, ragged rows included).
     """
-    return _grouped_impl(
-        a, b, None, group_sizes,
-        bias=bias, gate_bias=None,
-        activation=activation, out_scale=out_scale,
+    cfg = _GroupedVjpCfg(
+        group_sizes=tuple(int(g) for g in group_sizes),
+        glu=False, activation=activation, out_scale=out_scale,
         bm=bm, bn=bn, k_block_factor=k_block_factor,
         interpret=interpret, out_dtype=out_dtype,
     )
+    return _grouped_core(cfg, a, b, None, bias, None)
 
 
 def sfc_grouped_glu_matmul(
@@ -651,11 +1301,11 @@ def sfc_grouped_glu_matmul(
     """Ragged grouped gated-MLP: ``act(a@b_gate[e]) * (a@b_val[e])`` per
     group, one SFC traversal of the dispatched rows (dual-B grouped kernel).
     The MoE expert SwiGLU reads each row slab from HBM once instead of
-    twice."""
-    return _grouped_impl(
-        a, b_val, b_gate, group_sizes,
-        bias=bias, gate_bias=gate_bias,
-        activation=activation, out_scale=out_scale,
+    twice.  Differentiable via the dual grouped NT/TN backward kernels."""
+    cfg = _GroupedVjpCfg(
+        group_sizes=tuple(int(g) for g in group_sizes),
+        glu=True, activation=activation, out_scale=out_scale,
         bm=bm, bn=bn, k_block_factor=k_block_factor,
         interpret=interpret, out_dtype=out_dtype,
     )
+    return _grouped_core(cfg, a, b_val, b_gate, bias, gate_bias)

@@ -34,6 +34,12 @@ mesh axis and the copies are combined with a psum (the true
 `add_reduce_tpp`), and as the fallback when the fused accumulator footprint
 does not fit VMEM (`ops.sfc_matmul` decides).
 
+**Backward (NT/TN) forms** — `sfc_gemm_nt`, `sfc_gemm_tn` and their grouped
+companions serve the training backward pass (`dA = dC·Bᵀ`, `dB = Aᵀ·dC`):
+the same SFC task tables traversed with swapped operand roles, the
+transposition expressed as `dot_general` dimension numbers on VMEM panels —
+`Aᵀ`/`Bᵀ` never materialize in HBM.  See the section comment below.
+
 `k_block_factor` chunks each layer's K range so the A/B panels fit VMEM
 (paper §II-E: the k' constant), accumulating in an f32 VMEM scratch.
 VMEM budget per step: bm*kc*(1+n_B) panels (+double-buffering) + bm*bn*4
@@ -63,9 +69,14 @@ __all__ = [
     "sfc_gemm_fused",
     "sfc_gemm_batched_fused",
     "sfc_gemm_grouped",
+    "sfc_gemm_nt",
+    "sfc_gemm_tn",
+    "sfc_gemm_grouped_nt",
+    "sfc_gemm_grouped_tn",
     "add_reduce_pallas",
     "build_task_table",
     "build_grouped_task_table",
+    "build_grouped_tn_task_table",
     "activation_fn",
     "ACTIVATIONS",
 ]
@@ -145,6 +156,10 @@ class _FusedSpec:
     activation: Optional[str]
     out_scale: Optional[float]
     out_dtype: Any
+    # training-forward mode: instead of the activated epilogue, flush the two
+    # GLU pre-activations (value+bias, gate+gate_bias) as separate outputs —
+    # the residuals `jax.custom_vjp` needs, still from one A traversal.
+    preact_out: bool = False
 
 
 def _fused_kernel(*refs, spec: _FusedSpec):
@@ -165,6 +180,7 @@ def _fused_kernel(*refs, spec: _FusedSpec):
     gbias_ref = next(it) if spec.has_gate_bias else None
     res_ref = next(it) if spec.has_residual else None
     o_ref = next(it)
+    og_ref = next(it) if (spec.glu and spec.preact_out) else None
     acc_ref = next(it)
     accg_ref = next(it) if spec.glu else None
 
@@ -203,6 +219,20 @@ def _fused_kernel(*refs, spec: _FusedSpec):
         if spec.has_bias:
             bias = bias_ref[0] if spec.mode == "grouped" else bias_ref[...]
             acc = acc + bias.astype(jnp.float32)
+        if spec.glu and spec.preact_out:
+            # training forward: both biased pre-activations leave the kernel
+            # (the VJP residuals); the activated product is formed outside.
+            g = accg_ref[...]
+            if spec.has_gate_bias:
+                gb = gbias_ref[0] if spec.mode == "grouped" else gbias_ref[...]
+                g = g + gb.astype(jnp.float32)
+            if spec.mode == "batched":
+                o_ref[0, ...] = acc.astype(spec.out_dtype)
+                og_ref[0, ...] = g.astype(spec.out_dtype)
+            else:
+                o_ref[...] = acc.astype(spec.out_dtype)
+                og_ref[...] = g.astype(spec.out_dtype)
+            return
         if spec.glu:
             g = accg_ref[...]
             if spec.has_gate_bias:
@@ -241,17 +271,23 @@ def _fused_call(
     scratch = [pltpu.VMEM((bm, bn), jnp.float32)]
     if spec.glu:
         scratch.append(pltpu.VMEM((bm, bn), jnp.float32))
+    out_specs: Any = out_spec
+    out_shapes: Any = out_shape
+    if spec.glu and spec.preact_out:
+        # second output: the gate pre-activation, same tiling as the value
+        out_specs = [out_spec, out_spec]
+        out_shapes = [out_shape, out_shape]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
         in_specs=in_specs,
-        out_specs=out_spec,
+        out_specs=out_specs,
         scratch_shapes=scratch,
     )
     return pl.pallas_call(
         functools.partial(_fused_kernel, spec=spec),
         grid_spec=grid_spec,
-        out_shape=out_shape,
+        out_shape=out_shapes,
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",) * len(grid),
@@ -270,6 +306,7 @@ def _fused_call(
         "out_scale",
         "interpret",
         "out_dtype",
+        "preact_out",
     ),
 )
 def sfc_gemm_fused(
@@ -288,6 +325,7 @@ def sfc_gemm_fused(
     k_block_factor: int = 1,
     interpret: bool = False,
     out_dtype=None,
+    preact_out: bool = False,
 ) -> jax.Array:
     """Single-launch SFC GEMM with in-kernel 2.5D reduction + fused epilogue.
 
@@ -314,6 +352,9 @@ def sfc_gemm_fused(
         raise ValueError(f"K={k} vs k_layers*kbf={k_layers * k_block_factor}")
     out_dtype = out_dtype or a.dtype
 
+    if preact_out and b_gate is None:
+        raise ValueError("preact_out is the dual-B (GLU) training-forward mode")
+
     mb_cnt, nb_cnt = m // bm, n // bn
     k_chunk = k // (k_layers * k_block_factor)
     n_k_chunks = k_block_factor
@@ -331,6 +372,7 @@ def sfc_gemm_fused(
         activation=activation,
         out_scale=out_scale,
         out_dtype=out_dtype,
+        preact_out=preact_out,
     )
 
     # Block index maps (units of blocks).  `t` walks gilbert order; layer
@@ -391,6 +433,7 @@ def sfc_gemm_fused(
         "out_scale",
         "interpret",
         "out_dtype",
+        "preact_out",
     ),
 )
 def sfc_gemm_batched_fused(
@@ -409,6 +452,7 @@ def sfc_gemm_batched_fused(
     k_block_factor: int = 1,
     interpret: bool = False,
     out_dtype=None,
+    preact_out: bool = False,
 ) -> jax.Array:
     """Batched fused form: (B, M, N) written once, no replicated copies.
 
@@ -434,6 +478,9 @@ def sfc_gemm_batched_fused(
         raise ValueError(f"K={k} vs k_layers*kbf={k_layers * k_block_factor}")
     out_dtype = out_dtype or a.dtype
 
+    if preact_out and b_gate is None:
+        raise ValueError("preact_out is the dual-B (GLU) training-forward mode")
+
     mb_cnt, nb_cnt = m // bm, n // bn
     k_chunk = k // (k_layers * k_block_factor)
     n_k_chunks = k_block_factor
@@ -451,6 +498,7 @@ def sfc_gemm_batched_fused(
         activation=activation,
         out_scale=out_scale,
         out_dtype=out_dtype,
+        preact_out=preact_out,
     )
 
     def a_map(bi, t, l, kc, tab):
@@ -759,6 +807,7 @@ def sfc_gemm_batched(
         "out_scale",
         "interpret",
         "out_dtype",
+        "preact_out",
     ),
 )
 def sfc_gemm_grouped(
@@ -776,6 +825,7 @@ def sfc_gemm_grouped(
     k_block_factor: int = 1,
     interpret: bool = False,
     out_dtype=None,
+    preact_out: bool = False,
 ) -> jax.Array:
     """Grouped (ragged) SFC GEMM: per-expert row slabs against per-expert
     weights, one SFC map per expert tile grid (paper's shape-obliviousness
@@ -804,6 +854,9 @@ def sfc_gemm_grouped(
         raise ValueError(f"K={k} vs k_block_factor={k_block_factor}")
     out_dtype = out_dtype or a.dtype
 
+    if preact_out and b_gate is None:
+        raise ValueError("preact_out is the dual-B (GLU) training-forward mode")
+
     nb_cnt = n // bn
     k_chunk = k // k_block_factor
     n_k_chunks = k_block_factor
@@ -811,7 +864,8 @@ def sfc_gemm_grouped(
     tab_np = build_grouped_task_table(tuple(row_blocks), nb_cnt)
     n_tasks = tab_np.shape[1]
     if n_tasks == 0:
-        return jnp.zeros((m_total, n), out_dtype)
+        zero = jnp.zeros((m_total, n), out_dtype)
+        return (zero, zero) if preact_out else zero
     tab = jnp.asarray(tab_np)
     spec = _FusedSpec(
         mode="grouped",
@@ -825,6 +879,7 @@ def sfc_gemm_grouped(
         activation=activation,
         out_scale=out_scale,
         out_dtype=out_dtype,
+        preact_out=preact_out,
     )
 
     def a_map(t, kc, tab):
@@ -866,6 +921,637 @@ def sfc_gemm_grouped(
         bn=bn,
         interpret=interpret,
     )
+
+
+# ---------------------------------------------------------------------------
+# NT / TN backward-pass kernels
+#
+# The training backward GEMMs — dA = dC·Bᵀ (NT) and dB = Aᵀ·dC (TN) — are
+# exactly the shape-oblivious case the SFC traversal is built for: the task
+# table walks the *gradient's* output tile grid in gilbert order while the
+# index maps read the stored operands with swapped roles, so Aᵀ/Bᵀ are never
+# materialized in HBM; the transposition happens inside the MXU contraction
+# (`dot_general` dimension numbers) on VMEM-resident panels.  Both carry the
+# same layer-inner 2.5D contraction chunking as the fused forward kernels.
+#
+# The dual forms mirror the forward GLU fusion: one NT launch accumulates
+# ``a@bᵀ + a2@b2ᵀ`` (the GLU dA = dg·Wgᵀ + dh·Wvᵀ in a single traversal),
+# and one TN launch streams A once to flush both ``aᵀ@b`` and ``aᵀ@b2``
+# (dWv and dWg share the activation traversal).
+# ---------------------------------------------------------------------------
+
+
+def _nt_kernel(
+    tab_ref,  # scalar-prefetch SFC task table (2+, n_tasks)
+    *refs,
+    n_layers: int,
+    n_k_chunks: int,
+    dual: bool,
+    out_dtype,
+):
+    """out[t] += a[im] @ b[in]ᵀ (+ a2[im] @ b2[in]ᵀ): contraction over the
+    operands' shared *last* dim, no transposed copy."""
+    del tab_ref
+    it = iter(refs)
+    a_ref = next(it)
+    b_ref = next(it)
+    a2_ref = next(it) if dual else None
+    b2_ref = next(it) if dual else None
+    o_ref = next(it)
+    acc_ref = next(it)
+
+    lyr, kc = pl.program_id(1), pl.program_id(2)
+
+    @pl.when((lyr == 0) & (kc == 0))
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    nt_dims = (((1,), (1,)), ((), ()))  # contract last-with-last: a @ bᵀ
+    acc_ref[...] += lax.dot_general(
+        a_ref[...], b_ref[...], nt_dims, preferred_element_type=jnp.float32
+    )
+    if dual:
+        acc_ref[...] += lax.dot_general(
+            a2_ref[...], b2_ref[...], nt_dims,
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when((lyr == n_layers - 1) & (kc == n_k_chunks - 1))
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "bm",
+        "bn",
+        "k_layers",
+        "k_block_factor",
+        "interpret",
+        "out_dtype",
+    ),
+)
+def sfc_gemm_nt(
+    a: jax.Array,  # (M, K)
+    b: jax.Array,  # (N, K) — consumed as bᵀ, never transposed in HBM
+    a2: Optional[jax.Array] = None,  # (M, K) second addend (GLU dA)
+    b2: Optional[jax.Array] = None,  # (N, K)
+    *,
+    bm: int = 256,
+    bn: int = 256,
+    k_layers: int = 1,
+    k_block_factor: int = 1,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """C = A @ Bᵀ (+ A2 @ B2ᵀ) via the SFC traversal of C's tile grid.
+
+    Grid ``(Mb*Nb, k_layers, k_block_factor)`` exactly like the fused
+    forward kernel; the B panel is a ``(bn, k_chunk)`` row slab of the
+    *untransposed* (N, K) operand, and the in-kernel `dot_general` contracts
+    both operands' last dims.  This is the dA backward kernel: A = dC,
+    B = the forward weights as stored.
+
+    Requires M % bm == N % bn == 0 and K % (k_layers * k_block_factor) == 0
+    (`ops.sfc_matmul_nt` pads arbitrary shapes).
+    """
+    m, k = a.shape
+    n, k2 = b.shape
+    assert k == k2, (a.shape, b.shape)
+    dual = a2 is not None
+    if dual:
+        assert b2 is not None and a2.shape == (m, k) and b2.shape == (n, k), (
+            a2.shape,
+            b2.shape,
+        )
+    if m % bm or n % bn:
+        raise ValueError(f"(M,N)=({m},{n}) not divisible by (bm,bn)=({bm},{bn})")
+    if k % (k_layers * k_block_factor):
+        raise ValueError(f"K={k} vs k_layers*kbf={k_layers * k_block_factor}")
+    out_dtype = out_dtype or a.dtype
+
+    mb_cnt, nb_cnt = m // bm, n // bn
+    k_chunk = k // (k_layers * k_block_factor)
+    n_k_chunks = k_block_factor
+    tab = jnp.asarray(build_task_table(mb_cnt, nb_cnt, 1))
+
+    def a_map(t, l, kc, tab):
+        return (tab[0, t], l * n_k_chunks + kc)
+
+    def b_map(t, l, kc, tab):  # row slab of the (N, K) operand
+        return (tab[1, t], l * n_k_chunks + kc)
+
+    def o_map(t, l, kc, tab):
+        return (tab[0, t], tab[1, t])
+
+    inputs = [a, b]
+    in_specs = [
+        pl.BlockSpec((bm, k_chunk), a_map),
+        pl.BlockSpec((bn, k_chunk), b_map),
+    ]
+    if dual:
+        inputs += [a2, b2]
+        in_specs += [
+            pl.BlockSpec((bm, k_chunk), a_map),
+            pl.BlockSpec((bn, k_chunk), b_map),
+        ]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(mb_cnt * nb_cnt, k_layers, n_k_chunks),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), o_map),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    kernel = functools.partial(
+        _nt_kernel,
+        n_layers=k_layers,
+        n_k_chunks=n_k_chunks,
+        dual=dual,
+        out_dtype=out_dtype,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",) * 3,
+        ),
+    )(tab, *inputs)
+
+
+def _tn_kernel(
+    tab_ref,
+    *refs,
+    n_layers: int,
+    n_k_chunks: int,
+    dual: bool,
+    out_dtype,
+):
+    """out[t] += aᵀ-slab @ b-slab (+ second output for b2): contraction over
+    the operands' shared *first* (row) dim."""
+    del tab_ref
+    it = iter(refs)
+    a_ref = next(it)
+    b_ref = next(it)
+    b2_ref = next(it) if dual else None
+    o_ref = next(it)
+    o2_ref = next(it) if dual else None
+    acc_ref = next(it)
+    acc2_ref = next(it) if dual else None
+
+    lyr, kc = pl.program_id(1), pl.program_id(2)
+
+    @pl.when((lyr == 0) & (kc == 0))
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        if dual:
+            acc2_ref[...] = jnp.zeros_like(acc2_ref)
+
+    tn_dims = (((0,), (0,)), ((), ()))  # contract rows-with-rows: aᵀ @ b
+    a_pan = a_ref[...]
+    acc_ref[...] += lax.dot_general(
+        a_pan, b_ref[...], tn_dims, preferred_element_type=jnp.float32
+    )
+    if dual:
+        acc2_ref[...] += lax.dot_general(
+            a_pan, b2_ref[...], tn_dims, preferred_element_type=jnp.float32
+        )
+
+    @pl.when((lyr == n_layers - 1) & (kc == n_k_chunks - 1))
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+        if dual:
+            o2_ref[...] = acc2_ref[...].astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "bm",
+        "bn",
+        "k_layers",
+        "k_block_factor",
+        "interpret",
+        "out_dtype",
+    ),
+)
+def sfc_gemm_tn(
+    a: jax.Array,  # (M, K) — consumed as aᵀ, never transposed in HBM
+    b: jax.Array,  # (M, N)
+    b2: Optional[jax.Array] = None,  # (M, N) second operand (GLU dWg)
+    *,
+    bm: int = 256,
+    bn: int = 256,
+    k_layers: int = 1,
+    k_block_factor: int = 1,
+    interpret: bool = False,
+    out_dtype=None,
+):
+    """C = Aᵀ @ B (and Aᵀ @ B2) via the SFC traversal of the (K, N) output.
+
+    The contraction runs over the shared row dim M in layer-inner chunks;
+    each grid step contracts an ``(m_chunk, bm)`` column slab of the stored
+    (M, K) operand against an ``(m_chunk, bn)`` slab of B.  This is the dW
+    backward kernel: A = the forward activations, B = dC.  With ``b2`` the
+    A slab is streamed once for both weight grads (returns a tuple).
+
+    Requires K % bm == N % bn == 0 and M % (k_layers * k_block_factor) == 0
+    (`ops.sfc_matmul_tn` pads arbitrary shapes).
+    """
+    m, k = a.shape
+    m2, n = b.shape
+    assert m == m2, (a.shape, b.shape)
+    dual = b2 is not None
+    if dual:
+        assert b2.shape == (m, n), (b2.shape, b.shape)
+    if k % bm or n % bn:
+        raise ValueError(f"(K,N)=({k},{n}) not divisible by (bm,bn)=({bm},{bn})")
+    if m % (k_layers * k_block_factor):
+        raise ValueError(f"M={m} vs k_layers*kbf={k_layers * k_block_factor}")
+    out_dtype = out_dtype or a.dtype
+
+    kb_cnt, nb_cnt = k // bm, n // bn
+    m_chunk = m // (k_layers * k_block_factor)
+    n_k_chunks = k_block_factor
+    tab = jnp.asarray(build_task_table(kb_cnt, nb_cnt, 1))
+
+    def a_map(t, l, kc, tab):  # column slab of the (M, K) operand
+        return (l * n_k_chunks + kc, tab[0, t])
+
+    def b_map(t, l, kc, tab):
+        return (l * n_k_chunks + kc, tab[1, t])
+
+    def o_map(t, l, kc, tab):
+        return (tab[0, t], tab[1, t])
+
+    inputs = [a, b]
+    in_specs = [
+        pl.BlockSpec((m_chunk, bm), a_map),
+        pl.BlockSpec((m_chunk, bn), b_map),
+    ]
+    if dual:
+        inputs.append(b2)
+        in_specs.append(pl.BlockSpec((m_chunk, bn), b_map))
+
+    out_spec = pl.BlockSpec((bm, bn), o_map)
+    out_shape = jax.ShapeDtypeStruct((k, n), out_dtype)
+    scratch = [pltpu.VMEM((bm, bn), jnp.float32)]
+    if dual:
+        scratch.append(pltpu.VMEM((bm, bn), jnp.float32))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(kb_cnt * nb_cnt, k_layers, n_k_chunks),
+        in_specs=in_specs,
+        out_specs=[out_spec, out_spec] if dual else out_spec,
+        scratch_shapes=scratch,
+    )
+    kernel = functools.partial(
+        _tn_kernel,
+        n_layers=k_layers,
+        n_k_chunks=n_k_chunks,
+        dual=dual,
+        out_dtype=out_dtype,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[out_shape, out_shape] if dual else out_shape,
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",) * 3,
+        ),
+    )(tab, *inputs)
+
+
+def _grouped_nt_kernel(
+    tab_ref,
+    *refs,
+    n_k_chunks: int,
+    dual: bool,
+    out_dtype,
+):
+    del tab_ref
+    it = iter(refs)
+    a_ref = next(it)
+    b_ref = next(it)
+    a2_ref = next(it) if dual else None
+    b2_ref = next(it) if dual else None
+    o_ref = next(it)
+    acc_ref = next(it)
+
+    kc = pl.program_id(1)
+
+    @pl.when(kc == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    nt_dims = (((1,), (1,)), ((), ()))
+    acc_ref[...] += lax.dot_general(
+        a_ref[...], b_ref[0], nt_dims, preferred_element_type=jnp.float32
+    )
+    if dual:
+        acc_ref[...] += lax.dot_general(
+            a2_ref[...], b2_ref[0], nt_dims, preferred_element_type=jnp.float32
+        )
+
+    @pl.when(kc == n_k_chunks - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "row_blocks",
+        "bm",
+        "bn",
+        "k_block_factor",
+        "interpret",
+        "out_dtype",
+    ),
+)
+def sfc_gemm_grouped_nt(
+    a: jax.Array,  # (sum_e row_blocks[e]*bm, K) grouped rows (e.g. dC slabs)
+    b: jax.Array,  # (E, N, K) per-expert operand, consumed as b[e]ᵀ
+    a2: Optional[jax.Array] = None,  # (sum_rows, K) second addend (GLU dA)
+    b2: Optional[jax.Array] = None,  # (E, N, K)
+    *,
+    row_blocks: Tuple[int, ...],
+    bm: int = 128,
+    bn: int = 128,
+    k_block_factor: int = 1,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """Grouped NT: out[rows of e] = a[rows of e] @ b[e]ᵀ (+ a2 @ b2[e]ᵀ).
+
+    The dA kernel of the grouped (MoE expert) backward: same per-expert SFC
+    task table as the forward grouped kernel, per-expert weights read as
+    stored (E, N, K) row slabs — contraction over the shared last dim.
+    """
+    m_total, k = a.shape
+    e_cnt, n, k2 = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert len(row_blocks) == e_cnt, (row_blocks, e_cnt)
+    dual = a2 is not None
+    if dual:
+        assert b2 is not None and a2.shape == a.shape and b2.shape == b.shape
+    if m_total != sum(row_blocks) * bm:
+        raise ValueError(
+            f"A rows {m_total} != sum(row_blocks)*bm = {sum(row_blocks)}*{bm}"
+        )
+    if n % bn:
+        raise ValueError(f"N={n} not divisible by bn={bn}")
+    if k % k_block_factor:
+        raise ValueError(f"K={k} vs k_block_factor={k_block_factor}")
+    out_dtype = out_dtype or a.dtype
+
+    nb_cnt = n // bn
+    k_chunk = k // k_block_factor
+    n_k_chunks = k_block_factor
+
+    tab_np = build_grouped_task_table(tuple(row_blocks), nb_cnt)
+    n_tasks = tab_np.shape[1]
+    if n_tasks == 0:
+        return jnp.zeros((m_total, n), out_dtype)
+    tab = jnp.asarray(tab_np)
+
+    def a_map(t, kc, tab):
+        return (tab[0, t], kc)
+
+    def b_map(t, kc, tab):  # (expert, row-of-bᵀ, k-chunk)
+        return (tab[2, t], tab[1, t], kc)
+
+    def o_map(t, kc, tab):
+        return (tab[0, t], tab[1, t])
+
+    inputs = [a, b]
+    in_specs = [
+        pl.BlockSpec((bm, k_chunk), a_map),
+        pl.BlockSpec((1, bn, k_chunk), b_map),
+    ]
+    if dual:
+        inputs += [a2, b2]
+        in_specs += [
+            pl.BlockSpec((bm, k_chunk), a_map),
+            pl.BlockSpec((1, bn, k_chunk), b_map),
+        ]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_tasks, n_k_chunks),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), o_map),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    kernel = functools.partial(
+        _grouped_nt_kernel,
+        n_k_chunks=n_k_chunks,
+        dual=dual,
+        out_dtype=out_dtype,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m_total, n), out_dtype),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+    )(tab, *inputs)
+
+
+def build_grouped_tn_task_table(
+    row_blocks: Tuple[int, ...], kb: int, nb: int
+) -> np.ndarray:
+    """(5, E*kb*nb) int32 table for the grouped TN kernel.
+
+    Rows = (ik, in, expert, row_off_blocks, rb): every expert owns the same
+    ``kb x nb`` weight-grad tile grid, walked in gilbert order, plus the
+    block offset/extent of its row slab in the packed activation buffer so
+    the kernel can bound the ragged contraction."""
+    sfc = create_sfc_map(kb, nb)
+    iks = sfc.im_table()
+    ins = sfc.in_table()
+    cols = []
+    row_off = 0
+    for e, rb in enumerate(row_blocks):
+        cols.append(
+            np.stack(
+                [
+                    iks,
+                    ins,
+                    np.full(kb * nb, e, dtype=np.int32),
+                    np.full(kb * nb, row_off, dtype=np.int32),
+                    np.full(kb * nb, rb, dtype=np.int32),
+                ]
+            )
+        )
+        row_off += rb
+    return np.concatenate(cols, axis=1).astype(np.int32)
+
+
+def _grouped_tn_kernel(
+    tab_ref,
+    *refs,
+    n_chunks: int,
+    dual: bool,
+    out_dtype,
+):
+    it = iter(refs)
+    a_ref = next(it)
+    b_ref = next(it)
+    b2_ref = next(it) if dual else None
+    o_ref = next(it)
+    o2_ref = next(it) if dual else None
+    acc_ref = next(it)
+    acc2_ref = next(it) if dual else None
+
+    t, kc = pl.program_id(0), pl.program_id(1)
+    rb = tab_ref[4, t]  # this expert's row-slab extent in blocks
+
+    @pl.when(kc == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        if dual:
+            acc2_ref[...] = jnp.zeros_like(acc2_ref)
+
+    tn_dims = (((0,), (0,)), ((), ()))
+
+    @pl.when(kc < rb)  # chunks past the expert's rows contribute nothing
+    def _accumulate():
+        a_pan = a_ref[...]
+        acc_ref[...] += lax.dot_general(
+            a_pan, b_ref[...], tn_dims, preferred_element_type=jnp.float32
+        )
+        if dual:
+            acc2_ref[...] += lax.dot_general(
+                a_pan, b2_ref[...], tn_dims, preferred_element_type=jnp.float32
+            )
+
+    @pl.when(kc == n_chunks - 1)
+    def _flush():
+        o_ref[0, ...] = acc_ref[...].astype(out_dtype)
+        if dual:
+            o2_ref[0, ...] = acc2_ref[...].astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "row_blocks",
+        "row_block",
+        "bm",
+        "bn",
+        "interpret",
+        "out_dtype",
+    ),
+)
+def sfc_gemm_grouped_tn(
+    a: jax.Array,  # (sum_e row_blocks[e]*row_block, K) grouped activations
+    b: jax.Array,  # (sum_rows, N) grouped dC slabs (same row packing)
+    b2: Optional[jax.Array] = None,  # (sum_rows, N) second dC (GLU dg)
+    *,
+    row_blocks: Tuple[int, ...],
+    row_block: int,  # rows per contraction chunk (the slab padding unit)
+    bm: int = 128,
+    bn: int = 128,
+    interpret: bool = False,
+    out_dtype=None,
+):
+    """Grouped TN: dW[e] = a[rows of e]ᵀ @ b[rows of e] per expert, one
+    launch for the whole (E, K, N) weight-grad stack.
+
+    Every expert shares the same (K/bm) x (N/bn) output grid (one gilbert
+    map, replayed per expert); the ragged contraction over each expert's
+    row slab is bounded by the prefetched ``rb`` column of the task table —
+    chunks beyond an expert's rows are predicated off, so empty experts
+    flush exact zeros.  With ``b2`` the activation slab streams once for
+    both weight-grad stacks (returns a tuple).
+    """
+    m_total, k = a.shape
+    m2, n = b.shape
+    assert m_total == m2, (a.shape, b.shape)
+    dual = b2 is not None
+    if dual:
+        assert b2.shape == b.shape, (b2.shape, b.shape)
+    e_cnt = len(row_blocks)
+    if m_total != sum(row_blocks) * row_block:
+        raise ValueError(
+            f"rows {m_total} != sum(row_blocks)*row_block = "
+            f"{sum(row_blocks)}*{row_block}"
+        )
+    if k % bm or n % bn:
+        raise ValueError(f"(K,N)=({k},{n}) not divisible by (bm,bn)=({bm},{bn})")
+    out_dtype = out_dtype or a.dtype
+
+    kb_cnt, nb_cnt = k // bm, n // bn
+    max_rb = max(row_blocks) if row_blocks else 0
+    out_shape = jax.ShapeDtypeStruct((e_cnt, k, n), out_dtype)
+    if max_rb == 0 or m_total == 0:
+        zero = jnp.zeros(out_shape.shape, out_dtype)
+        return (zero, zero) if dual else zero
+    total_blocks = m_total // row_block
+
+    tab = jnp.asarray(build_grouped_tn_task_table(tuple(row_blocks), kb_cnt, nb_cnt))
+
+    def row_idx(t, kc, tab):
+        # clamp into the expert's slab (and the buffer) — out-of-extent
+        # chunks are predicated off in the kernel, the fetch just needs a
+        # legal address
+        rb = tab[4, t]
+        kc_c = jnp.minimum(kc, jnp.maximum(rb - 1, 0))
+        return jnp.minimum(tab[3, t] + kc_c, total_blocks - 1)
+
+    def a_map(t, kc, tab):
+        return (row_idx(t, kc, tab), tab[0, t])
+
+    def b_map(t, kc, tab):
+        return (row_idx(t, kc, tab), tab[1, t])
+
+    def o_map(t, kc, tab):
+        return (tab[2, t], tab[0, t], tab[1, t])
+
+    inputs = [a, b]
+    in_specs = [
+        pl.BlockSpec((row_block, bm), a_map),
+        pl.BlockSpec((row_block, bn), b_map),
+    ]
+    if dual:
+        inputs.append(b2)
+        in_specs.append(pl.BlockSpec((row_block, bn), b_map))
+
+    out_spec = pl.BlockSpec((1, bm, bn), o_map)
+    scratch = [pltpu.VMEM((bm, bn), jnp.float32)]
+    if dual:
+        scratch.append(pltpu.VMEM((bm, bn), jnp.float32))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(tab.shape[1], max_rb),
+        in_specs=in_specs,
+        out_specs=[out_spec, out_spec] if dual else out_spec,
+        scratch_shapes=scratch,
+    )
+    kernel = functools.partial(
+        _grouped_tn_kernel,
+        n_chunks=max_rb,
+        dual=dual,
+        out_dtype=out_dtype,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[out_shape, out_shape] if dual else out_shape,
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+    )(tab, *inputs)
 
 
 def _add_reduce_kernel(c_ref, o_ref, *, acc_dtype):

@@ -43,11 +43,18 @@ def build_trainer(
     microbatches: int = 1,
     mesh=None,
     seed: int = 0,
+    gemm_backend: Optional[str] = None,
 ):
-    """Returns (params, opt_state, jitted step, batch_fn)."""
+    """Returns (params, opt_state, jitted step, batch_fn).
+
+    ``gemm_backend="sfc_pallas"`` trains end-to-end on the SFC kernels:
+    forward projections AND the custom-VJP backward (NT/TN kernels)."""
     model = build_model(cfg)
     opt_cfg = AdamWConfig(lr=lr, total_steps=total_steps, warmup_steps=min(100, total_steps // 10 + 1))
-    step_fn = make_train_step(model, opt_cfg, remat=remat, microbatches=microbatches)
+    step_fn = make_train_step(
+        model, opt_cfg, remat=remat, microbatches=microbatches,
+        gemm_backend=gemm_backend,
+    )
 
     params = model.init(jax.random.PRNGKey(seed))
     opt_state = adamw_init(params)
@@ -105,6 +112,11 @@ def main():
     ap.add_argument("--data-parallel", type=int, default=1)
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--fail-at", type=int, default=None, help="simulate preemption")
+    ap.add_argument(
+        "--backend", default=None,
+        choices=["xla", "sfc_pallas", "sfc_reference"],
+        help="GEMM backend for the train step (fwd + custom-VJP bwd)",
+    )
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -123,6 +135,7 @@ def main():
         remat=args.remat,
         microbatches=args.microbatches,
         mesh=mesh,
+        gemm_backend=args.backend,
     )
 
     ckpt = CheckpointManager(args.ckpt_dir or "/tmp/repro_ckpt", interval=args.ckpt_every)

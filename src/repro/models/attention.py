@@ -188,7 +188,7 @@ def attention_decode(
     cv = lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), index, axis=1)
     valid = jnp.full((b,), index + 1, jnp.int32)
     o = decode_attention(q, ck, cv, valid)
-    return o.reshape(b, 1, -1) @ params["wo"], {"k": ck, "v": cv}
+    return _bmm(o.reshape(b, 1, -1), params["wo"]), {"k": ck, "v": cv}
 
 
 # ---------------------------------------------------------------------------
@@ -207,14 +207,14 @@ def cross_attention_forward(
     k_chunk: int = 512,
 ) -> jax.Array:
     b, s, _ = x.shape
-    q = (x @ params["wq"]).reshape(b, s, n_heads, -1)
-    k = (memory @ params["wk"]).reshape(b, memory.shape[1], kv_heads, -1)
-    v = (memory @ params["wv"]).reshape(b, memory.shape[1], kv_heads, -1)
+    q = _bmm(x, params["wq"]).reshape(b, s, n_heads, -1)
+    k = _bmm(memory, params["wk"]).reshape(b, memory.shape[1], kv_heads, -1)
+    v = _bmm(memory, params["wv"]).reshape(b, memory.shape[1], kv_heads, -1)
     if "q_norm" in params:
         q = rmsnorm(params["q_norm"], q)
         k = rmsnorm(params["k_norm"], k)
     o = blockwise_attention(q, k, v, causal=False, q_chunk=q_chunk, k_chunk=k_chunk)
-    return o.reshape(b, s, -1) @ params["wo"]
+    return _bmm(o.reshape(b, s, -1), params["wo"])
 
 
 def cross_attention_decode(
@@ -227,20 +227,20 @@ def cross_attention_decode(
     kv_heads: int,
 ) -> jax.Array:
     b = x.shape[0]
-    q = (x @ params["wq"]).reshape(b, 1, n_heads, -1)
+    q = _bmm(x, params["wq"]).reshape(b, 1, n_heads, -1)
     if "q_norm" in params:
         q = rmsnorm(params["q_norm"], q)
     valid = jnp.full((b,), mem_len, jnp.int32)
     o = decode_attention(q, mem_kv["k"], mem_kv["v"], valid)
-    return o.reshape(b, 1, -1) @ params["wo"]
+    return _bmm(o.reshape(b, 1, -1), params["wo"])
 
 
 def precompute_cross_kv(
     params: Params, memory: jax.Array, *, kv_heads: int
 ) -> Dict[str, jax.Array]:
     b, t, _ = memory.shape
-    k = (memory @ params["wk"]).reshape(b, t, kv_heads, -1)
-    v = (memory @ params["wv"]).reshape(b, t, kv_heads, -1)
+    k = _bmm(memory, params["wk"]).reshape(b, t, kv_heads, -1)
+    v = _bmm(memory, params["wv"]).reshape(b, t, kv_heads, -1)
     if "k_norm" in params:
         k = rmsnorm(params["k_norm"], k)
     return {"k": k, "v": v}

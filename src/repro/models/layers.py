@@ -302,7 +302,9 @@ def mlp(params: Params, x: jax.Array, *, act: str = "silu") -> jax.Array:
     # activation (and, when gated, the whole SwiGLU pattern) is fused into
     # the projection call: under the sfc_pallas backend the dual-B kernel
     # traverses x once and the elementwise tail never round-trips HBM; under
-    # xla the same math is plain jnp ops (XLA fuses them itself).
+    # xla the same math is plain jnp ops (XLA fuses them itself).  The same
+    # calls are differentiable on the SFC backend — their custom VJPs route
+    # dA/dW through the NT/TN kernels, so training never leaves the SFC path.
     if "w_gate" in params:
         h = _bglu(x, params["w_gate"], params["w_in"], activation=act)
     else:

@@ -23,7 +23,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.core.gemm_backend import grouped_glu_matmul, grouped_matmul
+from repro.core.gemm_backend import (
+    grouped_glu_matmul,
+    grouped_matmul,
+    matmul as _bmm,
+)
 from repro.models.layers import Params, dense_init
 from repro.parallel.act_sharding import constrain
 
@@ -112,7 +116,9 @@ def moe_forward(
     tg = n_tok // groups
     xg = constrain(x.reshape(groups, tg, d), ("dp", None, None))
 
-    logits = (xg @ params["router"]).astype(jnp.float32)  # (G, Tg, E)
+    # router projection through the pluggable backend: under sfc_pallas the
+    # train step's backward stays dot_general-free end to end
+    logits = _bmm(xg, params["router"]).astype(jnp.float32)  # (G, Tg, E)
     probs = jax.nn.softmax(logits, axis=-1)
     gate_vals, gate_idx = lax.top_k(probs, top_k)  # (G, Tg, k)
     gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
@@ -179,7 +185,7 @@ def _route_local(router, x_loc, *, top_k, capacity_factor, n_experts):
     """Local (per-shard) routing bookkeeping: returns dispatch indices and
     gate weights for the rows of x_loc.  x_loc: (T_loc, d)."""
     t_loc, d = x_loc.shape
-    logits = (x_loc @ router).astype(jnp.float32)  # (T, E)
+    logits = _bmm(x_loc, router).astype(jnp.float32)  # (T, E)
     probs = jax.nn.softmax(logits, axis=-1)
     gate_vals, gate_idx = lax.top_k(probs, top_k)
     gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)

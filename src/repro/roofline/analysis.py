@@ -31,6 +31,7 @@ __all__ = [
     "HW",
     "collective_bytes",
     "roofline_terms",
+    "train_gemm_roofline_terms",
     "model_flops",
 ]
 
@@ -164,6 +165,48 @@ def roofline_terms(
         # fraction of the roofline-bound step spent on useful compute
         "roofline_fraction": (t_compute / bound) if bound > 0 else 0.0,
     }
+
+
+def train_gemm_roofline_terms(
+    M: int,
+    N: int,
+    K: int,
+    *,
+    dtype_bytes: int = 2,
+    hw: Dict[str, float] = HW,
+) -> Dict[str, float]:
+    """Per-chip roofline terms for one projection's *train* step: the
+    forward GEMM plus both backward GEMMs (dA = dC·Bᵀ, dB = Aᵀ·dC).
+
+    Backward traffic is not 2x forward: each backward GEMM re-reads one
+    saved forward operand and the (M, N) cotangent and writes a gradient
+    the size of the other operand, so the byte mix shifts with the shape's
+    aspect — tall-skinny projections (the LM head, d_ff up-projections) go
+    memory-bound in the backward before they do in the forward."""
+    flops = {"fwd": 2.0 * M * N * K, "nt": 2.0 * M * N * K, "tn": 2.0 * M * N * K}
+    bytes_ = {
+        # operands read + output written, once each (compulsory traffic)
+        "fwd": (M * K + K * N + M * N) * dtype_bytes,
+        "nt": (M * N + K * N + M * K) * dtype_bytes,
+        "tn": (M * K + M * N + K * N) * dtype_bytes,
+    }
+    out: Dict[str, float] = {}
+    t_total = 0.0
+    for phase in ("fwd", "nt", "tn"):
+        t_c = flops[phase] / hw["peak_flops"]
+        t_m = bytes_[phase] / hw["hbm_bw"]
+        out[f"{phase}_compute_s"] = t_c
+        out[f"{phase}_memory_s"] = t_m
+        out[f"{phase}_bound_s"] = max(t_c, t_m)
+        out[f"{phase}_dominant"] = "compute" if t_c >= t_m else "memory"
+        t_total += max(t_c, t_m)
+    out["total_s"] = t_total
+    out["bwd_to_fwd"] = (
+        (out["nt_bound_s"] + out["tn_bound_s"]) / out["fwd_bound_s"]
+        if out["fwd_bound_s"] > 0
+        else 0.0
+    )
+    return out
 
 
 def model_flops(cfg, shape, n_layers_active: Optional[int] = None) -> float:

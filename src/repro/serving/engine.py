@@ -92,14 +92,30 @@ class ServingEngine:
         shapes.append(("gemm", self.max_batch, v, d))
         return shapes
 
-    def warmup(self, prompt_len: int = 32, *, tune: bool = False) -> None:
+    def warmup(
+        self,
+        prompt_len: int = 32,
+        *,
+        tune: bool = False,
+        tune_backward: bool = False,
+    ) -> None:
         """Compile the prefill/decode programs for one prompt length before
         traffic arrives; with ``tune=True`` first run the empirical knob
         tuner for this model's projection GEMM shapes — the fused GLU
         variant included — so the SFC backend traces with measured winners
         (a second warmup for the same shape bucket is a pure cache hit — no
-        re-measurement)."""
+        re-measurement).
+
+        ``tune_backward=True`` additionally tunes the ``op="nt"``/``op="tn"``
+        namespaces for the same projection shapes — the backward GEMMs a
+        train step will launch (`perf_model.backward_gemm_shapes`) — and
+        implies ``tune=True``.  Serving itself never runs them, but the
+        engine's warmup is the one place that already knows every projection
+        shape, so fine-tuning jobs piggyback on it (see README "Training on
+        the SFC backend")."""
+        tune = tune or tune_backward
         if tune and self.backend == "sfc_pallas":
+            from repro.core.perf_model import backward_gemm_shapes
             from repro.tune import tune_gemm
 
             # key the cache by the dtype the projections will actually trace
@@ -107,6 +123,11 @@ class ServingEngine:
             dtype = jnp.dtype(self.cfg.param_dtype)
             for (op, m, n, k) in self.projection_gemm_shapes(prompt_len):
                 tune_gemm(m, n, k, dtype, op=op)
+                if tune_backward:
+                    for bwd_op, (bm_, bn_, bk_) in backward_gemm_shapes(
+                        m, n, k
+                    ).items():
+                        tune_gemm(bm_, bn_, bk_, dtype, op=bwd_op)
         tokens = jnp.zeros((self.max_batch, prompt_len), jnp.int32)
         logits, cache = self._prefill(self.params, tokens)
         tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)

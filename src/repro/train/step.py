@@ -1,9 +1,16 @@
 """Train-step builder: loss -> grads -> AdamW, with microbatch gradient
 accumulation (overlaps the cross-pod reduce of microbatch i with compute of
-microbatch i+1 under XLA async collectives) and configurable remat."""
+microbatch i+1 under XLA async collectives) and configurable remat.
+
+``gemm_backend="sfc_pallas"`` runs the *whole* step — forward and, via the
+kernels' `custom_vjp`, the backward GEMMs (NT/TN SFC kernels) — on the SFC
+backend; backend selection happens at trace time, so it is threaded here
+rather than left to the caller's context manager (jit retraces outside any
+``with`` block the caller opened)."""
 
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -11,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.gemm_backend import gemm_backend as _gemm_backend_ctx
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 from repro.parallel.act_sharding import constrain
 
@@ -45,11 +53,24 @@ def make_train_step(
     *,
     remat: str = "dots",
     microbatches: int = 1,
+    gemm_backend: Optional[str] = None,
 ) -> Callable:
-    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``gemm_backend`` pins the projection-GEMM backend for the traced step
+    ("xla" | "sfc_pallas" | "sfc_reference"); None inherits the caller's
+    context.  Under "sfc_pallas" both directions run on the SFC kernels —
+    the backward via the NT/TN custom-VJP path, no dot_general fallback.
+    """
 
     def loss_fn(params, batch):
-        return model.loss(params, batch, remat=remat)
+        ctx = (
+            _gemm_backend_ctx(gemm_backend)
+            if gemm_backend is not None
+            else contextlib.nullcontext()
+        )
+        with ctx:
+            return model.loss(params, batch, remat=remat)
 
     def train_step(params, opt_state, batch):
         if microbatches == 1:
@@ -78,8 +99,16 @@ def make_train_step(
     return train_step
 
 
-def make_eval_step(model, *, remat: str = "none") -> Callable:
+def make_eval_step(
+    model, *, remat: str = "none", gemm_backend: Optional[str] = None
+) -> Callable:
     def eval_step(params, batch):
-        return model.loss(params, batch, remat=remat)
+        ctx = (
+            _gemm_backend_ctx(gemm_backend)
+            if gemm_backend is not None
+            else contextlib.nullcontext()
+        )
+        with ctx:
+            return model.loss(params, batch, remat=remat)
 
     return eval_step

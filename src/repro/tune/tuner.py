@@ -100,10 +100,18 @@ def candidate_knobs(
 
 
 def _op_call(op: str, knobs: Knobs, *, interpret: bool = False):
-    """Shape the measured call for the tuned op: the plain fused GEMM or
-    the dual-B GLU kernel (its knob landscape differs — two B panels share
-    one A traversal, doubling the streamed weight bytes per task)."""
-    from repro.kernels.ops import sfc_glu_matmul, sfc_matmul
+    """Shape the measured call for the tuned op: the plain fused GEMM, the
+    dual-B GLU kernel (its knob landscape differs — two B panels share one
+    A traversal, doubling the streamed weight bytes per task), or the
+    backward NT/TN kernels (transposed-role traversals: panel geometry and
+    the contraction axis both change, so their winners differ from the
+    forward's)."""
+    from repro.kernels.ops import (
+        sfc_glu_matmul,
+        sfc_matmul,
+        sfc_matmul_nt,
+        sfc_matmul_tn,
+    )
 
     kw = dict(
         bm=knobs.bm, bn=knobs.bn,
@@ -113,7 +121,26 @@ def _op_call(op: str, knobs: Knobs, *, interpret: bool = False):
         kw["interpret"] = True
     if op == "glu":
         return lambda a, b, bg: sfc_glu_matmul(a, bg, b, **kw)
+    if op == "nt":
+        return lambda a, b, bg: sfc_matmul_nt(a, b, **kw)
+    if op == "tn":
+        return lambda a, b, bg: sfc_matmul_tn(a, b, **kw)
     return lambda a, b, bg: sfc_matmul(a, b, **kw)
+
+
+def _op_operand_shapes(op: str, m: int, n: int, k: int):
+    """Operand shapes for one measured call of the tuned op.
+
+    The (m, n, k) key is always the *resolver* bucket — what
+    `ops.resolve_knobs` is called with for that op: NT consumes (m, k) and
+    the untransposed (n, k); TN contracts over k rows, producing (m, n)."""
+    if op == "nt":
+        return (m, k), (n, k), None
+    if op == "tn":
+        return (k, m), (k, n), None
+    if op == "glu":
+        return (m, k), (k, n), (k, n)
+    return (m, k), (k, n), None
 
 
 def _measure_wallclock(
@@ -124,9 +151,10 @@ def _measure_wallclock(
     import jax.numpy as jnp
 
     rng = np.random.default_rng(0)
-    a = jnp.asarray(rng.normal(size=(m, k)), dtype)
-    b = jnp.asarray(rng.normal(size=(k, n)), dtype)
-    bg = jnp.asarray(rng.normal(size=(k, n)), dtype) if op == "glu" else None
+    sa, sb, sbg = _op_operand_shapes(op, m, n, k)
+    a = jnp.asarray(rng.normal(size=sa), dtype)
+    b = jnp.asarray(rng.normal(size=sb), dtype)
+    bg = jnp.asarray(rng.normal(size=sbg), dtype) if sbg else None
     call = _op_call(op, knobs)
 
     jax.block_until_ready(call(a, b, bg))  # compile
@@ -146,10 +174,11 @@ def _measure_hlo_cost(m, n, k, dtype, knobs: Knobs, *, op: str = "gemm") -> floa
     from repro.roofline.hlo_cost import module_cost
 
     call = _op_call(op, knobs, interpret=True)
+    sa, sb, sbg = _op_operand_shapes(op, m, n, k)
     args = [
-        jax.ShapeDtypeStruct((m, k), dtype),
-        jax.ShapeDtypeStruct((k, n), dtype),
-        jax.ShapeDtypeStruct((k, n), dtype) if op == "glu" else None,
+        jax.ShapeDtypeStruct(sa, dtype),
+        jax.ShapeDtypeStruct(sb, dtype),
+        jax.ShapeDtypeStruct(sbg, dtype) if sbg else None,
     ]
     fn = jax.jit(call)
     text = fn.lower(*args).compile().as_text()

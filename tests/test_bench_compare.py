@@ -1,0 +1,147 @@
+"""CI perf-regression gate (`benchmarks/compare.py`): the gate must fail on
+an injected >25% regression, skip measured/zero rows, and catch dropped
+rows; plus the shape-keying contract of the committed baseline."""
+
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.compare import compare, delta_table, load_rows, main  # noqa: E402
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _doc(rows):
+    return {"schema": "repro-bench-v1", "rows": rows}
+
+
+def _row(name, us):
+    return {"name": name, "us_per_call": us, "derived": ""}
+
+
+def _write(tmp_path, fname, rows):
+    p = tmp_path / fname
+    p.write_text(json.dumps(_doc(rows)))
+    return str(p)
+
+
+BASE = [
+    _row("gemm_sweep/512x512x512", 10.0),
+    _row("gemm_sweep/WHM", 0.0),
+    _row("gemm_cpu_check/256x256x256", 1000.0),
+]
+
+
+def test_identical_runs_pass(tmp_path):
+    b = _write(tmp_path, "base.json", BASE)
+    n = _write(tmp_path, "new.json", BASE)
+    assert main([b, n]) == 0
+
+
+def test_injected_regression_fails(tmp_path):
+    """Acceptance: compare.py exits nonzero on an injected >25% regression."""
+    b = _write(tmp_path, "base.json", BASE)
+    n = _write(
+        tmp_path, "new.json",
+        [_row("gemm_sweep/512x512x512", 13.0), *BASE[1:]],  # +30%
+    )
+    assert main([b, n]) == 1
+
+
+def test_within_threshold_passes(tmp_path):
+    b = _write(tmp_path, "base.json", BASE)
+    n = _write(
+        tmp_path, "new.json",
+        [_row("gemm_sweep/512x512x512", 12.0), *BASE[1:]],  # +20%
+    )
+    assert main([b, n]) == 0
+
+
+def test_measured_rows_not_gated_by_default(tmp_path):
+    b = _write(tmp_path, "base.json", BASE)
+    n = _write(
+        tmp_path, "new.json",
+        [*BASE[:2], _row("gemm_cpu_check/256x256x256", 5000.0)],  # 5x "slower"
+    )
+    assert main([b, n]) == 0
+    assert main([b, n, "--gate-measured"]) == 1
+
+
+def test_zero_baseline_rows_skipped(tmp_path):
+    b = _write(tmp_path, "base.json", BASE)
+    n = _write(
+        tmp_path, "new.json",
+        [BASE[0], _row("gemm_sweep/WHM", 99.0), BASE[2]],
+    )
+    assert main([b, n]) == 0
+
+
+def test_dropped_row_fails(tmp_path):
+    b = _write(tmp_path, "base.json", BASE)
+    n = _write(tmp_path, "new.json", BASE[1:])
+    assert main([b, n]) == 1
+
+
+def test_added_rows_reported_not_failed(tmp_path):
+    b = _write(tmp_path, "base.json", BASE)
+    n = _write(tmp_path, "new.json", [*BASE, _row("gemm_sweep/new_row", 1.0)])
+    assert main([b, n]) == 0
+
+
+def test_delta_table_marks_regressions():
+    deltas, failures = compare(
+        {r["name"]: r for r in BASE},
+        {r["name"]: r for r in [_row("gemm_sweep/512x512x512", 20.0), *BASE[1:]]},
+    )
+    assert failures and "512x512x512" in failures[0]
+    table = delta_table(deltas)
+    assert "REGRESSION" in table and table.startswith("| row |")
+
+
+def test_custom_threshold(tmp_path):
+    b = _write(tmp_path, "base.json", BASE)
+    n = _write(
+        tmp_path, "new.json",
+        [_row("gemm_sweep/512x512x512", 11.0), *BASE[1:]],  # +10%
+    )
+    assert main([b, n, "--threshold", "0.05"]) == 1
+    assert main([b, n, "--threshold", "0.25"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# committed-baseline contract
+# ---------------------------------------------------------------------------
+
+
+def test_committed_baseline_parses_and_is_unique():
+    rows = load_rows(str(REPO / "BENCH_gemm.json"))
+    assert len(rows) > 10
+    # names unique by construction of the dict — also verify on the raw list
+    raw = json.loads((REPO / "BENCH_gemm.json").read_text())["rows"]
+    names = [r["name"] for r in raw]
+    assert len(names) == len(set(names))
+
+
+def test_baseline_sweep_rows_keyed_by_full_shape():
+    """The satellite fix: equal-flop shapes must not emit byte-identical
+    measurements (512x8192x512 vs 2048x2048x512 used to collide)."""
+    rows = load_rows(str(REPO / "BENCH_gemm.json"))
+    a = rows["gemm_sweep/512x8192x512"]["us_per_call"]
+    b = rows["gemm_sweep/2048x2048x512"]["us_per_call"]
+    c = rows["gemm_sweep/1024x4096x512"]["us_per_call"]
+    assert len({a, b, c}) == 3, (
+        f"sweep rows collapsed to flop-count keying: {a}, {b}, {c}"
+    )
+
+
+def test_shared_memory_floor_keys_by_shape():
+    from repro.core.perf_model import shared_memory_floor
+
+    f1 = shared_memory_floor(512, 8192, 512)
+    f2 = shared_memory_floor(2048, 2048, 512)
+    f3 = shared_memory_floor(1024, 4096, 512)
+    assert f1 > f3 > f2  # operand footprint grows with aspect ratio
