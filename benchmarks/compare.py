@@ -132,19 +132,39 @@ def main(argv: Optional[List[str]] = None) -> int:
     )
     args = p.parse_args(argv)
 
+    baseline_rows = load_rows(args.baseline)
     deltas, failures = compare(
-        load_rows(args.baseline),
+        baseline_rows,
         load_rows(args.new),
         threshold=args.threshold,
         gate_measured=args.gate_measured,
     )
     table = delta_table(deltas)
     print(table)
+    # gate-coverage growth: rows the new emission carries that the
+    # committed baseline does not — visible in the job summary so coverage
+    # expansion is an explicit, reviewable event
+    added = sorted(d["name"] for d in deltas if d["status"] == "added")
+    coverage = (
+        f"coverage: {len(baseline_rows)} baseline rows, "
+        f"{len(added)} newly covered vs the committed baseline"
+    )
+    print(f"\n{coverage}")
+    for name in added:
+        print(f"  + {name}")
     summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
     if summary_path:
         with open(summary_path, "a") as f:
             f.write("## Bench smoke vs committed baseline\n\n")
             f.write(table + "\n\n")
+            if added:
+                f.write(f"### Newly covered rows ({len(added)})\n\n")
+                for name in added:
+                    f.write(f"- `{name}`\n")
+                f.write(
+                    "\n(commit the regenerated `BENCH_gemm.json` to put "
+                    "them under the gate)\n\n"
+                )
             if failures:
                 f.write("### Regressions\n\n")
                 for msg in failures:

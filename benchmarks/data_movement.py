@@ -124,10 +124,36 @@ def run_train(n_workers: int = 256):
         )
 
 
+def run_train_update(n_workers: int = 256):
+    """Fused-optimizer rows: the same train cells with the AdamW step
+    charged — unfused (dW round-trips HBM between the TN flush and the
+    elementwise optimizer) vs fused (the TN-update flush; dW never leaves
+    VMEM).  The deleted dW read+write is the row's headline number."""
+    for (m, n, k) in TRAIN_SHAPES:
+        unf = simulate_train_gemm(
+            m, n, k, n_workers=n_workers, k_block_factor=2,
+            optimizer="unfused",
+        )
+        fus = simulate_train_gemm(
+            m, n, k, n_workers=n_workers, k_block_factor=2,
+            optimizer="fused",
+        )
+        emit(
+            f"data_movement/train_update/{m}x{n}x{k}",
+            fus["total_time_s"] * 1e6,
+            f"unfused_opt_GB={unf['opt_bytes']/1e9:.3f};"
+            f"fused_opt_GB={fus['opt_bytes']/1e9:.3f};"
+            f"dw_GB_deleted={fus['opt_saved_bytes']/1e9:.3f};"
+            f"opt_reduction={unf['opt_bytes']/fus['opt_bytes']:.2f}x;"
+            f"step_speedup={unf['total_time_s']/fus['total_time_s']:.3f}x",
+        )
+
+
 def main():
     run()
     run_glu()
     run_train()
+    run_train_update()
 
 
 if __name__ == "__main__":

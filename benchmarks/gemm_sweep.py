@@ -112,6 +112,56 @@ def run(full: bool = False, n_workers: int = 256, smoke: bool = False):
         emit(f"gemm_cpu_check/{m}x{n}x{k}", t_ref, f"xla_us={t_xla:.1f}")
 
 
+# MoE expert-GEMM backward cells: (n_experts, rows-per-expert, N, K) of the
+# grouped NT/TN launches a MoE train step issues (OLMoE-style expert MLP
+# slices at two dispatch loads)
+MOE_BWD_SHAPES = [
+    (8, 512, 1024, 2048),
+    (64, 128, 1024, 2048),
+]
+
+
+def run_backward(smoke: bool = False, n_workers: int = 256):
+    """Deterministic modeled rows for the *backward* sweep: each paper
+    shape's NT (dA) and TN (dW) buckets on their own output tile grids,
+    plus grouped/MoE expert cells — putting the training path under the
+    perf-regression gate, not just the forward."""
+    from repro.core.perf_model import backward_gemm_shapes
+
+    if smoke:
+        shapes = GEMM_SHAPES[:: max(1, len(GEMM_SHAPES) // 6)]
+    else:
+        shapes = GEMM_SHAPES[:: len(GEMM_SHAPES) // 25]
+    for (m, n, k) in shapes:
+        for op, (bm_, bn_, bk_) in backward_gemm_shapes(m, n, k).items():
+            best, sweep = choose_knobs_autotune(bm_, bn_, bk_, n_workers)
+            floor = shared_memory_floor(bm_, bn_, bk_)
+            t = sweep[best] + floor
+            fl = gemm_flops(bm_, bn_, bk_)
+            emit(
+                f"gemm_bwd/{m}x{n}x{k}/{op}",
+                t * 1e6,
+                f"bucket={bm_}x{bn_}x{bk_};tflops={fl/t/1e12:.1f};"
+                f"knobs=c{best[0]}k{best[1]};floor_us={floor*1e6:.3f}",
+            )
+    for (e, rows, n, k) in MOE_BWD_SHAPES:
+        for op, (bm_, bn_, bk_) in backward_gemm_shapes(rows, n, k).items():
+            # one expert's backward GEMM, charged E times (the grouped
+            # kernel walks the experts' grids back to back)
+            best, sweep = choose_knobs_autotune(
+                bm_, bn_, bk_, max(1, n_workers // e)
+            )
+            floor = shared_memory_floor(bm_, bn_, bk_)
+            t = (sweep[best] + floor) * e
+            fl = gemm_flops(bm_, bn_, bk_) * e
+            emit(
+                f"gemm_bwd/moe/{e}x{rows}x{n}x{k}/{op}",
+                t * 1e6,
+                f"bucket={e}x{bm_}x{bn_}x{bk_};tflops={fl/t/1e12:.1f};"
+                f"knobs=c{best[0]}k{best[1]}",
+            )
+
+
 def run_tune(shapes=None, cache_path=None, backward: bool = True):
     """Empirical-tuner regime: sweep measured candidates for each shape,
     persist winners, then demonstrate the warm path (second call = pure

@@ -63,12 +63,15 @@ def main(argv=None) -> None:
     print("name,us_per_call,derived")
     if args.smoke:
         gemm_sweep.run(smoke=True)       # paper Figs. 1 / 6 / 9 (subset)
+        gemm_sweep.run_backward(smoke=True)  # NT/TN + grouped/MoE buckets
         data_movement.run()              # paper Fig. 7
         data_movement.run_glu()          # fused gated-MLP HBM model
         data_movement.run_train()        # fwd + NT/TN backward traffic
+        data_movement.run_train_update()  # fused-optimizer flush rows
         llm_prefill.run(smoke=True)      # paper Fig. 10 (one cell)
     else:
         gemm_sweep.run(full=args.full)   # paper Figs. 1 / 6 / 9
+        gemm_sweep.run_backward()        # NT/TN + grouped/MoE buckets
         data_movement.main()             # paper Fig. 7 + fused gated-MLP
         knob_prediction.main()           # paper Fig. 8
         llm_prefill.main()               # paper Fig. 10

@@ -45,6 +45,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.optim.fused import FusedParam, ProbeParam, current_update_config
+
 __all__ = [
     "gemm_backend",
     "current_backend",
@@ -125,7 +127,33 @@ def matmul(
     shared across the batch) instead of flattening tokens into one huge M —
     the batched grid keeps each element's C patch VMEM-resident.  The
     epilogue runs inside the kernel flush under "sfc_pallas".
+
+    A `optim.fused.FusedParam` weight routes through the grad-and-update
+    VJP (`ops.fused_update_matmul`): same forward, but the backward applies
+    AdamW inside the TN kernel flush and returns the updated state through
+    the wrapper's cotangents.  A `ProbeParam` (routing discovery trace)
+    records the consumption and continues on the plain path.
     """
+    if isinstance(w, ProbeParam):
+        if out_scale is None and residual is None:
+            # call sites with epilogues the fused path cannot run are left
+            # unobserved -> the leaf stays on the unfused path
+            w.observe("matmul")
+        w = w.w
+    elif isinstance(w, FusedParam):
+        if out_scale is not None or residual is not None:
+            raise NotImplementedError(
+                "fused-optimizer routing does not support out_scale/residual "
+                "epilogues; exclude this weight via fused_filter"
+            )
+        from repro.kernels.ops import fused_update_matmul
+
+        return fused_update_matmul(
+            x, w.w, w.master, w.mu, w.nu, w.hyper, w.token,
+            bias=bias, activation=activation,
+            backend=_BACKEND.get(),
+            stochastic_round=current_update_config().stochastic_round,
+        )
     name = _BACKEND.get()
     if name == "xla" or w.ndim != 2:
         return _epilogue(
@@ -174,7 +202,45 @@ def glu_matmul(
     """Gated projection ``act(x@w_gate) * (x@w_val)`` through the active
     backend.  Under "sfc_pallas" the dual-B kernel traverses ``x`` once —
     two weight panels, two f32 accumulators, one fused flush — instead of
-    two full GEMMs plus an elementwise HBM round-trip."""
+    two full GEMMs plus an elementwise HBM round-trip.
+
+    `FusedParam` weights route through the dual grad-and-update VJP (both
+    AdamW updates fused into one dual TN flush); the pair must be routed
+    together — a half-wrapped GLU would mix a raw-gradient cotangent with
+    an updated-state one."""
+    probe = isinstance(w_gate, ProbeParam) or isinstance(w_val, ProbeParam)
+    if probe:
+        fusable = out_scale is None and residual is None
+        if isinstance(w_gate, ProbeParam):
+            if fusable:
+                w_gate.observe("glu")
+            w_gate = w_gate.w
+        if isinstance(w_val, ProbeParam):
+            if fusable:
+                w_val.observe("glu")
+            w_val = w_val.w
+    elif isinstance(w_gate, FusedParam) or isinstance(w_val, FusedParam):
+        if not (isinstance(w_gate, FusedParam) and isinstance(w_val, FusedParam)):
+            raise ValueError(
+                "GLU gate/value weights must be fused-routed together; "
+                "adjust fused_filter so both (or neither) match"
+            )
+        if out_scale is not None or residual is not None:
+            raise NotImplementedError(
+                "fused-optimizer routing does not support out_scale/residual "
+                "epilogues; exclude these weights via fused_filter"
+            )
+        from repro.kernels.ops import fused_update_glu_matmul
+
+        return fused_update_glu_matmul(
+            x, w_gate.w, w_val.w,
+            (w_gate.master, w_gate.mu, w_gate.nu),
+            (w_val.master, w_val.mu, w_val.nu),
+            w_val.hyper, (w_val.token, w_gate.token),
+            activation=activation, bias=bias, gate_bias=gate_bias,
+            backend=_BACKEND.get(),
+            stochastic_round=current_update_config().stochastic_round,
+        )
     name = _BACKEND.get()
     if name == "xla" or w_val.ndim != 2:
         g = x @ w_gate
@@ -251,6 +317,16 @@ def grouped_matmul(
     kernel launch (`ops.sfc_grouped_matmul`) with the epilogue fused into
     the flush.
     """
+    if isinstance(w, ProbeParam):
+        w.observe("grouped")  # seen as 3-D -> the probe leaves it unrouted
+        w = w.w
+    elif isinstance(w, FusedParam):
+        raise NotImplementedError(
+            "grouped (expert-stack) weights are not fused-routable yet — "
+            "the grouped TN-update kernel exists (ops."
+            "sfc_grouped_matmul_tn_update) but the MoE dispatch is not "
+            "threaded; exclude 3-D leaves via fused_filter"
+        )
     name = _BACKEND.get()
     if name == "xla":
         y = jnp.einsum("...eck,ekn->...ecn", x, w)
@@ -293,6 +369,18 @@ def grouped_glu_matmul(
     grouped kernel traverses the dispatched rows once for both expert
     weight stacks — the MoE SwiGLU's second read of the capacity buffer
     (and the elementwise round-trip) never touches HBM."""
+    unwrapped = []
+    for w_ in (w_gate, w_val):
+        if isinstance(w_, ProbeParam):
+            w_.observe("grouped")
+            w_ = w_.w
+        elif isinstance(w_, FusedParam):
+            raise NotImplementedError(
+                "grouped (expert-stack) weights are not fused-routable yet; "
+                "exclude 3-D leaves via fused_filter"
+            )
+        unwrapped.append(w_)
+    w_gate, w_val = unwrapped
     name = _BACKEND.get()
     if name == "xla":
         g_ = jnp.einsum("...eck,ekn->...ecn", x, w_gate)

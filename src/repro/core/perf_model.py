@@ -45,6 +45,7 @@ __all__ = [
     "simulate_train_gemm",
     "shared_memory_floor",
     "backward_gemm_shapes",
+    "optimizer_update_bytes",
     "analytical_time",
     "roofline_best_time",
     "train_roofline_time",
@@ -322,6 +323,34 @@ def backward_gemm_shapes(M: int, N: int, K: int) -> Dict[str, Tuple[int, int, in
     return {"nt": (M, K, N), "tn": (K, N, M)}
 
 
+def optimizer_update_bytes(
+    K: int,
+    N: int,
+    *,
+    fused: bool,
+    param_bytes: int = 2,
+    grad_bytes: int = 4,
+    state_bytes: int = 4,
+) -> float:
+    """HBM bytes of one AdamW step over a (K, N) weight.
+
+    unfused: the TN kernel writes dW (f32) to HBM, the elementwise
+    optimizer reads it back plus (mu, nu, master) and writes (mu, nu,
+    master) plus the cast param — the dW round-trip is pure overhead,
+    ~``2*grad_bytes/param_bytes``x the weight's own bytes.
+
+    fused: the update runs in the TN flush — dW never leaves VMEM; only
+    the compulsory state round-trip (read+write mu/nu/master) and the
+    param write remain.
+    """
+    state = K * N * state_bytes * 3 * 2  # mu/nu/master read + write
+    param = K * N * param_bytes  # W_new write
+    if fused:
+        return state + param
+    dw = K * N * grad_bytes * 2  # dW: TN flush write + optimizer read
+    return dw + state + param
+
+
 def simulate_train_gemm(
     M: int,
     N: int,
@@ -334,10 +363,18 @@ def simulate_train_gemm(
     bn: int = 256,
     hw: HardwareModel = TPU_V5E,
     dtype_bytes: int = 2,
+    optimizer: Optional[str] = None,  # None | "unfused" | "fused"
 ) -> Dict[str, float]:
     """Model one projection's *training* step: forward GEMM plus the two
     backward GEMMs (dA via NT, dB via TN), each simulated on its own output
     tile grid — the backward traffic the roofline/benchmarks report.
+
+    ``optimizer`` adds the AdamW-step traffic for the (K, N) weight:
+    "unfused" charges the dW HBM round-trip (TN flush write + optimizer
+    read) plus the moment/master state traffic; "fused" drops the dW terms
+    entirely (the TN-update flush) leaving only the compulsory state
+    round-trip — the deleted ``opt_saved_bytes`` is reported so the win is
+    quantified, not asserted.
 
     Returns per-phase times/bytes and totals; ``bwd_to_fwd`` is the modeled
     backward:forward cost ratio (≈2 for square shapes, higher when a
@@ -362,6 +399,19 @@ def simulate_train_gemm(
         out[f"{name}_bytes"] = r["slow_bytes_total"]
         total_t += t
         total_b += r["slow_bytes_total"]
+    if optimizer is not None:
+        if optimizer not in ("unfused", "fused"):
+            raise ValueError(f"optimizer={optimizer!r}")
+        ob = optimizer_update_bytes(
+            K, N, fused=optimizer == "fused", param_bytes=dtype_bytes
+        )
+        out["opt_bytes"] = ob
+        out["opt_time_s"] = ob * hw.beta
+        out["opt_saved_bytes"] = optimizer_update_bytes(
+            K, N, fused=False, param_bytes=dtype_bytes
+        ) - optimizer_update_bytes(K, N, fused=True, param_bytes=dtype_bytes)
+        total_t += out["opt_time_s"]
+        total_b += ob
     out["total_time_s"] = total_t
     out["total_bytes"] = total_b
     out["bwd_to_fwd"] = (

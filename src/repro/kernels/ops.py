@@ -66,8 +66,12 @@ __all__ = [
     "sfc_grouped_glu_matmul",
     "sfc_matmul_nt",
     "sfc_matmul_tn",
+    "sfc_matmul_tn_update",
     "sfc_grouped_matmul_nt",
     "sfc_grouped_matmul_tn",
+    "sfc_grouped_matmul_tn_update",
+    "fused_update_matmul",
+    "fused_update_glu_matmul",
     "default_interpret",
     "pick_blocks",
     "resolve_knobs",
@@ -205,11 +209,15 @@ def fused_path_fits_vmem(
     *,
     glu: bool = False,
     has_residual: bool = False,
+    opt_tile_sets: int = 0,
 ) -> bool:
     """Does one fused grid step's working set fit the VMEM budget?
 
     Double-buffered A + B (x2 for GLU) panels, one f32 accumulator per B,
-    the output tile and any resident epilogue operands."""
+    the output tile and any resident epilogue operands.  ``opt_tile_sets``
+    counts grad-and-update flush sets: each adds 3 resident f32 input tiles
+    (master/mu/nu) and 4 output tiles (W_new + three f32 states) — this is
+    why the update flush owns its own ``op="tn_update"`` tune namespace."""
     n_b = 2 if glu else 1
     panels = (bm * k_chunk + n_b * k_chunk * bn) * dtype_bytes * 2
     accs = bm * bn * 4 * n_b
@@ -217,6 +225,8 @@ def fused_path_fits_vmem(
     if has_residual:
         tiles += bm * bn * dtype_bytes
     tiles += 2 * bn * dtype_bytes  # bias / gate-bias rows (negligible)
+    if opt_tile_sets:
+        tiles += opt_tile_sets * bm * bn * (3 * 4 + 3 * 4 + out_bytes)
     return panels + accs + tiles <= _FUSED_VMEM_BYTES
 
 
@@ -470,6 +480,7 @@ def _bump_kbf_to_fit(
     out_dtype,
     *,
     dual: bool,
+    opt_tile_sets: int = 0,
 ) -> int:
     """The backward kernels have no replicated fallback: if the working set
     of one grid step overflows the VMEM budget, chunk the contraction
@@ -478,7 +489,7 @@ def _bump_kbf_to_fit(
     out_bytes = jnp.dtype(out_dtype).itemsize
     while kbf < max(contract, 1) and not fused_path_fits_vmem(
         bm, bn, _round_up(contract, k_layers * kbf) // (k_layers * kbf),
-        dtype_bytes, out_bytes, glu=dual,
+        dtype_bytes, out_bytes, glu=dual, opt_tile_sets=opt_tile_sets,
     ):
         kbf *= 2
     return kbf
@@ -502,8 +513,10 @@ def sfc_matmul_nt(
     traversal).  Leading batch dims of ``a`` fold into M (the (N, K) operand
     is shared), and arbitrary shapes are zero-padded.
 
-    Knobs left as None resolve through the ``op="nt"`` tune-cache namespace:
-    backward shapes differ from forward and deserve their own winners.
+    Knobs left as None resolve through the ``op="nt"`` tune-cache namespace
+    (``"nt_dual"`` for the dual form — two extra streamed panels change the
+    knob landscape, mirroring the forward gemm/glu split): backward shapes
+    differ from forward and deserve their own winners.
     """
     if interpret is None:
         interpret = default_interpret()
@@ -518,7 +531,8 @@ def sfc_matmul_nt(
 
     auto_kbf = k_block_factor is None
     bm, bn, k_layers, k_block_factor = _resolve_knobs(
-        m, n, k, a.dtype, bm, bn, k_layers, k_block_factor, "nt"
+        m, n, k, a.dtype, bm, bn, k_layers, k_block_factor,
+        "nt_dual" if dual else "nt",
     )
     if auto_kbf:
         k_block_factor = _bump_kbf_to_fit(
@@ -563,7 +577,8 @@ def sfc_matmul_tn(
     (``dW = Aᵀ @ dC``); with ``b2`` one activation traversal flushes both
     weight grads (the GLU dWv/dWg pair).  Leading batch dims fold into the
     contraction (the weight grad sums over them); arbitrary shapes are
-    zero-padded.  Knobs resolve through the ``op="tn"`` namespace.
+    zero-padded.  Knobs resolve through the ``op="tn"`` namespace
+    (``"tn_dual"`` for the dual form).
     """
     if interpret is None:
         interpret = default_interpret()
@@ -579,7 +594,8 @@ def sfc_matmul_tn(
     auto_kbf = k_block_factor is None
     # the output is (K, N); the contraction runs over M
     bm, bn, k_layers, k_block_factor = _resolve_knobs(
-        k, n, m, a.dtype, bm, bn, k_layers, k_block_factor, "tn"
+        k, n, m, a.dtype, bm, bn, k_layers, k_block_factor,
+        "tn_dual" if dual else "tn",
     )
     if auto_kbf:
         k_block_factor = _bump_kbf_to_fit(
@@ -607,6 +623,268 @@ def sfc_matmul_tn(
     if dual:
         return out[0][:k, :n], out[1][:k, :n]
     return out[:k, :n]
+
+
+# ---------------------------------------------------------------------------
+# grad-and-update (fused optimizer) entry points
+# ---------------------------------------------------------------------------
+
+
+def _pad_state(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    """Zero-pad the trailing (K, N) dims of a weight/moment tensor.  Zero
+    padding is closed under the update: g = 0 there, so every padded state
+    element maps 0 -> 0 and the slice-back is exact."""
+    pad = [(0, 0)] * (x.ndim - 2) + [
+        (0, rows - x.shape[-2]),
+        (0, cols - x.shape[-1]),
+    ]
+    if any(p != (0, 0) for p in pad):
+        return jnp.pad(x, pad)
+    return x
+
+
+def _jnp_update(dw, master, mu, nu, hyper, *, param_dtype, stochastic_round):
+    """Host-side (non-Pallas) AdamW step from the packed hyper vector — the
+    empty-input fallback for the grouped update and the semantics oracle
+    pieces share this."""
+    from repro.kernels.sfc_gemm import stochastic_round_to, tile_random_bits
+    from repro.optim.adamw import (
+        HYP_B1,
+        HYP_B1C,
+        HYP_B2,
+        HYP_B2C,
+        HYP_EPS,
+        HYP_LR,
+        HYP_SALT,
+        HYP_SCALE,
+        HYP_SEED,
+        HYP_WD,
+        adamw_leaf_update,
+        seed_from_lane,
+    )
+
+    g0 = dw.astype(jnp.float32)
+    sq = jnp.sum(g0 * g0)
+    # the one shared AdamW leaf program, scalars from the hyper lanes
+    mu_n, nu_n, mst_n = adamw_leaf_update(
+        g0, mu, nu, master,
+        lr=hyper[HYP_LR], b1=hyper[HYP_B1], b2=hyper[HYP_B2],
+        eps=hyper[HYP_EPS], weight_decay=hyper[HYP_WD],
+        b1c=hyper[HYP_B1C], b2c=hyper[HYP_B2C], scale=hyper[HYP_SCALE],
+    )
+    if stochastic_round and jnp.dtype(param_dtype) == jnp.dtype(jnp.bfloat16):
+        flat = mst_n.reshape(-1, mst_n.shape[-1])
+        seed = seed_from_lane(hyper[HYP_SEED]) ^ (
+            seed_from_lane(hyper[HYP_SALT]) * jnp.int32(0x85EB)
+        )
+        bits = tile_random_bits(flat.shape, seed, hw_rng=False)
+        w_n = stochastic_round_to(flat, bits, param_dtype).reshape(mst_n.shape)
+    else:
+        w_n = mst_n.astype(param_dtype)
+    return w_n, mst_n, mu_n, nu_n, sq
+
+
+def sfc_matmul_tn_update(
+    a: jax.Array,  # (..., M, K) forward activations (leading dims fold)
+    dy: jax.Array,  # (..., M, N) output cotangent
+    master: jax.Array,  # (K, N) f32 master weights
+    mu: jax.Array,  # (K, N) f32
+    nu: jax.Array,  # (K, N) f32
+    hyper: jax.Array,  # (12,) f32 `optim.adamw.pack_adamw_hyper` vector
+    dy2: Optional[jax.Array] = None,  # (..., M, N) second cotangent (GLU)
+    master2: Optional[jax.Array] = None,
+    mu2: Optional[jax.Array] = None,
+    nu2: Optional[jax.Array] = None,
+    *,
+    param_dtype=None,
+    stochastic_round: bool = False,
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+    k_layers: Optional[int] = None,
+    k_block_factor: Optional[int] = None,
+    interpret: Optional[bool] = None,
+):
+    """Fused dW-and-AdamW: one TN launch computes ``dW = Aᵀ @ dY`` in the
+    f32 accumulator and applies the update in the flush — returns
+    ``(W_new, master', mu', nu', sum(dW^2))`` (dual: one tuple per weight
+    set plus a pair of norms).  The raw gradient never touches HBM.
+
+    Knobs resolve through the ``op="tn_update"`` namespace (dual:
+    ``"tn_update_dual"``) — the flush's extra resident state tiles change
+    the VMEM footprint, so TN winners do not transfer.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    a2d = a.reshape(-1, a.shape[-1])
+    b2d = dy.reshape(-1, dy.shape[-1])
+    b22d = dy2.reshape(-1, dy2.shape[-1]) if dy2 is not None else None
+    m, k = a2d.shape
+    m2, n = b2d.shape
+    assert m == m2, (a.shape, dy.shape)
+    assert master.shape == (k, n), (master.shape, (k, n))
+    dual = dy2 is not None
+    param_dtype = jnp.dtype(param_dtype or a.dtype)
+
+    auto_kbf = k_block_factor is None
+    opt_sets = 2 if dual else 1
+    bm, bn, k_layers, k_block_factor = _resolve_knobs(
+        k, n, m, a.dtype, bm, bn, k_layers, k_block_factor,
+        "tn_update_dual" if dual else "tn_update",
+    )
+    if auto_kbf:
+        k_block_factor = _bump_kbf_to_fit(
+            bm, bn, m, k_layers, k_block_factor, a.dtype, jnp.float32,
+            dual=dual, opt_tile_sets=opt_sets,
+        )
+
+    kp = _round_up(k, bm)
+    np_ = _round_up(n, bn)
+    mp = _round_up(m, k_layers * k_block_factor)
+
+    def pad2(x, rows, cols):
+        if x is None:
+            return None
+        r, c = x.shape
+        if r != rows or c != cols:
+            return jnp.pad(x, ((0, rows - r), (0, cols - c)))
+        return x
+
+    f32 = jnp.float32
+    out = sfc_gemm_tn(
+        pad2(a2d, mp, kp),
+        pad2(b2d, mp, np_),
+        pad2(b22d, mp, np_),
+        _pad_state(master.astype(f32), kp, np_),
+        _pad_state(mu.astype(f32), kp, np_),
+        _pad_state(nu.astype(f32), kp, np_),
+        _pad_state(master2.astype(f32), kp, np_) if dual else None,
+        _pad_state(mu2.astype(f32), kp, np_) if dual else None,
+        _pad_state(nu2.astype(f32), kp, np_) if dual else None,
+        hyper.astype(f32),
+        bm=bm, bn=bn,
+        k_layers=k_layers, k_block_factor=k_block_factor,
+        interpret=interpret, out_dtype=f32,
+        update_dtype=param_dtype, stochastic_round=stochastic_round,
+    )
+
+    def crop(set_):
+        w_n, mst_n, mu_n, nu_n = set_
+        return (
+            w_n[:k, :n],
+            mst_n[:k, :n],
+            mu_n[:k, :n],
+            nu_n[:k, :n],
+        )
+
+    if dual:
+        norm = out[8]
+        return (
+            (*crop(out[0:4]), norm[0, 0]),
+            (*crop(out[4:8]), norm[1, 0]),
+        )
+    return (*crop(out[0:4]), out[4][0, 0])
+
+
+def sfc_grouped_matmul_tn_update(
+    a: jax.Array,  # (T, K) rows sorted by group (forward activations)
+    dy: jax.Array,  # (T, N) rows sorted by group (output cotangent)
+    group_sizes: Sequence[int],
+    master: jax.Array,  # (E, K, N) f32
+    mu: jax.Array,
+    nu: jax.Array,
+    hyper: jax.Array,  # (12,) f32
+    dy2: Optional[jax.Array] = None,
+    master2: Optional[jax.Array] = None,
+    mu2: Optional[jax.Array] = None,
+    nu2: Optional[jax.Array] = None,
+    *,
+    param_dtype=None,
+    stochastic_round: bool = False,
+    row_block: Optional[int] = None,
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+    interpret: Optional[bool] = None,
+):
+    """Grouped grad-and-update: per-expert ``dW[e] = a[rows of e]ᵀ @
+    dy[rows of e]`` fused with the AdamW step over the (E, K, N) stacks —
+    the expert weight-grad stack never materializes.  Empty dispatch
+    (no rows at all) falls back to the elementwise g = 0 update."""
+    if interpret is None:
+        interpret = default_interpret()
+    t, k = a.shape
+    t2, n = dy.shape
+    assert t == t2, (a.shape, dy.shape)
+    dual = dy2 is not None
+    group_sizes = tuple(int(g) for g in group_sizes)
+    e_cnt = len(group_sizes)
+    assert master.shape == (e_cnt, k, n), (master.shape, (e_cnt, k, n))
+    param_dtype = jnp.dtype(param_dtype or a.dtype)
+    f32 = jnp.float32
+
+    def empty_update(mst, m_, v_):
+        dw = jnp.zeros((e_cnt, k, n), f32)
+        return _jnp_update(
+            dw, mst.astype(f32), m_.astype(f32), v_.astype(f32), hyper,
+            param_dtype=param_dtype, stochastic_round=stochastic_round,
+        )
+
+    if bm is None or bn is None:
+        pbm, pbn, _ = pick_blocks(k, n, max(t, 1))
+        bm = bm or min(pbm, 128)
+        bn = bn or min(pbn, 128)
+    if row_block is None:
+        max_g = max(group_sizes) if group_sizes else 1
+        row_block = min(128, _round_up(max(max_g, 8), 8))
+        dtype_bytes = jnp.dtype(a.dtype).itemsize
+        while row_block > 8 and not fused_path_fits_vmem(
+            bm, bn, row_block, dtype_bytes, 4, glu=dual,
+            opt_tile_sets=2 if dual else 1,
+        ):
+            row_block //= 2
+
+    kp = _round_up(k, bm)
+    np_ = _round_up(n, bn)
+    a_p, row_blocks = _grouped_row_pad(a, group_sizes, row_block, kp)
+    if a_p is None:
+        one = empty_update(master, mu, nu)
+        if dual:
+            return one, empty_update(master2, mu2, nu2)
+        return one
+    b_p, _ = _grouped_row_pad(dy, group_sizes, row_block, np_)
+    b2_p = None
+    if dual:
+        b2_p, _ = _grouped_row_pad(dy2, group_sizes, row_block, np_)
+
+    out = sfc_gemm_grouped_tn(
+        a_p, b_p, b2_p,
+        _pad_state(master.astype(f32), kp, np_),
+        _pad_state(mu.astype(f32), kp, np_),
+        _pad_state(nu.astype(f32), kp, np_),
+        _pad_state(master2.astype(f32), kp, np_) if dual else None,
+        _pad_state(mu2.astype(f32), kp, np_) if dual else None,
+        _pad_state(nu2.astype(f32), kp, np_) if dual else None,
+        hyper.astype(f32),
+        row_blocks=row_blocks, row_block=row_block,
+        bm=bm, bn=bn, interpret=interpret, out_dtype=f32,
+        update_dtype=param_dtype, stochastic_round=stochastic_round,
+    )
+
+    def crop(set_):
+        w_n, mst_n, mu_n, nu_n = set_
+        return (
+            w_n[:, :k, :n],
+            mst_n[:, :k, :n],
+            mu_n[:, :k, :n],
+            nu_n[:, :k, :n],
+        )
+
+    if dual:
+        norm = out[8]
+        return (
+            (*crop(out[0:4]), norm[0, 0]),
+            (*crop(out[4:8]), norm[1, 0]),
+        )
+    return (*crop(out[0:4]), out[4][0, 0])
 
 
 def _grouped_row_pad(
@@ -855,26 +1133,34 @@ def _matmul_core_fwd(cfg, a, b, b_gate, bias, gate_bias, residual):
     return out, (a, b, b_gate, h_pre, g_pre, bias, gate_bias, res_meta)
 
 
-def _matmul_core_bwd(cfg, saved, dy):
-    a, b, b_gate, h_pre, g_pre, bias, gate_bias, res_meta = saved
-    interp = cfg.interpret
+def _epilogue_cotangents(glu, activation, out_scale, h_pre, g_pre, dy):
+    """(dh, dg) f32 cotangents of the biased pre-activations given dy —
+    the epilogue-derivative prelude shared by every backward path."""
     dyf = dy.astype(jnp.float32)
-    dres = dy.astype(res_meta.dtype) if res_meta is not None else None
-    if cfg.out_scale is not None:
-        dyf = dyf * cfg.out_scale
-
-    if cfg.glu:
-        act = activation_fn(cfg.activation)
+    if out_scale is not None:
+        dyf = dyf * out_scale
+    if glu:
+        act = activation_fn(activation)
         ag, act_vjp = jax.vjp(act, g_pre.astype(jnp.float32))
         dh = dyf * ag
         dg = act_vjp(dyf * h_pre.astype(jnp.float32))[0]
-    elif cfg.activation is not None:
-        act = activation_fn(cfg.activation)
+    elif activation is not None:
+        act = activation_fn(activation)
         _, act_vjp = jax.vjp(act, h_pre.astype(jnp.float32))
         dh = act_vjp(dyf)[0]
         dg = None
     else:
         dh, dg = dyf, None
+    return dh, dg
+
+
+def _matmul_core_bwd(cfg, saved, dy):
+    a, b, b_gate, h_pre, g_pre, bias, gate_bias, res_meta = saved
+    interp = cfg.interpret
+    dres = dy.astype(res_meta.dtype) if res_meta is not None else None
+    dh, dg = _epilogue_cotangents(
+        cfg.glu, cfg.activation, cfg.out_scale, h_pre, g_pre, dy
+    )
 
     cdt = a.dtype  # backward kernels run in the forward compute dtype
     dh_c = dh.astype(cdt)
@@ -934,6 +1220,269 @@ def _matmul_core_bwd(cfg, saved, dy):
 
 
 _matmul_core.defvjp(_matmul_core_fwd, _matmul_core_bwd)
+
+
+# ---------------------------------------------------------------------------
+# fused-optimizer custom VJPs: the update runs inside the backward pass
+#
+# A routed weight's "cotangent" is not its gradient — it is the *applied
+# AdamW update*: the bwd rule launches the TN grad-and-update kernel and
+# returns (W_new, master', mu', nu', sum(dW^2)) through the cotangent slots
+# of the `optim.fused.FusedParam` children.  `jax.grad` of the loss then
+# hands the train step the updated state directly; no standalone optimizer
+# pass exists for routed weights and dW never touches HBM.
+#
+# ``fused=False`` (the "xla"/"sfc_reference" backends) is the semantics
+# oracle: plain-autodiff backward GEMMs composed with the same packed-hyper
+# elementwise update — the unfused composition differential tests compare
+# the kernel flush against.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _UpdateVjpCfg:
+    base: _VjpCfg
+    fused: bool  # sfc_pallas NT/TN-update kernels vs the jnp oracle
+    stochastic_round: bool
+
+
+def _oracle_primal_parts(cfg, a, b, b_gate, bias, gate_bias):
+    """(callable, args) for the plain-jnp primal of the unfused oracle."""
+    glu = cfg.base.glu
+    have_bias = bias is not None
+    have_gbias = gate_bias is not None
+
+    def prim(*args):
+        it = iter(args)
+        a_ = next(it)
+        b_ = next(it)
+        bg_ = next(it) if glu else None
+        bi_ = next(it) if have_bias else None
+        gb_ = next(it) if have_gbias else None
+        h = a_ @ b_
+        if bi_ is not None:
+            h = h + bi_
+        if glu:
+            g = a_ @ bg_
+            if gb_ is not None:
+                g = g + gb_
+            return activation_fn(cfg.base.activation)(g) * h
+        if cfg.base.activation is not None:
+            return activation_fn(cfg.base.activation)(h)
+        return h
+
+    args = [a, b]
+    if glu:
+        args.append(b_gate)
+    if have_bias:
+        args.append(bias)
+    if have_gbias:
+        args.append(gate_bias)
+    return prim, args
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _update_core(cfg, a, b, b_gate, bias, gate_bias, opt, hyper, token):
+    del opt, hyper, token  # consumed by the backward rule only
+    if not cfg.fused:
+        prim, args = _oracle_primal_parts(cfg, a, b, b_gate, bias, gate_bias)
+        return prim(*args)
+    return _matmul_impl(
+        a, b, b_gate,
+        bias=bias, gate_bias=gate_bias, residual=None,
+        activation=cfg.base.activation, out_scale=None,
+        bm=cfg.base.bm, bn=cfg.base.bn,
+        k_layers=cfg.base.k_layers, k_block_factor=cfg.base.k_block_factor,
+        interpret=cfg.base.interpret, out_dtype=cfg.base.out_dtype,
+        fuse=cfg.base.fuse,
+    )
+
+
+def _update_core_fwd(cfg, a, b, b_gate, bias, gate_bias, opt, hyper, token):
+    del token
+    if not cfg.fused:
+        prim, args = _oracle_primal_parts(cfg, a, b, b_gate, bias, gate_bias)
+        y, f_vjp = jax.vjp(prim, *args)
+        return y, (f_vjp, a, b, b_gate, bias, gate_bias, opt, hyper)
+    out, saved = _matmul_core_fwd(cfg.base, a, b, b_gate, bias, gate_bias, None)
+    a_, b_, bg_, h_pre, g_pre, bias_, gbias_, _ = saved
+    return out, (a_, b_, bg_, h_pre, g_pre, bias_, gbias_, opt, hyper)
+
+
+def _run_tn_update(cfg, a2d, dh_c, dg_c, b, b_gate, opt, hyper):
+    """Dispatch the (possibly dual) fused TN update; returns the cotangent
+    pieces (w_cots, opt_cots, token_cots) in primal argument structure."""
+    interp = cfg.base.interpret
+    n = b.shape[-1]
+    if dg_c is not None:
+        if b_gate.dtype != b.dtype:
+            # one _TnUpdate.param_dtype serves both flush sets — a silent
+            # cast would round the gate weights through the value dtype
+            raise NotImplementedError(
+                f"fused GLU update requires matching weight dtypes, got "
+                f"value={b.dtype} gate={b_gate.dtype}; exclude the pair "
+                "via fused_filter"
+            )
+        (ov, og) = opt
+        set_v, set_g = sfc_matmul_tn_update(
+            a2d, dh_c.reshape(-1, n), ov[0], ov[1], ov[2], hyper,
+            dg_c.reshape(-1, n), og[0], og[1], og[2],
+            param_dtype=b.dtype, stochastic_round=cfg.stochastic_round,
+            interpret=interp,
+        )
+        wv, mv, muv, nuv, sqv = set_v
+        wg, mg, mug, nug, sqg = set_g
+        return (
+            (wv, wg),
+            ((mv, muv, nuv), (mg, mug, nug)),
+            (sqv, sqg),
+        )
+    (mst, mu, nu) = opt
+    w_n, mst_n, mu_n, nu_n, sq = sfc_matmul_tn_update(
+        a2d, dh_c.reshape(-1, n), mst, mu, nu, hyper,
+        param_dtype=b.dtype, stochastic_round=cfg.stochastic_round,
+        interpret=interp,
+    )
+    return ((w_n, None), (mst_n, mu_n, nu_n), sq)
+
+
+def _oracle_update(cfg, dw, opt_leaf, param_dtype, hyper):
+    w_n, mst_n, mu_n, nu_n, sq = _jnp_update(
+        dw, opt_leaf[0], opt_leaf[1], opt_leaf[2], hyper,
+        param_dtype=param_dtype, stochastic_round=cfg.stochastic_round,
+    )
+    return w_n, (mst_n, mu_n, nu_n), sq
+
+
+def _update_core_bwd(cfg, saved, dy):
+    glu = cfg.base.glu
+    if not cfg.fused:
+        f_vjp, a, b, b_gate, bias, gate_bias, opt, hyper = saved
+        cots = list(f_vjp(dy))
+        da = cots.pop(0)
+        dw = cots.pop(0)
+        dwg = cots.pop(0) if glu else None
+        dbias = cots.pop(0) if bias is not None else None
+        dgbias = cots.pop(0) if gate_bias is not None else None
+        if glu:
+            ov, og = opt
+            w_v, opt_v, sq_v = _oracle_update(cfg, dw, ov, b.dtype, hyper)
+            w_g, opt_g, sq_g = _oracle_update(
+                cfg, dwg, og, b_gate.dtype, hyper
+            )
+            return (
+                da, w_v, w_g, dbias, dgbias,
+                (opt_v, opt_g), jnp.zeros_like(hyper), (sq_v, sq_g),
+            )
+        w_n, opt_n, sq = _oracle_update(cfg, dw, opt, b.dtype, hyper)
+        return (
+            da, w_n, None, dbias, dgbias,
+            opt_n, jnp.zeros_like(hyper), sq,
+        )
+
+    a, b, b_gate, h_pre, g_pre, bias, gate_bias, opt, hyper = saved
+    interp = cfg.base.interpret
+    dh, dg = _epilogue_cotangents(glu, cfg.base.activation, None, h_pre, g_pre, dy)
+    cdt = a.dtype  # backward kernels run in the forward compute dtype
+    dh_c = dh.astype(cdt)
+    dg_c = dg.astype(cdt) if dg is not None else None
+
+    da = sfc_matmul_nt(
+        dh_c, b,
+        dg_c, b_gate if dg_c is not None else None,
+        interpret=interp, out_dtype=jnp.float32,
+    )
+    a2d = a.reshape(-1, a.shape[-1])
+    (w_v, w_g), opt_cots, token_cots = _run_tn_update(
+        cfg, a2d, dh_c, dg_c, b, b_gate, opt, hyper
+    )
+
+    lead_axes = tuple(range(dh.ndim - 1))
+    dbias = None
+    if bias is not None:
+        dbias = dh.sum(axis=lead_axes).reshape(bias.shape).astype(bias.dtype)
+    dgbias = None
+    if gate_bias is not None:
+        dgbias = (
+            dg.sum(axis=lead_axes).reshape(gate_bias.shape)
+            .astype(gate_bias.dtype)
+        )
+    return (
+        da.astype(a.dtype), w_v, w_g, dbias, dgbias,
+        opt_cots, jnp.zeros_like(hyper), token_cots,
+    )
+
+
+_update_core.defvjp(_update_core_fwd, _update_core_bwd)
+
+
+def fused_update_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    master: jax.Array,
+    mu: jax.Array,
+    nu: jax.Array,
+    hyper: jax.Array,
+    token: jax.Array,
+    *,
+    bias: Optional[jax.Array] = None,
+    activation: Optional[str] = None,
+    backend: str = "sfc_pallas",
+    stochastic_round: bool = True,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Projection whose backward applies AdamW in the TN flush.
+
+    Forward: ``epilogue(x @ w)`` exactly like `sfc_matmul` (or the plain
+    jnp program under the non-Pallas oracle backends).  Backward: dA flows
+    on as usual, while the cotangents of (w, master, mu, nu, token) carry
+    (W_new, master', mu', nu', sum(dW^2)) — see `optim.fused`."""
+    cfg = _UpdateVjpCfg(
+        base=_VjpCfg(
+            glu=False, activation=activation, out_scale=None,
+            bm=None, bn=None, k_layers=None, k_block_factor=None,
+            interpret=interpret, out_dtype=None, fuse=None,
+        ),
+        fused=backend == "sfc_pallas",
+        stochastic_round=stochastic_round,
+    )
+    return _update_core(
+        cfg, x, w, None, bias, None, (master, mu, nu), hyper, token
+    )
+
+
+def fused_update_glu_matmul(
+    x: jax.Array,
+    w_gate: jax.Array,
+    w_val: jax.Array,
+    opt_gate: Tuple[jax.Array, jax.Array, jax.Array],
+    opt_val: Tuple[jax.Array, jax.Array, jax.Array],
+    hyper: jax.Array,
+    tokens: Tuple[jax.Array, jax.Array],  # (token_val, token_gate)
+    *,
+    activation: str = "silu",
+    bias: Optional[jax.Array] = None,
+    gate_bias: Optional[jax.Array] = None,
+    backend: str = "sfc_pallas",
+    stochastic_round: bool = True,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Gated projection with both weight updates fused into one dual TN
+    flush: the activation slab streams once for (dWv, dWg) and both AdamW
+    updates; cotangent slots return both updated weight sets."""
+    cfg = _UpdateVjpCfg(
+        base=_VjpCfg(
+            glu=True, activation=activation, out_scale=None,
+            bm=None, bn=None, k_layers=None, k_block_factor=None,
+            interpret=interpret, out_dtype=None, fuse=None,
+        ),
+        fused=backend == "sfc_pallas",
+        stochastic_round=stochastic_round,
+    )
+    return _update_core(
+        cfg, x, w_val, w_gate, bias, gate_bias,
+        (opt_val, opt_gate), hyper, tokens,
+    )
 
 
 def sfc_matmul(
@@ -1184,22 +1733,9 @@ def _grouped_core_bwd(cfg, saved, dy):
     a, b, b_gate, h_pre, g_pre, bias, gate_bias = saved
     interp = cfg.interpret
     gs = cfg.group_sizes
-    dyf = dy.astype(jnp.float32)
-    if cfg.out_scale is not None:
-        dyf = dyf * cfg.out_scale
-
-    if cfg.glu:
-        act = activation_fn(cfg.activation)
-        ag, act_vjp = jax.vjp(act, g_pre.astype(jnp.float32))
-        dh = dyf * ag
-        dg = act_vjp(dyf * h_pre.astype(jnp.float32))[0]
-    elif cfg.activation is not None:
-        act = activation_fn(cfg.activation)
-        _, act_vjp = jax.vjp(act, h_pre.astype(jnp.float32))
-        dh = act_vjp(dyf)[0]
-        dg = None
-    else:
-        dh, dg = dyf, None
+    dh, dg = _epilogue_cotangents(
+        cfg.glu, cfg.activation, cfg.out_scale, h_pre, g_pre, dy
+    )
 
     cdt = a.dtype
     dh_c = dh.astype(cdt)

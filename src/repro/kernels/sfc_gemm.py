@@ -62,6 +62,21 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.sfc import create_sfc_map
 from repro.kernels.pallas_compat import CompilerParams as _CompilerParams
+from repro.optim.adamw import (
+    HYP_B1,
+    HYP_B1C,
+    HYP_B2,
+    HYP_B2C,
+    HYP_EPS,
+    HYP_LR,
+    HYP_SALT,
+    HYP_SCALE,
+    HYP_SEED,
+    HYP_WD,
+    HYP_1MB1,
+    HYP_1MB2,
+    seed_from_lane,
+)
 
 __all__ = [
     "sfc_gemm_pallas",
@@ -78,6 +93,8 @@ __all__ = [
     "build_grouped_task_table",
     "build_grouped_tn_task_table",
     "activation_fn",
+    "stochastic_round_to",
+    "tile_random_bits",
     "ACTIVATIONS",
 ]
 
@@ -924,6 +941,131 @@ def sfc_gemm_grouped(
 
 
 # ---------------------------------------------------------------------------
+# stochastic rounding + the TN grad-and-update flush
+#
+# The fused-optimizer flush casts the updated f32 master weight to the
+# param dtype inside the kernel; for bf16 the cast rounds *stochastically*
+# (the standard low-precision-training trick: E[round(x)] == x, so update
+# increments smaller than one bf16 ulp are preserved in expectation instead
+# of being swallowed by round-to-nearest).  Random bits come from the TPU
+# per-core PRNG (`pltpu.prng_seed` / `pltpu.prng_random_bits`) on real
+# Mosaic lowering, and from a counter-based integer hash in interpret mode
+# (the TPU PRNG has no CPU lowering); both are seeded deterministically per
+# (step, output tile), so a fixed step re-runs bit-identically per backend.
+# ---------------------------------------------------------------------------
+
+
+def _hash_u32(x: jax.Array) -> jax.Array:
+    """32-bit finalizer (murmur3-style avalanche) over uint32 lanes."""
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def tile_random_bits(shape, seed: jax.Array, *, hw_rng: bool) -> jax.Array:
+    """(shape) uint32 random bits from an int32/uint32 scalar seed.
+
+    ``hw_rng=True`` (real TPU lowering) uses the per-core Mosaic PRNG;
+    otherwise a counter-based hash over the tile's (row, col) grid — the
+    interpret-mode path, also the reference for determinism tests."""
+    if hw_rng:
+        pltpu.prng_seed(seed.astype(jnp.int32))
+        return pltpu.bitcast(pltpu.prng_random_bits(shape), jnp.uint32)
+    i = lax.broadcasted_iota(jnp.uint32, shape, 0)
+    j = lax.broadcasted_iota(jnp.uint32, shape, 1)
+    x = (
+        seed.astype(jnp.uint32)
+        ^ (i * jnp.uint32(0x9E3779B1))
+        ^ (j * jnp.uint32(0x85EBCA77))
+    )
+    return _hash_u32(x)
+
+
+def stochastic_round_to(x: jax.Array, bits: jax.Array, dtype) -> jax.Array:
+    """Stochastically round f32 ``x`` to ``dtype`` using uint32 ``bits``.
+
+    bf16 shares f32's exponent/sign layout, so adding a uniform 16-bit
+    offset to the f32 significand and truncating the low 16 bits rounds up
+    with probability equal to the truncated fraction — exactly unbiased.
+    Non-bf16 targets fall back to round-to-nearest (nothing to dither: f32
+    is the master dtype).  Non-finite values pass through untouched."""
+    if jnp.dtype(dtype) != jnp.dtype(jnp.bfloat16):
+        return x.astype(dtype)
+    xf = x.astype(jnp.float32)
+    xu = lax.bitcast_convert_type(xf, jnp.uint32)
+    xu = (xu + (bits & jnp.uint32(0xFFFF))) & jnp.uint32(0xFFFF0000)
+    rounded = lax.bitcast_convert_type(xu, jnp.float32)
+    return jnp.where(jnp.isfinite(xf), rounded, xf).astype(jnp.bfloat16)
+
+
+@dataclasses.dataclass(frozen=True)
+class _TnUpdate:
+    """Static description of the TN kernel's grad-and-update flush."""
+
+    param_dtype: Any  # dtype of the W_new output (bf16 -> SR eligible)
+    stochastic_round: bool
+    hw_rng: bool  # Mosaic PRNG vs interpret-mode hash bits
+
+
+def _tile_seed(hyp_ref, *salts) -> jax.Array:
+    """Deterministic per-(step, leaf, tile) uint32 seed: the int32 step
+    (bitcast out of the seed lane) mixed with the per-leaf/per-layer salt
+    lane and the tile coordinates (and expert id) — no two routed weights,
+    layers or tiles share a dither stream."""
+    s = seed_from_lane(hyp_ref[HYP_SEED]).astype(jnp.uint32)
+    h = _hash_u32(s ^ jnp.uint32(0x2545F491))
+    h = _hash_u32(
+        h ^ seed_from_lane(hyp_ref[HYP_SALT]).astype(jnp.uint32)
+        * jnp.uint32(0x85EBCA77)
+    )
+    for salt in salts:
+        h = _hash_u32(h ^ salt.astype(jnp.uint32) * jnp.uint32(0x9E3779B1))
+    return h
+
+
+def _apply_update_flush(
+    acc: jax.Array,  # (bm, bn) f32 raw dW accumulator
+    mst_ref,
+    mu_ref,
+    nu_ref,
+    w_out,
+    mst_out,
+    mu_out,
+    nu_out,
+    hyp_ref,
+    seed: jax.Array,
+    upd: _TnUpdate,
+    *,
+    out_index=...,
+) -> jax.Array:
+    """AdamW on the f32 accumulator (the `optim.adamw.adamw_leaf_update`
+    program, scalars from the SMEM hyper vector); writes W/master/mu/nu
+    tiles back and returns ``sum(dW^2)`` (pre-clip, for the global norm)."""
+    ix = out_index
+    sq = jnp.sum(acc * acc)
+    g = acc * hyp_ref[HYP_SCALE]
+    mu_n = hyp_ref[HYP_B1] * mu_ref[ix] + hyp_ref[HYP_1MB1] * g
+    nu_n = hyp_ref[HYP_B2] * nu_ref[ix] + hyp_ref[HYP_1MB2] * jnp.square(g)
+    mhat = mu_n / hyp_ref[HYP_B1C]
+    nhat = nu_n / hyp_ref[HYP_B2C]
+    mst = mst_ref[ix]
+    step_v = mhat / (jnp.sqrt(nhat) + hyp_ref[HYP_EPS]) + hyp_ref[HYP_WD] * mst
+    mst_n = mst - hyp_ref[HYP_LR] * step_v
+    mu_out[ix] = mu_n
+    nu_out[ix] = nu_n
+    mst_out[ix] = mst_n
+    if upd.stochastic_round:
+        bits = tile_random_bits(mst_n.shape, seed, hw_rng=upd.hw_rng)
+        w_out[ix] = stochastic_round_to(mst_n, bits, upd.param_dtype)
+    else:
+        w_out[ix] = mst_n.astype(upd.param_dtype)
+    return sq
+
+
+# ---------------------------------------------------------------------------
 # NT / TN backward-pass kernels
 #
 # The training backward GEMMs — dA = dC·Bᵀ (NT) and dB = Aᵀ·dC (TN) — are
@@ -1083,26 +1225,58 @@ def sfc_gemm_nt(
 
 
 def _tn_kernel(
-    tab_ref,
-    *refs,
+    *prefetch_and_refs,
     n_layers: int,
     n_k_chunks: int,
     dual: bool,
     out_dtype,
+    update: Optional[_TnUpdate] = None,
 ):
     """out[t] += aᵀ-slab @ b-slab (+ second output for b2): contraction over
-    the operands' shared *first* (row) dim."""
-    del tab_ref
-    it = iter(refs)
+    the operands' shared *first* (row) dim.
+
+    With ``update`` the flush is the grad-and-update step: instead of
+    writing dW, it runs AdamW on the f32 accumulator against the resident
+    (master, mu, nu) tiles, writes back (W_new, master', mu', nu') and
+    accumulates ``sum(dW^2)`` into a scalar norm output — the raw weight
+    gradient never leaves VMEM."""
+    it = iter(prefetch_and_refs)
+    tab_ref = next(it)
+    hyp_ref = next(it) if update is not None else None
     a_ref = next(it)
     b_ref = next(it)
     b2_ref = next(it) if dual else None
-    o_ref = next(it)
-    o2_ref = next(it) if dual else None
+    if update is not None:
+        mst_ref = next(it)
+        mu_ref = next(it)
+        nu_ref = next(it)
+        if dual:
+            mst2_ref = next(it)
+            mu2_ref = next(it)
+            nu2_ref = next(it)
+        w_o = next(it)
+        mst_o = next(it)
+        mu_o = next(it)
+        nu_o = next(it)
+        if dual:
+            w2_o = next(it)
+            mst2_o = next(it)
+            mu2_o = next(it)
+            nu2_o = next(it)
+        norm_o = next(it)
+    else:
+        o_ref = next(it)
+        o2_ref = next(it) if dual else None
     acc_ref = next(it)
     acc2_ref = next(it) if dual else None
 
-    lyr, kc = pl.program_id(1), pl.program_id(2)
+    t, lyr, kc = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    if update is not None:
+
+        @pl.when((t == 0) & (lyr == 0) & (kc == 0))
+        def _zero_norm():  # once per launch; the block is launch-resident
+            norm_o[...] = jnp.zeros_like(norm_o)
 
     @pl.when((lyr == 0) & (kc == 0))
     def _zero():
@@ -1122,9 +1296,25 @@ def _tn_kernel(
 
     @pl.when((lyr == n_layers - 1) & (kc == n_k_chunks - 1))
     def _flush():
-        o_ref[...] = acc_ref[...].astype(out_dtype)
+        if update is None:
+            o_ref[...] = acc_ref[...].astype(out_dtype)
+            if dual:
+                o2_ref[...] = acc2_ref[...].astype(out_dtype)
+            return
+        im, in_ = tab_ref[0, t], tab_ref[1, t]
+        norm_o[0, 0] += _apply_update_flush(
+            acc_ref[...], mst_ref, mu_ref, nu_ref,
+            w_o, mst_o, mu_o, nu_o,
+            hyp_ref, _tile_seed(hyp_ref, im, in_), update,
+        )
         if dual:
-            o2_ref[...] = acc2_ref[...].astype(out_dtype)
+            norm_o[1, 0] += _apply_update_flush(
+                acc2_ref[...], mst2_ref, mu2_ref, nu2_ref,
+                w2_o, mst2_o, mu2_o, nu2_o,
+                hyp_ref,
+                _tile_seed(hyp_ref, im, in_, jnp.int32(1)),
+                update,
+            )
 
 
 @functools.partial(
@@ -1136,12 +1326,21 @@ def _tn_kernel(
         "k_block_factor",
         "interpret",
         "out_dtype",
+        "update_dtype",
+        "stochastic_round",
     ),
 )
 def sfc_gemm_tn(
     a: jax.Array,  # (M, K) — consumed as aᵀ, never transposed in HBM
     b: jax.Array,  # (M, N)
     b2: Optional[jax.Array] = None,  # (M, N) second operand (GLU dWg)
+    master: Optional[jax.Array] = None,  # (K, N) f32 — enables update mode
+    mu: Optional[jax.Array] = None,  # (K, N) f32 first moment
+    nu: Optional[jax.Array] = None,  # (K, N) f32 second moment
+    master2: Optional[jax.Array] = None,  # (K, N) f32 (dual update)
+    mu2: Optional[jax.Array] = None,
+    nu2: Optional[jax.Array] = None,
+    hyper: Optional[jax.Array] = None,  # (12,) f32 AdamW scalars (SMEM)
     *,
     bm: int = 256,
     bn: int = 256,
@@ -1149,6 +1348,8 @@ def sfc_gemm_tn(
     k_block_factor: int = 1,
     interpret: bool = False,
     out_dtype=None,
+    update_dtype=None,  # W_new output dtype (the param dtype)
+    stochastic_round: bool = False,
 ):
     """C = Aᵀ @ B (and Aᵀ @ B2) via the SFC traversal of the (K, N) output.
 
@@ -1157,6 +1358,17 @@ def sfc_gemm_tn(
     (M, K) operand against an ``(m_chunk, bn)`` slab of B.  This is the dW
     backward kernel: A = the forward activations, B = dC.  With ``b2`` the
     A slab is streamed once for both weight grads (returns a tuple).
+
+    **Update (grad-and-update) flush**: passing ``master``/``mu``/``nu``
+    (+ the (12,) ``hyper`` AdamW scalar vector, second scalar-prefetch
+    operand) switches the flush to the fused AdamW step — dW stays in the
+    f32 accumulator, the moments update in place, decoupled weight decay
+    applies against the master weight, and the outputs are
+    ``(W_new, master', mu', nu', norm)`` (dual: both weight sets then a
+    (2, 1) norm) where ``W_new`` is cast to ``update_dtype`` — with
+    stochastic rounding when bf16 and ``stochastic_round`` — and ``norm``
+    accumulates ``sum(dW^2)`` pre-clip.  The raw gradient never exists in
+    HBM.
 
     Requires K % bm == N % bn == 0 and M % (k_layers * k_block_factor) == 0
     (`ops.sfc_matmul_tn` pads arbitrary shapes).
@@ -1173,19 +1385,37 @@ def sfc_gemm_tn(
         raise ValueError(f"M={m} vs k_layers*kbf={k_layers * k_block_factor}")
     out_dtype = out_dtype or a.dtype
 
+    update_mode = master is not None
+    if update_mode:
+        assert mu is not None and nu is not None and hyper is not None
+        for t_ in (master, mu, nu):
+            assert t_.shape == (k, n), (t_.shape, (k, n))
+        if dual:
+            assert master2 is not None and mu2 is not None and nu2 is not None
+        update = _TnUpdate(
+            param_dtype=jnp.dtype(update_dtype or out_dtype),
+            stochastic_round=stochastic_round,
+            hw_rng=not interpret,
+        )
+    else:
+        update = None
+
     kb_cnt, nb_cnt = k // bm, n // bn
     m_chunk = m // (k_layers * k_block_factor)
     n_k_chunks = k_block_factor
     tab = jnp.asarray(build_task_table(kb_cnt, nb_cnt, 1))
 
-    def a_map(t, l, kc, tab):  # column slab of the (M, K) operand
+    def a_map(t, l, kc, tab, *_):  # column slab of the (M, K) operand
         return (l * n_k_chunks + kc, tab[0, t])
 
-    def b_map(t, l, kc, tab):
+    def b_map(t, l, kc, tab, *_):
         return (l * n_k_chunks + kc, tab[1, t])
 
-    def o_map(t, l, kc, tab):
+    def o_map(t, l, kc, tab, *_):
         return (tab[0, t], tab[1, t])
+
+    def norm_map(t, l, kc, tab, *_):
+        return (0, 0)
 
     inputs = [a, b]
     in_specs = [
@@ -1202,11 +1432,35 @@ def sfc_gemm_tn(
     if dual:
         scratch.append(pltpu.VMEM((bm, bn), jnp.float32))
 
+    if update_mode:
+        tile_spec = pl.BlockSpec((bm, bn), o_map)
+        moments = [master, mu, nu]
+        if dual:
+            moments += [master2, mu2, nu2]
+        inputs += moments
+        in_specs += [tile_spec] * len(moments)
+        f32_shape = jax.ShapeDtypeStruct((k, n), jnp.float32)
+        w_shape = jax.ShapeDtypeStruct((k, n), update.param_dtype)
+        n_sets = 2 if dual else 1
+        out_specs = [tile_spec] * (4 * n_sets) + [
+            pl.BlockSpec((n_sets, 1), norm_map)
+        ]
+        out_shapes = [w_shape, f32_shape, f32_shape, f32_shape] * n_sets + [
+            jax.ShapeDtypeStruct((n_sets, 1), jnp.float32)
+        ]
+        prefetch = (tab, hyper)
+        n_prefetch = 2
+    else:
+        out_specs = [out_spec, out_spec] if dual else out_spec
+        out_shapes = [out_shape, out_shape] if dual else out_shape
+        prefetch = (tab,)
+        n_prefetch = 1
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=n_prefetch,
         grid=(kb_cnt * nb_cnt, k_layers, n_k_chunks),
         in_specs=in_specs,
-        out_specs=[out_spec, out_spec] if dual else out_spec,
+        out_specs=out_specs,
         scratch_shapes=scratch,
     )
     kernel = functools.partial(
@@ -1215,16 +1469,17 @@ def sfc_gemm_tn(
         n_k_chunks=n_k_chunks,
         dual=dual,
         out_dtype=out_dtype,
+        update=update,
     )
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=[out_shape, out_shape] if dual else out_shape,
+        out_shape=out_shapes,
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",) * 3,
         ),
-    )(tab, *inputs)
+    )(*prefetch, *inputs)
 
 
 def _grouped_nt_kernel(
@@ -1396,23 +1651,50 @@ def build_grouped_tn_task_table(
 
 
 def _grouped_tn_kernel(
-    tab_ref,
-    *refs,
+    *prefetch_and_refs,
     n_chunks: int,
     dual: bool,
     out_dtype,
+    update: Optional[_TnUpdate] = None,
 ):
-    it = iter(refs)
+    it = iter(prefetch_and_refs)
+    tab_ref = next(it)
+    hyp_ref = next(it) if update is not None else None
     a_ref = next(it)
     b_ref = next(it)
     b2_ref = next(it) if dual else None
-    o_ref = next(it)
-    o2_ref = next(it) if dual else None
+    if update is not None:
+        mst_ref = next(it)
+        mu_ref = next(it)
+        nu_ref = next(it)
+        if dual:
+            mst2_ref = next(it)
+            mu2_ref = next(it)
+            nu2_ref = next(it)
+        w_o = next(it)
+        mst_o = next(it)
+        mu_o = next(it)
+        nu_o = next(it)
+        if dual:
+            w2_o = next(it)
+            mst2_o = next(it)
+            mu2_o = next(it)
+            nu2_o = next(it)
+        norm_o = next(it)
+    else:
+        o_ref = next(it)
+        o2_ref = next(it) if dual else None
     acc_ref = next(it)
     acc2_ref = next(it) if dual else None
 
     t, kc = pl.program_id(0), pl.program_id(1)
     rb = tab_ref[4, t]  # this expert's row-slab extent in blocks
+
+    if update is not None:
+
+        @pl.when((t == 0) & (kc == 0))
+        def _zero_norm():
+            norm_o[...] = jnp.zeros_like(norm_o)
 
     @pl.when(kc == 0)
     def _zero():
@@ -1435,9 +1717,31 @@ def _grouped_tn_kernel(
 
     @pl.when(kc == n_chunks - 1)
     def _flush():
-        o_ref[0, ...] = acc_ref[...].astype(out_dtype)
+        if update is None:
+            o_ref[0, ...] = acc_ref[...].astype(out_dtype)
+            if dual:
+                o2_ref[0, ...] = acc2_ref[...].astype(out_dtype)
+            return
+        # empty experts flush a zero accumulator: AdamW with g == 0 still
+        # decays the moments and applies weight decay — exactly the unfused
+        # semantics for a zero expert gradient
+        im, in_, exp = tab_ref[0, t], tab_ref[1, t], tab_ref[2, t]
+        salt = exp * jnp.int32(2) + jnp.int32(0)
+        norm_o[0, 0] += _apply_update_flush(
+            acc_ref[...], mst_ref, mu_ref, nu_ref,
+            w_o, mst_o, mu_o, nu_o,
+            hyp_ref, _tile_seed(hyp_ref, im, in_, salt), update,
+            out_index=0,
+        )
         if dual:
-            o2_ref[0, ...] = acc2_ref[...].astype(out_dtype)
+            norm_o[1, 0] += _apply_update_flush(
+                acc2_ref[...], mst2_ref, mu2_ref, nu2_ref,
+                w2_o, mst2_o, mu2_o, nu2_o,
+                hyp_ref,
+                _tile_seed(hyp_ref, im, in_, salt + jnp.int32(1)),
+                update,
+                out_index=0,
+            )
 
 
 @functools.partial(
@@ -1449,12 +1753,21 @@ def _grouped_tn_kernel(
         "bn",
         "interpret",
         "out_dtype",
+        "update_dtype",
+        "stochastic_round",
     ),
 )
 def sfc_gemm_grouped_tn(
     a: jax.Array,  # (sum_e row_blocks[e]*row_block, K) grouped activations
     b: jax.Array,  # (sum_rows, N) grouped dC slabs (same row packing)
     b2: Optional[jax.Array] = None,  # (sum_rows, N) second dC (GLU dg)
+    master: Optional[jax.Array] = None,  # (E, K, N) f32 — update mode
+    mu: Optional[jax.Array] = None,
+    nu: Optional[jax.Array] = None,
+    master2: Optional[jax.Array] = None,
+    mu2: Optional[jax.Array] = None,
+    nu2: Optional[jax.Array] = None,
+    hyper: Optional[jax.Array] = None,  # (12,) f32 AdamW scalars
     *,
     row_blocks: Tuple[int, ...],
     row_block: int,  # rows per contraction chunk (the slab padding unit)
@@ -1462,6 +1775,8 @@ def sfc_gemm_grouped_tn(
     bn: int = 128,
     interpret: bool = False,
     out_dtype=None,
+    update_dtype=None,
+    stochastic_round: bool = False,
 ):
     """Grouped TN: dW[e] = a[rows of e]ᵀ @ b[rows of e] per expert, one
     launch for the whole (E, K, N) weight-grad stack.
@@ -1472,6 +1787,12 @@ def sfc_gemm_grouped_tn(
     chunks beyond an expert's rows are predicated off, so empty experts
     flush exact zeros.  With ``b2`` the activation slab streams once for
     both weight-grad stacks (returns a tuple).
+
+    The ``master``/``mu``/``nu`` (+ ``hyper``) operands switch the flush to
+    the grad-and-update mode exactly as in `sfc_gemm_tn`: per-expert AdamW
+    on the f32 accumulator, outputs ``(W_new, master', mu', nu', norm)``
+    stacks (dual: both sets), the (E, K, N) weight-grad stack never written.
+    Empty experts run the g = 0 update (moment decay + weight decay).
     """
     m_total, k = a.shape
     m2, n = b.shape
@@ -1488,6 +1809,21 @@ def sfc_gemm_grouped_tn(
     if k % bm or n % bn:
         raise ValueError(f"(K,N)=({k},{n}) not divisible by (bm,bn)=({bm},{bn})")
     out_dtype = out_dtype or a.dtype
+
+    update_mode = master is not None
+    if update_mode:
+        assert mu is not None and nu is not None and hyper is not None
+        for t_ in (master, mu, nu):
+            assert t_.shape == (e_cnt, k, n), (t_.shape, (e_cnt, k, n))
+        if dual:
+            assert master2 is not None and mu2 is not None and nu2 is not None
+        update = _TnUpdate(
+            param_dtype=jnp.dtype(update_dtype or out_dtype),
+            stochastic_round=stochastic_round,
+            hw_rng=not interpret,
+        )
+    else:
+        update = None
 
     kb_cnt, nb_cnt = k // bm, n // bn
     max_rb = max(row_blocks) if row_blocks else 0
@@ -1507,14 +1843,17 @@ def sfc_gemm_grouped_tn(
         kc_c = jnp.minimum(kc, jnp.maximum(rb - 1, 0))
         return jnp.minimum(tab[3, t] + kc_c, total_blocks - 1)
 
-    def a_map(t, kc, tab):
+    def a_map(t, kc, tab, *_):
         return (row_idx(t, kc, tab), tab[0, t])
 
-    def b_map(t, kc, tab):
+    def b_map(t, kc, tab, *_):
         return (row_idx(t, kc, tab), tab[1, t])
 
-    def o_map(t, kc, tab):
+    def o_map(t, kc, tab, *_):
         return (tab[2, t], tab[0, t], tab[1, t])
+
+    def norm_map(t, kc, tab, *_):
+        return (0, 0)
 
     inputs = [a, b]
     in_specs = [
@@ -1530,11 +1869,35 @@ def sfc_gemm_grouped_tn(
     if dual:
         scratch.append(pltpu.VMEM((bm, bn), jnp.float32))
 
+    if update_mode:
+        tile_spec = pl.BlockSpec((1, bm, bn), o_map)
+        moments = [master, mu, nu]
+        if dual:
+            moments += [master2, mu2, nu2]
+        inputs += moments
+        in_specs += [tile_spec] * len(moments)
+        f32_shape = jax.ShapeDtypeStruct((e_cnt, k, n), jnp.float32)
+        w_shape = jax.ShapeDtypeStruct((e_cnt, k, n), update.param_dtype)
+        n_sets = 2 if dual else 1
+        out_specs = [tile_spec] * (4 * n_sets) + [
+            pl.BlockSpec((n_sets, 1), norm_map)
+        ]
+        out_shapes = [w_shape, f32_shape, f32_shape, f32_shape] * n_sets + [
+            jax.ShapeDtypeStruct((n_sets, 1), jnp.float32)
+        ]
+        prefetch = (tab, hyper)
+        n_prefetch = 2
+    else:
+        out_specs = [out_spec, out_spec] if dual else out_spec
+        out_shapes = [out_shape, out_shape] if dual else out_shape
+        prefetch = (tab,)
+        n_prefetch = 1
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=n_prefetch,
         grid=(tab.shape[1], max_rb),
         in_specs=in_specs,
-        out_specs=[out_spec, out_spec] if dual else out_spec,
+        out_specs=out_specs,
         scratch_shapes=scratch,
     )
     kernel = functools.partial(
@@ -1542,16 +1905,17 @@ def sfc_gemm_grouped_tn(
         n_chunks=max_rb,
         dual=dual,
         out_dtype=out_dtype,
+        update=update,
     )
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=[out_shape, out_shape] if dual else out_shape,
+        out_shape=out_shapes,
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary"),
         ),
-    )(tab, *inputs)
+    )(*prefetch, *inputs)
 
 
 def _add_reduce_kernel(c_ref, o_ref, *, acc_dtype):

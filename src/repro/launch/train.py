@@ -44,20 +44,28 @@ def build_trainer(
     mesh=None,
     seed: int = 0,
     gemm_backend: Optional[str] = None,
+    fused_optimizer: bool = False,
+    stochastic_round: bool = True,
 ):
     """Returns (params, opt_state, jitted step, batch_fn).
 
     ``gemm_backend="sfc_pallas"`` trains end-to-end on the SFC kernels:
-    forward projections AND the custom-VJP backward (NT/TN kernels)."""
+    forward projections AND the custom-VJP backward (NT/TN kernels).
+    ``fused_optimizer=True`` additionally runs AdamW inside the TN kernel
+    flush for routed 2-D weights (single-host; clip-by-global-norm becomes
+    one-step-delayed — see `train.step.make_train_step`)."""
+    if fused_optimizer and mesh is not None:
+        raise ValueError("fused_optimizer is a single-host path (no mesh)")
     model = build_model(cfg)
     opt_cfg = AdamWConfig(lr=lr, total_steps=total_steps, warmup_steps=min(100, total_steps // 10 + 1))
     step_fn = make_train_step(
         model, opt_cfg, remat=remat, microbatches=microbatches,
-        gemm_backend=gemm_backend,
+        gemm_backend=gemm_backend, fused_optimizer=fused_optimizer,
+        stochastic_round=stochastic_round,
     )
 
     params = model.init(jax.random.PRNGKey(seed))
-    opt_state = adamw_init(params)
+    opt_state = adamw_init(params, with_gnorm=fused_optimizer)
 
     data = SyntheticLM(SyntheticLMConfig(vocab=cfg.vocab, seq_len=seq, global_batch=batch, seed=seed))
 
@@ -117,6 +125,15 @@ def main():
         choices=["xla", "sfc_pallas", "sfc_reference"],
         help="GEMM backend for the train step (fwd + custom-VJP bwd)",
     )
+    ap.add_argument(
+        "--fused-optimizer", action="store_true",
+        help="AdamW inside the TN kernel flush for routed 2-D weights "
+             "(dW never touches HBM; one-step-delayed grad clipping)",
+    )
+    ap.add_argument(
+        "--no-stochastic-round", action="store_true",
+        help="round-to-nearest bf16 write-back in the fused flush",
+    )
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -136,6 +153,8 @@ def main():
         microbatches=args.microbatches,
         mesh=mesh,
         gemm_backend=args.backend,
+        fused_optimizer=args.fused_optimizer,
+        stochastic_round=not args.no_stochastic_round,
     )
 
     ckpt = CheckpointManager(args.ckpt_dir or "/tmp/repro_ckpt", interval=args.ckpt_every)

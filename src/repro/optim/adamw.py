@@ -2,6 +2,20 @@
 
 Pure-JAX (no optax): state is a pytree mirroring params, so the same
 partition rules shard it (optimizer sharding comes for free).
+
+The update math is split into layers so the fused TN-update kernel and the
+unfused path share one definition:
+
+  * `adamw_scalars`     — the per-step scalars (lr, bias corrections);
+  * `adamw_leaf_update` — the pure elementwise core for one leaf.  This is
+    the exact program `adamw_update` runs per leaf AND the reference
+    semantics the fused kernel flush (`kernels/sfc_gemm.py` TN update mode)
+    reproduces on the f32 accumulator;
+  * `pack_adamw_hyper`  — the (12,) f32 hyperparameter vector the fused
+    kernel reads from SMEM (scalar prefetch).
+
+`adamw_update` (the unfused path) is bit-compatible with the pre-split
+implementation: same expression order, same python-float hyperparameters.
 """
 
 from __future__ import annotations
@@ -14,6 +28,36 @@ import jax.numpy as jnp
 import numpy as np
 
 Params = Any
+
+# layout of the fused-update hyperparameter vector (f32 (12,), SMEM):
+# [lr, b1, 1-b1, b2, 1-b2, eps, weight_decay, b1c, b2c, grad_scale,
+#  seed (int32 step index bitcast into the f32 lane — f32 *values* would
+#  collide past 2^24 steps), per-leaf/per-layer salt]
+HYPER_LEN = 12
+(
+    HYP_LR,
+    HYP_B1,
+    HYP_1MB1,
+    HYP_B2,
+    HYP_1MB2,
+    HYP_EPS,
+    HYP_WD,
+    HYP_B1C,
+    HYP_B2C,
+    HYP_SCALE,
+    HYP_SEED,
+    HYP_SALT,
+) = range(HYPER_LEN)
+
+
+def seed_to_lane(seed: jax.Array) -> jax.Array:
+    """int32 seed -> f32 lane of the hyper vector (bit pattern, not value)."""
+    return jax.lax.bitcast_convert_type(seed.astype(jnp.int32), jnp.float32)
+
+
+def seed_from_lane(lane: jax.Array) -> jax.Array:
+    """f32 hyper lane -> int32 seed (inverse of `seed_to_lane`)."""
+    return jax.lax.bitcast_convert_type(lane, jnp.int32)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,22 +94,141 @@ def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
     return cfg.lr * warm * decay
 
 
-def adamw_init(params: Params) -> Dict[str, Any]:
+def adamw_init(params: Params, *, with_gnorm: bool = False) -> Dict[str, Any]:
     # copy=True: when params are already f32, astype would alias the buffer
     # and donating (params, opt_state) together would double-donate.
     f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
-    return {
+    state = {
         "step": jnp.zeros((), jnp.int32),
         "mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
         "nu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
         "master": jax.tree.map(f32, params),
     }
+    if with_gnorm:
+        # last observed global grad norm — the fused train step's one-step-
+        # delayed clip signal (0 => no clipping on the first step)
+        state["gnorm"] = jnp.zeros((), jnp.float32)
+    return state
 
 
 def global_norm(tree) -> jax.Array:
     return jnp.sqrt(
         sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
     )
+
+
+def clip_scale(cfg: AdamWConfig, gnorm: jax.Array) -> jax.Array:
+    """min(1, clip_norm / gnorm) — the clip-by-global-norm gradient scale."""
+    return jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+
+def adamw_scalars(
+    cfg: AdamWConfig, step: jax.Array
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """(lr_t, b1c, b2c) at ``step`` (the post-increment step index)."""
+    lr = lr_at(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+    return lr, b1c, b2c
+
+
+def adamw_leaf_update(
+    g,
+    mu,
+    nu,
+    master,
+    *,
+    lr,
+    b1: float,
+    b2: float,
+    eps: float,
+    weight_decay: float,
+    b1c,
+    b2c,
+    scale,
+):
+    """Pure elementwise AdamW core for one leaf -> (mu', nu', master').
+
+    This is the exact per-leaf program of `adamw_update` and the reference
+    semantics of the fused TN-update kernel flush: the kernel runs the same
+    expression order on its f32 accumulator (with f32 scalar hypers from the
+    SMEM vector in place of the python floats here — agreement is rtol-1e-5
+    tight, not bit-exact; the *unfused* path stays bit-compatible)."""
+    g = g.astype(jnp.float32) * scale
+    mu = b1 * mu + (1 - b1) * g
+    nu = b2 * nu + (1 - b2) * jnp.square(g)
+    mhat = mu / b1c
+    nhat = nu / b2c
+    step_v = mhat / (jnp.sqrt(nhat) + eps) + weight_decay * master
+    master = master - lr * step_v
+    return mu, nu, master
+
+
+def pack_adamw_hyper(
+    cfg: AdamWConfig, step: jax.Array, scale: jax.Array
+) -> jax.Array:
+    """(12,) f32 hyper vector the fused TN-update kernel reads from SMEM.
+
+    ``step`` is the post-increment step (bias corrections + the stochastic-
+    rounding seed base derive from it; the seed lane carries the int32 step
+    *bit pattern* so long runs never collide); ``scale`` is the gradient
+    scale (clip-by-global-norm factor, 1.0 when clipping is off).  The salt
+    lane is 0 here — `optim.fused.wrap_routed` stamps a distinct per-leaf
+    (and per-layer) salt so no two routed weights share a dither stream."""
+    lr, b1c, b2c = adamw_scalars(cfg, step)
+    return jnp.stack(
+        [
+            lr.astype(jnp.float32),
+            jnp.float32(cfg.b1),
+            jnp.float32(1 - cfg.b1),
+            jnp.float32(cfg.b2),
+            jnp.float32(1 - cfg.b2),
+            jnp.float32(cfg.eps),
+            jnp.float32(cfg.weight_decay),
+            b1c.astype(jnp.float32),
+            b2c.astype(jnp.float32),
+            jnp.asarray(scale, jnp.float32),
+            seed_to_lane(step),
+            seed_to_lane(jnp.zeros((), jnp.int32)),
+        ]
+    )
+
+
+def adamw_apply(
+    cfg: AdamWConfig,
+    grads: Params,
+    state: Dict[str, Any],
+    params: Params,
+    *,
+    scale,
+    step,
+) -> Tuple[Params, Dict[str, Any]]:
+    """Elementwise-only AdamW over a (sub)tree with a precomputed gradient
+    scale — no norm pass.  Returns (new_params, {mu, nu, master}).
+    `adamw_update` composes it with the global-norm pass; the fused train
+    step applies the same `adamw_leaf_update` core leaf-by-leaf inline
+    (its routed/unrouted split works on flattened leaves, not subtrees)."""
+    lr, b1c, b2c = adamw_scalars(cfg, step)
+
+    def upd(g, mu, nu, master):
+        return adamw_leaf_update(
+            g, mu, nu, master,
+            lr=lr, b1=cfg.b1, b2=cfg.b2, eps=cfg.eps,
+            weight_decay=cfg.weight_decay, b1c=b1c, b2c=b2c, scale=scale,
+        )
+
+    triples = jax.tree.map(
+        upd, grads, state["mu"], state["nu"], state["master"],
+        is_leaf=lambda x: isinstance(x, jax.Array),
+    )
+    flat, treedef = jax.tree_util.tree_flatten(
+        triples, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    mus = jax.tree_util.tree_unflatten(treedef, [t[0] for t in flat])
+    nus = jax.tree_util.tree_unflatten(treedef, [t[1] for t in flat])
+    masters = jax.tree_util.tree_unflatten(treedef, [t[2] for t in flat])
+    new_params = jax.tree.map(lambda m, p: m.astype(p.dtype), masters, params)
+    return new_params, {"mu": mus, "nu": nus, "master": masters}
 
 
 def adamw_update(
@@ -78,37 +241,12 @@ def adamw_update(
     (e.g. bf16) while the update runs on the f32 masters."""
     step = state["step"] + 1
     gnorm = global_norm(grads)
-    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
-    lr = lr_at(cfg, step)
-
-    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
-    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
-
-    def upd(g, mu, nu, master):
-        g = g.astype(jnp.float32) * scale
-        mu = cfg.b1 * mu + (1 - cfg.b1) * g
-        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g)
-        mhat = mu / b1c
-        nhat = nu / b2c
-        step_v = mhat / (jnp.sqrt(nhat) + cfg.eps) + cfg.weight_decay * master
-        master = master - lr * step_v
-        return mu, nu, master
-
-    mu, nu, master = jax.tree.map(
-        upd,
-        grads,
-        state["mu"],
-        state["nu"],
-        state["master"],
-        is_leaf=lambda x: isinstance(x, jax.Array),
-    ), None, None
-    # jax.tree.map over 4 trees returns a single tree of tuples; unzip:
-    flat, treedef = jax.tree_util.tree_flatten(mu, is_leaf=lambda x: isinstance(x, tuple))
-    mus = jax.tree_util.tree_unflatten(treedef, [t[0] for t in flat])
-    nus = jax.tree_util.tree_unflatten(treedef, [t[1] for t in flat])
-    masters = jax.tree_util.tree_unflatten(treedef, [t[2] for t in flat])
-
-    new_params = jax.tree.map(lambda m, p: m.astype(p.dtype), masters, params)
-    new_state = {"step": step, "mu": mus, "nu": nus, "master": masters}
-    metrics = {"grad_norm": gnorm, "lr": lr}
+    scale = clip_scale(cfg, gnorm)
+    new_params, slots = adamw_apply(
+        cfg, grads, state, params, scale=scale, step=step
+    )
+    new_state = {"step": step, **slots}
+    if "gnorm" in state:
+        new_state["gnorm"] = gnorm
+    metrics = {"grad_norm": gnorm, "lr": lr_at(cfg, step)}
     return new_params, new_state, metrics

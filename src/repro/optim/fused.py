@@ -1,0 +1,333 @@
+"""Grad-and-update fusion plumbing: route weights into the TN-update flush.
+
+The fused optimizer never materializes a routed weight's gradient in HBM:
+the TN backward kernel computes dW in its f32 VMEM accumulator and applies
+the AdamW update *in the flush step*, writing back (W_new, master_new,
+mu_new, nu_new) plus a per-leaf ``sum(dW^2)`` scalar.  To thread the
+optimizer state into the backward pass — and the updated state back out —
+without touching any model code, a routed weight travels through the model
+as a :class:`FusedParam` pytree node:
+
+  * **in**: the train step wraps each routed leaf together with its f32
+    master/mu/nu slots, the shared AdamW hyper vector and a scalar norm
+    token.  Being a registered pytree, the wrapper flows through
+    ``lax.scan`` layer stacks (each child is sliced along the stacked layer
+    axis) and ``jax.checkpoint`` unchanged; the projection call site in
+    `core.gemm_backend` unpacks it.
+  * **out**: the call site's `custom_vjp` returns the *updated* state in
+    the cotangent slots — W_new for ``w``, master'/mu'/nu' for the moment
+    children, ``sum(dW^2)`` for ``token`` (scan stacks per-layer values
+    back into the stacked leaf shape).  ``jax.grad`` of the loss w.r.t. the
+    wrapped tree therefore returns the applied update, and the train step
+    contains no standalone optimizer pass for routed weights.
+
+Routing is discovered by a **probe**: an abstract `jax.eval_shape` of the
+loss with candidate leaves wrapped in :class:`ProbeParam` records which
+leaves actually reach a 2-D projection call site (and whether they arrive
+as per-layer slices of a scan-stacked leaf).  Leaves the probe never sees
+— or that are consumed more than once per trace (cotangents would sum two
+updates) — stay on the unfused path.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "FusedParam",
+    "ProbeParam",
+    "FusedUpdateConfig",
+    "fused_update_config",
+    "current_update_config",
+    "default_fused_filter",
+    "probe_routed",
+    "wrap_routed",
+    "RoutedLeaf",
+]
+
+
+@jax.tree_util.register_pytree_node_class
+class FusedParam:
+    """A routed weight plus its optimizer slots, travelling as one node.
+
+    Children: ``w`` (param dtype), ``master``/``mu``/``nu`` (f32, same
+    shape), ``hyper`` ((12,) f32 AdamW scalars — broadcast to (L, 12) for
+    scan-stacked leaves) and ``token`` (f32 scalar norm slot, (L,) when
+    stacked).  Model code must consume it only via the `core.gemm_backend`
+    projection entry points; any other use fails loudly.
+    """
+
+    def __init__(self, w, master, mu, nu, hyper, token):
+        self.w = w
+        self.master = master
+        self.mu = mu
+        self.nu = nu
+        self.hyper = hyper
+        self.token = token
+
+    def tree_flatten(self):
+        return (self.w, self.master, self.mu, self.nu, self.hyper, self.token), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def __repr__(self):  # pragma: no cover - debug aid
+        shp = getattr(self.w, "shape", None)
+        return f"FusedParam(w={shp})"
+
+
+# eq=False: identity equality + default hash — the record is treedef aux
+# data, and scan/jit may compare or hash treedefs
+@dataclasses.dataclass(eq=False)
+class _ProbeRecord:
+    path: str
+    count: int = 0
+    seen_ndim: int = -1
+    op: str = ""
+
+
+class ProbeMisuse(Exception):
+    """A probe-wrapped leaf was consumed outside a projection call site."""
+
+    def __init__(self, path: str, how: str):
+        super().__init__(f"{path} consumed via {how}")
+        self.path = path
+
+
+def _misuse(name):
+    def op(self, *a, **k):
+        raise ProbeMisuse(self.record.path, name)
+
+    return op
+
+
+@jax.tree_util.register_pytree_node_class
+class ProbeParam:
+    """Probe-trace stand-in: records consumption at projection call sites.
+
+    Any other consumption (arithmetic, indexing, attribute access like
+    ``.astype``/``.T``) raises `ProbeMisuse` carrying the leaf path, so the
+    probe can exclude the leaf from routing and retry."""
+
+    def __init__(self, w, record: _ProbeRecord):
+        self.w = w
+        self.record = record
+
+    def tree_flatten(self):
+        # the record is static structure (id-based equality keeps scan's
+        # carry/xs treedefs consistent)
+        return (self.w,), self.record
+
+    @classmethod
+    def tree_unflatten(cls, record, children):
+        return cls(children[0], record)
+
+    def observe(self, op: str) -> None:
+        self.record.count += 1
+        self.record.seen_ndim = self.w.ndim
+        self.record.op = op
+
+    def __getattr__(self, name):
+        raise ProbeMisuse(object.__getattribute__(self, "record").path, name)
+
+    __mul__ = _misuse("__mul__")
+    __rmul__ = _misuse("__rmul__")
+    __add__ = _misuse("__add__")
+    __radd__ = _misuse("__radd__")
+    __sub__ = _misuse("__sub__")
+    __rsub__ = _misuse("__rsub__")
+    __truediv__ = _misuse("__truediv__")
+    __rtruediv__ = _misuse("__rtruediv__")
+    __matmul__ = _misuse("__matmul__")
+    __rmatmul__ = _misuse("__rmatmul__")
+    __pow__ = _misuse("__pow__")
+    __neg__ = _misuse("__neg__")
+    __getitem__ = _misuse("__getitem__")
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedUpdateConfig:
+    """Trace-time settings for the fused update path (contextvar-carried)."""
+
+    stochastic_round: bool = True  # bf16 W write-back rounds stochastically
+
+
+_UPDATE_CFG: contextvars.ContextVar[Optional[FusedUpdateConfig]] = (
+    contextvars.ContextVar("fused_update_config", default=None)
+)
+
+
+@contextlib.contextmanager
+def fused_update_config(cfg: FusedUpdateConfig):
+    tok = _UPDATE_CFG.set(cfg)
+    try:
+        yield
+    finally:
+        _UPDATE_CFG.reset(tok)
+
+
+def current_update_config() -> FusedUpdateConfig:
+    return _UPDATE_CFG.get() or FusedUpdateConfig()
+
+
+# paths containing any of these fragments are never probe-wrapped: they are
+# 2-D leaves consumed outside the projection call sites (gather/transpose)
+_EXCLUDED_FRAGMENTS = ("embed",)
+
+
+def default_fused_filter(path: str, leaf) -> bool:
+    """Default routing candidates: 2-D leaves not named like embeddings.
+
+    3-D (grouped/MoE expert) stacks are deliberately excluded from the
+    default: the fused train step routes 2-D projections; expert stacks go
+    through the unfused path (the grouped TN-update kernel exists and is
+    exercised at the ops level — threading it through the MoE dispatch is
+    follow-up work, see ROADMAP)."""
+    if getattr(leaf, "ndim", 0) < 2:
+        return False
+    low = path.lower()
+    if any(f in low for f in _EXCLUDED_FRAGMENTS):
+        return False
+    # scan-stacked 2-D projections arrive as 3-D leaves (L, K, N); true
+    # grouped expert stacks also look 3-D — the probe disambiguates (a
+    # stacked leaf is consumed as a 2-D slice, an expert stack as 3-D).
+    return leaf.ndim in (2, 3)
+
+
+def _path_str(path) -> str:
+    def one(p):
+        for attr in ("key", "idx", "name"):
+            if hasattr(p, attr):
+                return str(getattr(p, attr))
+        return str(p)
+
+    return "/".join(one(p) for p in path)
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutedLeaf:
+    """Probe verdict for one routed leaf."""
+
+    path: str
+    stacked: bool  # consumed as per-layer slices of a scan-stacked leaf
+    op: str  # "matmul" | "glu"
+
+
+def probe_routed(
+    loss_fn: Callable,
+    params,
+    *example_args,
+    fused_filter: Optional[Callable[[str, Any], bool]] = None,
+) -> Dict[str, RoutedLeaf]:
+    """Abstractly trace ``loss_fn(params, *example_args)`` with candidate
+    leaves wrapped in `ProbeParam`; return {path: RoutedLeaf} for every leaf
+    that reached a fusable projection call site exactly once as a 2-D
+    operand.  Pure shape-level evaluation — no FLOPs, runs at trace time."""
+    fused_filter = fused_filter or default_fused_filter
+
+    by_path = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params):
+        p = _path_str(path)
+        by_path[p] = leaf
+    candidates = {
+        p for p, leaf in by_path.items() if fused_filter(p, leaf)
+    }
+
+    records: List[_ProbeRecord] = []
+    # leaves consumed outside a projection call site raise `ProbeMisuse`
+    # with their path: drop them and re-probe (e.g. scan-stacked norm
+    # scales look like 2-D candidates but are elementwise operands)
+    for _ in range(len(candidates) + 1):
+        records = []
+
+        def wrap(path, leaf):
+            p = _path_str(path)
+            if p not in candidates:
+                return leaf
+            rec = _ProbeRecord(path=p)
+            records.append(rec)
+            return ProbeParam(leaf, rec)
+
+        probed = jax.tree_util.tree_map_with_path(wrap, params)
+        try:
+            jax.eval_shape(loss_fn, probed, *example_args)
+            break
+        except ProbeMisuse as e:
+            candidates.discard(e.path)
+        except (TypeError, ValueError) as e:
+            # only rewrap errors the wrapper itself caused (e.g. jax's
+            # "ProbeParam ... is not a valid JAX type"); genuine model
+            # bugs must propagate untouched
+            if "ProbeParam" not in str(e):
+                raise
+            raise TypeError(
+                "fused-optimizer probe failed: a candidate weight is "
+                "consumed outside the gemm_backend projection entry points "
+                "in a way the probe cannot attribute. Exclude it via "
+                "make_train_step(fused_filter=...). Candidates were: "
+                f"{sorted(candidates)}"
+            ) from e
+    else:  # pragma: no cover - every candidate excluded
+        return {}
+
+    routed: Dict[str, RoutedLeaf] = {}
+    for rec in records:
+        if rec.count != 1 or rec.seen_ndim != 2:
+            continue  # unseen, multiply-consumed, or a 3-D expert stack
+        leaf = by_path[rec.path]
+        routed[rec.path] = RoutedLeaf(
+            path=rec.path, stacked=leaf.ndim == 3, op=rec.op
+        )
+    return routed
+
+
+def wrap_routed(
+    params,
+    master,
+    mu,
+    nu,
+    hyper: jax.Array,  # (12,) f32
+    routed: Dict[str, RoutedLeaf],
+):
+    """Build the wrapped tree the fused loss consumes: routed leaves become
+    `FusedParam` nodes (hyper broadcast / token shaped per scan-stacking),
+    everything else passes through unchanged.
+
+    Each leaf's hyper copy gets a distinct salt lane — and a scan-stacked
+    leaf a distinct salt *per layer row* — so the stochastic-rounding
+    dither streams of different weights/layers are decorrelated even though
+    they share the same step seed and tile coordinates."""
+    from repro.optim.adamw import HYP_SALT, seed_to_lane
+
+    # deterministic per-leaf salt bases, spaced so per-layer offsets of one
+    # stacked leaf never collide with another leaf's range
+    salt_base = {p: (i + 1) << 16 for i, p in enumerate(sorted(routed))}
+
+    def wrap(path, w, mst, m, v):
+        p = _path_str(path)
+        r = routed.get(p)
+        if r is None:
+            return w
+        if r.stacked:
+            layers = w.shape[0]
+            hyp = jnp.broadcast_to(hyper, (layers,) + hyper.shape)
+            salts = seed_to_lane(
+                jnp.int32(salt_base[p]) + jnp.arange(layers, dtype=jnp.int32)
+            )
+            hyp = hyp.at[:, HYP_SALT].set(salts)
+            token = jnp.zeros((layers,), jnp.float32)
+        else:
+            hyp = hyper.at[HYP_SALT].set(
+                seed_to_lane(jnp.int32(salt_base[p]))
+            )
+            token = jnp.zeros((), jnp.float32)
+        return FusedParam(w, mst, m, v, hyp, token)
+
+    return jax.tree_util.tree_map_with_path(wrap, params, master, mu, nu)

@@ -92,12 +92,46 @@ class ServingEngine:
         shapes.append(("gemm", self.max_batch, v, d))
         return shapes
 
+    def tune_table(
+        self,
+        prompt_len: int,
+        *,
+        backward: bool = False,
+        update: bool = False,
+    ) -> List[Tuple[str, int, int, int]]:
+        """The full (op, m, n, k) tune-namespace table warmup fills —
+        one code path for every variant.
+
+        Per forward projection shape: its own namespace ("gemm"/"glu");
+        with ``backward`` the two backward buckets
+        (`perf_model.backward_gemm_shapes`) in the namespaces the train-time
+        VJP actually resolves — the *dual* NT/TN forms for GLU projections
+        (the GLU backward streams two panels per traversal, its knob
+        landscape differs); with ``update`` the grad-and-update flush
+        namespaces ("tn_update"/"tn_update_dual") on the TN buckets."""
+        from repro.core.perf_model import backward_gemm_shapes
+
+        entries: List[Tuple[str, int, int, int]] = []
+        for (op, m, n, k) in self.projection_gemm_shapes(prompt_len):
+            entries.append((op, m, n, k))
+            if not (backward or update):
+                continue
+            bwd = backward_gemm_shapes(m, n, k)
+            suffix = "_dual" if op == "glu" else ""
+            if backward:
+                entries.append(("nt" + suffix, *bwd["nt"]))
+                entries.append(("tn" + suffix, *bwd["tn"]))
+            if update:
+                entries.append(("tn_update" + suffix, *bwd["tn"]))
+        return entries
+
     def warmup(
         self,
         prompt_len: int = 32,
         *,
         tune: bool = False,
         tune_backward: bool = False,
+        tune_update: bool = False,
     ) -> None:
         """Compile the prefill/decode programs for one prompt length before
         traffic arrives; with ``tune=True`` first run the empirical knob
@@ -106,28 +140,28 @@ class ServingEngine:
         (a second warmup for the same shape bucket is a pure cache hit — no
         re-measurement).
 
-        ``tune_backward=True`` additionally tunes the ``op="nt"``/``op="tn"``
-        namespaces for the same projection shapes — the backward GEMMs a
-        train step will launch (`perf_model.backward_gemm_shapes`) — and
-        implies ``tune=True``.  Serving itself never runs them, but the
-        engine's warmup is the one place that already knows every projection
-        shape, so fine-tuning jobs piggyback on it (see README "Training on
-        the SFC backend")."""
+        ``tune_backward=True`` additionally tunes the backward namespaces
+        for the same projection shapes — ``op="nt"``/``op="tn"`` plus the
+        ``"nt_dual"``/``"tn_dual"`` forms the GLU backward resolves at
+        train time (`tune_table`) — and implies ``tune=True``.
+        ``tune_update=True`` also fills the ``op="tn_update"`` /
+        ``"tn_update_dual"`` namespaces the fused-optimizer flush resolves
+        (and implies ``tune_backward``).  Serving itself never runs them,
+        but the engine's warmup is the one place that already knows every
+        projection shape, so fine-tuning jobs piggyback on it (see README
+        "Training on the SFC backend")."""
+        tune_backward = tune_backward or tune_update
         tune = tune or tune_backward
         if tune and self.backend == "sfc_pallas":
-            from repro.core.perf_model import backward_gemm_shapes
             from repro.tune import tune_gemm
 
             # key the cache by the dtype the projections will actually trace
             # with (activations follow param_dtype), or the lookup misses
             dtype = jnp.dtype(self.cfg.param_dtype)
-            for (op, m, n, k) in self.projection_gemm_shapes(prompt_len):
+            for (op, m, n, k) in self.tune_table(
+                prompt_len, backward=tune_backward, update=tune_update
+            ):
                 tune_gemm(m, n, k, dtype, op=op)
-                if tune_backward:
-                    for bwd_op, (bm_, bn_, bk_) in backward_gemm_shapes(
-                        m, n, k
-                    ).items():
-                        tune_gemm(bm_, bn_, bk_, dtype, op=bwd_op)
         tokens = jnp.zeros((self.max_batch, prompt_len), jnp.int32)
         logits, cache = self._prefill(self.params, tokens)
         tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)

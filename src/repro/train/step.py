@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import contextlib
 import functools
+import math
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -19,7 +20,23 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.gemm_backend import gemm_backend as _gemm_backend_ctx
-from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.adamw import (
+    AdamWConfig,
+    adamw_init,
+    adamw_leaf_update,
+    adamw_scalars,
+    adamw_update,
+    clip_scale,
+    lr_at,
+    pack_adamw_hyper,
+)
+from repro.optim.fused import (
+    FusedParam,
+    FusedUpdateConfig,
+    fused_update_config,
+    probe_routed,
+    wrap_routed,
+)
 from repro.parallel.act_sharding import constrain
 
 __all__ = ["make_train_step", "make_eval_step"]
@@ -54,6 +71,9 @@ def make_train_step(
     remat: str = "dots",
     microbatches: int = 1,
     gemm_backend: Optional[str] = None,
+    fused_optimizer: bool = False,
+    stochastic_round: bool = True,
+    fused_filter: Optional[Callable[[str, Any], bool]] = None,
 ) -> Callable:
     """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
 
@@ -61,7 +81,34 @@ def make_train_step(
     ("xla" | "sfc_pallas" | "sfc_reference"); None inherits the caller's
     context.  Under "sfc_pallas" both directions run on the SFC kernels —
     the backward via the NT/TN custom-VJP path, no dot_general fallback.
+
+    ``fused_optimizer=True`` fuses AdamW into the backward pass for every
+    routed 2-D projection weight: the TN kernel's flush updates the
+    moments/master in place and writes W_new (stochastically rounded for
+    bf16 params unless ``stochastic_round=False``) — dW never exists in
+    HBM and the train-step jaxpr contains no standalone optimizer
+    elementwise pass for routed weights.  Routing is discovered by an
+    abstract probe trace and can be overridden with
+    ``fused_filter(path, leaf) -> bool``.  Semantics differences vs the
+    unfused step: clip-by-global-norm uses the *previous* step's norm (the
+    current step's routed-grad norms are only known after the update has
+    been applied; with ``adamw_init(with_gnorm=True)`` the scale is
+    min(1, clip/gnorm_{t-1}), else clipping is off), and it requires
+    ``microbatches == 1`` (the update must run once per step, not once per
+    accumulation slice).
     """
+    if fused_optimizer:
+        if microbatches != 1:
+            raise ValueError(
+                "fused_optimizer requires microbatches=1: the in-kernel "
+                "update applies on every backward pass, which would run "
+                "once per microbatch"
+            )
+        return _make_fused_train_step(
+            model, opt_cfg,
+            remat=remat, gemm_backend=gemm_backend,
+            stochastic_round=stochastic_round, fused_filter=fused_filter,
+        )
 
     def loss_fn(params, batch):
         ctx = (
@@ -95,6 +142,125 @@ def make_train_step(
         )
         metrics = {"loss": loss, **opt_metrics}
         return new_params, new_state, metrics
+
+    return train_step
+
+
+def _make_fused_train_step(
+    model,
+    opt_cfg: AdamWConfig,
+    *,
+    remat: str,
+    gemm_backend: Optional[str],
+    stochastic_round: bool,
+    fused_filter,
+) -> Callable:
+    """Grad-and-update train step: routed weights are wrapped in
+    `FusedParam` nodes, `jax.value_and_grad` returns their *applied AdamW
+    update* through the cotangent slots (the TN kernel flush under
+    "sfc_pallas", the unfused jnp composition under the oracle backends),
+    and only the unrouted leaves run the elementwise optimizer here."""
+    probe_cache: Dict[Any, Any] = {}
+
+    def probe_loss(p, b):
+        # the probe only discovers which leaves reach a projection call
+        # site — run it on the cheap-to-trace xla backend, no remat
+        with _gemm_backend_ctx("xla"):
+            return model.loss(p, b, remat="none")
+
+    def loss_fn(wrapped, batch):
+        ctx = (
+            _gemm_backend_ctx(gemm_backend)
+            if gemm_backend is not None
+            else contextlib.nullcontext()
+        )
+        with ctx, fused_update_config(
+            FusedUpdateConfig(stochastic_round=stochastic_round)
+        ):
+            return model.loss(wrapped, batch, remat=remat)
+
+    def train_step(params, opt_state, batch):
+        step = opt_state["step"] + 1
+        # one-step-delayed clip: this step's routed-grad norms only exist
+        # after the in-kernel update has been applied
+        prev_gnorm = opt_state.get("gnorm")
+        if prev_gnorm is None and math.isfinite(opt_cfg.clip_norm):
+            raise ValueError(
+                "fused_optimizer clips by the previous step's global norm, "
+                "carried in opt_state['gnorm'] — initialize with "
+                "adamw_init(params, with_gnorm=True), or set "
+                "clip_norm=float('inf') to run without clipping"
+            )
+        scale = (
+            clip_scale(opt_cfg, prev_gnorm)
+            if prev_gnorm is not None
+            else jnp.float32(1.0)
+        )
+        hyper = pack_adamw_hyper(opt_cfg, step, scale)
+
+        key = jax.tree_util.tree_structure(params)
+        if key not in probe_cache:
+            probe_cache[key] = probe_routed(
+                probe_loss, params, batch, fused_filter=fused_filter
+            )
+        routed = probe_cache[key]
+        wrapped = wrap_routed(
+            params, opt_state["master"], opt_state["mu"], opt_state["nu"],
+            hyper, routed,
+        )
+
+        loss, cots = jax.value_and_grad(loss_fn)(wrapped, batch)
+
+        is_fp = lambda x: isinstance(x, FusedParam)
+        p_flat, pdef = jax.tree_util.tree_flatten(params)
+        c_flat = jax.tree_util.tree_flatten(cots, is_leaf=is_fp)[0]
+        mst_flat = jax.tree.leaves(opt_state["master"])
+        mu_flat = jax.tree.leaves(opt_state["mu"])
+        nu_flat = jax.tree.leaves(opt_state["nu"])
+
+        lr, b1c, b2c = adamw_scalars(opt_cfg, step)
+        new_p, new_mst, new_mu, new_nu = [], [], [], []
+        sq_total = jnp.float32(0.0)
+        for p, c, mst, m, v in zip(p_flat, c_flat, mst_flat, mu_flat, nu_flat):
+            if isinstance(c, FusedParam):
+                # the cotangents ARE the applied update (+ sum(dW^2) norms)
+                new_p.append(c.w)
+                new_mst.append(c.master)
+                new_mu.append(c.mu)
+                new_nu.append(c.nu)
+                sq_total = sq_total + jnp.sum(c.token)
+            else:
+                g = c
+                sq_total = sq_total + jnp.sum(
+                    jnp.square(g.astype(jnp.float32))
+                )
+                mu_n, nu_n, mst_n = adamw_leaf_update(
+                    g, m, v, mst,
+                    lr=lr, b1=opt_cfg.b1, b2=opt_cfg.b2, eps=opt_cfg.eps,
+                    weight_decay=opt_cfg.weight_decay,
+                    b1c=b1c, b2c=b2c, scale=scale,
+                )
+                new_p.append(mst_n.astype(p.dtype))
+                new_mst.append(mst_n)
+                new_mu.append(mu_n)
+                new_nu.append(nu_n)
+
+        gnorm = jnp.sqrt(sq_total)
+        unflat = lambda leaves: jax.tree_util.tree_unflatten(pdef, leaves)
+        new_state = {
+            "step": step,
+            "mu": unflat(new_mu),
+            "nu": unflat(new_nu),
+            "master": unflat(new_mst),
+        }
+        if prev_gnorm is not None:
+            new_state["gnorm"] = gnorm
+        metrics = {
+            "loss": loss,
+            "grad_norm": gnorm,
+            "lr": lr_at(opt_cfg, step),
+        }
+        return unflat(new_p), new_state, metrics
 
     return train_step
 

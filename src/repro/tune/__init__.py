@@ -7,6 +7,7 @@ the winner; `lookup_knobs` is the measurement-free cache consult used by
 
 from repro.tune.cache import KnobCache, Knobs, default_cache_path, shape_bucket
 from repro.tune.tuner import (
+    TUNE_OPS,
     candidate_knobs,
     default_cache,
     lookup_knobs,
@@ -17,6 +18,7 @@ from repro.tune.tuner import (
 __all__ = [
     "KnobCache",
     "Knobs",
+    "TUNE_OPS",
     "candidate_knobs",
     "default_cache",
     "default_cache_path",

@@ -99,18 +99,35 @@ def candidate_knobs(
     return out[:max_candidates]
 
 
+# every tunable kernel-variant namespace; duals and the update flush have
+# their own knob landscapes (extra streamed panels / resident state tiles)
+TUNE_OPS = (
+    "gemm",
+    "glu",
+    "nt",
+    "nt_dual",
+    "tn",
+    "tn_dual",
+    "tn_update",
+    "tn_update_dual",
+)
+
+
 def _op_call(op: str, knobs: Knobs, *, interpret: bool = False):
     """Shape the measured call for the tuned op: the plain fused GEMM, the
     dual-B GLU kernel (its knob landscape differs — two B panels share one
-    A traversal, doubling the streamed weight bytes per task), or the
-    backward NT/TN kernels (transposed-role traversals: panel geometry and
-    the contraction axis both change, so their winners differ from the
-    forward's)."""
+    A traversal, doubling the streamed weight bytes per task), the backward
+    NT/TN kernels (transposed-role traversals: panel geometry and the
+    contraction axis both change, so their winners differ from the
+    forward's) and their dual (GLU-backward) forms, or the grad-and-update
+    TN flush (``tn_update``/``tn_update_dual`` — resident master/mu/nu
+    tiles change the VMEM footprint)."""
     from repro.kernels.ops import (
         sfc_glu_matmul,
         sfc_matmul,
         sfc_matmul_nt,
         sfc_matmul_tn,
+        sfc_matmul_tn_update,
     )
 
     kw = dict(
@@ -123,8 +140,36 @@ def _op_call(op: str, knobs: Knobs, *, interpret: bool = False):
         return lambda a, b, bg: sfc_glu_matmul(a, bg, b, **kw)
     if op == "nt":
         return lambda a, b, bg: sfc_matmul_nt(a, b, **kw)
+    if op == "nt_dual":
+        return lambda a, b, bg: sfc_matmul_nt(a, b, a, b, **kw)
     if op == "tn":
         return lambda a, b, bg: sfc_matmul_tn(a, b, **kw)
+    if op == "tn_dual":
+        return lambda a, b, bg: sfc_matmul_tn(a, b, b, **kw)
+    if op in ("tn_update", "tn_update_dual"):
+        import jax.numpy as jnp
+
+        from repro.optim.adamw import AdamWConfig, pack_adamw_hyper
+
+        hyper = pack_adamw_hyper(
+            AdamWConfig(), jnp.asarray(1, jnp.int32), jnp.float32(1.0)
+        )
+
+        def call(a, b, bg, _op=op):
+            kn = (a.shape[1], b.shape[1])
+            mst = jnp.zeros(kn, jnp.float32)
+            mu = jnp.zeros(kn, jnp.float32)
+            nu = jnp.zeros(kn, jnp.float32)
+            if _op == "tn_update_dual":
+                return sfc_matmul_tn_update(
+                    a, b, mst, mu, nu, hyper, b, mst, mu, nu,
+                    param_dtype=a.dtype, **kw,
+                )
+            return sfc_matmul_tn_update(
+                a, b, mst, mu, nu, hyper, param_dtype=a.dtype, **kw
+            )
+
+        return call
     return lambda a, b, bg: sfc_matmul(a, b, **kw)
 
 
@@ -133,10 +178,11 @@ def _op_operand_shapes(op: str, m: int, n: int, k: int):
 
     The (m, n, k) key is always the *resolver* bucket — what
     `ops.resolve_knobs` is called with for that op: NT consumes (m, k) and
-    the untransposed (n, k); TN contracts over k rows, producing (m, n)."""
-    if op == "nt":
+    the untransposed (n, k); TN (and the update flush) contracts over k
+    rows, producing (m, n)."""
+    if op in ("nt", "nt_dual"):
         return (m, k), (n, k), None
-    if op == "tn":
+    if op in ("tn", "tn_dual", "tn_update", "tn_update_dual"):
         return (k, m), (k, n), None
     if op == "glu":
         return (m, k), (k, n), (k, n)
@@ -190,9 +236,12 @@ def _measure_hlo_cost(m, n, k, dtype, knobs: Knobs, *, op: str = "gemm") -> floa
 
 def _measure_simulated(m, n, k, dtype, knobs: Knobs, *, op: str = "gemm") -> float:
     """Exact BRGEMM-taxonomy simulator fallback (always available)."""
+    from repro.core.perf_model import optimizer_update_bytes
+
     dtype_bytes = np.dtype(dtype).itemsize
     mp = ((m + knobs.bm - 1) // knobs.bm) * knobs.bm
     np_ = ((n + knobs.bn - 1) // knobs.bn) * knobs.bn
+    dual = op in ("glu", "nt_dual", "tn_dual", "tn_update_dual")
     r = simulate_gemm(
         mp, np_, max(k, 1),
         n_workers=1,
@@ -200,9 +249,18 @@ def _measure_simulated(m, n, k, dtype, knobs: Knobs, *, op: str = "gemm") -> flo
         k_block_factor=knobs.k_block_factor,
         bm=knobs.bm, bn=knobs.bn,
         hw=TPU_V5E, dtype_bytes=dtype_bytes,
-        n_b_mats=2 if op == "glu" else 1,
+        n_b_mats=2 if dual else 1,
     )
-    return float(r["time_s"])
+    t = float(r["time_s"])
+    if op.startswith("tn_update"):
+        # the fused flush streams the resident optimizer state tiles too
+        # (knob-independent, but it keeps update scores comparable to the
+        # wall-clock regime's absolute times)
+        sets = 2 if dual else 1
+        t += sets * optimizer_update_bytes(
+            mp, np_, fused=True, param_bytes=dtype_bytes
+        ) * TPU_V5E.beta
+    return t
 
 
 def measure_candidate(
@@ -246,6 +304,12 @@ def tune_gemm(
     the tuned kernel variant — "gemm" (default) or the fused dual-B "glu" —
     each with its own cache namespace.
     """
+    if op not in TUNE_OPS:
+        raise ValueError(
+            f"unknown tune namespace {op!r}; pick from {TUNE_OPS} — a typo "
+            "here would measure the plain forward GEMM and persist a "
+            "mis-keyed winner"
+        )
     cache = cache if cache is not None else default_cache()
     backend = _backend_name()
     if not force:

@@ -145,3 +145,36 @@ def test_shared_memory_floor_keys_by_shape():
     f2 = shared_memory_floor(2048, 2048, 512)
     f3 = shared_memory_floor(1024, 4096, 512)
     assert f1 > f3 > f2  # operand footprint grows with aspect ratio
+
+
+def test_newly_covered_rows_are_listed(tmp_path, capsys):
+    """Gate-coverage growth must be visible: rows present in the new
+    emission but not the baseline are enumerated in the output."""
+    b = _write(tmp_path, "base.json", BASE)
+    n = _write(
+        tmp_path, "new.json",
+        BASE + [_row("gemm_bwd/512x512x512/tn", 5.0),
+                _row("data_movement/train_update/4096x4096x4096", 7.0)],
+    )
+    assert main([b, n]) == 0
+    out = capsys.readouterr().out
+    assert "2 newly covered" in out
+    assert "  + gemm_bwd/512x512x512/tn" in out
+    assert "  + data_movement/train_update/4096x4096x4096" in out
+
+
+def test_baseline_covers_backward_and_update_rows():
+    """The PR-4 acceptance criterion: the committed baseline gates the
+    backward sweep and the fused-update rows."""
+    rows = load_rows(str(REPO / "BENCH_gemm.json"))
+    assert any(name.startswith("gemm_bwd/") and name.endswith("/nt")
+               for name in rows)
+    assert any(name.startswith("gemm_bwd/") and name.endswith("/tn")
+               for name in rows)
+    assert any(name.startswith("gemm_bwd/moe/") for name in rows)
+    assert any(name.startswith("data_movement/train_update/")
+               for name in rows)
+    # the update rows carry the quantified dW deletion
+    upd = next(r for name, r in rows.items()
+               if name.startswith("data_movement/train_update/"))
+    assert "dw_GB_deleted=" in upd["derived"]

@@ -1,0 +1,549 @@
+"""Grad-and-update fusion: AdamW in the TN kernel flush.
+
+Differential tests of the fused TN-update against the unfused composition
+(TN GEMM -> `adamw_leaf_update`), the bf16 stochastic-rounding contract
+(deterministic per seed, mean-unbiased over seeds), the fused train step
+against the unfused one, and structural jaxpr checks: for routed weights
+the fused step contains no standalone optimizer elementwise pass — the
+update lives inside the Pallas kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gemm_backend as gb
+from repro.kernels.ops import (
+    fused_update_glu_matmul,
+    fused_update_matmul,
+    sfc_grouped_matmul_tn_update,
+    sfc_matmul_tn,
+    sfc_matmul_tn_update,
+)
+from repro.kernels.sfc_gemm import stochastic_round_to, tile_random_bits
+from repro.optim.adamw import (
+    HYP_SALT,
+    HYP_SEED,
+    AdamWConfig,
+    adamw_init,
+    adamw_leaf_update,
+    adamw_scalars,
+    pack_adamw_hyper,
+    seed_to_lane,
+)
+from repro.optim.fused import probe_routed
+from repro.train.step import make_train_step
+
+
+def _rand(*shape, dtype=jnp.float32, seed=0, scale=1.0):
+    rng = np.random.default_rng([seed, *[int(s) for s in shape]])
+    return jnp.asarray(rng.normal(size=shape) * scale, dtype)
+
+
+CFG = AdamWConfig()
+
+
+def _state(k, n, seed=0):
+    return (
+        _rand(k, n, seed=seed + 1, scale=0.5),
+        _rand(k, n, seed=seed + 2, scale=0.1),
+        jnp.abs(_rand(k, n, seed=seed + 3, scale=0.01)),
+    )
+
+
+def _reference_update(dw, mst, mu, nu, step, scale):
+    lr, b1c, b2c = adamw_scalars(CFG, step)
+    rmu, rnu, rmst = adamw_leaf_update(
+        dw, mu, nu, mst,
+        lr=lr, b1=CFG.b1, b2=CFG.b2, eps=CFG.eps,
+        weight_decay=CFG.weight_decay, b1c=b1c, b2c=b2c, scale=scale,
+    )
+    return rmst, rmu, rnu
+
+
+# ---------------------------------------------------------------------------
+# kernel-level differential: fused flush == unfused TN + elementwise AdamW
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(48, 32, 40), (130, 96, 72)])
+def test_tn_update_matches_unfused_composition_f32(shape):
+    m, k, n = shape
+    a, dy = _rand(m, k), _rand(m, n, seed=1)
+    mst, mu, nu = _state(k, n)
+    step = jnp.asarray(7, jnp.int32)
+    scale = jnp.float32(0.6)
+    hyper = pack_adamw_hyper(CFG, step, scale)
+
+    w_n, mst_n, mu_n, nu_n, sq = sfc_matmul_tn_update(
+        a, dy, mst, mu, nu, hyper,
+        param_dtype=jnp.float32, interpret=True,
+    )
+    # unfused composition: the TN kernel writes dW, AdamW reads it back
+    dw = sfc_matmul_tn(a, dy, interpret=True, out_dtype=jnp.float32)
+    rmst, rmu, rnu = _reference_update(dw, mst, mu, nu, step, scale)
+
+    for got, want in ((mst_n, rmst), (mu_n, rmu), (nu_n, rnu), (w_n, rmst)):
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6
+        )
+    np.testing.assert_allclose(
+        float(sq), float(jnp.sum(dw.astype(jnp.float32) ** 2)), rtol=1e-5
+    )
+
+
+def test_tn_update_dual_matches_unfused():
+    m, k, n = 40, 24, 32
+    a = _rand(m, k)
+    dy, dy2 = _rand(m, n, seed=1), _rand(m, n, seed=2)
+    mst, mu, nu = _state(k, n)
+    mst2, mu2, nu2 = _state(k, n, seed=10)
+    step = jnp.asarray(3, jnp.int32)
+    hyper = pack_adamw_hyper(CFG, step, jnp.float32(1.0))
+
+    set_v, set_g = sfc_matmul_tn_update(
+        a, dy, mst, mu, nu, hyper, dy2, mst2, mu2, nu2,
+        param_dtype=jnp.float32, interpret=True,
+    )
+    for (dyi, sti, got) in (
+        (dy, (mst, mu, nu), set_v),
+        (dy2, (mst2, mu2, nu2), set_g),
+    ):
+        dw = sfc_matmul_tn(a, dyi, interpret=True, out_dtype=jnp.float32)
+        rmst, rmu, rnu = _reference_update(dw, *sti, step, 1.0)
+        np.testing.assert_allclose(np.asarray(got[1]), np.asarray(rmst), rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(got[2]), np.asarray(rmu), rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(
+            float(got[4]), float(jnp.sum(dw ** 2)), rtol=1e-5
+        )
+
+
+def test_grouped_tn_update_matches_per_expert():
+    gs = (10, 0, 23)  # middle expert empty: g = 0 update must still apply
+    k, n = 16, 24
+    t = sum(gs)
+    a, dy = _rand(t, k), _rand(t, n, seed=1)
+    e = len(gs)
+    mst = _rand(e, k, n, seed=4, scale=0.5)
+    mu = _rand(e, k, n, seed=5, scale=0.1)
+    nu = jnp.abs(_rand(e, k, n, seed=6, scale=0.01))
+    step = jnp.asarray(2, jnp.int32)
+    hyper = pack_adamw_hyper(CFG, step, jnp.float32(1.0))
+
+    w_n, mst_n, mu_n, nu_n, sq = sfc_grouped_matmul_tn_update(
+        a, dy, gs, mst, mu, nu, hyper,
+        param_dtype=jnp.float32, interpret=True,
+    )
+    off, total_sq = 0, 0.0
+    for ei, g in enumerate(gs):
+        dw = (
+            a[off : off + g].T @ dy[off : off + g]
+            if g
+            else jnp.zeros((k, n), jnp.float32)
+        )
+        rmst, rmu, rnu = _reference_update(
+            dw, mst[ei], mu[ei], nu[ei], step, 1.0
+        )
+        np.testing.assert_allclose(
+            np.asarray(mst_n[ei]), np.asarray(rmst), rtol=1e-5, atol=1e-6
+        )
+        np.testing.assert_allclose(
+            np.asarray(mu_n[ei]), np.asarray(rmu), rtol=1e-5, atol=1e-6
+        )
+        total_sq += float(jnp.sum(dw ** 2))
+        off += g
+    np.testing.assert_allclose(float(sq), total_sq, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# bf16 stochastic rounding: deterministic per seed, unbiased over seeds
+# ---------------------------------------------------------------------------
+
+
+def test_stochastic_round_unbiased_and_deterministic():
+    x = jnp.linspace(-2.0, 2.0, 1024, dtype=jnp.float32).reshape(8, 128) + 1e-3
+    acc = jnp.zeros_like(x)
+    n_seeds = 64
+    for s in range(n_seeds):
+        bits = tile_random_bits(x.shape, jnp.int32(s), hw_rng=False)
+        acc = acc + stochastic_round_to(x, bits, jnp.bfloat16).astype(jnp.float32)
+    mean = acc / n_seeds
+    # one bf16 ulp at |x|~2 is ~2^-7; the mean must sit well inside it
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(x), atol=4e-3)
+    # fixed seed => bit-identical
+    b0 = tile_random_bits(x.shape, jnp.int32(5), hw_rng=False)
+    b1 = tile_random_bits(x.shape, jnp.int32(5), hw_rng=False)
+    assert bool(jnp.all(b0 == b1))
+    r0 = stochastic_round_to(x, b0, jnp.bfloat16)
+    assert bool(jnp.all(r0 == stochastic_round_to(x, b1, jnp.bfloat16)))
+
+
+def test_kernel_sr_deterministic_and_unbiased():
+    m, k, n = 32, 16, 24
+    a, dy = _rand(m, k), _rand(m, n, seed=1)
+    mst, mu, nu = _state(k, n)
+
+    def run(step):
+        hyper = pack_adamw_hyper(
+            CFG, jnp.asarray(step, jnp.int32), jnp.float32(1.0)
+        )
+        return sfc_matmul_tn_update(
+            a, dy, mst, mu, nu, hyper,
+            param_dtype=jnp.bfloat16, stochastic_round=True, interpret=True,
+        )
+
+    w_a = run(4)
+    w_b = run(4)
+    assert bool(jnp.all(w_a[0] == w_b[0])), "fixed (step, tile) seed must be deterministic"
+    assert w_a[0].dtype == jnp.bfloat16
+    # rounded value within one bf16 ulp of the f32 master
+    err = jnp.abs(w_a[0].astype(jnp.float32) - w_a[1])
+    ulp = jnp.maximum(jnp.abs(w_a[1]) * 2.0 ** -7, 2.0 ** -126)
+    assert bool(jnp.all(err <= ulp))
+    # mean over many steps (different seeds, same update inputs except the
+    # tiny lr drift across steps is avoided by fixing the packed scalars):
+    hyper4 = pack_adamw_hyper(CFG, jnp.asarray(4, jnp.int32), jnp.float32(1.0))
+    base = sfc_matmul_tn_update(
+        a, dy, mst, mu, nu, hyper4, param_dtype=jnp.float32, interpret=True
+    )[1]
+    acc = jnp.zeros_like(base)
+    n_seeds = 32
+    for s in range(n_seeds):
+        hyper_s = hyper4.at[HYP_SEED].set(
+            seed_to_lane(jnp.asarray(1000 + s, jnp.int32))
+        )
+        w = sfc_matmul_tn_update(
+            a, dy, mst, mu, nu, hyper_s,
+            param_dtype=jnp.bfloat16, stochastic_round=True, interpret=True,
+        )[0]
+        acc = acc + w.astype(jnp.float32)
+    resid = jnp.abs(acc / n_seeds - base)
+    # SR noise shrinks as 1/sqrt(n): the mean must land far inside one ulp
+    assert float(jnp.mean(resid)) < float(jnp.mean(jnp.abs(base))) * 2.0 ** -8
+
+
+def test_kernel_sr_salt_decorrelates_leaves():
+    """Two routed weights with identical tile grids must not share a dither
+    stream: the per-leaf salt lane changes the rounded bits."""
+    m, k, n = 32, 16, 24
+    a, dy = _rand(m, k), _rand(m, n, seed=1)
+    mst, mu, nu = _state(k, n)
+    hyper = pack_adamw_hyper(CFG, jnp.asarray(4, jnp.int32), jnp.float32(1.0))
+
+    def run(salt):
+        h = hyper.at[HYP_SALT].set(seed_to_lane(jnp.asarray(salt, jnp.int32)))
+        return sfc_matmul_tn_update(
+            a, dy, mst, mu, nu, h,
+            param_dtype=jnp.bfloat16, stochastic_round=True, interpret=True,
+        )[0]
+
+    w_a, w_b = run(1 << 16), run(2 << 16)
+    assert bool(jnp.any(w_a != w_b)), "distinct salts must give distinct bits"
+    assert bool(jnp.all(run(1 << 16) == w_a)), "same salt stays deterministic"
+
+
+# ---------------------------------------------------------------------------
+# custom-VJP level: fused backward == unfused oracle composition
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("activation", [None, "gelu"])
+def test_fused_update_core_matches_oracle(activation):
+    m, k, n = 24, 16, 40
+    x = _rand(2, m, k)
+    w = _rand(k, n, scale=0.1)
+    mst, mu, nu = jnp.array(w), jnp.zeros((k, n)), jnp.zeros((k, n))
+    hyper = pack_adamw_hyper(CFG, jnp.asarray(1, jnp.int32), jnp.float32(1.0))
+    tok = jnp.zeros(())
+
+    def loss(x, w, mst, mu, nu, hyper, tok, backend):
+        y = fused_update_matmul(
+            x, w, mst, mu, nu, hyper, tok,
+            backend=backend, activation=activation, stochastic_round=False,
+        )
+        return jnp.sum(y ** 2)
+
+    grad = jax.value_and_grad(loss, argnums=(0, 1, 2, 3, 4, 6))
+    vp, cp = grad(x, w, mst, mu, nu, hyper, tok, "sfc_pallas")
+    vx, cx = grad(x, w, mst, mu, nu, hyper, tok, "xla")
+    np.testing.assert_allclose(float(vp), float(vx), rtol=1e-6)
+    for got, want in zip(jax.tree.leaves(cp), jax.tree.leaves(cx)):
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5
+        )
+    # the update really applied: W_new != W and sq > 0
+    assert bool(jnp.any(cp[1] != w)) and float(cp[5]) > 0
+
+
+def test_fused_update_glu_core_matches_oracle():
+    m, k, n = 24, 16, 32
+    x = _rand(m, k)
+    wg, wv = _rand(k, n, seed=1, scale=0.1), _rand(k, n, seed=2, scale=0.1)
+    og = (jnp.array(wg), jnp.zeros((k, n)), jnp.zeros((k, n)))
+    ov = (jnp.array(wv), jnp.zeros((k, n)), jnp.zeros((k, n)))
+    hyper = pack_adamw_hyper(CFG, jnp.asarray(1, jnp.int32), jnp.float32(1.0))
+    toks = (jnp.zeros(()), jnp.zeros(()))
+
+    def loss(x, wg, wv, og, ov, backend):
+        y = fused_update_glu_matmul(
+            x, wg, wv, og, ov, hyper, toks,
+            backend=backend, stochastic_round=False,
+        )
+        return jnp.sum(y ** 2)
+
+    grad = jax.value_and_grad(loss, argnums=(0, 1, 2, 3, 4))
+    vp, cp = grad(x, wg, wv, og, ov, "sfc_pallas")
+    vx, cx = grad(x, wg, wv, og, ov, "xla")
+    np.testing.assert_allclose(float(vp), float(vx), rtol=1e-6)
+    for got, want in zip(jax.tree.leaves(cp), jax.tree.leaves(cx)):
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4
+        )
+
+
+# ---------------------------------------------------------------------------
+# train-step level: a minimal two-projection model exercises probe + wrap +
+# cotangent plumbing without the cost of a full transformer
+# ---------------------------------------------------------------------------
+
+
+class _MiniModel:
+    """Two dense projections + an elementwise head; params include a norm
+    scale (elementwise-consumed -> must be auto-excluded by the probe)."""
+
+    def init(self, key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "w1": (jax.random.normal(k1, (16, 32)) * 0.1).astype(jnp.float32),
+            "w2": (jax.random.normal(k2, (32, 8)) * 0.1).astype(jnp.float32),
+            "scale": jnp.ones((16,), jnp.float32),
+        }
+
+    def loss(self, params, batch, *, remat="none"):
+        x = batch["x"] * params["scale"]
+        h = gb.matmul(x, params["w1"], activation="gelu")
+        y = gb.matmul(h, params["w2"])
+        return jnp.mean((y - batch["y"]) ** 2)
+
+
+@pytest.fixture()
+def mini():
+    model = _MiniModel()
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"x": _rand(6, 16, seed=3), "y": _rand(6, 8, seed=4)}
+    return model, params, batch
+
+
+def test_probe_routes_projections_only(mini):
+    model, params, batch = mini
+
+    def probe_loss(p, b):
+        with gb.gemm_backend("xla"):
+            return model.loss(p, b)
+
+    routed = probe_routed(probe_loss, params, batch)
+    assert set(routed) == {"w1", "w2"}
+    assert not routed["w1"].stacked
+
+
+def test_fused_step_matches_unfused_f32(mini):
+    model, params, batch = mini
+    cfg = AdamWConfig(lr=1e-2, total_steps=10, warmup_steps=1, clip_norm=1e9)
+
+    unfused = make_train_step(model, cfg, remat="none", gemm_backend="xla")
+    st_u = adamw_init(params)
+    p_u, s_u, m_u = unfused(params, st_u, batch)
+
+    for backend in ("sfc_pallas", "xla"):
+        fused = make_train_step(
+            model, cfg, remat="none", gemm_backend=backend,
+            fused_optimizer=True, stochastic_round=False,
+        )
+        st_f = adamw_init(params, with_gnorm=True)
+        p_f, s_f, m_f = fused(params, st_f, batch)
+        np.testing.assert_allclose(float(m_f["loss"]), float(m_u["loss"]), rtol=1e-6)
+        np.testing.assert_allclose(
+            float(m_f["grad_norm"]), float(m_u["grad_norm"]), rtol=1e-5
+        )
+        for got, want in zip(jax.tree.leaves(p_f), jax.tree.leaves(p_u)):
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6,
+                err_msg=f"backend={backend}",
+            )
+        for slot in ("mu", "nu", "master"):
+            for got, want in zip(
+                jax.tree.leaves(s_f[slot]), jax.tree.leaves(s_u[slot])
+            ):
+                np.testing.assert_allclose(
+                    np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6
+                )
+
+
+def test_fused_step_delayed_clip_carries_gnorm(mini):
+    model, params, batch = mini
+    cfg = AdamWConfig(lr=1e-2, total_steps=10, warmup_steps=1, clip_norm=0.5)
+    fused = make_train_step(
+        model, cfg, remat="none", gemm_backend="sfc_pallas",
+        fused_optimizer=True, stochastic_round=False,
+    )
+    st = adamw_init(params, with_gnorm=True)
+    p1, s1, m1 = fused(params, st, batch)
+    assert float(s1["gnorm"]) == float(m1["grad_norm"]) > 0
+    # step 2 must consume step 1's norm as the clip signal (trace check:
+    # running it just needs to not blow up; numeric check: norms differ)
+    p2, s2, m2 = fused(p1, s1, batch)
+    assert float(s2["gnorm"]) != float(s1["gnorm"])
+
+
+def _count_elementwise_at_shape(jaxpr, shape, counts=None):
+    """Count non-pallas elementwise eqns whose every in/outvar has `shape`
+    — the signature of a standalone optimizer pass over a routed weight."""
+    elementwise = {
+        "add", "sub", "mul", "div", "sqrt", "rsqrt", "integer_pow",
+        "max", "min",
+    }
+    if counts is None:
+        counts = {"n": 0}
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            continue
+        shapes = [tuple(v.aval.shape) for v in (*eqn.invars, *eqn.outvars)
+                  if hasattr(v, "aval")]
+        if (
+            eqn.primitive.name in elementwise
+            and shapes
+            and all(s == shape for s in shapes)
+        ):
+            counts["n"] += 1
+        for val in eqn.params.values():
+            _walk_param(val, shape, counts)
+    return counts
+
+
+def _walk_param(val, shape, counts):
+    if isinstance(val, jax.core.ClosedJaxpr):
+        _count_elementwise_at_shape(val.jaxpr, shape, counts)
+    elif isinstance(val, jax.core.Jaxpr):
+        _count_elementwise_at_shape(val, shape, counts)
+    elif isinstance(val, (tuple, list)):
+        for v in val:
+            _walk_param(v, shape, counts)
+
+
+def test_fused_step_jaxpr_has_no_optimizer_pass_for_routed_weights(mini):
+    """The acceptance-criterion structural check: the fused train step's
+    jaxpr contains zero standalone elementwise optimizer ops at a routed
+    weight's shape (they live inside the TN-update pallas_call), while the
+    unfused step contains the full AdamW chain."""
+    model, params, batch = mini
+    cfg = AdamWConfig(lr=1e-2, total_steps=10, warmup_steps=1)
+    w_shape = tuple(params["w1"].shape)
+
+    fused = make_train_step(
+        model, cfg, remat="none", gemm_backend="sfc_pallas",
+        fused_optimizer=True, stochastic_round=False,
+    )
+    unfused = make_train_step(model, cfg, remat="none", gemm_backend="sfc_pallas")
+
+    st_f = adamw_init(params, with_gnorm=True)
+    st_u = adamw_init(params)
+    jx_f = jax.make_jaxpr(fused)(params, st_f, batch)
+    jx_u = jax.make_jaxpr(unfused)(params, st_u, batch)
+
+    n_fused = _count_elementwise_at_shape(jx_f.jaxpr, w_shape)["n"]
+    n_unfused = _count_elementwise_at_shape(jx_u.jaxpr, w_shape)["n"]
+    assert n_unfused > 0, "unfused step should run elementwise AdamW"
+    assert n_fused == 0, (
+        f"fused step still runs {n_fused} standalone elementwise ops at "
+        f"routed weight shape {w_shape}"
+    )
+
+
+def test_fused_step_rejects_microbatching(mini):
+    model, _, _ = mini
+    with pytest.raises(ValueError, match="microbatches"):
+        make_train_step(
+            model, AdamWConfig(), fused_optimizer=True, microbatches=2
+        )
+
+
+# ---------------------------------------------------------------------------
+# warmup fills the backward-dual + update namespaces (table-driven)
+# ---------------------------------------------------------------------------
+
+
+def test_warmup_tunes_dual_and_update_namespaces(monkeypatch):
+    from repro.configs import get_config
+    from repro.core.perf_model import backward_gemm_shapes
+    from repro.models.registry import build_model
+    from repro.serving.engine import ServingEngine
+
+    cfg = get_config("qwen3_4b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServingEngine(cfg, params, max_batch=2, max_seq=16,
+                           gemm_backend="sfc_pallas")
+
+    calls = []
+
+    def fake_tune(m, n, k, dtype, op="gemm", **kw):
+        calls.append((op, m, n, k))
+
+    import repro.tune
+
+    monkeypatch.setattr(repro.tune, "tune_gemm", fake_tune)
+    monkeypatch.setattr(
+        ServingEngine, "warmup", _warmup_tune_only(ServingEngine.warmup)
+    )
+    engine.warmup(prompt_len=8, tune_update=True)
+
+    ops_seen = {c[0] for c in calls}
+    fwd = engine.projection_gemm_shapes(8)
+    assert any(op == "glu" for op, *_ in fwd), "config should have a gated MLP"
+    assert {"nt", "tn", "nt_dual", "tn_dual", "tn_update",
+            "tn_update_dual"} <= ops_seen
+    # the dual namespaces are exactly the GLU projections' backward buckets
+    for op, m, n, k in fwd:
+        bwd = backward_gemm_shapes(m, n, k)
+        suffix = "_dual" if op == "glu" else ""
+        assert ("nt" + suffix, *bwd["nt"]) in calls
+        assert ("tn" + suffix, *bwd["tn"]) in calls
+        assert ("tn_update" + suffix, *bwd["tn"]) in calls
+
+
+def _warmup_tune_only(orig):
+    """Run warmup's tuning loop but skip the compile (prefill/decode) tail."""
+
+    def warmup(self, prompt_len=32, **kw):
+        try:
+            orig(self, prompt_len, **kw)
+        except Exception:
+            # the reduced config may not compile a decode step in this
+            # harness; the tuning loop runs before compilation, which is
+            # all this test asserts
+            pass
+
+    return warmup
+
+
+def test_tn_update_tuner_namespace_roundtrip(tmp_path, monkeypatch):
+    """`tune_gemm(op="tn_update")` measures the real update op and persists
+    under the op-suffixed cache key the resolver consults."""
+    import repro.tune.tuner as tuner
+    from repro.tune import KnobCache, tune_gemm
+
+    monkeypatch.setenv("REPRO_SFC_TUNE_CACHE", str(tmp_path / "knobs.json"))
+    tuner._DEFAULT_CACHE = None
+    try:
+        kn = tune_gemm(32, 24, 16, np.float32, op="tn_update",
+                       max_candidates=2)
+        cache = KnobCache(str(tmp_path / "knobs.json"))
+        key = cache.key(32, 24, 16, np.float32, "cpu", "tn_update")
+        assert key.endswith("|tn_update")
+        hit = cache.get(32, 24, 16, np.float32, "cpu", "tn_update")
+        assert hit is not None and hit.bm == kn.bm
+        # and the plain tn namespace is untouched
+        assert cache.get(32, 24, 16, np.float32, "cpu", "tn") is None
+    finally:
+        tuner._DEFAULT_CACHE = None
