@@ -104,6 +104,59 @@ def compare(
     return deltas, failures
 
 
+def family(name: str) -> str:
+    """Coverage family of a row: the leading path components up to the
+    shape segment (e.g. ``data_movement/attn_prefill``)."""
+    parts = name.split("/")
+    fam = [parts[0]]
+    for p in parts[1:]:
+        if any(ch.isdigit() for ch in p):
+            break
+        fam.append(p)
+    return "/".join(fam)
+
+
+def coverage_report(
+    baseline: Dict[str, Dict],
+    new: Dict[str, Dict],
+    *,
+    require_prefixes: Tuple[str, ...] = (),
+) -> Tuple[str, List[str]]:
+    """Per-family row counts (baseline vs new) + failures for required
+    families absent from either document.
+
+    ``require_prefixes`` names row families that MUST be present in both
+    the committed baseline and the fresh emission — a benchmark family
+    silently dropped from the smoke set (or never committed to the
+    baseline, so never gated) is a coverage regression, not a neutral
+    diff.  CI passes the attention families here so the
+    ``data_movement/attn_prefill`` / ``attn_decode`` rows stay under the
+    25% gate."""
+    fams: Dict[str, List[int]] = {}
+    for name in baseline:
+        fams.setdefault(family(name), [0, 0])[0] += 1
+    for name in new:
+        fams.setdefault(family(name), [0, 0])[1] += 1
+    lines = ["| family | baseline rows | new rows |", "|---|---:|---:|"]
+    for fam in sorted(fams):
+        b, n = fams[fam]
+        lines.append(f"| `{fam}` | {b} | {n} |")
+    failures = []
+    for pref in require_prefixes:
+        in_base = any(name.startswith(pref) for name in baseline)
+        in_new = any(name.startswith(pref) for name in new)
+        if not in_base:
+            failures.append(
+                f"required family {pref!r} has no rows in the committed "
+                "baseline — it is not under the regression gate"
+            )
+        if not in_new:
+            failures.append(
+                f"required family {pref!r} has no rows in the new emission"
+            )
+    return "\n".join(lines), failures
+
+
 def delta_table(deltas: List[Dict]) -> str:
     """Markdown delta table (rendered in the GitHub job summary)."""
     lines = [
@@ -130,17 +183,31 @@ def main(argv: Optional[List[str]] = None) -> int:
         "--gate-measured", action="store_true",
         help="also gate wall-clock rows (same-machine A/B runs only)",
     )
+    p.add_argument(
+        "--require-prefix", action="append", default=[],
+        metavar="PREFIX",
+        help="fail unless rows with this name prefix exist in BOTH "
+             "documents (repeatable; keeps benchmark families under the "
+             "gate instead of silently dropping off it)",
+    )
     args = p.parse_args(argv)
 
     baseline_rows = load_rows(args.baseline)
+    new_rows = load_rows(args.new)
     deltas, failures = compare(
         baseline_rows,
-        load_rows(args.new),
+        new_rows,
         threshold=args.threshold,
         gate_measured=args.gate_measured,
     )
+    cov_table, cov_failures = coverage_report(
+        baseline_rows, new_rows,
+        require_prefixes=tuple(args.require_prefix),
+    )
+    failures.extend(cov_failures)
     table = delta_table(deltas)
     print(table)
+    print(f"\n{cov_table}")
     # gate-coverage growth: rows the new emission carries that the
     # committed baseline does not — visible in the job summary so coverage
     # expansion is an explicit, reviewable event
@@ -157,6 +224,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         with open(summary_path, "a") as f:
             f.write("## Bench smoke vs committed baseline\n\n")
             f.write(table + "\n\n")
+            f.write("### Coverage by family\n\n")
+            f.write(cov_table + "\n\n")
             if added:
                 f.write(f"### Newly covered rows ({len(added)})\n\n")
                 for name in added:

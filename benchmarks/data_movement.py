@@ -149,11 +149,69 @@ def run_train_update(n_workers: int = 256):
         )
 
 
+# (B, H, Hkv, Sq, D) prefill attention cells: the paper-study 4k shape, a
+# GQA 8:1 long-prefill shape, and a small-model cell
+ATTN_PREFILL_SHAPES = [
+    (1, 32, 32, 4096, 128),
+    (1, 32, 4, 16384, 128),
+    (4, 16, 16, 2048, 64),
+]
+
+# (B, H, Hkv, T, D) decode cells (T = padded cache, half live on average)
+ATTN_DECODE_SHAPES = [
+    (8, 32, 32, 4096, 128),
+    (64, 32, 4, 8192, 128),
+]
+
+
+def run_attention():
+    """SFC attention rows: modeled HBM traffic of the band-scheduled flash
+    prefill (fwd + bwd) and the valid-length-bounded decode step vs the
+    materialized-scores / head-expanded formulations they replace — the
+    attention analogue of `run_glu`/`run_train`."""
+    from repro.core.perf_model import (
+        simulate_decode_attention,
+        simulate_flash_attention,
+        unfused_attention_bytes,
+        unfused_decode_attention_bytes,
+    )
+
+    for (b, h, hkv, s, d) in ATTN_PREFILL_SHAPES:
+        fwd = simulate_flash_attention(
+            b, h, s, s, d, q_chunk=256, k_chunk=256, causal=True,
+            phase="fwd", hkv=hkv,
+        )
+        bwd = simulate_flash_attention(
+            b, h, s, s, d, q_chunk=256, k_chunk=256, causal=True,
+            phase="bwd", hkv=hkv,
+        )
+        unfused = unfused_attention_bytes(b, h, s, s, d, hkv=hkv)
+        emit(
+            f"data_movement/attn_prefill/{b}x{h}x{hkv}x{s}x{d}",
+            fwd["time_s"] * 1e6,
+            f"flash_GB={fwd['bytes']/1e9:.3f};bwd_GB={bwd['bytes']/1e9:.3f};"
+            f"unfused_GB={unfused/1e9:.3f};"
+            f"hbm_reduction={unfused/fwd['bytes']:.1f}x;"
+            f"band_tiles={fwd['n_tiles']:.0f};tflops={fwd['tflops']:.0f}",
+        )
+    for (b, h, hkv, t, d) in ATTN_DECODE_SHAPES:
+        fus = simulate_decode_attention(b, h, hkv, t, d, valid_frac=0.5)
+        unfused = unfused_decode_attention_bytes(b, h, hkv, t, d)
+        emit(
+            f"data_movement/attn_decode/{b}x{h}x{hkv}x{t}x{d}",
+            fus["time_s"] * 1e6,
+            f"sfc_GB={fus['bytes']/1e9:.3f};unfused_GB={unfused/1e9:.3f};"
+            f"hbm_reduction={unfused/fus['bytes']:.1f}x;"
+            f"single_launch=1",
+        )
+
+
 def main():
     run()
     run_glu()
     run_train()
     run_train_update()
+    run_attention()
 
 
 if __name__ == "__main__":

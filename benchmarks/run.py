@@ -68,6 +68,7 @@ def main(argv=None) -> None:
         data_movement.run_glu()          # fused gated-MLP HBM model
         data_movement.run_train()        # fwd + NT/TN backward traffic
         data_movement.run_train_update()  # fused-optimizer flush rows
+        data_movement.run_attention()    # SFC flash prefill + decode rows
         llm_prefill.run(smoke=True)      # paper Fig. 10 (one cell)
     else:
         gemm_sweep.run(full=args.full)   # paper Figs. 1 / 6 / 9

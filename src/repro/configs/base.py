@@ -55,7 +55,10 @@ class ArchConfig:
     frontend: Optional[str] = None  # "audio" | "vision" (STUB embeddings)
 
     # attention implementation: "blockwise" (pure-JAX online softmax, used
-    # by the dry-runs) or "flash_pallas" (the Pallas kernel; TPU or interpret)
+    # by the dry-runs), "flash_pallas" (the legacy forward-only Pallas
+    # kernel) or "sfc" (the SFC-scheduled differentiable flash + decode
+    # kernels behind `core.attention_backend` — with the sfc_pallas GEMM
+    # backend, the whole train step is dot_general-free)
     attn_impl: str = "blockwise"
     q_chunk: int = 512
     k_chunk: int = 1024

@@ -1,0 +1,307 @@
+"""Pluggable attention backend — the attention twin of `core.gemm_backend`.
+
+`models.attention` routes every attention contraction (training forward,
+prefill, decode, cross-attention) through this module's entry points, and
+the active implementation is either the per-call ``attn_impl`` (from
+`ArchConfig.attn_impl`) or, when set, the contextvar override:
+
+  "blockwise"     pure-JAX online-softmax scan (`models.layers`) — default;
+                  what the distributed dry-runs compile (einsum/dot form
+                  GSPMD knows how to shard)
+  "flash_pallas"  the legacy forward-only Pallas kernel (inference paths)
+  "sfc"           the SFC-scheduled Pallas kernels (`kernels/sfc_attention`)
+                  — band task tables, differentiable via `jax.custom_vjp`
+                  (new Pallas dQ/dK/dV kernels), single-launch decode
+
+Under "sfc" a model's *entire* train step — projections via
+``gemm_backend("sfc_pallas")`` plus attention via these kernels — contains
+zero `dot_general` in forward or backward (test-gated, the attention
+extension of PR 3's projection gate).
+
+Knob resolution mirrors the GEMM stack: (q_chunk, k_chunk) left unpinned
+resolve from the ``op="attn_fwd"`` / ``"attn_bwd"`` / ``"attn_decode"``
+tune-cache namespaces (bucketed (Sq, Sk, D), decode (H, T, D); the cache's
+``bm``/``bn`` fields carry q_chunk/k_chunk), falling back to the caller's
+hint clipped to the padded sequence extents.  `repro.tune` measures these
+namespaces and `ServingEngine.warmup` fills them from its tune table.
+
+Like the GEMM backends, the kernels are single-device primitives: inside
+pjit they apply per-shard (heads/batch sharded, sequence unsharded).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "ATTN_IMPLS",
+    "attention_backend",
+    "current_attention_backend",
+    "resolve_attn_impl",
+    "resolve_attn_knobs",
+    "flash_attention",
+    "decode_attention",
+    "default_interpret",
+]
+
+ATTN_IMPLS = ("blockwise", "flash_pallas", "sfc")
+
+_ATTN_BACKEND: contextvars.ContextVar[Optional[str]] = contextvars.ContextVar(
+    "attention_backend", default=None
+)
+
+
+@contextlib.contextmanager
+def attention_backend(name: str):
+    """Override the attention implementation for everything traced inside —
+    `make_train_step(attn_impl=...)` and the serving engine pin it here so
+    backend selection happens at trace time, like `gemm_backend`."""
+    if name not in ATTN_IMPLS:
+        raise ValueError(f"unknown attention backend {name!r}; pick from {ATTN_IMPLS}")
+    tok = _ATTN_BACKEND.set(name)
+    try:
+        yield
+    finally:
+        _ATTN_BACKEND.reset(tok)
+
+
+def current_attention_backend() -> Optional[str]:
+    return _ATTN_BACKEND.get()
+
+
+def resolve_attn_impl(impl: str) -> str:
+    """Context override first, the call site's (config) value otherwise."""
+    return _ATTN_BACKEND.get() or impl
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pow2_ceil(x: int) -> int:
+    return 1 << max(0, (int(x) - 1).bit_length())
+
+
+def _clip_chunk(chunk: int, extent: int, floor: int = 8) -> int:
+    """Largest power-of-two <= chunk that does not overshoot the padded
+    extent (tiny test shapes keep a >= ``floor`` tile so the MXU still has
+    rows to work with)."""
+    return max(floor, min(_pow2_ceil(chunk), _pow2_ceil(extent)))
+
+
+def resolve_attn_knobs(
+    sq: int,
+    sk: int,
+    d: int,
+    dtype,
+    *,
+    op: str,
+    q_chunk: Optional[int] = None,
+    k_chunk: Optional[int] = None,
+) -> Tuple[int, int]:
+    """(q_chunk, k_chunk) for one attention launch: measured tune-cache
+    winner first (namespace ``op``, bucket (sq, sk, d); the Knobs record's
+    bm/bn fields carry the chunks), the caller's hint otherwise — clipped
+    to the padded extents either way.  The cache is consulted even when a
+    hint is given: model configs always carry ``q_chunk``/``k_chunk``, so
+    a hint-wins rule would leave every measured attention winner inert —
+    the config values are defaults, the tuner's are measurements.  The
+    single resolution path every attention kernel call goes through, so a
+    measured winner applies to training, prefill and decode alike."""
+    cached = None
+    try:
+        from repro.tune import lookup_knobs
+
+        cached = lookup_knobs(sq, sk, d, dtype, op=op)
+    except Exception:
+        cached = None
+    if cached is not None:
+        q_chunk = cached.bm
+        k_chunk = cached.bn
+    q_chunk = _clip_chunk(q_chunk or 128, sq)
+    k_chunk = _clip_chunk(k_chunk or 128, sk)
+    return q_chunk, k_chunk
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def _pad_seq(x: jax.Array, seq_p: int) -> jax.Array:
+    if x.shape[1] != seq_p:
+        return jnp.pad(
+            x, ((0, 0), (0, seq_p - x.shape[1]), (0, 0), (0, 0))
+        )
+    return x
+
+
+# ---------------------------------------------------------------------------
+# differentiable flash attention (custom VJP over the SFC band kernels)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _FlashCfg:
+    causal: bool
+    seq_q: int
+    seq_k: int
+    q_chunk: int
+    k_chunk: int
+    q_chunk_hint: Optional[int]
+    k_chunk_hint: Optional[int]
+    interpret: bool
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _flash_core(cfg: _FlashCfg, q, k, v):
+    from repro.kernels.sfc_attention import sfc_flash_fwd
+
+    o, _ = sfc_flash_fwd(
+        q, k, v,
+        causal=cfg.causal, seq_q=cfg.seq_q, seq_k=cfg.seq_k,
+        q_chunk=cfg.q_chunk, k_chunk=cfg.k_chunk, interpret=cfg.interpret,
+    )
+    return o
+
+
+def _flash_core_fwd(cfg: _FlashCfg, q, k, v):
+    from repro.kernels.sfc_attention import sfc_flash_fwd
+
+    o, lse = sfc_flash_fwd(
+        q, k, v,
+        causal=cfg.causal, seq_q=cfg.seq_q, seq_k=cfg.seq_k,
+        q_chunk=cfg.q_chunk, k_chunk=cfg.k_chunk, interpret=cfg.interpret,
+    )
+    return o, (q, k, v, o, lse)
+
+
+def _flash_core_bwd(cfg: _FlashCfg, saved, do):
+    q, k, v, o, lse = saved
+    from repro.kernels.sfc_attention import (
+        sfc_flash_bwd_dkv,
+        sfc_flash_bwd_dq,
+    )
+
+    # the backward resolves its own tune namespace: its panel geometry
+    # (two extra streamed tiles, TN-move contractions) differs from the
+    # forward's, exactly like the GEMM nt/tn split
+    qc, kc = resolve_attn_knobs(
+        cfg.seq_q, cfg.seq_k, q.shape[-1], q.dtype, op="attn_bwd",
+        q_chunk=cfg.q_chunk_hint, k_chunk=cfg.k_chunk_hint,
+    )
+    sq_p = _round_up(q.shape[1], qc)
+    sk_p = _round_up(k.shape[1], kc)
+    qp, dop = _pad_seq(q, sq_p), _pad_seq(do, sq_p)
+    kp, vp = _pad_seq(k, sk_p), _pad_seq(v, sk_p)
+    op_, lsep = _pad_seq(o, sq_p), _pad_seq(lse, sq_p)
+
+    # delta = rowsum(dO ⊙ O): elementwise + reduce, no contraction
+    delta = jnp.sum(
+        dop.astype(jnp.float32) * op_.astype(jnp.float32),
+        axis=-1, keepdims=True,
+    )
+    kw = dict(
+        causal=cfg.causal, seq_q=cfg.seq_q, seq_k=cfg.seq_k,
+        q_chunk=qc, k_chunk=kc, interpret=cfg.interpret,
+    )
+    dq = sfc_flash_bwd_dq(qp, kp, vp, dop, lsep, delta, **kw)
+    dk, dv = sfc_flash_bwd_dkv(qp, kp, vp, dop, lsep, delta, **kw)
+    return (
+        dq[:, : q.shape[1]].astype(q.dtype),
+        dk[:, : k.shape[1]].astype(k.dtype),
+        dv[:, : v.shape[1]].astype(v.dtype),
+    )
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def flash_attention(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, T, Hkv, D)
+    v: jax.Array,  # (B, T, Hkv, D)
+    *,
+    causal: bool = True,
+    q_chunk: Optional[int] = None,
+    k_chunk: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Differentiable SFC flash attention in the model's (B, S, H, D)
+    layout.  GQA head grouping is resolved inside the kernels' index maps
+    (no `jnp.repeat` expansion); arbitrary Sq/Sk are zero-padded to chunk
+    multiples and masked.  ``q_chunk``/``k_chunk`` act as hints — a
+    measured ``op="attn_fwd"`` tune-cache winner takes precedence, the
+    backward resolves ``op="attn_bwd"`` independently."""
+    if interpret is None:
+        interpret = default_interpret()
+    b, s, h, d = q.shape
+    _, t, hkv, _ = k.shape
+    if h % hkv:
+        raise ValueError(f"GQA heads {h} not a multiple of kv heads {hkv}")
+    qc, kc = resolve_attn_knobs(
+        s, t, d, q.dtype, op="attn_fwd", q_chunk=q_chunk, k_chunk=k_chunk
+    )
+    sq_p, sk_p = _round_up(s, qc), _round_up(t, kc)
+    cfg = _FlashCfg(
+        causal=causal, seq_q=s, seq_k=t, q_chunk=qc, k_chunk=kc,
+        q_chunk_hint=q_chunk, k_chunk_hint=k_chunk, interpret=interpret,
+    )
+    o = _flash_core(
+        cfg, _pad_seq(q, sq_p), _pad_seq(k, sk_p), _pad_seq(v, sk_p)
+    )
+    return o[:, :s]
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, H, D)
+    k: jax.Array,  # (B, T, Hkv, D) cache
+    v: jax.Array,  # (B, T, Hkv, D)
+    valid_len: jax.Array,  # (B,) live cache lengths
+    *,
+    k_chunk: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Single-launch decode attention against the KV cache.
+
+    The whole (B, H) head fan-out runs in one batched `pallas_call`: grid
+    rows are (batch, kv head) pairs, each tile's rows are the kv head's
+    GQA group, and per-sequence cache lengths bound the k-chunk loop via
+    scalar prefetch (the grouped-TN ragged-bounds trick) — chunks past a
+    sequence's live length are predicated off, not masked after the fact.
+    Drop-in for `models.layers.decode_attention`."""
+    if interpret is None:
+        interpret = default_interpret()
+    from repro.kernels.sfc_attention import sfc_decode_attention_pallas
+
+    b, one, h, d = q.shape
+    assert one == 1, q.shape
+    _, t, hkv, _ = k.shape
+    groups = h // hkv
+    _, kc = resolve_attn_knobs(
+        h, t, d, q.dtype, op="attn_decode", q_chunk=None, k_chunk=k_chunk
+    )
+    t_p = _round_up(t, kc)
+    if t_p != t:
+        pad = ((0, 0), (0, t_p - t), (0, 0), (0, 0))
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    gp = max(8, _pow2_ceil(groups))
+    qg = q.reshape(b, hkv, groups, d)
+    if gp != groups:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, gp - groups), (0, 0)))
+    o = sfc_decode_attention_pallas(
+        qg, k, v, valid_len, k_chunk=kc, interpret=interpret
+    )
+    return o[:, :, :groups].reshape(b, 1, h, d)

@@ -318,15 +318,26 @@ def grouped_matmul(
     the flush.
     """
     if isinstance(w, ProbeParam):
-        w.observe("grouped")  # seen as 3-D -> the probe leaves it unrouted
+        if out_scale is None:
+            w.observe("grouped")  # 3-D consumption -> grouped fused route
         w = w.w
     elif isinstance(w, FusedParam):
-        raise NotImplementedError(
-            "grouped (expert-stack) weights are not fused-routable yet — "
-            "the grouped TN-update kernel exists (ops."
-            "sfc_grouped_matmul_tn_update) but the MoE dispatch is not "
-            "threaded; exclude 3-D leaves via fused_filter"
+        if out_scale is not None:
+            raise NotImplementedError(
+                "fused-optimizer routing does not support the out_scale "
+                "epilogue; exclude this weight via fused_filter"
+            )
+        from repro.kernels.ops import fused_update_grouped_matmul
+
+        rows, (g, e, c), restore = _rows_by_expert(x)
+        out = fused_update_grouped_matmul(
+            rows, w.w, w.master, w.mu, w.nu, w.hyper, w.token,
+            group_sizes=(g * c,) * e,
+            bias=bias, activation=activation,
+            backend=_BACKEND.get(),
+            stochastic_round=current_update_config().stochastic_round,
         )
+        return restore(out, w.w.shape[-1])
     name = _BACKEND.get()
     if name == "xla":
         y = jnp.einsum("...eck,ekn->...ecn", x, w)
@@ -369,18 +380,41 @@ def grouped_glu_matmul(
     grouped kernel traverses the dispatched rows once for both expert
     weight stacks — the MoE SwiGLU's second read of the capacity buffer
     (and the elementwise round-trip) never touches HBM."""
-    unwrapped = []
-    for w_ in (w_gate, w_val):
-        if isinstance(w_, ProbeParam):
-            w_.observe("grouped")
-            w_ = w_.w
-        elif isinstance(w_, FusedParam):
-            raise NotImplementedError(
-                "grouped (expert-stack) weights are not fused-routable yet; "
-                "exclude 3-D leaves via fused_filter"
+    probe = isinstance(w_gate, ProbeParam) or isinstance(w_val, ProbeParam)
+    if probe:
+        unwrapped = []
+        for w_ in (w_gate, w_val):
+            if isinstance(w_, ProbeParam):
+                if out_scale is None:
+                    w_.observe("grouped_glu")
+                w_ = w_.w
+            unwrapped.append(w_)
+        w_gate, w_val = unwrapped
+    elif isinstance(w_gate, FusedParam) or isinstance(w_val, FusedParam):
+        if not (isinstance(w_gate, FusedParam) and isinstance(w_val, FusedParam)):
+            raise ValueError(
+                "grouped GLU gate/value expert stacks must be fused-routed "
+                "together; adjust fused_filter so both (or neither) match"
             )
-        unwrapped.append(w_)
-    w_gate, w_val = unwrapped
+        if out_scale is not None:
+            raise NotImplementedError(
+                "fused-optimizer routing does not support the out_scale "
+                "epilogue; exclude these weights via fused_filter"
+            )
+        from repro.kernels.ops import fused_update_grouped_glu_matmul
+
+        rows, (g, e, c), restore = _rows_by_expert(x)
+        out = fused_update_grouped_glu_matmul(
+            rows, w_gate.w, w_val.w,
+            (w_gate.master, w_gate.mu, w_gate.nu),
+            (w_val.master, w_val.mu, w_val.nu),
+            w_val.hyper, (w_val.token, w_gate.token),
+            group_sizes=(g * c,) * e,
+            activation=activation,
+            backend=_BACKEND.get(),
+            stochastic_round=current_update_config().stochastic_round,
+        )
+        return restore(out, w_val.w.shape[-1])
     name = _BACKEND.get()
     if name == "xla":
         g_ = jnp.einsum("...eck,ekn->...ecn", x, w_gate)

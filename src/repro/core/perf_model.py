@@ -45,6 +45,11 @@ __all__ = [
     "simulate_train_gemm",
     "shared_memory_floor",
     "backward_gemm_shapes",
+    "attention_phase_shapes",
+    "simulate_flash_attention",
+    "simulate_decode_attention",
+    "unfused_attention_bytes",
+    "unfused_decode_attention_bytes",
     "optimizer_update_bytes",
     "analytical_time",
     "roofline_best_time",
@@ -321,6 +326,189 @@ def backward_gemm_shapes(M: int, N: int, K: int) -> Dict[str, Tuple[int, int, in
     knob winners — differ from the forward's.
     """
     return {"nt": (M, K, N), "tn": (K, N, M)}
+
+
+def attention_phase_shapes(
+    sq: int, sk: int, d: int, *, n_heads: int = 0, cache_len: int = 0
+) -> Dict[str, Tuple[int, int, int]]:
+    """Tune-namespace buckets of the SFC attention kernels, the attention
+    analogue of `backward_gemm_shapes`:
+
+      attn_fwd / attn_bwd: bucket (Sq, Sk, D) — the flash band kernels
+      attn_decode:         bucket (H, T, D)  — one decode step's fan-out
+
+    The decode entry is only emitted when ``n_heads``/``cache_len`` are
+    given (training-only callers have no decode shape)."""
+    out = {"attn_fwd": (sq, sk, d), "attn_bwd": (sq, sk, d)}
+    if n_heads and cache_len:
+        out["attn_decode"] = (n_heads, cache_len, d)
+    return out
+
+
+# modeled MXU passes per band tile: the forward runs 2 (scores, P·V); the
+# backward runs 7 across its two launches (dQ: S, dP, dS·K; dK/dV: S, dP,
+# Pᵀ·dO, dSᵀ·Q — p is recomputed per pass, the flash trade)
+_ATTN_TILE_DOTS = {"fwd": 2, "bwd": 7}
+
+
+def simulate_flash_attention(
+    b: int,
+    h: int,
+    sq: int,
+    sk: int,
+    d: int,
+    *,
+    q_chunk: int,
+    k_chunk: int,
+    causal: bool = True,
+    phase: str = "fwd",
+    hkv: Optional[int] = None,
+    hw: HardwareModel = TPU_V5E,
+    dtype_bytes: int = 2,
+) -> Dict[str, float]:
+    """Exact panel-traffic census of one SFC flash launch (fwd or bwd).
+
+    Walks the same band task table the kernels walk
+    (`core.sfc.sfc_band_table` order) with a one-panel memo per operand:
+    a q panel streams once per band row, a k/v panel streams whenever the
+    serpentine changes k tile — the boustrophedon row turns share exactly
+    one panel, which is the locality the schedule buys.  KV bytes are
+    charged per *kv head* (GQA groups share the panels through the index
+    maps); masked tiles are absent from the table so they cost nothing —
+    unlike a dense-grid kernel whose copies still stream.
+    """
+    if phase not in _ATTN_TILE_DOTS:
+        raise ValueError(f"phase={phase!r}")
+    from repro.core.sfc import sfc_band_table
+
+    hkv = hkv or h
+    nq = (sq + q_chunk - 1) // q_chunk
+    nk = (sk + k_chunk - 1) // k_chunk
+    if causal:
+        band = np.minimum(
+            (np.arange(nq, dtype=np.int64) * q_chunk + q_chunk - 1)
+            // k_chunk
+            + 1,
+            nk,
+        )
+    else:
+        band = None
+    tab = sfc_band_table(nq, nk, band=band)
+    n_tiles = tab.shape[1]
+
+    q_panel = q_chunk * d * dtype_bytes
+    kv_panel = 2 * k_chunk * d * dtype_bytes  # K and V stream together
+    q_bytes = 0.0
+    kv_fetches = 0
+    last_k = -1
+    for t in range(n_tiles):
+        if tab[2, t] == 1:  # new band row: q panel streams once
+            q_bytes += q_panel
+        if int(tab[1, t]) != last_k:
+            kv_fetches += 1
+            last_k = int(tab[1, t])
+    # per-q-head traffic x (b*h), kv panels charged per kv head
+    q_bytes = q_bytes * b * h
+    kv_bytes = kv_fetches * kv_panel * b * hkv
+    o_bytes = b * h * sq * d * dtype_bytes  # one output write
+    if phase == "bwd":
+        # dO/O/lse reads + dQ/dK/dV writes (f32 grads)
+        o_bytes = (
+            2 * b * h * sq * d * dtype_bytes
+            + b * h * sq * 4
+            + b * h * sq * d * 4
+            + 2 * b * hkv * sk * d * 4
+        )
+    bytes_total = q_bytes + kv_bytes + o_bytes
+    flops = (
+        _ATTN_TILE_DOTS[phase]
+        * 2.0
+        * q_chunk
+        * k_chunk
+        * d
+        * n_tiles
+        * b
+        * h
+    )
+    time = max(flops * hw.gamma, bytes_total * hw.beta)
+    return {
+        "time_s": time,
+        "bytes": bytes_total,
+        "flops": flops,
+        "tflops": flops / time / 1e12,
+        "n_tiles": float(n_tiles),
+        "kv_refetches": float(max(0, kv_fetches - nk)),
+    }
+
+
+def unfused_attention_bytes(
+    b: int,
+    h: int,
+    sq: int,
+    sk: int,
+    d: int,
+    *,
+    hkv: Optional[int] = None,
+    hw: HardwareModel = TPU_V5E,
+    dtype_bytes: int = 2,
+) -> float:
+    """HBM bytes of the materialized-scores formulation: the (Sq, Sk) f32
+    score matrix and the softmax'd P each make a write+read round trip,
+    GQA K/V are repeat-expanded to all h heads, and Q/O move once — the
+    traffic the flash kernels delete."""
+    del hkv  # the einsum formulation expands kv heads to h
+    s_round_trips = 2 * 2 * b * h * sq * sk * 4  # scores + P, f32 w+r
+    qkv = b * h * (sq + 2 * sk) * d * dtype_bytes
+    o = b * h * sq * d * dtype_bytes
+    return s_round_trips + qkv + o
+
+
+def simulate_decode_attention(
+    b: int,
+    h: int,
+    hkv: int,
+    t: int,
+    d: int,
+    *,
+    valid_frac: float = 1.0,
+    hw: HardwareModel = TPU_V5E,
+    dtype_bytes: int = 2,
+) -> Dict[str, float]:
+    """One decode step's attention on the SFC kernel: the cache streams
+    once per *kv head* up to each sequence's valid length (the prefetch
+    bound skips dead chunks entirely), q/o move once.  Bandwidth-bound by
+    construction — the census is the roofline."""
+    t_v = max(1, int(t * valid_frac))
+    cache = 2 * b * hkv * t_v * d * dtype_bytes
+    qo = 2 * b * h * d * dtype_bytes
+    bytes_total = cache + qo
+    flops = 4.0 * b * h * t_v * d
+    time = max(flops * hw.gamma, bytes_total * hw.beta)
+    return {
+        "time_s": time,
+        "bytes": bytes_total,
+        "flops": flops,
+        "tflops": flops / time / 1e12,
+    }
+
+
+def unfused_decode_attention_bytes(
+    b: int,
+    h: int,
+    hkv: int,
+    t: int,
+    d: int,
+    *,
+    dtype_bytes: int = 2,
+) -> float:
+    """Decode-step bytes of `models.layers.decode_attention`: the cache is
+    head-expanded to all h heads (jnp.repeat under einsum), every row of
+    the padded cache is read regardless of valid length, and the (h, t)
+    scores round-trip in f32 through the softmax."""
+    cache = 2 * b * h * t * d * dtype_bytes
+    scores = 2 * 2 * b * h * t * 4
+    qo = 2 * b * h * d * dtype_bytes
+    return cache + scores + qo
 
 
 def optimizer_update_bytes(

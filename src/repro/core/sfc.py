@@ -35,6 +35,7 @@ __all__ = [
     "sfc_index_of",
     "sfc_coord_table",
     "sfc_inverse_table",
+    "sfc_band_table",
     "SFCMap",
     "create_sfc_map",
 ]
@@ -142,6 +143,65 @@ def sfc_coords(width: int, height: int, index: int) -> Tuple[int, int]:
 def sfc_index_of(width: int, height: int, x: int, y: int) -> int:
     """Map a cell (x, y) to its 1-D SFC index."""
     return int(sfc_inverse_table(width, height)[x, y])
+
+
+def sfc_band_table(
+    n_major: int,
+    n_minor: int,
+    *,
+    band: "np.ndarray | None" = None,
+) -> np.ndarray:
+    """``(4, T)`` int32 task table over a ragged band of an
+    ``n_major x n_minor`` tile grid: rows = (i_major, i_minor, first, last).
+
+    This is the attention analogue of the GEMM task tables: the (q, k) tile
+    space of a flash-attention pass is a rectangle (non-causal) or a ragged
+    causal band, and ``band[i]`` bounds the exclusive minor extent of major
+    row ``i`` (``None`` means the full rectangle).  Tiles outside the band
+    are **dropped from the table entirely** — they cost no grid step, no
+    copy and no predicated-off MXU slot, unlike a `pl.when`-skipped dense
+    grid.
+
+    The traversal is the generalized-Hilbert order *restricted to
+    major-row-contiguous curves*: the online-softmax accumulator of one
+    major tile (a q chunk forward, a k chunk in the dK/dV backward) must
+    stay VMEM-resident until that row's last task, so every curve through
+    this space that keeps the accumulator resident visits one major row at
+    a time.  Within that family the locality-optimal member is the
+    boustrophedon: minor direction alternates per row, so the panel that
+    ends row ``i`` is adjacent to the panel that starts row ``i+1`` —
+    exactly the one-shared-panel quadrant-hop structure `gilbert2d` has at
+    its row turns (for an ``n x 1`` or degenerate-aspect grid the gilbert
+    construction *is* this serpentine; see `_generate2d`'s trivial fills).
+
+    ``first``/``last`` flag the first/last task of each major row — the
+    kernel's zero/flush predicates (the analogue of the K-chunk == 0 /
+    n-1 tests in the dense GEMM grids, which a ragged row count cannot
+    express statically).
+    """
+    if band is None:
+        band = np.full(n_major, n_minor, dtype=np.int64)
+    band = np.asarray(band)
+    cols = []
+    flip = False
+    for i in range(n_major):
+        hi = int(band[i])
+        if hi <= 0:
+            continue
+        ks = np.arange(hi, dtype=np.int32)
+        if flip:
+            ks = ks[::-1]
+        flip = not flip
+        first = np.zeros(hi, np.int32)
+        last = np.zeros(hi, np.int32)
+        first[0] = 1
+        last[-1] = 1
+        cols.append(
+            np.stack([np.full(hi, i, np.int32), ks, first, last])
+        )
+    if not cols:
+        return np.zeros((4, 0), np.int32)
+    return np.concatenate(cols, axis=1).astype(np.int32)
 
 
 class SFCMap:

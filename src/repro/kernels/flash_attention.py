@@ -56,9 +56,6 @@ def _flash_kernel(
         m_ref[...] = jnp.full_like(m_ref, NEG)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    # causal band: k chunk fully above the diagonal contributes nothing
-    needed = (not causal) or True
-
     def _compute():
         q = q_ref[0].astype(jnp.float32) * scale
         k = k_ref[0].astype(jnp.float32)
@@ -87,9 +84,14 @@ def _flash_kernel(
         m_ref[...] = m_new
         l_ref[...] = l_prev * alpha + l_cur
 
+    # causal band: a k chunk fully above the diagonal contributes nothing —
+    # it is needed iff its first k position <= the chunk's last q position.
+    # (A previous revision computed this predicate into a dead local that
+    # was always True; the band skip only worked by the accident of the
+    # if/else below.  The predicate now *is* the guard.)
     if causal:
-        # chunk is needed iff its first k position <= last q position
-        pl.when(ki * k_chunk <= qi * q_chunk + q_chunk - 1)(_compute)
+        needed = ki * k_chunk <= qi * q_chunk + q_chunk - 1
+        pl.when(needed)(_compute)
     else:
         _compute()
 

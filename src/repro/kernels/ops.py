@@ -72,6 +72,8 @@ __all__ = [
     "sfc_grouped_matmul_tn_update",
     "fused_update_matmul",
     "fused_update_glu_matmul",
+    "fused_update_grouped_matmul",
+    "fused_update_grouped_glu_matmul",
     "default_interpret",
     "pick_blocks",
     "resolve_knobs",
@@ -1778,6 +1780,251 @@ def _grouped_core_bwd(cfg, saved, dy):
 
 
 _grouped_core.defvjp(_grouped_core_fwd, _grouped_core_bwd)
+
+
+# ---------------------------------------------------------------------------
+# grouped (MoE expert-stack) fused-optimizer VJPs — the ROADMAP "MoE
+# fused-optimizer routing" item: a FusedParam-wrapped (E, K, N) expert stack
+# routes here from `gemm_backend.grouped_matmul`/`grouped_glu_matmul`, and
+# the backward runs `sfc_grouped_matmul_tn_update` — per-expert dW computed
+# and AdamW-applied in one launch, the (E, K, N) weight-grad stack never
+# written to HBM; empty experts run the g = 0 update in the same flush.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _GroupedUpdateVjpCfg:
+    base: _GroupedVjpCfg
+    fused: bool  # sfc_pallas grouped kernels vs the jnp oracle
+    stochastic_round: bool
+
+
+def _grouped_oracle_parts(cfg, a, b, b_gate, bias, gate_bias):
+    """(callable, args) plain-jnp grouped primal for the unfused oracle."""
+    glu = cfg.base.glu
+    gs = cfg.base.group_sizes
+    have_bias = bias is not None
+    have_gbias = gate_bias is not None
+
+    def one(ei, a_, w, vec):
+        off = sum(gs[:ei])
+        h = a_[off : off + gs[ei]] @ w[ei]
+        if vec is not None:
+            h = h + vec[ei]
+        return h
+
+    def prim(*args):
+        it = iter(args)
+        a_ = next(it)
+        b_ = next(it)
+        bg_ = next(it) if glu else None
+        bi_ = next(it) if have_bias else None
+        gb_ = next(it) if have_gbias else None
+        parts = []
+        for ei in range(len(gs)):
+            h = one(ei, a_, b_, bi_)
+            if glu:
+                g = one(ei, a_, bg_, gb_)
+                h = activation_fn(cfg.base.activation)(g) * h
+            elif cfg.base.activation is not None:
+                h = activation_fn(cfg.base.activation)(h)
+            parts.append(h)
+        return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+
+    args = [a, b]
+    if glu:
+        args.append(b_gate)
+    if have_bias:
+        args.append(bias)
+    if have_gbias:
+        args.append(gate_bias)
+    return prim, args
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _grouped_update_core(cfg, a, b, b_gate, bias, gate_bias, opt, hyper, token):
+    del opt, hyper, token  # consumed by the backward rule only
+    if not cfg.fused:
+        prim, args = _grouped_oracle_parts(cfg, a, b, b_gate, bias, gate_bias)
+        return prim(*args)
+    return _grouped_impl(
+        a, b, b_gate, cfg.base.group_sizes,
+        bias=bias, gate_bias=gate_bias,
+        activation=cfg.base.activation, out_scale=None,
+        bm=cfg.base.bm, bn=cfg.base.bn,
+        k_block_factor=cfg.base.k_block_factor,
+        interpret=cfg.base.interpret, out_dtype=cfg.base.out_dtype,
+    )
+
+
+def _grouped_update_core_fwd(cfg, a, b, b_gate, bias, gate_bias, opt, hyper, token):
+    del token
+    if not cfg.fused:
+        prim, args = _grouped_oracle_parts(cfg, a, b, b_gate, bias, gate_bias)
+        y, f_vjp = jax.vjp(prim, *args)
+        return y, (f_vjp, a, b, b_gate, bias, gate_bias, opt, hyper)
+    out, saved = _grouped_core_fwd(cfg.base, a, b, b_gate, bias, gate_bias)
+    a_, b_, bg_, h_pre, g_pre, bias_, gbias_ = saved
+    return out, (a_, b_, bg_, h_pre, g_pre, bias_, gbias_, opt, hyper)
+
+
+def _grouped_update_core_bwd(cfg, saved, dy):
+    glu = cfg.base.glu
+    gs = cfg.base.group_sizes
+    if not cfg.fused:
+        f_vjp, a, b, b_gate, bias, gate_bias, opt, hyper = saved
+        cots = list(f_vjp(dy))
+        da = cots.pop(0)
+        dw = cots.pop(0)
+        dwg = cots.pop(0) if glu else None
+        dbias = cots.pop(0) if bias is not None else None
+        dgbias = cots.pop(0) if gate_bias is not None else None
+        if glu:
+            ov, og = opt
+            w_v, opt_v, sq_v = _oracle_update(cfg, dw, ov, b.dtype, hyper)
+            w_g, opt_g, sq_g = _oracle_update(cfg, dwg, og, b_gate.dtype, hyper)
+            return (
+                da, w_v, w_g, dbias, dgbias,
+                (opt_v, opt_g), jnp.zeros_like(hyper), (sq_v, sq_g),
+            )
+        w_n, opt_n, sq = _oracle_update(cfg, dw, opt, b.dtype, hyper)
+        return da, w_n, None, dbias, dgbias, opt_n, jnp.zeros_like(hyper), sq
+
+    a, b, b_gate, h_pre, g_pre, bias, gate_bias, opt, hyper = saved
+    interp = cfg.base.interpret
+    dh, dg = _epilogue_cotangents(
+        glu, cfg.base.activation, None, h_pre, g_pre, dy
+    )
+    cdt = a.dtype
+    dh_c = dh.astype(cdt)
+    dg_c = dg.astype(cdt) if dg is not None else None
+
+    da = sfc_grouped_matmul_nt(
+        dh_c, b, gs,
+        dg_c, b_gate if dg_c is not None else None,
+        interpret=interp, out_dtype=jnp.float32,
+    )
+    if dg_c is not None:
+        if b_gate.dtype != b.dtype:
+            raise NotImplementedError(
+                f"fused grouped GLU update requires matching weight dtypes, "
+                f"got value={b.dtype} gate={b_gate.dtype}; exclude the pair "
+                "via fused_filter"
+            )
+        (ov, og) = opt
+        set_v, set_g = sfc_grouped_matmul_tn_update(
+            a, dh_c, gs, ov[0], ov[1], ov[2], hyper,
+            dg_c, og[0], og[1], og[2],
+            param_dtype=b.dtype, stochastic_round=cfg.stochastic_round,
+            interpret=interp,
+        )
+        wv, mv, muv, nuv, sqv = set_v
+        wg, mg, mug, nug, sqg = set_g
+        w_cots = (wv, wg)
+        opt_cots = ((mv, muv, nuv), (mg, mug, nug))
+        token_cots = (sqv, sqg)
+    else:
+        (mst, mu, nu) = opt
+        w_n, mst_n, mu_n, nu_n, sq = sfc_grouped_matmul_tn_update(
+            a, dh_c, gs, mst, mu, nu, hyper,
+            param_dtype=b.dtype, stochastic_round=cfg.stochastic_round,
+            interpret=interp,
+        )
+        w_cots = (w_n, None)
+        opt_cots = (mst_n, mu_n, nu_n)
+        token_cots = sq
+
+    e_cnt = len(gs)
+    seg = jnp.asarray(np.repeat(np.arange(e_cnt), gs), jnp.int32)
+    dbias = None
+    if bias is not None:
+        dbias = jax.ops.segment_sum(dh, seg, num_segments=e_cnt).astype(
+            bias.dtype
+        )
+    dgbias = None
+    if gate_bias is not None:
+        dgbias = jax.ops.segment_sum(dg, seg, num_segments=e_cnt).astype(
+            gate_bias.dtype
+        )
+    return (
+        da.astype(a.dtype), w_cots[0], w_cots[1], dbias, dgbias,
+        opt_cots, jnp.zeros_like(hyper), token_cots,
+    )
+
+
+_grouped_update_core.defvjp(_grouped_update_core_fwd, _grouped_update_core_bwd)
+
+
+def fused_update_grouped_matmul(
+    x: jax.Array,  # (T, K) rows sorted by group
+    w: jax.Array,  # (E, K, N) expert stack
+    master: jax.Array,  # (E, K, N) f32
+    mu: jax.Array,
+    nu: jax.Array,
+    hyper: jax.Array,  # (12,) f32
+    token: jax.Array,
+    group_sizes: Sequence[int],
+    *,
+    bias: Optional[jax.Array] = None,
+    activation: Optional[str] = None,
+    backend: str = "sfc_pallas",
+    stochastic_round: bool = True,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Grouped expert projection whose backward applies AdamW per expert in
+    the grouped-TN flush: forward exactly like `sfc_grouped_matmul`, the
+    cotangents of (w, master, mu, nu, token) carry the applied update —
+    the (E, K, N) dW stack never exists in HBM, empty experts run the
+    g = 0 update in the same launch."""
+    cfg = _GroupedUpdateVjpCfg(
+        base=_GroupedVjpCfg(
+            group_sizes=tuple(int(g) for g in group_sizes),
+            glu=False, activation=activation, out_scale=None,
+            bm=None, bn=None, k_block_factor=None,
+            interpret=interpret, out_dtype=None,
+        ),
+        fused=backend == "sfc_pallas",
+        stochastic_round=stochastic_round,
+    )
+    return _grouped_update_core(
+        cfg, x, w, None, bias, None, (master, mu, nu), hyper, token
+    )
+
+
+def fused_update_grouped_glu_matmul(
+    x: jax.Array,  # (T, K) rows sorted by group
+    w_gate: jax.Array,  # (E, K, N)
+    w_val: jax.Array,  # (E, K, N)
+    opt_gate: Tuple[jax.Array, jax.Array, jax.Array],
+    opt_val: Tuple[jax.Array, jax.Array, jax.Array],
+    hyper: jax.Array,
+    tokens: Tuple[jax.Array, jax.Array],  # (token_val, token_gate)
+    group_sizes: Sequence[int],
+    *,
+    activation: str = "silu",
+    bias: Optional[jax.Array] = None,
+    gate_bias: Optional[jax.Array] = None,
+    backend: str = "sfc_pallas",
+    stochastic_round: bool = True,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Grouped gated expert MLP with both expert stacks' updates fused into
+    one dual grouped-TN flush — the dispatched rows stream once for
+    (dWv, dWg) and both AdamW updates."""
+    cfg = _GroupedUpdateVjpCfg(
+        base=_GroupedVjpCfg(
+            group_sizes=tuple(int(g) for g in group_sizes),
+            glu=True, activation=activation, out_scale=None,
+            bm=None, bn=None, k_block_factor=None,
+            interpret=interpret, out_dtype=None,
+        ),
+        fused=backend == "sfc_pallas",
+        stochastic_round=stochastic_round,
+    )
+    return _grouped_update_core(
+        cfg, x, w_val, w_gate, bias, gate_bias,
+        (opt_val, opt_gate), hyper, tokens,
+    )
 
 
 def sfc_grouped_matmul(

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.core import attention_backend as _ab
 from repro.core.gemm_backend import matmul as _bmm
 from repro.parallel.act_sharding import constrain
 from repro.models.layers import (
@@ -23,6 +24,54 @@ from repro.models.layers import (
     rmsnorm,
     rmsnorm_init,
 )
+
+
+def _attend(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, T, Hkv, D)
+    v: jax.Array,
+    *,
+    causal: bool,
+    q_chunk: int,
+    k_chunk: int,
+    attn_impl: str,
+) -> jax.Array:
+    """One switch for every training/prefill/cross attention contraction —
+    the attention analogue of the `gemm_backend.matmul` call site.  The
+    contextvar override (`core.attention_backend.attention_backend`) wins
+    over the per-call (config) value."""
+    impl = _ab.resolve_attn_impl(attn_impl)
+    if impl == "sfc":
+        # differentiable SFC kernels; cfg chunks are hints, measured
+        # op="attn_fwd" winners take precedence
+        return _ab.flash_attention(
+            q, k, v, causal=causal, q_chunk=q_chunk, k_chunk=k_chunk
+        )
+    if impl == "flash_pallas":
+        from repro.kernels.flash_attention import flash_attention
+
+        return flash_attention(
+            q, k, v, causal=causal, q_chunk=q_chunk, k_chunk=k_chunk
+        )
+    return blockwise_attention(
+        q, k, v, causal=causal, q_chunk=q_chunk, k_chunk=k_chunk
+    )
+
+
+def _attend_cached(
+    q: jax.Array,  # (B, 1, H, D)
+    k: jax.Array,  # (B, T, Hkv, D)
+    v: jax.Array,
+    valid: jax.Array,  # (B,)
+    *,
+    attn_impl: str,
+) -> jax.Array:
+    """Decode-path switch: the SFC backend runs the whole (batch, head)
+    fan-out as one Pallas launch with valid-length-bounded cache reads."""
+    impl = _ab.resolve_attn_impl(attn_impl)
+    if impl == "sfc":
+        return _ab.decode_attention(q, k, v, valid)
+    return decode_attention(q, k, v, valid)
 
 
 def attention_init(
@@ -109,14 +158,10 @@ def attention_forward(
         )
         q = apply_rope(q, positions, **rope_kw)
         k = apply_rope(k, positions, **rope_kw)
-    if attn_impl == "flash_pallas":
-        from repro.kernels.flash_attention import flash_attention
-
-        o = flash_attention(q, k, v, causal=causal, q_chunk=q_chunk, k_chunk=k_chunk)
-    else:
-        o = blockwise_attention(
-            q, k, v, causal=causal, q_chunk=q_chunk, k_chunk=k_chunk
-        )
+    o = _attend(
+        q, k, v, causal=causal, q_chunk=q_chunk, k_chunk=k_chunk,
+        attn_impl=attn_impl,
+    )
     return _bmm(o.reshape(b, s, -1), params["wo"])
 
 
@@ -134,8 +179,13 @@ def attention_prefill(
     mrope_positions: Optional[jax.Array] = None,
     q_chunk: int = 512,
     k_chunk: int = 512,
+    attn_impl: str = "blockwise",
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """Prefill: returns output and a right-padded KV cache of cache_len."""
+    """Prefill: returns output and a right-padded KV cache of cache_len.
+
+    Routes through the same ``attn_impl`` switch as the training path (it
+    previously hardwired `blockwise_attention`, silently ignoring the
+    config's implementation choice for every serving prefill)."""
     b, s, _ = x.shape
     q, k, v = _project_qkv(params, x, n_heads=n_heads, kv_heads=kv_heads)
     if positions is None:
@@ -149,7 +199,10 @@ def attention_prefill(
         )
         q = apply_rope(q, positions, **rope_kw)
         k = apply_rope(k, positions, **rope_kw)
-    o = blockwise_attention(q, k, v, causal=True, q_chunk=q_chunk, k_chunk=k_chunk)
+    o = _attend(
+        q, k, v, causal=True, q_chunk=q_chunk, k_chunk=k_chunk,
+        attn_impl=attn_impl,
+    )
     pad = cache_len - s
     cache = {
         "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
@@ -170,6 +223,7 @@ def attention_decode(
     rotary_pct: float = 1.0,
     mrope_sections: Optional[Tuple[int, ...]] = None,
     mrope_positions: Optional[jax.Array] = None,
+    attn_impl: str = "blockwise",
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One-token decode against (and updating) the KV cache."""
     b = x.shape[0]
@@ -187,7 +241,7 @@ def attention_decode(
     ck = lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), index, axis=1)
     cv = lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), index, axis=1)
     valid = jnp.full((b,), index + 1, jnp.int32)
-    o = decode_attention(q, ck, cv, valid)
+    o = _attend_cached(q, ck, cv, valid, attn_impl=attn_impl)
     return _bmm(o.reshape(b, 1, -1), params["wo"]), {"k": ck, "v": cv}
 
 
@@ -205,6 +259,7 @@ def cross_attention_forward(
     kv_heads: int,
     q_chunk: int = 512,
     k_chunk: int = 512,
+    attn_impl: str = "blockwise",
 ) -> jax.Array:
     b, s, _ = x.shape
     q = _bmm(x, params["wq"]).reshape(b, s, n_heads, -1)
@@ -213,7 +268,10 @@ def cross_attention_forward(
     if "q_norm" in params:
         q = rmsnorm(params["q_norm"], q)
         k = rmsnorm(params["k_norm"], k)
-    o = blockwise_attention(q, k, v, causal=False, q_chunk=q_chunk, k_chunk=k_chunk)
+    o = _attend(
+        q, k, v, causal=False, q_chunk=q_chunk, k_chunk=k_chunk,
+        attn_impl=attn_impl,
+    )
     return _bmm(o.reshape(b, s, -1), params["wo"])
 
 
@@ -225,13 +283,14 @@ def cross_attention_decode(
     *,
     n_heads: int,
     kv_heads: int,
+    attn_impl: str = "blockwise",
 ) -> jax.Array:
     b = x.shape[0]
     q = _bmm(x, params["wq"]).reshape(b, 1, n_heads, -1)
     if "q_norm" in params:
         q = rmsnorm(params["q_norm"], q)
     valid = jnp.full((b,), mem_len, jnp.int32)
-    o = decode_attention(q, mem_kv["k"], mem_kv["v"], valid)
+    o = _attend_cached(q, mem_kv["k"], mem_kv["v"], valid, attn_impl=attn_impl)
     return _bmm(o.reshape(b, 1, -1), params["wo"])
 
 

@@ -105,6 +105,7 @@ class EncDecLM:
                 causal=False,
                 q_chunk=cfg.q_chunk,
                 k_chunk=cfg.k_chunk,
+                attn_impl=cfg.attn_impl,
             )
             x = x + a
             h = self.norm_fn(layer["norm2"], x)
@@ -124,6 +125,7 @@ class EncDecLM:
             rope_theta=cfg.rope_theta,
             q_chunk=cfg.q_chunk,
             k_chunk=cfg.k_chunk,
+            attn_impl=cfg.attn_impl,
         )
         h = self.norm_fn(layer["norm1"], x)
         if mode == "prefill":
@@ -140,6 +142,7 @@ class EncDecLM:
             kv_heads=cfg.kv_heads,
             q_chunk=cfg.q_chunk,
             k_chunk=cfg.k_chunk,
+            attn_impl=cfg.attn_impl,
         )
         x = x + c
         h = self.norm_fn(layer["norm2"], x)
@@ -224,6 +227,7 @@ class EncDecLM:
                 n_heads=cfg.n_heads,
                 kv_heads=cfg.kv_heads,
                 rope_theta=cfg.rope_theta,
+                attn_impl=cfg.attn_impl,
             )
             x = x + a
             h = self.norm_fn(layer["norm_x"], x)
@@ -234,6 +238,7 @@ class EncDecLM:
                 cache["mem_len"],
                 n_heads=cfg.n_heads,
                 kv_heads=cfg.kv_heads,
+                attn_impl=cfg.attn_impl,
             )
             x = x + c
             h = self.norm_fn(layer["norm2"], x)

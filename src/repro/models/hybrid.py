@@ -125,6 +125,7 @@ class HybridLM:
             rope_theta=cfg.rope_theta,
             q_chunk=cfg.q_chunk,
             k_chunk=cfg.k_chunk,
+            attn_impl=cfg.attn_impl,
         )
         if mode == "prefill":
             a, cache = attn.attention_prefill(params["attn"], h, cache_len=cache_len, **kw)
@@ -226,6 +227,7 @@ class HybridLM:
                 n_heads=cfg.n_heads,
                 kv_heads=cfg.kv_heads,
                 rope_theta=cfg.rope_theta,
+                attn_impl=cfg.attn_impl,
             )
             x = x + a
             h = self.norm_fn(params["shared_attn"]["norm2"], x)

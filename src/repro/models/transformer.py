@@ -124,13 +124,12 @@ class DecoderLM:
             mrope_positions=mrope_positions,
             q_chunk=cfg.q_chunk,
             k_chunk=cfg.k_chunk,
+            attn_impl=cfg.attn_impl,
         )
         if mode == "prefill":
             a, cache = attn.attention_prefill(layer["attn"], h, cache_len=cache_len, **kw)
         else:
-            a = attn.attention_forward(
-                layer["attn"], h, causal=True, attn_impl=cfg.attn_impl, **kw
-            )
+            a = attn.attention_forward(layer["attn"], h, causal=True, **kw)
             cache = None
         x = x + a
         h = self.norm_fn(layer["norm2"], x)
@@ -283,6 +282,7 @@ class DecoderLM:
                 rotary_pct=cfg.rotary_pct,
                 mrope_sections=cfg.mrope_sections,
                 mrope_positions=mrope_positions,
+                attn_impl=cfg.attn_impl,
             )
             x = x + a
             h = self.norm_fn(layer["norm2"], x)

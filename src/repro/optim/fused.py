@@ -23,8 +23,10 @@ as a :class:`FusedParam` pytree node:
 
 Routing is discovered by a **probe**: an abstract `jax.eval_shape` of the
 loss with candidate leaves wrapped in :class:`ProbeParam` records which
-leaves actually reach a 2-D projection call site (and whether they arrive
-as per-layer slices of a scan-stacked leaf).  Leaves the probe never sees
+leaves actually reach a projection call site — as a 2-D weight or a 3-D
+grouped (MoE expert) stack, routed to the plain or grouped TN-update flush
+respectively — and whether they arrive as per-layer slices of a
+scan-stacked leaf.  Leaves the probe never sees
 — or that are consumed more than once per trace (cotangents would sum two
 updates) — stay on the unfused path.
 """
@@ -183,22 +185,18 @@ _EXCLUDED_FRAGMENTS = ("embed",)
 
 
 def default_fused_filter(path: str, leaf) -> bool:
-    """Default routing candidates: 2-D leaves not named like embeddings.
-
-    3-D (grouped/MoE expert) stacks are deliberately excluded from the
-    default: the fused train step routes 2-D projections; expert stacks go
-    through the unfused path (the grouped TN-update kernel exists and is
-    exercised at the ops level — threading it through the MoE dispatch is
-    follow-up work, see ROADMAP)."""
+    """Default routing candidates: projection-shaped leaves not named like
+    embeddings — 2-D weights, 3-D scan stacks / expert stacks, and 4-D
+    scan-stacked expert stacks (L, E, K, N).  The probe disambiguates by
+    *consumption* rank: a scan-stacked 2-D projection is consumed as a 2-D
+    slice (-> the TN-update flush), an expert stack as a 3-D grouped
+    operand (-> the grouped TN-update flush)."""
     if getattr(leaf, "ndim", 0) < 2:
         return False
     low = path.lower()
     if any(f in low for f in _EXCLUDED_FRAGMENTS):
         return False
-    # scan-stacked 2-D projections arrive as 3-D leaves (L, K, N); true
-    # grouped expert stacks also look 3-D — the probe disambiguates (a
-    # stacked leaf is consumed as a 2-D slice, an expert stack as 3-D).
-    return leaf.ndim in (2, 3)
+    return leaf.ndim in (2, 3, 4)
 
 
 def _path_str(path) -> str:
@@ -217,7 +215,7 @@ class RoutedLeaf:
 
     path: str
     stacked: bool  # consumed as per-layer slices of a scan-stacked leaf
-    op: str  # "matmul" | "glu"
+    op: str  # "matmul" | "glu" | "grouped" | "grouped_glu"
 
 
 def probe_routed(
@@ -228,8 +226,10 @@ def probe_routed(
 ) -> Dict[str, RoutedLeaf]:
     """Abstractly trace ``loss_fn(params, *example_args)`` with candidate
     leaves wrapped in `ProbeParam`; return {path: RoutedLeaf} for every leaf
-    that reached a fusable projection call site exactly once as a 2-D
-    operand.  Pure shape-level evaluation — no FLOPs, runs at trace time."""
+    that reached a fusable projection call site exactly once — as a 2-D
+    weight (-> TN-update flush) or a 3-D grouped expert stack (-> grouped
+    TN-update flush).  Pure shape-level evaluation — no FLOPs, runs at
+    trace time."""
     fused_filter = fused_filter or default_fused_filter
 
     by_path = {}
@@ -279,12 +279,20 @@ def probe_routed(
 
     routed: Dict[str, RoutedLeaf] = {}
     for rec in records:
-        if rec.count != 1 or rec.seen_ndim != 2:
-            continue  # unseen, multiply-consumed, or a 3-D expert stack
+        if rec.count != 1:
+            continue  # unseen or multiply-consumed (cotangents would sum)
         leaf = by_path[rec.path]
-        routed[rec.path] = RoutedLeaf(
-            path=rec.path, stacked=leaf.ndim == 3, op=rec.op
-        )
+        if rec.seen_ndim == 2:
+            # 2-D projection (possibly a per-layer slice of a scan stack)
+            routed[rec.path] = RoutedLeaf(
+                path=rec.path, stacked=leaf.ndim == 3, op=rec.op
+            )
+        elif rec.seen_ndim == 3 and rec.op in ("grouped", "grouped_glu"):
+            # (E, K, N) expert stack consumed by the grouped dispatch —
+            # routes to the grouped TN-update flush
+            routed[rec.path] = RoutedLeaf(
+                path=rec.path, stacked=leaf.ndim == 4, op=rec.op
+            )
     return routed
 
 

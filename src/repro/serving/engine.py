@@ -109,7 +109,10 @@ class ServingEngine:
         (the GLU backward streams two panels per traversal, its knob
         landscape differs); with ``update`` the grad-and-update flush
         namespaces ("tn_update"/"tn_update_dual") on the TN buckets."""
-        from repro.core.perf_model import backward_gemm_shapes
+        from repro.core.perf_model import (
+            attention_phase_shapes,
+            backward_gemm_shapes,
+        )
 
         entries: List[Tuple[str, int, int, int]] = []
         for (op, m, n, k) in self.projection_gemm_shapes(prompt_len):
@@ -123,6 +126,18 @@ class ServingEngine:
                 entries.append(("tn" + suffix, *bwd["tn"]))
             if update:
                 entries.append(("tn_update" + suffix, *bwd["tn"]))
+        if getattr(self.cfg, "attn_impl", "") == "sfc":
+            # the SFC attention kernels resolve their own namespaces:
+            # prefill/training flash (and its backward, for fine-tuning
+            # jobs that piggyback on warmup), plus the decode fan-out
+            attn = attention_phase_shapes(
+                prompt_len, prompt_len, self.cfg.head_dim_,
+                n_heads=self.cfg.n_heads, cache_len=self.max_seq,
+            )
+            entries.append(("attn_fwd", *attn["attn_fwd"]))
+            if backward:
+                entries.append(("attn_bwd", *attn["attn_bwd"]))
+            entries.append(("attn_decode", *attn["attn_decode"]))
         return entries
 
     def warmup(

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.attention_backend import attention_backend as _attn_backend_ctx
 from repro.core.gemm_backend import gemm_backend as _gemm_backend_ctx
 from repro.optim.adamw import (
     AdamWConfig,
@@ -71,6 +72,7 @@ def make_train_step(
     remat: str = "dots",
     microbatches: int = 1,
     gemm_backend: Optional[str] = None,
+    attn_impl: Optional[str] = None,
     fused_optimizer: bool = False,
     stochastic_round: bool = True,
     fused_filter: Optional[Callable[[str, Any], bool]] = None,
@@ -81,6 +83,13 @@ def make_train_step(
     ("xla" | "sfc_pallas" | "sfc_reference"); None inherits the caller's
     context.  Under "sfc_pallas" both directions run on the SFC kernels —
     the backward via the NT/TN custom-VJP path, no dot_general fallback.
+
+    ``attn_impl`` likewise pins the attention backend ("blockwise" |
+    "flash_pallas" | "sfc"), overriding the model config's value for the
+    traced step.  With ``gemm_backend="sfc_pallas"`` and
+    ``attn_impl="sfc"`` the full forward+backward jaxpr contains *zero*
+    dot_general — attention scores included, via the differentiable SFC
+    flash kernels' custom VJP.
 
     ``fused_optimizer=True`` fuses AdamW into the backward pass for every
     routed 2-D projection weight: the TN kernel's flush updates the
@@ -106,17 +115,12 @@ def make_train_step(
             )
         return _make_fused_train_step(
             model, opt_cfg,
-            remat=remat, gemm_backend=gemm_backend,
+            remat=remat, gemm_backend=gemm_backend, attn_impl=attn_impl,
             stochastic_round=stochastic_round, fused_filter=fused_filter,
         )
 
     def loss_fn(params, batch):
-        ctx = (
-            _gemm_backend_ctx(gemm_backend)
-            if gemm_backend is not None
-            else contextlib.nullcontext()
-        )
-        with ctx:
+        with _backend_ctx(gemm_backend, attn_impl):
             return model.loss(params, batch, remat=remat)
 
     def train_step(params, opt_state, batch):
@@ -146,12 +150,23 @@ def make_train_step(
     return train_step
 
 
+def _backend_ctx(gemm_backend: Optional[str], attn_impl: Optional[str]):
+    """Stacked trace-time backend pins (either may be None = inherit)."""
+    ctx = contextlib.ExitStack()
+    if gemm_backend is not None:
+        ctx.enter_context(_gemm_backend_ctx(gemm_backend))
+    if attn_impl is not None:
+        ctx.enter_context(_attn_backend_ctx(attn_impl))
+    return ctx
+
+
 def _make_fused_train_step(
     model,
     opt_cfg: AdamWConfig,
     *,
     remat: str,
     gemm_backend: Optional[str],
+    attn_impl: Optional[str],
     stochastic_round: bool,
     fused_filter,
 ) -> Callable:
@@ -169,12 +184,7 @@ def _make_fused_train_step(
             return model.loss(p, b, remat="none")
 
     def loss_fn(wrapped, batch):
-        ctx = (
-            _gemm_backend_ctx(gemm_backend)
-            if gemm_backend is not None
-            else contextlib.nullcontext()
-        )
-        with ctx, fused_update_config(
+        with _backend_ctx(gemm_backend, attn_impl), fused_update_config(
             FusedUpdateConfig(stochastic_round=stochastic_round)
         ):
             return model.loss(wrapped, batch, remat=remat)
@@ -266,15 +276,11 @@ def _make_fused_train_step(
 
 
 def make_eval_step(
-    model, *, remat: str = "none", gemm_backend: Optional[str] = None
+    model, *, remat: str = "none", gemm_backend: Optional[str] = None,
+    attn_impl: Optional[str] = None,
 ) -> Callable:
     def eval_step(params, batch):
-        ctx = (
-            _gemm_backend_ctx(gemm_backend)
-            if gemm_backend is not None
-            else contextlib.nullcontext()
-        )
-        with ctx:
+        with _backend_ctx(gemm_backend, attn_impl):
             return model.loss(params, batch, remat=remat)
 
     return eval_step

@@ -100,7 +100,10 @@ def candidate_knobs(
 
 
 # every tunable kernel-variant namespace; duals and the update flush have
-# their own knob landscapes (extra streamed panels / resident state tiles)
+# their own knob landscapes (extra streamed panels / resident state tiles).
+# The attn_* namespaces tune the SFC attention kernels' (q_chunk, k_chunk)
+# — carried in the Knobs record's bm/bn fields; k_layers/k_block_factor are
+# inert there — with buckets (Sq, Sk, D) (decode: (H, T, D)).
 TUNE_OPS = (
     "gemm",
     "glu",
@@ -110,7 +113,12 @@ TUNE_OPS = (
     "tn_dual",
     "tn_update",
     "tn_update_dual",
+    "attn_fwd",
+    "attn_bwd",
+    "attn_decode",
 )
+
+ATTN_OPS = ("attn_fwd", "attn_bwd", "attn_decode")
 
 
 def _op_call(op: str, knobs: Knobs, *, interpret: bool = False):
@@ -170,6 +178,62 @@ def _op_call(op: str, knobs: Knobs, *, interpret: bool = False):
             )
 
         return call
+    if op in ATTN_OPS:
+        import jax.numpy as jnp
+
+        from repro.kernels.sfc_attention import (
+            sfc_decode_attention_pallas,
+            sfc_flash_fwd,
+        )
+
+        qc, kc = knobs.bm, knobs.bn
+
+        if op == "attn_decode":
+            def call(q, k, bg):
+                valid = jnp.full((q.shape[0],), k.shape[1], jnp.int32)
+                return sfc_decode_attention_pallas(
+                    q, k, k, valid, k_chunk=min(kc, k.shape[1]),
+                    interpret=interpret,
+                )
+
+            return call
+
+        def call(q, k, bg, _op=op):
+            sq, sk = q.shape[1], k.shape[1]
+            fwd = lambda q_, k_, v_: sfc_flash_fwd(
+                q_, k_, v_, causal=True, seq_q=sq, seq_k=sk,
+                q_chunk=min(qc, sq), k_chunk=min(kc, sk),
+                interpret=interpret,
+            )[0]
+            if _op == "attn_fwd":
+                return fwd(q, k, k)
+            # attn_bwd: score the whole backward (dQ + dK/dV launches)
+            import jax
+
+            from repro.kernels.sfc_attention import (
+                sfc_flash_bwd_dkv,
+                sfc_flash_bwd_dq,
+            )
+
+            o, lse = sfc_flash_fwd(
+                q, k, k, causal=True, seq_q=sq, seq_k=sk,
+                q_chunk=min(qc, sq), k_chunk=min(kc, sk),
+                interpret=interpret,
+            )
+            delta = jnp.sum(
+                o.astype(jnp.float32) * o.astype(jnp.float32),
+                axis=-1, keepdims=True,
+            )
+            bw = dict(
+                causal=True, seq_q=sq, seq_k=sk,
+                q_chunk=min(qc, sq), k_chunk=min(kc, sk),
+                interpret=interpret,
+            )
+            dq = sfc_flash_bwd_dq(q, k, k, o, lse, delta, **bw)
+            dk, dv = sfc_flash_bwd_dkv(q, k, k, o, lse, delta, **bw)
+            return dq, dk, dv
+
+        return call
     return lambda a, b, bg: sfc_matmul(a, b, **kw)
 
 
@@ -179,13 +243,20 @@ def _op_operand_shapes(op: str, m: int, n: int, k: int):
     The (m, n, k) key is always the *resolver* bucket — what
     `ops.resolve_knobs` is called with for that op: NT consumes (m, k) and
     the untransposed (n, k); TN (and the update flush) contracts over k
-    rows, producing (m, n)."""
+    rows, producing (m, n).  Attention buckets are (Sq, Sk, D) — operands
+    in the kernels' native (B, S, H, D) layout — and decode (H, T, D)
+    with the GQA group folded into the q tile's rows."""
     if op in ("nt", "nt_dual"):
         return (m, k), (n, k), None
     if op in ("tn", "tn_dual", "tn_update", "tn_update_dual"):
         return (k, m), (k, n), None
     if op == "glu":
         return (m, k), (k, n), (k, n)
+    if op in ("attn_fwd", "attn_bwd"):
+        return (1, m, 1, k), (1, n, 1, k), None
+    if op == "attn_decode":
+        gp = 1 << max(3, (int(m) - 1).bit_length())
+        return (1, 1, gp, k), (1, n, 1, k), None
     return (m, k), (k, n), None
 
 
@@ -239,6 +310,25 @@ def _measure_simulated(m, n, k, dtype, knobs: Knobs, *, op: str = "gemm") -> flo
     from repro.core.perf_model import optimizer_update_bytes
 
     dtype_bytes = np.dtype(dtype).itemsize
+    if op in ATTN_OPS:
+        from repro.core.perf_model import (
+            simulate_decode_attention,
+            simulate_flash_attention,
+        )
+
+        if op == "attn_decode":
+            return float(
+                simulate_decode_attention(
+                    1, max(m, 1), 1, n, k, dtype_bytes=dtype_bytes
+                )["time_s"]
+            )
+        r = simulate_flash_attention(
+            1, 1, m, n, k,
+            q_chunk=min(knobs.bm, m), k_chunk=min(knobs.bn, n),
+            causal=True, phase="bwd" if op == "attn_bwd" else "fwd",
+            dtype_bytes=dtype_bytes,
+        )
+        return float(r["time_s"])
     mp = ((m + knobs.bm - 1) // knobs.bm) * knobs.bm
     np_ = ((n + knobs.bn - 1) // knobs.bn) * knobs.bn
     dual = op in ("glu", "nt_dual", "tn_dual", "tn_update_dual")

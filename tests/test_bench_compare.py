@@ -178,3 +178,66 @@ def test_baseline_covers_backward_and_update_rows():
     upd = next(r for name, r in rows.items()
                if name.startswith("data_movement/train_update/"))
     assert "dw_GB_deleted=" in upd["derived"]
+
+
+# ---------------------------------------------------------------------------
+# coverage reporting: families + --require-prefix
+# ---------------------------------------------------------------------------
+
+
+def test_family_extraction():
+    from benchmarks.compare import family
+
+    assert family("data_movement/attn_prefill/1x32x32x4096x128") == (
+        "data_movement/attn_prefill"
+    )
+    assert family("gemm_sweep/512x512x512") == "gemm_sweep"
+    assert family("data_movement/train_update/4096x4096x4096") == (
+        "data_movement/train_update"
+    )
+
+
+def test_coverage_report_counts_and_requirements(tmp_path):
+    from benchmarks.compare import coverage_report
+
+    base = {r["name"]: r for r in BASE}
+    new = {r["name"]: r for r in BASE + [_row("data_movement/attn_decode/8x32", 1.0)]}
+    table, fails = coverage_report(base, new)
+    assert "gemm_sweep" in table and not fails
+
+    # required family present in new but missing from the baseline ->
+    # it is not under the gate -> failure
+    _, fails = coverage_report(
+        base, new, require_prefixes=("data_movement/attn_decode",)
+    )
+    assert len(fails) == 1 and "baseline" in fails[0]
+
+    # present in both -> clean
+    base2 = dict(new)
+    _, fails = coverage_report(
+        base2, new, require_prefixes=("data_movement/attn_decode",)
+    )
+    assert not fails
+
+    # dropped from the new emission -> failure
+    _, fails = coverage_report(
+        base2, base, require_prefixes=("data_movement/attn_decode",)
+    )
+    assert len(fails) == 1 and "new emission" in fails[0]
+
+
+def test_main_require_prefix_gates(tmp_path):
+    rows = BASE + [_row("data_movement/attn_prefill/1x32", 5.0)]
+    b = _write(tmp_path, "base.json", rows)
+    n = _write(tmp_path, "new.json", rows)
+    assert main([b, n, "--require-prefix", "data_movement/attn_prefill"]) == 0
+    # family absent from both docs -> non-zero exit
+    assert main([b, n, "--require-prefix", "data_movement/attn_decode"]) == 1
+
+
+def test_committed_baseline_covers_attention_families():
+    """The attention rows must actually sit under the gate: the committed
+    BENCH_gemm.json carries both families CI requires."""
+    rows = load_rows(str(REPO / "BENCH_gemm.json"))
+    assert any(n.startswith("data_movement/attn_prefill/") for n in rows)
+    assert any(n.startswith("data_movement/attn_decode/") for n in rows)

@@ -547,3 +547,117 @@ def test_tn_update_tuner_namespace_roundtrip(tmp_path, monkeypatch):
         assert cache.get(32, 24, 16, np.float32, "cpu", "tn") is None
     finally:
         tuner._DEFAULT_CACHE = None
+
+
+# ---------------------------------------------------------------------------
+# MoE fused-optimizer routing: expert stacks through the grouped TN flush
+# ---------------------------------------------------------------------------
+
+
+def _moe_cfg():
+    from repro.configs.base import ArchConfig
+
+    return ArchConfig(
+        name="tiny_moe_fused", family="moe", n_layers=2, d_model=32,
+        n_heads=4, kv_heads=2, d_ff=48, vocab=64, head_dim=8,
+        n_experts=4, moe_top_k=2, param_dtype="float32",
+        q_chunk=16, k_chunk=16,
+    )
+
+
+def _moe_fixture():
+    from repro.models.registry import build_model
+
+    cfg = _moe_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)), jnp.int32),
+    }
+    return model, params, batch
+
+
+def test_probe_routes_moe_expert_stacks():
+    """The probe now accepts 3-D grouped consumption: scan-stacked expert
+    stacks (L, E, K, N) route as grouped/grouped_glu, alongside the 2-D
+    projections."""
+    model, params, batch = _moe_fixture()
+
+    def probe_loss(p, b):
+        with gb.gemm_backend("xla"):
+            return model.loss(p, b, remat="none")
+
+    routed = probe_routed(probe_loss, params, batch)
+    assert routed["layers/moe/w_in"].op == "grouped_glu"
+    assert routed["layers/moe/w_gate"].op == "grouped_glu"
+    assert routed["layers/moe/w_out"].op == "grouped"
+    for p in ("layers/moe/w_in", "layers/moe/w_gate", "layers/moe/w_out"):
+        assert routed[p].stacked  # (L, E, K, N) consumed as (E, K, N)
+    assert routed["layers/attn/wq"].op == "matmul"
+
+
+def test_moe_fused_step_matches_unfused_f32():
+    """Acceptance (ROADMAP "MoE fused-optimizer routing"): the fused step
+    with expert stacks routed through `sfc_grouped_matmul_tn_update`
+    advances every leaf — expert weights included — identically to the
+    unfused composition at f32, on both the kernel and oracle backends."""
+    model, params, batch = _moe_fixture()
+    cfg = AdamWConfig(lr=1e-2, total_steps=10, warmup_steps=1, clip_norm=1e9)
+
+    unfused = make_train_step(model, cfg, remat="none", gemm_backend="xla")
+    p_u, s_u, m_u = unfused(params, adamw_init(params), batch)
+
+    for backend in ("sfc_pallas", "xla"):
+        fused = make_train_step(
+            model, cfg, remat="none", gemm_backend=backend,
+            fused_optimizer=True, stochastic_round=False,
+        )
+        p_f, s_f, m_f = fused(params, adamw_init(params, with_gnorm=True), batch)
+        np.testing.assert_allclose(
+            float(m_f["loss"]), float(m_u["loss"]), rtol=1e-6
+        )
+        np.testing.assert_allclose(
+            float(m_f["grad_norm"]), float(m_u["grad_norm"]), rtol=1e-5
+        )
+        for got, want in zip(jax.tree.leaves(p_f), jax.tree.leaves(p_u)):
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5,
+                err_msg=f"backend={backend}",
+            )
+        for slot in ("mu", "nu", "master"):
+            for got, want in zip(
+                jax.tree.leaves(s_f[slot]), jax.tree.leaves(s_u[slot])
+            ):
+                np.testing.assert_allclose(
+                    np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5,
+                    err_msg=f"backend={backend} slot={slot}",
+                )
+
+
+def test_moe_fused_step_jaxpr_no_expert_optimizer_pass():
+    """Structural: the fused step's jaxpr contains zero standalone
+    elementwise optimizer ops at the scan-stacked expert-weight shape —
+    the per-expert AdamW lives inside the grouped TN-update pallas_call —
+    while the unfused step carries the full chain there."""
+    model, params, batch = _moe_fixture()
+    cfg = AdamWConfig(lr=1e-2, total_steps=10, warmup_steps=1)
+    w_shape = tuple(params["layers"]["moe"]["w_in"].shape)  # (L, E, K, N)
+
+    fused = make_train_step(
+        model, cfg, remat="none", gemm_backend="sfc_pallas",
+        fused_optimizer=True, stochastic_round=False,
+    )
+    unfused = make_train_step(
+        model, cfg, remat="none", gemm_backend="sfc_pallas"
+    )
+    jx_f = jax.make_jaxpr(fused)(params, adamw_init(params, with_gnorm=True), batch)
+    jx_u = jax.make_jaxpr(unfused)(params, adamw_init(params), batch)
+    n_f = _count_elementwise_at_shape(jx_f.jaxpr, w_shape)["n"]
+    n_u = _count_elementwise_at_shape(jx_u.jaxpr, w_shape)["n"]
+    assert n_u > 0, "unfused step lost its expert optimizer pass?"
+    assert n_f == 0, (
+        f"fused step still runs {n_f} elementwise optimizer ops at the "
+        f"expert stack shape {w_shape}"
+    )

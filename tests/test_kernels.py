@@ -246,3 +246,58 @@ def test_flash_attention_sweep(b, s, t, h, hkv, d, causal, dtype):
     np.testing.assert_allclose(
         np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
     )
+
+
+def test_flash_causal_band_guard_skips_masked_chunks():
+    """Regression for the dead causal-band guard: k chunks fully above the
+    diagonal must be *skipped*, not computed-and-masked.  NaNs are planted
+    in the k/v rows of the last k chunk; any q chunk below the band would
+    only stay NaN-free if the guard actually predicates the MXU work off
+    (0 * NaN inside a computed dot would be NaN)."""
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.ref import flash_attention_ref
+
+    b, s, h, d, chunk = 1, 64, 2, 16, 16
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    k = np.asarray(rng.normal(size=(b, s, h, d)), np.float32)
+    v = np.asarray(rng.normal(size=(b, s, h, d)), np.float32)
+    # poison the last k chunk: fully masked for every q chunk except the last
+    k[:, -chunk:] = np.nan
+    v[:, -chunk:] = np.nan
+    got = flash_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+        causal=True, q_chunk=chunk, k_chunk=chunk, interpret=True,
+    )
+    clean = np.asarray(got)[:, : s - chunk]
+    assert np.isfinite(clean).all(), (
+        "fully-masked k chunks contributed MXU work (NaN leaked through "
+        "the causal-band guard)"
+    )
+    want = flash_attention_ref(
+        jnp.asarray(q[:, : s - chunk]), jnp.asarray(k[:, : s - chunk]),
+        jnp.asarray(v[:, : s - chunk]), causal=True,
+    )
+    np.testing.assert_allclose(
+        clean, np.asarray(want), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_sfc_flash_band_table_has_no_masked_tasks():
+    """The SFC attention kernel goes further than the guard: masked tiles
+    are absent from its task table, so they cost no grid step at all —
+    and the same NaN probe passes through the band scheduler."""
+    from repro.core.attention_backend import flash_attention as sfc_flash
+
+    b, s, h, d, chunk = 1, 64, 2, 16, 16
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    k = np.asarray(rng.normal(size=(b, s, h, d)), np.float32)
+    v = np.asarray(rng.normal(size=(b, s, h, d)), np.float32)
+    k[:, -chunk:] = np.nan
+    v[:, -chunk:] = np.nan
+    got = sfc_flash(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+        causal=True, q_chunk=chunk, k_chunk=chunk,
+    )
+    assert np.isfinite(np.asarray(got)[:, : s - chunk]).all()
