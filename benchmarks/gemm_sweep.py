@@ -162,10 +162,20 @@ def run_backward(smoke: bool = False, n_workers: int = 256):
             )
 
 
-def run_tune(shapes=None, cache_path=None, backward: bool = True):
-    """Empirical-tuner regime: sweep measured candidates for each shape,
-    persist winners, then demonstrate the warm path (second call = pure
-    cache hit).  CSV derived field records the winning knob tuple + source.
+def run_tune(
+    shapes=None,
+    cache_path=None,
+    backward: bool = True,
+    strategy: str = "predict",
+):
+    """Empirical-tuner regime: calibrate the device once, tune each shape
+    (predict-then-confirm by default — the calibrated model ranks the
+    candidates and only the top-2 are measured; ``strategy="exhaustive"``
+    restores the measure-everything v1 sweep for A/B), persist winners,
+    then demonstrate the warm path (second call = pure cache hit).  CSV
+    derived fields record the winning knob tuple + source and, per
+    measured candidate, the predicted-vs-measured relative error the
+    calibration is accountable for.
 
     With ``backward`` (default) each forward shape's two backward GEMM
     buckets are tuned too — the ``op="nt"`` / ``op="tn"`` namespaces a
@@ -174,43 +184,83 @@ def run_tune(shapes=None, cache_path=None, backward: bool = True):
     import time
 
     from repro.core.perf_model import backward_gemm_shapes
-    from repro.tune import KnobCache, tune_gemm
+    from repro.tune import KnobCache, calibrate, tune_gemm
 
     shapes = shapes or [(256, 256, 256), (512, 256, 512), (384, 640, 256)]
     cache = KnobCache(cache_path) if cache_path else None
+    t0 = time.perf_counter()
+    consts = calibrate(cache)
+    cal_us = (time.perf_counter() - t0) * 1e6
+    emit(
+        "gemm_tune/calibrate",
+        cal_us,
+        f"device={consts.device_kind or 'unknown'};"
+        f"time_scale={consts.time_scale:.3f};"
+        f"launch_us={consts.launch_overhead_s * 1e6:.2f};"
+        f"flush_us={consts.flush_overhead_s * 1e6:.2f};"
+        f"drain_us_per_mb={consts.drain_byte_s * 2**20 * 1e6:.2f};"
+        f"n_samples={consts.n_samples};"
+        f"fit_median_err={consts.median_abs_rel_err:.3f}",
+    )
+    report = []
+
+    def _tune(m, n, k, op="gemm"):
+        t0 = time.perf_counter()
+        kn = tune_gemm(m, n, k, np.float32, cache=cache, op=op,
+                       strategy=strategy, report=report)
+        return kn, (time.perf_counter() - t0) * 1e6
+
     for (m, n, k) in shapes:
+        n_before = len(report)
+        knobs, cold_us = _tune(m, n, k)
         t0 = time.perf_counter()
-        knobs = tune_gemm(m, n, k, np.float32, cache=cache)
-        cold_us = (time.perf_counter() - t0) * 1e6
-        t0 = time.perf_counter()
-        hit = tune_gemm(m, n, k, np.float32, cache=cache)
+        hit = tune_gemm(m, n, k, np.float32, cache=cache, strategy=strategy)
         warm_us = (time.perf_counter() - t0) * 1e6
         emit(
             f"gemm_tune/{m}x{n}x{k}",
             cold_us,
             f"bm={knobs.bm};bn={knobs.bn};c={knobs.k_layers};"
             f"kbf={knobs.k_block_factor};source={knobs.source};"
+            f"n_measured={len(report) - n_before};"
             f"hit_source={hit.source};hit_us={warm_us:.1f}",
         )
         if not backward:
             continue
         for op, (bm_, bn_, bk_) in backward_gemm_shapes(m, n, k).items():
-            t0 = time.perf_counter()
-            kb = tune_gemm(bm_, bn_, bk_, np.float32, cache=cache, op=op)
-            us = (time.perf_counter() - t0) * 1e6
+            n_before = len(report)
+            kb, us = _tune(bm_, bn_, bk_, op)
             emit(
                 f"gemm_tune/{m}x{n}x{k}/{op}",
                 us,
                 f"bucket={bm_}x{bn_}x{bk_};bm={kb.bm};bn={kb.bn};"
-                f"c={kb.k_layers};kbf={kb.k_block_factor};source={kb.source}",
+                f"c={kb.k_layers};kbf={kb.k_block_factor};"
+                f"n_measured={len(report) - n_before};source={kb.source}",
             )
+    errs = [
+        abs(r["measured_s"] - r["predicted_s"]) / r["measured_s"]
+        for r in report
+        if r.get("predicted_s") and r["measured_s"] > 0
+    ]
+    emit(
+        "gemm_tune/SUMMARY",
+        0.0,
+        f"strategy={strategy};n_measured={len(report)};"
+        + (
+            f"median_pred_err={float(np.median(errs)):.3f};"
+            f"max_pred_err={float(np.max(errs)):.3f}"
+            if errs
+            else "median_pred_err=n/a"
+        ),
+    )
 
 
 def main():
     import sys
 
     if "--tune" in sys.argv:
-        run_tune()
+        run_tune(
+            strategy="exhaustive" if "--exhaustive" in sys.argv else "predict"
+        )
     else:
         run(full="--full" in sys.argv)
 

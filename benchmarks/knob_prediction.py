@@ -9,10 +9,18 @@ use a coarser lattice — same method), then evaluate on 100 random shapes:
   nn           paper SSIII-C method 3
 
 Reported: geometric-mean slowdown vs autotuned (paper: within 3-7%).
+
+``--calibration`` runs the tuner-v2 accountability check instead: fit the
+platform constants on this device (fresh temp cache), re-predict every
+measured point in the calibration sweep plus a held-out tune sweep, and
+fail (exit 1) if the median predicted-vs-measured relative error exceeds
+the gate (default 30%) — CI's guard that predict-then-confirm ranking
+stays grounded in real measurements.
 """
 
 from __future__ import annotations
 
+import argparse
 import itertools
 
 import numpy as np
@@ -65,8 +73,81 @@ def run(n_workers: int = 256, n_eval: int = 40, seed: int = 0):
     )
 
 
+def run_calibration(gate: float = 0.30, cache_path=None) -> float:
+    """Tuner-v2 accountability: calibrate on a fresh cache, then check the
+    calibrated model's predictions against held-out wall-clock/HLO-cost
+    measurements from a predict-then-confirm tune sweep.  Returns the
+    median relative error; raises SystemExit(1) past the gate."""
+    import tempfile
+
+    from repro.tune import KnobCache, calibrate, tune_gemm
+
+    if cache_path is None:
+        cache_path = tempfile.mktemp(suffix=".json", prefix="repro_cal_")
+    cache = KnobCache(cache_path)
+    consts = calibrate(cache, force=True)
+    emit(
+        "knob_calibration/fit",
+        0.0,
+        f"device={consts.device_kind or 'unknown'};"
+        f"time_scale={consts.time_scale:.3f};"
+        f"launch_us={consts.launch_overhead_s * 1e6:.2f};"
+        f"flush_us={consts.flush_overhead_s * 1e6:.2f};"
+        f"drain_us_per_mb={consts.drain_byte_s * 2**20 * 1e6:.2f};"
+        f"n_samples={consts.n_samples};"
+        f"fit_median_err={consts.median_abs_rel_err:.3f}",
+    )
+    # held-out check: shapes disjoint from the calibration sweep, through
+    # the same predict-then-confirm path serving/training exercises
+    report = []
+    for (m, n, k) in [(256, 256, 256), (512, 256, 512), (384, 640, 256)]:
+        tune_gemm(m, n, k, np.float32, cache=cache, strategy="predict",
+                  report=report)
+    errs = []
+    for r in report:
+        if not r.get("predicted_s") or not r["measured_s"] or r["measured_s"] <= 0:
+            continue
+        err = abs(r["measured_s"] - r["predicted_s"]) / r["measured_s"]
+        errs.append(err)
+        emit(
+            f"knob_calibration/{r['op']}/{r['bucket']}/"
+            f"b{r['knobs'][0]}x{r['knobs'][1]}c{r['knobs'][2]}k{r['knobs'][3]}",
+            r["measured_s"] * 1e6,
+            f"predicted_us={r['predicted_s'] * 1e6:.1f};rel_err={err:.3f}",
+        )
+    if not errs:
+        emit("knob_calibration/SUMMARY", 0.0, "median_err=n/a;status=FAIL")
+        raise SystemExit("calibration check: no usable measurements")
+    med = float(np.median(errs))
+    ok = med <= gate
+    emit(
+        "knob_calibration/SUMMARY",
+        0.0,
+        f"median_err={med:.3f};max_err={float(np.max(errs)):.3f};"
+        f"n={len(errs)};gate={gate:.2f};status={'OK' if ok else 'FAIL'}",
+    )
+    if not ok:
+        raise SystemExit(
+            f"calibration check: median predicted-vs-measured error "
+            f"{med:.3f} exceeds gate {gate:.2f}"
+        )
+    return med
+
+
 def main():
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--calibration", action="store_true",
+        help="run the calibrated-model accountability check instead of the "
+             "Fig.-8 knob-prediction sweep",
+    )
+    ap.add_argument("--gate", type=float, default=0.30,
+                    help="median predicted-vs-measured error gate")
+    args = ap.parse_args()
+    if args.calibration:
+        run_calibration(gate=args.gate)
+    else:
+        run()
 
 
 if __name__ == "__main__":

@@ -44,6 +44,7 @@ __all__ = [
     "simulate_gemm",
     "simulate_train_gemm",
     "shared_memory_floor",
+    "vmem_excess_bytes",
     "backward_gemm_shapes",
     "attention_phase_shapes",
     "simulate_flash_attention",
@@ -69,6 +70,26 @@ class HardwareModel:
     beta:       sec/byte read from slow memory (1 / bandwidth)
     fast_bytes: per-worker fast memory capacity (paper: L2; here: VMEM)
     name:       label for reports
+
+    The trailing overhead fields are *calibrated platform constants*
+    (`repro.tune.calibrate` fits them from a measured micro-sweep and
+    persists them per device kind alongside the knob cache).  Their
+    defaults are inert — an uncalibrated model reproduces the pure
+    datasheet γ/β roofline exactly:
+
+    launch_overhead_s: fixed per-kernel-launch setup cost
+    flush_overhead_s:  per-accumulator-drain latency (each output tile
+                       drains once per K chunk; `simulate_gemm` charges the
+                       per-worker critical-path drain count)
+    drain_byte_s:      sec/byte of per-grid-step working set (streamed
+                       panels + f32 accumulator tile) charged for every
+                       step after the first — the measured per-step cost
+                       grows with the step footprint, not just the count
+    vmem_penalty:      sec per byte the per-grid-step working set overflows
+                       ``vmem_budget_bytes`` (replaces the old hardcoded
+                       VMEM-footprint guesses — fitted, not asserted)
+    calibrated:        device kind the constants were fitted on ("" =
+                       datasheet defaults)
     """
 
     name: str
@@ -77,6 +98,16 @@ class HardwareModel:
     fast_bytes: int
     # chip-level network (used by the distributed CA model)
     ici_beta: float = 0.0
+    # calibrated platform constants (see `repro.tune.calibrate`)
+    launch_overhead_s: float = 0.0
+    flush_overhead_s: float = 0.0
+    drain_byte_s: float = 0.0
+    vmem_penalty: float = 0.0
+    # sec/byte charged on panel reuse the census credits but the measured
+    # device does not deliver (0 = trust the LRU model fully)
+    reuse_miss_beta: float = 0.0
+    vmem_budget_bytes: int = 16 * 2**20  # Mosaic VMEM per core
+    calibrated: str = ""
 
     @property
     def peak_flops(self) -> float:
@@ -108,6 +139,27 @@ def gemm_flops(M: int, N: int, K: int) -> float:
     return 2.0 * M * N * K
 
 
+def vmem_excess_bytes(
+    bm: int,
+    bn: int,
+    k_chunk: int,
+    *,
+    dtype_bytes: int = 2,
+    n_b_mats: int = 1,
+    hw: HardwareModel = None,
+) -> float:
+    """Bytes by which one grid step's working set — double-buffered A/B
+    panels plus the f32 accumulator(s) — overflows the VMEM budget.  The
+    calibrated ``hw.vmem_penalty`` coefficient converts this to seconds;
+    an in-budget working set costs nothing (mirrors the fused-path VMEM
+    check in `kernels.ops.fused_path_fits_vmem`, but as a fitted soft
+    penalty instead of a hard fallback)."""
+    budget = (hw.vmem_budget_bytes if hw is not None else 16 * 2**20)
+    panels = (bm * k_chunk + n_b_mats * k_chunk * bn) * dtype_bytes * 2
+    accs = bm * bn * 4 * n_b_mats
+    return float(max(0, panels + accs - budget))
+
+
 @dataclasses.dataclass
 class BRGemmCounts:
     """BRGEMM invocation census for one worker (paper §III-B taxonomy)."""
@@ -118,6 +170,11 @@ class BRGemmCounts:
     brgemm3: int = 0  # both resident in fast memory
     time: float = 0.0  # modeled seconds on this worker's critical path
     slow_bytes: float = 0.0  # bytes read from slow memory (A/B panels)
+    # panel bytes a reuse-free streamer would move (every BRGEMM re-reads
+    # both panels); ``nocache_bytes - slow_bytes`` is the reuse the census
+    # credits, which `hw.reuse_miss_beta` charges back when a calibrated
+    # device doesn't deliver it
+    nocache_bytes: float = 0.0
 
     @property
     def total(self) -> int:
@@ -197,6 +254,7 @@ def simulate_patch_traversal(
         for kc in range(n_chunks):
             a_key = ("A", int(im), kc)
             b_key = ("B", int(in_), kc)
+            out.nocache_bytes += sa + sb
             a_hit = cache.hit(a_key)
             b_hit = cache.hit(b_key)
             if a_hit and b_hit:
@@ -277,13 +335,46 @@ def simulate_gemm(
         # each worker reads (c-1) partial copies of its final patch + writes 1
         final_patch = (M * N / n_workers) * dtype_bytes
         c_time += (k_layers - 1) * 2 * final_patch * hw.beta
-    time = worst.time + c_time
+    # calibrated platform terms (all zero on an uncalibrated model): one
+    # launch setup, the fitted flush latency per accumulator drain on the
+    # per-worker critical path (each output tile drains once per K chunk —
+    # drain count, not layer count, is what measurement tracks), and the
+    # soft penalty for a VMEM-overflowing working set
+    k_chunk = max(1, (K // k_layers) // k_block_factor)
+    n_drains = (mb_blocks * nb_blocks / d.workers_per_layer) * k_block_factor
+    flush_time = n_drains * hw.flush_overhead_s
+    # per-grid-step working set: the panels one (tile, K-chunk) step streams
+    # plus the f32 accumulator tile.  Steps after the first each pay
+    # ``drain_byte_s`` per byte of it (nocache_bytes is the worst worker's
+    # whole-traversal panel traffic, so / n_drains recovers the per-step
+    # panel footprint).
+    step_bytes = worst.nocache_bytes / max(n_drains, 1.0) + bm * bn * 4
+    drain_time = hw.drain_byte_s * max(0.0, n_drains - 1.0) * step_bytes
+    reuse_deficit = max(0.0, worst.nocache_bytes - worst.slow_bytes)
+    reuse_time = hw.reuse_miss_beta * reuse_deficit
+    overhead = (
+        hw.launch_overhead_s
+        + flush_time
+        + drain_time
+        + reuse_time
+        + hw.vmem_penalty
+        * vmem_excess_bytes(
+            bm, bn, k_chunk, dtype_bytes=dtype_bytes, n_b_mats=n_b_mats, hw=hw
+        )
+    )
+    time = worst.time + c_time + overhead
     flops = gemm_flops(M, N, K) * n_b_mats
     return {
         "time_s": time,
         "tflops": flops / time / 1e12,
         "gemm_time_s": worst.time,
         "c_time_s": c_time,
+        "flush_time_s": flush_time,
+        "drain_time_s": drain_time,
+        "drain_step_bytes": step_bytes,
+        "reuse_time_s": reuse_time,
+        "reuse_deficit_bytes": reuse_deficit,
+        "overhead_s": overhead,
         "slow_bytes_total": total_slow,
         **{k: v for k, v in census.as_dict().items() if k.startswith("brgemm")},
     }
@@ -430,7 +521,12 @@ def simulate_flash_attention(
         * b
         * h
     )
-    time = max(flops * hw.gamma, bytes_total * hw.beta)
+    # calibrated launch setup: the backward is two launches (dQ, dK/dV)
+    n_launches = 2 if phase == "bwd" else 1
+    time = (
+        max(flops * hw.gamma, bytes_total * hw.beta)
+        + n_launches * hw.launch_overhead_s
+    )
     return {
         "time_s": time,
         "bytes": bytes_total,
@@ -483,7 +579,9 @@ def simulate_decode_attention(
     qo = 2 * b * h * d * dtype_bytes
     bytes_total = cache + qo
     flops = 4.0 * b * h * t_v * d
-    time = max(flops * hw.gamma, bytes_total * hw.beta)
+    time = (
+        max(flops * hw.gamma, bytes_total * hw.beta) + hw.launch_overhead_s
+    )
     return {
         "time_s": time,
         "bytes": bytes_total,

@@ -52,8 +52,8 @@ def build_trainer(
     ``gemm_backend="sfc_pallas"`` trains end-to-end on the SFC kernels:
     forward projections AND the custom-VJP backward (NT/TN kernels).
     ``fused_optimizer=True`` additionally runs AdamW inside the TN kernel
-    flush for routed 2-D weights (single-host; clip-by-global-norm becomes
-    one-step-delayed — see `train.step.make_train_step`)."""
+    flush for routed 2-D weights (single-host; clip-by-global-norm stays
+    exact via the two-phase flush — see `train.step.make_train_step`)."""
     if fused_optimizer and mesh is not None:
         raise ValueError("fused_optimizer is a single-host path (no mesh)")
     model = build_model(cfg)
@@ -65,7 +65,7 @@ def build_trainer(
     )
 
     params = model.init(jax.random.PRNGKey(seed))
-    opt_state = adamw_init(params, with_gnorm=fused_optimizer)
+    opt_state = adamw_init(params)
 
     data = SyntheticLM(SyntheticLMConfig(vocab=cfg.vocab, seq_len=seq, global_batch=batch, seed=seed))
 
@@ -128,7 +128,8 @@ def main():
     ap.add_argument(
         "--fused-optimizer", action="store_true",
         help="AdamW inside the TN kernel flush for routed 2-D weights "
-             "(dW never touches HBM; one-step-delayed grad clipping)",
+             "(dW never touches HBM; exact grad clipping via the "
+             "two-phase flush)",
     )
     ap.add_argument(
         "--no-stochastic-round", action="store_true",

@@ -105,8 +105,9 @@ def adamw_init(params: Params, *, with_gnorm: bool = False) -> Dict[str, Any]:
         "master": jax.tree.map(f32, params),
     }
     if with_gnorm:
-        # last observed global grad norm — the fused train step's one-step-
-        # delayed clip signal (0 => no clipping on the first step)
+        # last observed global grad norm.  Legacy/informational: the fused
+        # train step clips exactly (two-phase flush) and no longer reads
+        # this slot; it is still carried through for states that have it.
         state["gnorm"] = jnp.zeros((), jnp.float32)
     return state
 

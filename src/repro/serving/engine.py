@@ -147,13 +147,21 @@ class ServingEngine:
         tune: bool = False,
         tune_backward: bool = False,
         tune_update: bool = False,
-    ) -> None:
+        tune_strategy: str = "predict",
+    ) -> Optional[Dict[str, Any]]:
         """Compile the prefill/decode programs for one prompt length before
-        traffic arrives; with ``tune=True`` first run the empirical knob
-        tuner for this model's projection GEMM shapes — the fused GLU
-        variant included — so the SFC backend traces with measured winners
-        (a second warmup for the same shape bucket is a pure cache hit — no
+        traffic arrives; with ``tune=True`` first run the knob tuner for
+        this model's projection GEMM shapes — the fused GLU variant
+        included — so the SFC backend traces with tuned winners (a second
+        warmup for the same shape bucket is a pure cache hit — no
         re-measurement).
+
+        Tuning is predict-then-confirm by default (tuner v2): the device is
+        calibrated once (`repro.tune.calibrate` — a short micro-sweep,
+        persisted per device kind), every candidate is ranked with the
+        calibrated model, and only the top-2 per namespace are measured
+        wall-clock.  ``tune_strategy="exhaustive"`` restores the v1
+        measure-everything sweep for A/B.
 
         ``tune_backward=True`` additionally tunes the backward namespaces
         for the same projection shapes — ``op="nt"``/``op="tn"`` plus the
@@ -164,23 +172,52 @@ class ServingEngine:
         (and implies ``tune_backward``).  Serving itself never runs them,
         but the engine's warmup is the one place that already knows every
         projection shape, so fine-tuning jobs piggyback on it (see README
-        "Training on the SFC backend")."""
+        "Training on the SFC backend").
+
+        Returns a stats dict when tuning ran (``n_namespaces``,
+        ``n_measured``, ``median_rel_err`` — predicted-vs-measured over
+        the confirmation measurements — and the per-measurement
+        ``report``), else None."""
         tune_backward = tune_backward or tune_update
         tune = tune or tune_backward
+        stats: Optional[Dict[str, Any]] = None
         if tune and self.backend == "sfc_pallas":
-            from repro.tune import tune_gemm
+            from repro.tune import calibrate, tune_gemm
 
+            # fit the per-device platform constants once so the predictive
+            # ranking below is calibrated, not datasheet guesswork (a
+            # pure cache read after the first warmup on this device)
+            try:
+                calibrate()
+            except Exception:
+                # tuning still works uncalibrated (datasheet ranking)
+                pass
             # key the cache by the dtype the projections will actually trace
             # with (activations follow param_dtype), or the lookup misses
             dtype = jnp.dtype(self.cfg.param_dtype)
-            for (op, m, n, k) in self.tune_table(
+            report: List[Dict[str, Any]] = []
+            entries = self.tune_table(
                 prompt_len, backward=tune_backward, update=tune_update
-            ):
-                tune_gemm(m, n, k, dtype, op=op)
+            )
+            for (op, m, n, k) in entries:
+                tune_gemm(m, n, k, dtype, op=op, strategy=tune_strategy,
+                          report=report)
+            errs = [
+                abs(r["measured_s"] - r["predicted_s"]) / r["measured_s"]
+                for r in report
+                if r.get("predicted_s") and r["measured_s"] > 0
+            ]
+            stats = {
+                "n_namespaces": len(entries),
+                "n_measured": len(report),
+                "median_rel_err": float(np.median(errs)) if errs else None,
+                "report": report,
+            }
         tokens = jnp.zeros((self.max_batch, prompt_len), jnp.int32)
         logits, cache = self._prefill(self.params, tokens)
         tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
         jax.block_until_ready(self._decode(self.params, tok, cache))
+        return stats
 
     # ---------------- jitted cores ----------------
 

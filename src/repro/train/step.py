@@ -98,13 +98,16 @@ def make_train_step(
     HBM and the train-step jaxpr contains no standalone optimizer
     elementwise pass for routed weights.  Routing is discovered by an
     abstract probe trace and can be overridden with
-    ``fused_filter(path, leaf) -> bool``.  Semantics differences vs the
-    unfused step: clip-by-global-norm uses the *previous* step's norm (the
-    current step's routed-grad norms are only known after the update has
-    been applied; with ``adamw_init(with_gnorm=True)`` the scale is
-    min(1, clip/gnorm_{t-1}), else clipping is off), and it requires
-    ``microbatches == 1`` (the update must run once per step, not once per
-    accumulation slice).
+    ``fused_filter(path, leaf) -> bool``.  Clip-by-global-norm is *exact*:
+    a finite ``clip_norm`` runs the backward twice — a norm pass at
+    scale=1 whose flush tokens carry the raw per-weight sum(dW²) (the
+    flush computes the token before applying the scale, so dW still never
+    materializes), then the update pass with the exact min(1, clip/‖g‖)
+    scale as a late-bound scalar.  The forward and every scale-independent
+    backward launch (the whole NT/dA chain) are identical between the two
+    passes and CSE away under jit; the only replay is the TN update flush.
+    Requires ``microbatches == 1`` (the update must run once per step, not
+    once per accumulation slice).
     """
     if fused_optimizer:
         if microbatches != 1:
@@ -174,7 +177,17 @@ def _make_fused_train_step(
     `FusedParam` nodes, `jax.value_and_grad` returns their *applied AdamW
     update* through the cotangent slots (the TN kernel flush under
     "sfc_pallas", the unfused jnp composition under the oracle backends),
-    and only the unrouted leaves run the elementwise optimizer here."""
+    and only the unrouted leaves run the elementwise optimizer here.
+
+    Exact clipping (two-phase flush): the in-kernel flush computes its
+    sum(dW²) token *before* multiplying by the hyper scale, so a scale=1
+    backward yields the true global norm without ever writing dW; with a
+    finite ``clip_norm`` the backward is traced a second time with the
+    exact clip scale and only the routed FusedParam cotangents of that
+    second trace are consumed — unrouted leaves reuse the first pass's raw
+    grads with the scale applied host-side.  Everything the scale cannot
+    reach (forward, NT/dA backward chain) is common-subexpression between
+    the traces."""
     probe_cache: Dict[Any, Any] = {}
 
     def probe_loss(p, b):
@@ -191,59 +204,72 @@ def _make_fused_train_step(
 
     def train_step(params, opt_state, batch):
         step = opt_state["step"] + 1
-        # one-step-delayed clip: this step's routed-grad norms only exist
-        # after the in-kernel update has been applied
-        prev_gnorm = opt_state.get("gnorm")
-        if prev_gnorm is None and math.isfinite(opt_cfg.clip_norm):
-            raise ValueError(
-                "fused_optimizer clips by the previous step's global norm, "
-                "carried in opt_state['gnorm'] — initialize with "
-                "adamw_init(params, with_gnorm=True), or set "
-                "clip_norm=float('inf') to run without clipping"
-            )
-        scale = (
-            clip_scale(opt_cfg, prev_gnorm)
-            if prev_gnorm is not None
-            else jnp.float32(1.0)
-        )
-        hyper = pack_adamw_hyper(opt_cfg, step, scale)
-
         key = jax.tree_util.tree_structure(params)
         if key not in probe_cache:
             probe_cache[key] = probe_routed(
                 probe_loss, params, batch, fused_filter=fused_filter
             )
         routed = probe_cache[key]
-        wrapped = wrap_routed(
-            params, opt_state["master"], opt_state["mu"], opt_state["nu"],
-            hyper, routed,
-        )
 
-        loss, cots = jax.value_and_grad(loss_fn)(wrapped, batch)
+        def backward(scale):
+            hyper = pack_adamw_hyper(opt_cfg, step, scale)
+            wrapped = wrap_routed(
+                params, opt_state["master"], opt_state["mu"],
+                opt_state["nu"], hyper, routed,
+            )
+            return jax.value_and_grad(loss_fn)(wrapped, batch)
+
+        # phase 1 — norm pass at scale=1: the flush computes each token as
+        # sum(dW^2) *before* applying the hyper scale, so these cotangents
+        # carry the raw global-norm pieces (routed: token; unrouted: the
+        # raw grad) without dW ever reaching HBM
+        loss, cots = backward(jnp.float32(1.0))
 
         is_fp = lambda x: isinstance(x, FusedParam)
+        flat_c = lambda c: jax.tree_util.tree_flatten(c, is_leaf=is_fp)[0]
+        c_flat = flat_c(cots)
+        sq_total = jnp.float32(0.0)
+        for c in c_flat:
+            if isinstance(c, FusedParam):
+                sq_total = sq_total + jnp.sum(c.token)
+            else:
+                sq_total = sq_total + jnp.sum(
+                    jnp.square(c.astype(jnp.float32))
+                )
+        gnorm = jnp.sqrt(sq_total)
+
+        if math.isfinite(opt_cfg.clip_norm):
+            # phase 2 — update pass with the exact clip scale.  Only the
+            # TN update flushes differ from phase 1 (the scale is a
+            # late-bound scalar in the hyper vector); the forward and the
+            # NT/dA chain are identical launches and CSE away under jit.
+            scale = clip_scale(opt_cfg, gnorm)
+            _, cots_upd = backward(scale)
+            u_flat = flat_c(cots_upd)
+        else:
+            scale = jnp.float32(1.0)
+            u_flat = c_flat
+
         p_flat, pdef = jax.tree_util.tree_flatten(params)
-        c_flat = jax.tree_util.tree_flatten(cots, is_leaf=is_fp)[0]
         mst_flat = jax.tree.leaves(opt_state["master"])
         mu_flat = jax.tree.leaves(opt_state["mu"])
         nu_flat = jax.tree.leaves(opt_state["nu"])
 
         lr, b1c, b2c = adamw_scalars(opt_cfg, step)
         new_p, new_mst, new_mu, new_nu = [], [], [], []
-        sq_total = jnp.float32(0.0)
-        for p, c, mst, m, v in zip(p_flat, c_flat, mst_flat, mu_flat, nu_flat):
-            if isinstance(c, FusedParam):
-                # the cotangents ARE the applied update (+ sum(dW^2) norms)
-                new_p.append(c.w)
-                new_mst.append(c.master)
-                new_mu.append(c.mu)
-                new_nu.append(c.nu)
-                sq_total = sq_total + jnp.sum(c.token)
+        for p, g, u, mst, m, v in zip(
+            p_flat, c_flat, u_flat, mst_flat, mu_flat, nu_flat
+        ):
+            if isinstance(u, FusedParam):
+                # the update-pass cotangents ARE the applied (exactly
+                # clipped) update
+                new_p.append(u.w)
+                new_mst.append(u.master)
+                new_mu.append(u.mu)
+                new_nu.append(u.nu)
             else:
-                g = c
-                sq_total = sq_total + jnp.sum(
-                    jnp.square(g.astype(jnp.float32))
-                )
+                # unrouted leaves need no second backward: phase 1's raw
+                # grad plus the exact scale, applied host-side
                 mu_n, nu_n, mst_n = adamw_leaf_update(
                     g, m, v, mst,
                     lr=lr, b1=opt_cfg.b1, b2=opt_cfg.b2, eps=opt_cfg.eps,
@@ -255,7 +281,6 @@ def _make_fused_train_step(
                 new_mu.append(mu_n)
                 new_nu.append(nu_n)
 
-        gnorm = jnp.sqrt(sq_total)
         unflat = lambda leaves: jax.tree_util.tree_unflatten(pdef, leaves)
         new_state = {
             "step": step,
@@ -263,7 +288,9 @@ def _make_fused_train_step(
             "nu": unflat(new_nu),
             "master": unflat(new_mst),
         }
-        if prev_gnorm is not None:
+        if "gnorm" in opt_state:
+            # legacy states carry the norm; keep the pytree structure
+            # stable (the value is now purely informational)
             new_state["gnorm"] = gnorm
         metrics = {
             "loss": loss,

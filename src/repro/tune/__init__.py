@@ -1,29 +1,56 @@
-"""Empirical knob tuning for SFC-CA GEMM (measured, cached, persistent).
+"""Empirical knob tuning for SFC-CA GEMM (calibrated, cached, persistent).
 
-`tune_gemm` sweeps candidates seeded by the analytical model and persists
-the winner; `lookup_knobs` is the measurement-free cache consult used by
+`calibrate` fits per-device platform constants from a short measured
+micro-sweep (once per device kind, persisted in the knob cache);
+`tune_gemm` then ranks candidates with the calibrated model and
+wall-clocks only the top few to confirm (``strategy="predict"``, the
+default — ``strategy="exhaustive"`` keeps the v1 measure-everything
+sweep).  `lookup_knobs` is the measurement-free cache consult used by
 `repro.kernels.ops.sfc_matmul`.
 """
 
-from repro.tune.cache import KnobCache, Knobs, default_cache_path, shape_bucket
+from repro.tune.cache import (
+    KnobCache,
+    Knobs,
+    default_cache_path,
+    detect_device_kind,
+    shape_bucket,
+)
+from repro.tune.calibrate import (
+    PlatformConstants,
+    calibrate,
+    calibrated_hardware,
+    fit_constants,
+    load_platform_constants,
+    resolve_hardware_model,
+)
 from repro.tune.tuner import (
     TUNE_OPS,
     candidate_knobs,
     default_cache,
     lookup_knobs,
     measure_candidate,
+    predict_candidate,
     tune_gemm,
 )
 
 __all__ = [
     "KnobCache",
     "Knobs",
+    "PlatformConstants",
     "TUNE_OPS",
+    "calibrate",
+    "calibrated_hardware",
     "candidate_knobs",
     "default_cache",
     "default_cache_path",
+    "detect_device_kind",
+    "fit_constants",
+    "load_platform_constants",
     "lookup_knobs",
     "measure_candidate",
+    "predict_candidate",
+    "resolve_hardware_model",
     "shape_bucket",
     "tune_gemm",
 ]

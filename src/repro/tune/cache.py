@@ -1,13 +1,25 @@
 """Persistent knob cache for the empirical SFC-GEMM tuner.
 
-Winners are stored in a JSON file keyed by ``(shape-bucket, dtype, backend)``
-where the shape bucket rounds (M, N, K) up to the next power of two — the
-knob landscape is smooth on a log grid (paper §III-C: the NN predictor works
-in log-coordinates), so one measurement serves every shape in its bucket.
+Winners are stored in a JSON file keyed by ``(shape-bucket, dtype, backend,
+device-kind)`` where the shape bucket rounds (M, N, K) up to the next power
+of two — the knob landscape is smooth on a log grid (paper §III-C: the NN
+predictor works in log-coordinates), so one measurement serves every shape
+in its bucket.  The device kind (``jax.devices()[0].device_kind``) is part
+of the key because two accelerator generations sharing ``backend="tpu"``
+(or two CPU hosts) have different knob landscapes; entries written before
+device keying existed are still honoured through a legacy-key read
+fallback, so existing cache files stay valid.
 
-The file layout is a flat ``{key: knob-dict}`` object so it diffs cleanly
-and can be checked in / shipped with a model. Writes are atomic
-(tmp + rename) so concurrent benchmark processes can share one cache file.
+The same file also persists the *calibrated platform constants*
+(`repro.tune.calibrate.PlatformConstants`) under ``__platform__`` keys —
+one set per (backend, device kind) — so a fleet of replicas calibrates
+once and every later process predicts from the fitted model.
+
+The file layout is a flat ``{key: dict}`` object so it diffs cleanly and
+can be checked in / shipped with a model.  Writes are atomic
+(tmp + rename) and the read-merge-replace critical section runs under an
+``fcntl`` advisory lock (sidecar ``<path>.lock`` file), so concurrent
+tuner processes never lose the slower writer's entries.
 """
 
 from __future__ import annotations
@@ -19,7 +31,18 @@ import tempfile
 from pathlib import Path
 from typing import Dict, Optional, Tuple
 
-__all__ = ["Knobs", "KnobCache", "shape_bucket", "default_cache_path"]
+try:  # unix-only; the lock degrades to best-effort elsewhere
+    import fcntl
+except ImportError:  # pragma: no cover - non-posix platform
+    fcntl = None
+
+__all__ = [
+    "Knobs",
+    "KnobCache",
+    "shape_bucket",
+    "default_cache_path",
+    "detect_device_kind",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -27,8 +50,10 @@ class Knobs:
     """One winning SFC-GEMM configuration.
 
     ``source`` records provenance: "analytical" (model-picked seed),
-    "measured" (won an empirical sweep), or "cached" (read back from disk).
-    ``time_s`` is the measured/modeled time that made it the winner.
+    "measured" (won an empirical sweep), "predicted" (ranked first by the
+    calibrated model when every confirmation measurement failed), or
+    "cached" (read back from disk).  ``time_s`` is the measured/modeled
+    time that made it the winner.
     """
 
     bm: int
@@ -69,23 +94,70 @@ def default_cache_path() -> str:
     return str(Path.home() / ".cache" / "repro" / "sfc_knobs.json")
 
 
-class KnobCache:
-    """JSON-backed ``(shape-bucket, dtype, backend) -> Knobs`` map."""
+_DEVICE_KIND: Optional[str] = None
 
-    def __init__(self, path: Optional[str] = None):
+
+def detect_device_kind() -> str:
+    """Normalized ``jax.devices()[0].device_kind`` ("" when unavailable).
+
+    Cached process-wide: the device set is fixed for a process lifetime and
+    ``jax.devices()`` initializes the backend."""
+    global _DEVICE_KIND
+    if _DEVICE_KIND is None:
+        try:
+            import jax
+
+            kind = jax.devices()[0].device_kind
+            _DEVICE_KIND = str(kind).strip().replace(" ", "_").lower()
+        except Exception:
+            _DEVICE_KIND = ""
+    return _DEVICE_KIND
+
+
+class KnobCache:
+    """JSON-backed ``(shape-bucket, dtype, backend, device) -> Knobs`` map.
+
+    ``device`` defaults to the detected device kind; pass ``device=""`` to
+    force legacy (device-less) keys."""
+
+    def __init__(self, path: Optional[str] = None, device: Optional[str] = None):
         self.path = str(path) if path is not None else default_cache_path()
+        self._device = device
         self._entries: Optional[Dict[str, Dict]] = None
 
+    @property
+    def device(self) -> str:
+        if self._device is None:
+            self._device = detect_device_kind()
+        return self._device
+
     @staticmethod
-    def key(m: int, n: int, k: int, dtype, backend: str, op: str = "gemm") -> str:
+    def key(
+        m: int,
+        n: int,
+        k: int,
+        dtype,
+        backend: str,
+        op: str = "gemm",
+        device: str = "",
+    ) -> str:
         bm_, bn_, bk_ = shape_bucket(m, n, k)
         import numpy as np
 
         base = f"{bm_}x{bn_}x{bk_}|{np.dtype(dtype).name}|{backend}"
+        if device:
+            # device-kind keying: two TPU generations (or CPU hosts) that
+            # share backend="tpu"/"cpu" must not read each other's winners
+            base = f"{base}@{device}"
         # fused-op namespace: the dual-B GLU kernel has its own knob
         # landscape; plain "gemm" keeps the legacy key so existing cache
         # files stay valid
         return base if op == "gemm" else f"{base}|{op}"
+
+    @staticmethod
+    def platform_key(backend: str, device: str = "") -> str:
+        """Key of the calibrated platform-constants entry for a device."""
+        return f"__platform__|{backend}@{device}" if device else f"__platform__|{backend}"
 
     # ---------------- storage ----------------
 
@@ -98,40 +170,70 @@ class KnobCache:
                 self._entries = {}
         return self._entries
 
+    def _locked(self):
+        """Advisory-lock context for the read-merge-replace critical
+        section.  Rename alone gives atomicity, not isolation: two writers
+        that both ``_load`` before either renames would each merge against
+        the *pre-update* file and the slower rename would drop the faster
+        writer's entries.  The sidecar ``.lock`` file serializes them."""
+        import contextlib
+
+        if fcntl is None:  # pragma: no cover - non-posix platform
+            return contextlib.nullcontext()
+
+        @contextlib.contextmanager
+        def hold():
+            lf = open(self.path + ".lock", "a")
+            try:
+                fcntl.flock(lf, fcntl.LOCK_EX)
+                yield
+            finally:
+                try:
+                    fcntl.flock(lf, fcntl.LOCK_UN)
+                finally:
+                    lf.close()
+
+        return hold()
+
     def _save(self) -> None:
-        # merge the current file contents under our entries first: another
-        # process may have persisted winners since our _load, and a plain
-        # rewrite of our snapshot would silently drop them (rename gives
-        # atomicity, not isolation)
-        entries = dict(self._entries or {})
-        try:
-            with open(self.path) as f:
-                on_disk = dict(json.load(f))
-            on_disk.update(entries)
-            entries = on_disk
-        except (OSError, ValueError):
-            pass
-        self._entries = entries
         d = os.path.dirname(self.path) or "."
         os.makedirs(d, exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=d, suffix=".json.tmp")
-        try:
-            with os.fdopen(fd, "w") as f:
-                json.dump(entries, f, indent=1, sort_keys=True)
-            os.replace(tmp, self.path)
-        except BaseException:
+        with self._locked():
+            # merge the current file contents under our entries: another
+            # process may have persisted winners since our _load, and a
+            # plain rewrite of our snapshot would silently drop them
+            entries = dict(self._entries or {})
             try:
-                os.unlink(tmp)
-            except OSError:
+                with open(self.path) as f:
+                    on_disk = dict(json.load(f))
+                on_disk.update(entries)
+                entries = on_disk
+            except (OSError, ValueError):
                 pass
-            raise
+            self._entries = entries
+            fd, tmp = tempfile.mkstemp(dir=d, suffix=".json.tmp")
+            try:
+                with os.fdopen(fd, "w") as f:
+                    json.dump(entries, f, indent=1, sort_keys=True)
+                os.replace(tmp, self.path)
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
 
     # ---------------- API ----------------
 
     def get(
         self, m: int, n: int, k: int, dtype, backend: str, op: str = "gemm"
     ) -> Optional[Knobs]:
-        d = self._load().get(self.key(m, n, k, dtype, backend, op))
+        entries = self._load()
+        d = entries.get(self.key(m, n, k, dtype, backend, op, self.device))
+        if d is None and self.device:
+            # legacy fallback: entries written before device keying (or on
+            # a host where detection failed) stay readable
+            d = entries.get(self.key(m, n, k, dtype, backend, op))
         if d is None:
             return None
         return dataclasses.replace(Knobs.from_dict(d), source="cached")
@@ -140,7 +242,22 @@ class KnobCache:
         self, m: int, n: int, k: int, dtype, backend: str, knobs: Knobs,
         op: str = "gemm",
     ) -> None:
-        self._load()[self.key(m, n, k, dtype, backend, op)] = knobs.as_dict()
+        self._load()[
+            self.key(m, n, k, dtype, backend, op, self.device)
+        ] = knobs.as_dict()
+        self._save()
+
+    def get_platform(self, backend: str) -> Optional[Dict]:
+        """Raw persisted platform-constants dict for this device (legacy
+        device-less entry as fallback), or None."""
+        entries = self._load()
+        d = entries.get(self.platform_key(backend, self.device))
+        if d is None and self.device:
+            d = entries.get(self.platform_key(backend))
+        return dict(d) if d is not None else None
+
+    def put_platform(self, backend: str, constants: Dict) -> None:
+        self._load()[self.platform_key(backend, self.device)] = dict(constants)
         self._save()
 
     def clear(self) -> None:

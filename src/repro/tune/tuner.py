@@ -6,32 +6,44 @@ still a model; the paper's headline autotuner *measures*.  This tuner:
   1. seeds a candidate set around the analytical pick — (bm, bn) from the
      MXU-alignment rule and its ×2 / ÷2 neighbours, (k_layers,
      k_block_factor) around the capacity heuristic;
-  2. scores every candidate with a backend-appropriate measurement:
-     wall-clock of the real Pallas kernel on TPU, else the loop-aware HLO
-     cost model (`roofline.hlo_cost.module_cost` over the interpret-mode
-     lowering) weighted by the γ/β hardware model, falling back to the exact
-     BRGEMM-taxonomy simulator when the HLO walk yields nothing;
+  2. ranks every candidate with the *calibrated* performance model
+     (`repro.tune.calibrate` fits the platform constants once per device;
+     `predict_candidate` scores a knob tuple under the fitted model) and
+     measures only the top few wall-clock to confirm — the default
+     ``strategy="predict"``.  ``strategy="exhaustive"`` keeps the v1
+     measure-everything sweep for A/B.  Measurements are
+     backend-appropriate: wall-clock of the real Pallas kernel on TPU,
+     else the loop-aware HLO cost model (`roofline.hlo_cost.module_cost`
+     over the interpret-mode lowering) weighted by the γ/β hardware model,
+     falling back to the exact BRGEMM-taxonomy simulator when the HLO walk
+     yields nothing;
   3. persists the winner in a `KnobCache` keyed by (shape-bucket, dtype,
-     backend) — a later `tune_gemm` (or `sfc_matmul` cache consult) for any
-     shape in the bucket returns it without re-measuring.
+     backend, device kind) — a later `tune_gemm` (or `sfc_matmul` cache
+     consult) for any shape in the bucket returns it without re-measuring.
 """
 
 from __future__ import annotations
 
 import functools
 import time as _time
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.perf_model import TPU_V5E, choose_knobs_analytical, simulate_gemm
-from repro.tune.cache import KnobCache, Knobs
+from repro.core.perf_model import (
+    TPU_V5E,
+    HardwareModel,
+    choose_knobs_analytical,
+    simulate_gemm,
+)
+from repro.tune.cache import KnobCache, Knobs, shape_bucket
 
 __all__ = [
     "candidate_knobs",
     "default_cache",
     "lookup_knobs",
     "measure_candidate",
+    "predict_candidate",
     "tune_gemm",
 ]
 
@@ -305,8 +317,18 @@ def _measure_hlo_cost(m, n, k, dtype, knobs: Knobs, *, op: str = "gemm") -> floa
     return max(cost.flops * TPU_V5E.gamma, cost.bytes * TPU_V5E.beta)
 
 
-def _measure_simulated(m, n, k, dtype, knobs: Knobs, *, op: str = "gemm") -> float:
-    """Exact BRGEMM-taxonomy simulator fallback (always available)."""
+def _simulate_candidate(
+    m, n, k, dtype, knobs: Knobs, *, op: str = "gemm",
+    hw: HardwareModel = TPU_V5E,
+) -> Dict[str, float]:
+    """Exact BRGEMM-taxonomy simulation of one candidate on one device.
+
+    Returns ``time_s`` plus the calibration features of the prediction —
+    ``n_flushes`` (accumulator drains: output tiles x K chunks x layers),
+    ``flush_bytes`` (per-step working set x every step after the first)
+    and ``reuse_deficit_bytes`` (panel reuse the census credits that a
+    reuse-free streamer would re-fetch) — so `tune.calibrate` fits exactly
+    what this path later predicts with."""
     from repro.core.perf_model import optimizer_update_bytes
 
     dtype_bytes = np.dtype(dtype).itemsize
@@ -317,31 +339,47 @@ def _measure_simulated(m, n, k, dtype, knobs: Knobs, *, op: str = "gemm") -> flo
         )
 
         if op == "attn_decode":
-            return float(
-                simulate_decode_attention(
-                    1, max(m, 1), 1, n, k, dtype_bytes=dtype_bytes
-                )["time_s"]
+            r = simulate_decode_attention(
+                1, max(m, 1), 1, n, k, hw=hw, dtype_bytes=dtype_bytes
             )
-        r = simulate_flash_attention(
-            1, 1, m, n, k,
-            q_chunk=min(knobs.bm, m), k_chunk=min(knobs.bn, n),
-            causal=True, phase="bwd" if op == "attn_bwd" else "fwd",
-            dtype_bytes=dtype_bytes,
-        )
-        return float(r["time_s"])
+        else:
+            r = simulate_flash_attention(
+                1, 1, m, n, k,
+                q_chunk=min(knobs.bm, m), k_chunk=min(knobs.bn, n),
+                causal=True, phase="bwd" if op == "attn_bwd" else "fwd",
+                hw=hw, dtype_bytes=dtype_bytes,
+            )
+        return {
+            "time_s": float(r["time_s"]),
+            "n_flushes": 0.0,
+            "flush_bytes": 0.0,
+            "reuse_deficit_bytes": 0.0,
+        }
     mp = ((m + knobs.bm - 1) // knobs.bm) * knobs.bm
     np_ = ((n + knobs.bn - 1) // knobs.bn) * knobs.bn
     dual = op in ("glu", "nt_dual", "tn_dual", "tn_update_dual")
+    # one worker team per K layer, serialized below: a single device runs
+    # the layer teams back to back.  (n_workers=1 with k_layers>1 is not
+    # decomposable — it used to raise here, silently dropping every
+    # k_layers>1 candidate whenever the simulator was the scoring backend.)
     r = simulate_gemm(
         mp, np_, max(k, 1),
-        n_workers=1,
+        n_workers=knobs.k_layers,
         k_layers=knobs.k_layers,
         k_block_factor=knobs.k_block_factor,
         bm=knobs.bm, bn=knobs.bn,
-        hw=TPU_V5E, dtype_bytes=dtype_bytes,
+        hw=hw, dtype_bytes=dtype_bytes,
         n_b_mats=2 if dual else 1,
     )
-    t = float(r["time_s"])
+    # each extra serialized layer repeats the traversal, its drains, and —
+    # because the layers share one launch — its first step is no longer
+    # the cheap one, so it pays drain_byte_s for all n_drains steps
+    # (drain_time_s covers n_drains - 1; + drain_step_bytes tops it up).
+    t = float(r["time_s"]) + (knobs.k_layers - 1) * (
+        float(r["gemm_time_s"]) + float(r["flush_time_s"])
+        + float(r["reuse_time_s"]) + float(r["drain_time_s"])
+        + hw.drain_byte_s * float(r["drain_step_bytes"])
+    )
     if op.startswith("tn_update"):
         # the fused flush streams the resident optimizer state tiles too
         # (knob-independent, but it keeps update scores comparable to the
@@ -349,8 +387,42 @@ def _measure_simulated(m, n, k, dtype, knobs: Knobs, *, op: str = "gemm") -> flo
         sets = 2 if dual else 1
         t += sets * optimizer_update_bytes(
             mp, np_, fused=True, param_bytes=dtype_bytes
-        ) * TPU_V5E.beta
-    return t
+        ) * hw.beta
+    tiles = (mp // knobs.bm) * (np_ // knobs.bn)
+    n_flushes = float(tiles * knobs.k_layers * knobs.k_block_factor)
+    return {
+        "time_s": t,
+        "n_flushes": n_flushes,
+        "flush_bytes": max(0.0, n_flushes - 1.0)
+        * float(r["drain_step_bytes"]),
+        "reuse_deficit_bytes": knobs.k_layers
+        * float(r["reuse_deficit_bytes"]),
+    }
+
+
+def _measure_simulated(
+    m, n, k, dtype, knobs: Knobs, *, op: str = "gemm",
+    hw: HardwareModel = TPU_V5E,
+) -> float:
+    """Exact BRGEMM-taxonomy simulator fallback (always available).  ``hw``
+    selects the hardware model — the datasheet base by default, the
+    calibrated per-device model on the tuner's prediction path."""
+    return _simulate_candidate(m, n, k, dtype, knobs, op=op, hw=hw)["time_s"]
+
+
+def predict_candidate(
+    m: int, n: int, k: int, dtype, knobs: Knobs, *, op: str = "gemm",
+    hw: Optional[HardwareModel] = None,
+) -> float:
+    """Modeled seconds for one candidate under the calibrated performance
+    model (no kernel runs, no compiles — pure host-side simulation).  When
+    ``hw`` is omitted the persisted per-device calibration is loaded
+    (datasheet base if this device was never calibrated)."""
+    if hw is None:
+        from repro.tune.calibrate import resolve_hardware_model
+
+        hw = resolve_hardware_model()
+    return _measure_simulated(m, n, k, dtype, knobs, op=op, hw=hw)
 
 
 def measure_candidate(
@@ -385,20 +457,38 @@ def tune_gemm(
     max_candidates: int = 12,
     force: bool = False,
     op: str = "gemm",
+    strategy: str = "predict",
+    confirm_top: int = 2,
+    report: Optional[List[Dict]] = None,
 ) -> Knobs:
     """Tune (or fetch) the knobs for one GEMM shape bucket.
 
     A cache hit returns immediately without any measurement (unless
-    ``force``); a miss sweeps `candidate_knobs` with ``measure_fn``
-    (default: `measure_candidate`) and persists the winner.  ``op`` selects
-    the tuned kernel variant — "gemm" (default) or the fused dual-B "glu" —
-    each with its own cache namespace.
+    ``force``).  On a miss, ``strategy`` picks the sweep:
+
+    - ``"predict"`` (default, tuner v2): rank every candidate with the
+      calibrated performance model (`predict_candidate` — host-side, no
+      kernel runs), then measure only the ``confirm_top`` best-ranked
+      candidates wall-clock to confirm.  ``confirm_top=0`` skips
+      measurement entirely and trusts the ranking (winner source
+      "predicted").
+    - ``"exhaustive"`` (tuner v1, kept for A/B): measure every candidate.
+
+    ``op`` selects the tuned kernel variant — "gemm" (default), the fused
+    dual-B "glu", the backward/update/attention namespaces — each with its
+    own cache namespace.  When ``report`` is a list, one dict per measured
+    candidate is appended (op, bucket, knobs, predicted_s, measured_s) so
+    callers can aggregate predicted-vs-measured error.
     """
     if op not in TUNE_OPS:
         raise ValueError(
             f"unknown tune namespace {op!r}; pick from {TUNE_OPS} — a typo "
             "here would measure the plain forward GEMM and persist a "
             "mis-keyed winner"
+        )
+    if strategy not in ("predict", "exhaustive"):
+        raise ValueError(
+            f"unknown strategy {strategy!r}; pick 'predict' or 'exhaustive'"
         )
     cache = cache if cache is not None else default_cache()
     backend = _backend_name()
@@ -432,23 +522,60 @@ def tune_gemm(
                 )
             measure = functools.partial(measure_fn, op=op)
     dtype_bytes = np.dtype(dtype).itemsize
+    cands = candidate_knobs(m, n, k, dtype_bytes=dtype_bytes,
+                            max_candidates=max_candidates)
+
+    predictions: Dict[int, float] = {}
+    to_measure: Sequence[int] = range(len(cands))
+    if strategy == "predict" or report is not None:
+        from repro.tune.calibrate import resolve_hardware_model
+
+        hw = resolve_hardware_model(cache)
+        for i, cand in enumerate(cands):
+            try:
+                predictions[i] = predict_candidate(
+                    m, n, k, dtype, cand, op=op, hw=hw
+                )
+            except Exception:
+                continue
+    if strategy == "predict" and predictions:
+        ranked = sorted(predictions, key=predictions.get)
+        to_measure = ranked[: max(0, confirm_top)]
+
     best: Optional[Knobs] = None
-    for cand in candidate_knobs(m, n, k, dtype_bytes=dtype_bytes,
-                                max_candidates=max_candidates):
+    for i in to_measure:
+        cand = cands[i]
         try:
             t = float(measure(m, n, k, dtype, cand))
         except Exception:
             continue
+        if report is not None:
+            report.append({
+                "op": op,
+                "bucket": "x".join(map(str, shape_bucket(m, n, k))),
+                "knobs": (cand.bm, cand.bn, cand.k_layers,
+                          cand.k_block_factor),
+                "predicted_s": predictions.get(i),
+                "measured_s": t,
+            })
         if best is None or t < best.time_s:
             best = Knobs(
                 bm=cand.bm, bn=cand.bn,
                 k_layers=cand.k_layers, k_block_factor=cand.k_block_factor,
                 source="measured", time_s=t,
             )
+    if best is None and strategy == "predict" and predictions and confirm_top == 0:
+        # pure-predict mode: trust the calibrated ranking outright
+        i = min(predictions, key=predictions.get)
+        cand = cands[i]
+        best = Knobs(
+            bm=cand.bm, bn=cand.bn,
+            k_layers=cand.k_layers, k_block_factor=cand.k_block_factor,
+            source="predicted", time_s=predictions[i],
+        )
     if best is None:
         # every measurement failed: fall back to the analytical seed
-        cand = candidate_knobs(m, n, k, dtype_bytes=dtype_bytes,
-                               max_candidates=1)[0]
+        cand = cands[0]
         best = Knobs(
             bm=cand.bm, bn=cand.bn,
             k_layers=cand.k_layers, k_block_factor=cand.k_block_factor,

@@ -129,3 +129,58 @@ def test_sfc_matmul_consults_tune_cache(tmp_path, monkeypatch):
 def test_default_cache_path_env(monkeypatch):
     monkeypatch.setenv("REPRO_SFC_TUNE_CACHE", "/tmp/some/cache.json")
     assert default_cache_path() == "/tmp/some/cache.json"
+
+
+def test_device_keyed_lookup_with_legacy_fallback(tmp_path):
+    """Entries written before device keying are still honoured, but a
+    device-keyed write wins for its own device kind only."""
+    path = str(tmp_path / "dev.json")
+    legacy = KnobCache(path, device="")  # pre-device-keying writer
+    legacy.put(64, 64, 64, np.float32, "cpu",
+               Knobs(16, 16, 1, 1, source="measured"))
+
+    v5e = KnobCache(path, device="tpu_v5e")
+    hit = v5e.get(64, 64, 64, np.float32, "cpu")
+    assert hit is not None and hit.bm == 16  # legacy fallback
+
+    v5e.put(64, 64, 64, np.float32, "cpu",
+            Knobs(32, 32, 1, 1, source="measured"))
+    assert v5e.get(64, 64, 64, np.float32, "cpu").bm == 32
+    # the legacy entry is untouched, and another device kind sees it —
+    # not the v5e winner
+    assert KnobCache(path, device="").get(64, 64, 64, np.float32, "cpu").bm == 16
+    assert KnobCache(path, device="tpu_v4").get(64, 64, 64, np.float32, "cpu").bm == 16
+
+
+def test_concurrent_writers_merge_not_clobber(tmp_path):
+    """Parallel processes writing disjoint entries to one cache file must
+    all survive (the advisory-locked read-merge-replace in `_save`)."""
+    import os
+    import subprocess
+    import sys
+
+    path = str(tmp_path / "shared.json")
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    script = (
+        "import sys, numpy as np\n"
+        "from repro.tune import KnobCache, Knobs\n"
+        "wid = int(sys.argv[1]); path = sys.argv[2]\n"
+        "c = KnobCache(path, device='test_dev')\n"
+        "for j in range(5):\n"
+        "    c.put(64, 64, 64, np.float32, 'cpu',\n"
+        "          Knobs(16, 16, 1, 1, source='measured'),\n"
+        "          op=f'op{wid}_{j}')\n"
+    )
+    procs = [
+        subprocess.Popen([sys.executable, "-c", script, str(i), path], env=env)
+        for i in range(4)
+    ]
+    for p in procs:
+        assert p.wait(timeout=120) == 0
+    final = KnobCache(path, device="test_dev")
+    for i in range(4):
+        for j in range(5):
+            assert final.get(64, 64, 64, np.float32, "cpu", op=f"op{i}_{j}") \
+                is not None, f"lost op{i}_{j}"
