@@ -27,6 +27,14 @@ namespaces and `ServingEngine.warmup` fills them from its tune table.
 
 Like the GEMM backends, the kernels are single-device primitives: inside
 pjit they apply per-shard (heads/batch sharded, sequence unsharded).
+
+**Self-healing**: the "sfc" kernel launches run through
+`repro.robust.run_with_fallback` under the ``attn_fwd`` / ``attn_bwd`` /
+``attn_decode`` namespaces, degrading to a pure-jnp reference (same
+1/sqrt(D) scale, start-aligned causal mask and padding masks as the
+kernels; the backward oracle is `jax.vjp` of that reference) on
+classified failures.  `degradation_report()` summarises the attention
+namespaces.
 """
 
 from __future__ import annotations
@@ -39,17 +47,26 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 __all__ = [
     "ATTN_IMPLS",
     "attention_backend",
     "current_attention_backend",
+    "degradation_report",
     "resolve_attn_impl",
     "resolve_attn_knobs",
     "flash_attention",
     "decode_attention",
     "default_interpret",
 ]
+
+
+def degradation_report() -> dict:
+    """Health-registry summary filtered to the attention namespaces."""
+    from repro.robust import degradation_report as _report
+
+    return _report(namespaces=("attn",))
 
 ATTN_IMPLS = ("blockwise", "flash_pallas", "sfc")
 
@@ -142,6 +159,53 @@ def _pad_seq(x: jax.Array, seq_p: int) -> jax.Array:
     return x
 
 
+def _attn_shape_key(sq: int, sk: int, d: int, dtype) -> str:
+    """Quarantine shape-class for the attention namespaces."""
+    return (
+        f"{_pow2_ceil(sq)}x{_pow2_ceil(sk)}x{_pow2_ceil(d)}"
+        f"|{jnp.dtype(dtype).name}"
+    )
+
+
+def _reference_attention(q, k, v, *, causal: bool, seq_q: int, seq_k: int):
+    """Differentiable jnp rung: the kernels' exact semantics in einsum form.
+
+    Same 1/sqrt(D) scale, start-aligned causal mask (query i attends
+    k[0..i]) and (kpos < seq_k) & (qpos < seq_q) padding mask as
+    `kernels.sfc_attention`; f32 softmax on GQA-repeated heads.  Only
+    ever traced on a faulted/quarantined path — it introduces
+    dot_general, which the healthy-path structure gates forbid."""
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    if h != hkv:
+        k = jnp.repeat(k, h // hkv, axis=2)
+        v = jnp.repeat(v, h // hkv, axis=2)
+    scale = 1.0 / float(np.sqrt(d))
+    s = (
+        jnp.einsum(
+            "bqhd,bkhd->bhqk",
+            q.astype(jnp.float32),
+            k.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        * scale
+    )
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = (kpos < seq_k) & (qpos < seq_q)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum(
+        "bhqk,bkhd->bqhd",
+        p,
+        v.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return o.astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # differentiable flash attention (custom VJP over the SFC band kernels)
 # ---------------------------------------------------------------------------
@@ -184,39 +248,62 @@ def _flash_core_fwd(cfg: _FlashCfg, q, k, v):
 
 def _flash_core_bwd(cfg: _FlashCfg, saved, do):
     q, k, v, o, lse = saved
-    from repro.kernels.sfc_attention import (
-        sfc_flash_bwd_dkv,
-        sfc_flash_bwd_dq,
-    )
+    from repro.robust import run_with_fallback
 
-    # the backward resolves its own tune namespace: its panel geometry
-    # (two extra streamed tiles, TN-move contractions) differs from the
-    # forward's, exactly like the GEMM nt/tn split
-    qc, kc = resolve_attn_knobs(
-        cfg.seq_q, cfg.seq_k, q.shape[-1], q.dtype, op="attn_bwd",
-        q_chunk=cfg.q_chunk_hint, k_chunk=cfg.k_chunk_hint,
-    )
-    sq_p = _round_up(q.shape[1], qc)
-    sk_p = _round_up(k.shape[1], kc)
-    qp, dop = _pad_seq(q, sq_p), _pad_seq(do, sq_p)
-    kp, vp = _pad_seq(k, sk_p), _pad_seq(v, sk_p)
-    op_, lsep = _pad_seq(o, sq_p), _pad_seq(lse, sq_p)
+    def kernel():
+        from repro.kernels.sfc_attention import (
+            sfc_flash_bwd_dkv,
+            sfc_flash_bwd_dq,
+        )
 
-    # delta = rowsum(dO ⊙ O): elementwise + reduce, no contraction
-    delta = jnp.sum(
-        dop.astype(jnp.float32) * op_.astype(jnp.float32),
-        axis=-1, keepdims=True,
-    )
-    kw = dict(
-        causal=cfg.causal, seq_q=cfg.seq_q, seq_k=cfg.seq_k,
-        q_chunk=qc, k_chunk=kc, interpret=cfg.interpret,
-    )
-    dq = sfc_flash_bwd_dq(qp, kp, vp, dop, lsep, delta, **kw)
-    dk, dv = sfc_flash_bwd_dkv(qp, kp, vp, dop, lsep, delta, **kw)
-    return (
-        dq[:, : q.shape[1]].astype(q.dtype),
-        dk[:, : k.shape[1]].astype(k.dtype),
-        dv[:, : v.shape[1]].astype(v.dtype),
+        # the backward resolves its own tune namespace: its panel geometry
+        # (two extra streamed tiles, TN-move contractions) differs from the
+        # forward's, exactly like the GEMM nt/tn split
+        qc, kc = resolve_attn_knobs(
+            cfg.seq_q, cfg.seq_k, q.shape[-1], q.dtype, op="attn_bwd",
+            q_chunk=cfg.q_chunk_hint, k_chunk=cfg.k_chunk_hint,
+        )
+        sq_p = _round_up(q.shape[1], qc)
+        sk_p = _round_up(k.shape[1], kc)
+        qp, dop = _pad_seq(q, sq_p), _pad_seq(do, sq_p)
+        kp, vp = _pad_seq(k, sk_p), _pad_seq(v, sk_p)
+        op_, lsep = _pad_seq(o, sq_p), _pad_seq(lse, sq_p)
+
+        # delta = rowsum(dO ⊙ O): elementwise + reduce, no contraction
+        delta = jnp.sum(
+            dop.astype(jnp.float32) * op_.astype(jnp.float32),
+            axis=-1, keepdims=True,
+        )
+        kw = dict(
+            causal=cfg.causal, seq_q=cfg.seq_q, seq_k=cfg.seq_k,
+            q_chunk=qc, k_chunk=kc, interpret=cfg.interpret,
+        )
+        dq = sfc_flash_bwd_dq(qp, kp, vp, dop, lsep, delta, **kw)
+        dk, dv = sfc_flash_bwd_dkv(qp, kp, vp, dop, lsep, delta, **kw)
+        return (
+            dq[:, : q.shape[1]].astype(q.dtype),
+            dk[:, : k.shape[1]].astype(k.dtype),
+            dv[:, : v.shape[1]].astype(v.dtype),
+        )
+
+    def oracle():
+        # recompute-and-differentiate the jnp reference (padded q rows and
+        # masked-out keys get exactly-zero cotangents, like the kernels)
+        def ref(q_, k_, v_):
+            return _reference_attention(
+                q_, k_, v_,
+                causal=cfg.causal, seq_q=cfg.seq_q, seq_k=cfg.seq_k,
+            )
+
+        _, vjp = jax.vjp(ref, q, k, v)
+        return vjp(do.astype(q.dtype))
+
+    return run_with_fallback(
+        "attn_bwd",
+        (("sfc_pallas", kernel), ("xla", oracle)),
+        shape_key=_attn_shape_key(
+            cfg.seq_q, cfg.seq_k, q.shape[-1], q.dtype
+        ),
     )
 
 
@@ -253,8 +340,21 @@ def flash_attention(
         causal=causal, seq_q=s, seq_k=t, q_chunk=qc, k_chunk=kc,
         q_chunk_hint=q_chunk, k_chunk_hint=k_chunk, interpret=interpret,
     )
-    o = _flash_core(
-        cfg, _pad_seq(q, sq_p), _pad_seq(k, sk_p), _pad_seq(v, sk_p)
+    from repro.robust import run_with_fallback
+
+    qp = _pad_seq(q, sq_p)
+    kp, vp = _pad_seq(k, sk_p), _pad_seq(v, sk_p)
+    o = run_with_fallback(
+        "attn_fwd",
+        (
+            ("sfc_pallas", lambda: _flash_core(cfg, qp, kp, vp)),
+            # plain autodiff through the reference — bypasses the custom
+            # VJP, so its backward never touches the Pallas kernels either
+            ("xla", lambda: _reference_attention(
+                qp, kp, vp, causal=causal, seq_q=s, seq_k=t
+            )),
+        ),
+        shape_key=_attn_shape_key(s, t, d, q.dtype),
     )
     return o[:, :s]
 
@@ -301,7 +401,41 @@ def decode_attention(
     qg = q.reshape(b, hkv, groups, d)
     if gp != groups:
         qg = jnp.pad(qg, ((0, 0), (0, 0), (0, gp - groups), (0, 0)))
-    o = sfc_decode_attention_pallas(
-        qg, k, v, valid_len, k_chunk=kc, interpret=interpret
+
+    def oracle():
+        # jnp rung: masked decode over the padded cache, same 1/sqrt(D)
+        # scale and valid_len bound as the kernel's predicated chunk loop
+        scale = 1.0 / float(np.sqrt(d))
+        s_ = (
+            jnp.einsum(
+                "bhgd,bthd->bhgt",
+                qg.astype(jnp.float32),
+                k.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            * scale
+        )
+        live = jnp.arange(k.shape[1])[None, :] < valid_len[:, None]
+        s_ = jnp.where(live[:, None, None, :], s_, -1e30)
+        p = jax.nn.softmax(s_, axis=-1)
+        out = jnp.einsum(
+            "bhgt,bthd->bhgd",
+            p,
+            v.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        return out.astype(q.dtype)
+
+    from repro.robust import run_with_fallback
+
+    o = run_with_fallback(
+        "attn_decode",
+        (
+            ("sfc_pallas", lambda: sfc_decode_attention_pallas(
+                qg, k, v, valid_len, k_chunk=kc, interpret=interpret
+            )),
+            ("xla", oracle),
+        ),
+        shape_key=_attn_shape_key(h, t, d, q.dtype),
     )
     return o[:, :, :groups].reshape(b, 1, h, d)

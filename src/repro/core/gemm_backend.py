@@ -34,6 +34,17 @@ program).  Distribution note: the kernel backends are single-device
 primitives — inside pjit they apply per-shard only when the contraction dim
 is unsharded; the serving/benchmark paths that use them are single-host,
 matching the paper's single-socket case study.
+
+**Self-healing**: under "sfc_pallas" every entry point runs through
+`repro.robust.run_with_fallback` — the fused single-launch kernel first
+(its VMEM plan checked by `ops.ensure_fused_fits`), then the replicated
+``fuse=False`` two-launch form, then the Listing-1 reference, then plain
+XLA.  Classified failures (Mosaic/lowering, RESOURCE_EXHAUSTED / VMEM
+budget, interpret asserts) quarantine the failing (namespace, rung,
+shape-class) in the process health registry and the next rung serves;
+`degradation_report()` summarises what degraded.  The explicit "xla" and
+"sfc_reference" backends bypass the ladder entirely — they *are* its
+bottom rungs.
 """
 
 from __future__ import annotations
@@ -50,11 +61,36 @@ from repro.optim.fused import FusedParam, ProbeParam, current_update_config
 __all__ = [
     "gemm_backend",
     "current_backend",
+    "degradation_report",
     "matmul",
     "glu_matmul",
     "grouped_matmul",
     "grouped_glu_matmul",
 ]
+
+# every ladder namespace this backend owns (forward, fused-update and the
+# backward kernels ops.py routes for it) — the degradation_report filter
+_NAMESPACES = ("gemm", "glu", "grouped", "nt", "tn")
+
+
+def degradation_report() -> dict:
+    """Health-registry summary filtered to the GEMM namespaces.
+
+    Covers the forward ladders ("gemm", "glu", "grouped", "grouped_glu"),
+    the fused-update routes ("*_update") and the backward kernels
+    ("nt"/"tn"/"grouped_nt"/"grouped_tn") — everything `ops` and this
+    module route through the fallback ladder."""
+    from repro.robust import degradation_report as _report
+
+    return _report(namespaces=_NAMESPACES)
+
+
+def _shape_key(m: int, n: int, k: int, dtype) -> str:
+    """Quarantine shape-class: the tune cache's shape bucket + dtype."""
+    from repro.tune.cache import shape_bucket
+
+    bm, bn, bk = shape_bucket(max(m, 1), max(n, 1), max(k, 1))
+    return f"{bm}x{bn}x{bk}|{jnp.dtype(dtype).name}"
 
 _BACKEND: contextvars.ContextVar[str] = contextvars.ContextVar(
     "gemm_backend", default="xla"
@@ -148,11 +184,28 @@ def matmul(
             )
         from repro.kernels.ops import fused_update_matmul
 
-        return fused_update_matmul(
-            x, w.w, w.master, w.mu, w.nu, w.hyper, w.token,
-            bias=bias, activation=activation,
-            backend=_BACKEND.get(),
-            stochastic_round=current_update_config().stochastic_round,
+        backend = _BACKEND.get()
+        sr = current_update_config().stochastic_round
+
+        def _fused(be):
+            return fused_update_matmul(
+                x, w.w, w.master, w.mu, w.nu, w.hyper, w.token,
+                bias=bias, activation=activation,
+                backend=be, stochastic_round=sr,
+            )
+
+        if backend != "sfc_pallas":
+            return _fused(backend)
+        from repro.robust import run_with_fallback
+
+        m = x.shape[-2] if x.ndim >= 2 else 1
+        return run_with_fallback(
+            "gemm_update",
+            (
+                ("sfc_pallas", lambda: _fused("sfc_pallas")),
+                ("xla", lambda: _fused("xla")),
+            ),
+            shape_key=_shape_key(m, w.w.shape[-1], x.shape[-1], x.dtype),
         )
     name = _BACKEND.get()
     if name == "xla" or w.ndim != 2:
@@ -161,24 +214,57 @@ def matmul(
             out_scale=out_scale, residual=residual,
         )
     if name == "sfc_pallas":
-        from repro.kernels.ops import sfc_matmul
+        from repro.kernels.ops import ensure_fused_fits, sfc_matmul
+        from repro.robust import run_with_fallback
 
-        kw = dict(
-            bias=bias, activation=activation,
-            out_scale=out_scale, residual=residual,
-        )
+        x_run, res_run = x, residual
+        post = None
         if x.ndim == 1:
-            if residual is not None:
-                kw["residual"] = residual[None]
-            return sfc_matmul(x[None], w, **kw)[0]
-        if x.ndim > 2 and x.shape[-2] == 1:
+            x_run = x[None]
+            res_run = residual[None] if residual is not None else None
+            post = lambda out: out[0]
+        elif x.ndim > 2 and x.shape[-2] == 1:
             # decode-shaped (B, 1, K): a batched grid would run one task per
             # single-row element — flatten the batch into M instead
+            x_run = x.reshape(-1, x.shape[-1])
             if residual is not None:
-                kw["residual"] = residual.reshape(-1, w.shape[1])
-            out = sfc_matmul(x.reshape(-1, x.shape[-1]), w, **kw)
-            return out.reshape(*x.shape[:-1], w.shape[1])
-        return sfc_matmul(x, w, **kw)
+                res_run = residual.reshape(-1, w.shape[1])
+            post = lambda out: out.reshape(*x.shape[:-1], w.shape[1])
+        m, k, n = x_run.shape[-2], x_run.shape[-1], w.shape[1]
+        kw = dict(
+            bias=bias, activation=activation,
+            out_scale=out_scale, residual=res_run,
+        )
+
+        def fused_rung():
+            ensure_fused_fits(
+                m, n, k, x_run.dtype, has_residual=res_run is not None
+            )
+            return sfc_matmul(x_run, w, fuse=True, **kw)
+
+        def reference_rung():
+            out = _reference_matmul(
+                x_run.reshape(-1, k), w
+            ).reshape(*x_run.shape[:-1], n)
+            return _epilogue(
+                out, bias=bias, activation=activation,
+                out_scale=out_scale, residual=res_run,
+            )
+
+        out = run_with_fallback(
+            "gemm",
+            (
+                ("sfc_pallas", fused_rung),
+                ("replicated", lambda: sfc_matmul(x_run, w, fuse=False, **kw)),
+                ("sfc_reference", reference_rung),
+                ("xla", lambda: _epilogue(
+                    x_run @ w, bias=bias, activation=activation,
+                    out_scale=out_scale, residual=res_run,
+                )),
+            ),
+            shape_key=_shape_key(m, n, k, x_run.dtype),
+        )
+        return post(out) if post is not None else out
     lead = x.shape[:-1]
     k = x.shape[-1]
     out = _reference_matmul(x.reshape(-1, k), w).reshape(*lead, w.shape[1])
@@ -232,14 +318,33 @@ def glu_matmul(
             )
         from repro.kernels.ops import fused_update_glu_matmul
 
-        return fused_update_glu_matmul(
-            x, w_gate.w, w_val.w,
-            (w_gate.master, w_gate.mu, w_gate.nu),
-            (w_val.master, w_val.mu, w_val.nu),
-            w_val.hyper, (w_val.token, w_gate.token),
-            activation=activation, bias=bias, gate_bias=gate_bias,
-            backend=_BACKEND.get(),
-            stochastic_round=current_update_config().stochastic_round,
+        backend = _BACKEND.get()
+        sr = current_update_config().stochastic_round
+
+        def _fused(be):
+            return fused_update_glu_matmul(
+                x, w_gate.w, w_val.w,
+                (w_gate.master, w_gate.mu, w_gate.nu),
+                (w_val.master, w_val.mu, w_val.nu),
+                w_val.hyper, (w_val.token, w_gate.token),
+                activation=activation, bias=bias, gate_bias=gate_bias,
+                backend=be, stochastic_round=sr,
+            )
+
+        if backend != "sfc_pallas":
+            return _fused(backend)
+        from repro.robust import run_with_fallback
+
+        m = x.shape[-2] if x.ndim >= 2 else 1
+        return run_with_fallback(
+            "glu_update",
+            (
+                ("sfc_pallas", lambda: _fused("sfc_pallas")),
+                ("xla", lambda: _fused("xla")),
+            ),
+            shape_key=_shape_key(
+                m, w_val.w.shape[-1], x.shape[-1], x.dtype
+            ),
         )
     name = _BACKEND.get()
     if name == "xla" or w_val.ndim != 2:
@@ -253,22 +358,72 @@ def glu_matmul(
             _act(activation)(g) * h, out_scale=out_scale, residual=residual
         )
     if name == "sfc_pallas":
-        from repro.kernels.ops import sfc_glu_matmul
+        from repro.kernels.ops import ensure_fused_fits, sfc_glu_matmul
+        from repro.robust import run_with_fallback
 
+        x_run, res_run = x, residual
+        post = None
+        if x.ndim == 1:
+            x_run = x[None]
+            res_run = residual[None] if residual is not None else None
+            post = lambda out: out[0]
+        elif x.ndim > 2 and x.shape[-2] == 1:
+            x_run = x.reshape(-1, x.shape[-1])
+            if residual is not None:
+                res_run = residual.reshape(-1, w_val.shape[1])
+            post = lambda out: out.reshape(*x.shape[:-1], w_val.shape[1])
+        m, k, n = x_run.shape[-2], x_run.shape[-1], w_val.shape[1]
         kw = dict(
             activation=activation, bias=bias, gate_bias=gate_bias,
-            out_scale=out_scale, residual=residual,
+            out_scale=out_scale, residual=res_run,
         )
-        if x.ndim == 1:
-            if residual is not None:
-                kw["residual"] = residual[None]
-            return sfc_glu_matmul(x[None], w_gate, w_val, **kw)[0]
-        if x.ndim > 2 and x.shape[-2] == 1:
-            if residual is not None:
-                kw["residual"] = residual.reshape(-1, w_val.shape[1])
-            out = sfc_glu_matmul(x.reshape(-1, x.shape[-1]), w_gate, w_val, **kw)
-            return out.reshape(*x.shape[:-1], w_val.shape[1])
-        return sfc_glu_matmul(x, w_gate, w_val, **kw)
+
+        def fused_rung():
+            ensure_fused_fits(
+                m, n, k, x_run.dtype, glu=True,
+                has_residual=res_run is not None,
+            )
+            return sfc_glu_matmul(x_run, w_gate, w_val, fuse=True, **kw)
+
+        def reference_rung():
+            x2 = x_run.reshape(-1, k)
+            lead = x_run.shape[:-1]
+            g = _reference_matmul(x2, w_gate, op="glu").reshape(*lead, n)
+            h = _reference_matmul(x2, w_val, op="glu").reshape(*lead, n)
+            if gate_bias is not None:
+                g = g + gate_bias
+            if bias is not None:
+                h = h + bias
+            return _epilogue(
+                _act(activation)(g) * h,
+                out_scale=out_scale, residual=res_run,
+            )
+
+        def xla_rung():
+            g = x_run @ w_gate
+            if gate_bias is not None:
+                g = g + gate_bias
+            h = x_run @ w_val
+            if bias is not None:
+                h = h + bias
+            return _epilogue(
+                _act(activation)(g) * h,
+                out_scale=out_scale, residual=res_run,
+            )
+
+        out = run_with_fallback(
+            "glu",
+            (
+                ("sfc_pallas", fused_rung),
+                ("replicated", lambda: sfc_glu_matmul(
+                    x_run, w_gate, w_val, fuse=False, **kw
+                )),
+                ("sfc_reference", reference_rung),
+                ("xla", xla_rung),
+            ),
+            shape_key=_shape_key(m, n, k, x_run.dtype),
+        )
+        return post(out) if post is not None else out
     lead = x.shape[:-1]
     k = x.shape[-1]
     x2 = x.reshape(-1, k)
@@ -329,14 +484,33 @@ def grouped_matmul(
             )
         from repro.kernels.ops import fused_update_grouped_matmul
 
+        backend = _BACKEND.get()
+        sr = current_update_config().stochastic_round
         rows, (g, e, c), restore = _rows_by_expert(x)
-        out = fused_update_grouped_matmul(
-            rows, w.w, w.master, w.mu, w.nu, w.hyper, w.token,
-            group_sizes=(g * c,) * e,
-            bias=bias, activation=activation,
-            backend=_BACKEND.get(),
-            stochastic_round=current_update_config().stochastic_round,
-        )
+
+        def _fused(be):
+            return fused_update_grouped_matmul(
+                rows, w.w, w.master, w.mu, w.nu, w.hyper, w.token,
+                group_sizes=(g * c,) * e,
+                bias=bias, activation=activation,
+                backend=be, stochastic_round=sr,
+            )
+
+        if backend != "sfc_pallas":
+            out = _fused(backend)
+        else:
+            from repro.robust import run_with_fallback
+
+            out = run_with_fallback(
+                "grouped_update",
+                (
+                    ("sfc_pallas", lambda: _fused("sfc_pallas")),
+                    ("xla", lambda: _fused("xla")),
+                ),
+                shape_key=_shape_key(
+                    rows.shape[0], w.w.shape[-1], rows.shape[-1], rows.dtype
+                ),
+            )
         return restore(out, w.w.shape[-1])
     name = _BACKEND.get()
     if name == "xla":
@@ -346,14 +520,8 @@ def grouped_matmul(
         return _epilogue(y, activation=activation, out_scale=out_scale)
     rows, (g, e, c), restore = _rows_by_expert(x)
     n = w.shape[-1]
-    if name == "sfc_pallas":
-        from repro.kernels.ops import sfc_grouped_matmul
 
-        out = sfc_grouped_matmul(
-            rows, w, group_sizes=(g * c,) * e,
-            bias=bias, activation=activation, out_scale=out_scale,
-        )
-    else:
+    def reference_rung():
         parts = []
         for ei in range(e):
             xe = rows[ei * g * c : (ei + 1) * g * c]
@@ -361,9 +529,43 @@ def grouped_matmul(
             if bias is not None:
                 ye = ye + bias[ei]
             parts.append(ye)
-        out = _epilogue(
+        return _epilogue(
             jnp.concatenate(parts), activation=activation, out_scale=out_scale
         )
+
+    if name == "sfc_pallas":
+        from repro.kernels.ops import sfc_grouped_matmul
+        from repro.robust import run_with_fallback
+
+        def pallas_rung():
+            return sfc_grouped_matmul(
+                rows, w, group_sizes=(g * c,) * e,
+                bias=bias, activation=activation, out_scale=out_scale,
+            )
+
+        def xla_rung():
+            parts = []
+            for ei in range(e):
+                ye = rows[ei * g * c : (ei + 1) * g * c] @ w[ei]
+                if bias is not None:
+                    ye = ye + bias[ei]
+                parts.append(ye)
+            return _epilogue(
+                jnp.concatenate(parts),
+                activation=activation, out_scale=out_scale,
+            )
+
+        out = run_with_fallback(
+            "grouped",
+            (
+                ("sfc_pallas", pallas_rung),
+                ("sfc_reference", reference_rung),
+                ("xla", xla_rung),
+            ),
+            shape_key=_shape_key(rows.shape[0], n, rows.shape[-1], rows.dtype),
+        )
+    else:
+        out = reference_rung()
     return restore(out, n)
 
 
@@ -403,17 +605,37 @@ def grouped_glu_matmul(
             )
         from repro.kernels.ops import fused_update_grouped_glu_matmul
 
+        backend = _BACKEND.get()
+        sr = current_update_config().stochastic_round
         rows, (g, e, c), restore = _rows_by_expert(x)
-        out = fused_update_grouped_glu_matmul(
-            rows, w_gate.w, w_val.w,
-            (w_gate.master, w_gate.mu, w_gate.nu),
-            (w_val.master, w_val.mu, w_val.nu),
-            w_val.hyper, (w_val.token, w_gate.token),
-            group_sizes=(g * c,) * e,
-            activation=activation,
-            backend=_BACKEND.get(),
-            stochastic_round=current_update_config().stochastic_round,
-        )
+
+        def _fused(be):
+            return fused_update_grouped_glu_matmul(
+                rows, w_gate.w, w_val.w,
+                (w_gate.master, w_gate.mu, w_gate.nu),
+                (w_val.master, w_val.mu, w_val.nu),
+                w_val.hyper, (w_val.token, w_gate.token),
+                group_sizes=(g * c,) * e,
+                activation=activation,
+                backend=be, stochastic_round=sr,
+            )
+
+        if backend != "sfc_pallas":
+            out = _fused(backend)
+        else:
+            from repro.robust import run_with_fallback
+
+            out = run_with_fallback(
+                "grouped_glu_update",
+                (
+                    ("sfc_pallas", lambda: _fused("sfc_pallas")),
+                    ("xla", lambda: _fused("xla")),
+                ),
+                shape_key=_shape_key(
+                    rows.shape[0], w_val.w.shape[-1],
+                    rows.shape[-1], rows.dtype,
+                ),
+            )
         return restore(out, w_val.w.shape[-1])
     name = _BACKEND.get()
     if name == "xla":
@@ -422,19 +644,42 @@ def grouped_glu_matmul(
         return _epilogue(_act(activation)(g_) * h, out_scale=out_scale)
     rows, (g, e, c), restore = _rows_by_expert(x)
     n = w_val.shape[-1]
-    if name == "sfc_pallas":
-        from repro.kernels.ops import sfc_grouped_glu_matmul
 
-        out = sfc_grouped_glu_matmul(
-            rows, w_gate, w_val, group_sizes=(g * c,) * e,
-            activation=activation, out_scale=out_scale,
-        )
-    else:
+    def reference_rung():
         parts = []
         for ei in range(e):
             xe = rows[ei * g * c : (ei + 1) * g * c]
             ge = _reference_matmul(xe, w_gate[ei], op="glu")
             he = _reference_matmul(xe, w_val[ei], op="glu")
             parts.append(_act(activation)(ge) * he)
-        out = _epilogue(jnp.concatenate(parts), out_scale=out_scale)
+        return _epilogue(jnp.concatenate(parts), out_scale=out_scale)
+
+    if name == "sfc_pallas":
+        from repro.kernels.ops import sfc_grouped_glu_matmul
+        from repro.robust import run_with_fallback
+
+        def pallas_rung():
+            return sfc_grouped_glu_matmul(
+                rows, w_gate, w_val, group_sizes=(g * c,) * e,
+                activation=activation, out_scale=out_scale,
+            )
+
+        def xla_rung():
+            parts = []
+            for ei in range(e):
+                xe = rows[ei * g * c : (ei + 1) * g * c]
+                parts.append(_act(activation)(xe @ w_gate[ei]) * (xe @ w_val[ei]))
+            return _epilogue(jnp.concatenate(parts), out_scale=out_scale)
+
+        out = run_with_fallback(
+            "grouped_glu",
+            (
+                ("sfc_pallas", pallas_rung),
+                ("sfc_reference", reference_rung),
+                ("xla", xla_rung),
+            ),
+            shape_key=_shape_key(rows.shape[0], n, rows.shape[-1], rows.dtype),
+        )
+    else:
+        out = reference_rung()
     return restore(out, n)

@@ -232,6 +232,48 @@ def fused_path_fits_vmem(
     return panels + accs + tiles <= _FUSED_VMEM_BYTES
 
 
+def ensure_fused_fits(
+    m: int,
+    n: int,
+    k: int,
+    dtype,
+    out_dtype=None,
+    *,
+    glu: bool = False,
+    has_residual: bool = False,
+) -> None:
+    """Raise `robust.VmemBudgetError` when the fused plan overflows VMEM.
+
+    The planning check the *fused rung* of the fallback ladder runs
+    before launching: on CPU interpret mode nothing would physically
+    overflow, so raising on the plan is what keeps rung selection
+    platform-faithful — the ladder (not a local shrink loop) degrades
+    to the replicated fuse=False rung.  Knobs resolve through the same
+    `_resolve_knobs` pipeline the launch itself uses."""
+    from repro.robust import VmemBudgetError
+
+    op = "glu" if glu else "gemm"
+    bm, bn, k_layers, k_block_factor = _resolve_knobs(
+        m, n, k, jnp.dtype(dtype), None, None, None, None, op
+    )
+    kp = _round_up(k, k_layers * k_block_factor)
+    out_dtype = out_dtype or dtype
+    if not fused_path_fits_vmem(
+        bm,
+        bn,
+        kp // (k_layers * k_block_factor),
+        jnp.dtype(dtype).itemsize,
+        jnp.dtype(out_dtype).itemsize,
+        glu=glu,
+        has_residual=has_residual,
+    ):
+        raise VmemBudgetError(
+            f"fused {op} plan ({m}x{n}x{k}, bm={bm}, bn={bn}, "
+            f"k_layers={k_layers}, kbf={k_block_factor}) exceeds the "
+            f"{_FUSED_VMEM_BYTES >> 20} MiB VMEM budget"
+        )
+
+
 def _epilogue_jnp(
     y: jax.Array,
     *,
@@ -680,7 +722,13 @@ def _jnp_update(dw, master, mu, nu, hyper, *, param_dtype, stochastic_round):
             seed_from_lane(hyper[HYP_SALT]) * jnp.int32(0x85EB)
         )
         bits = tile_random_bits(flat.shape, seed, hw_rng=False)
-        w_n = stochastic_round_to(flat, bits, param_dtype).reshape(mst_n.shape)
+        w_sr = stochastic_round_to(flat, bits, param_dtype).reshape(mst_n.shape)
+        # scale==0 skip sentinel: bypass the dither and write the
+        # deterministic cast of the (unchanged) master — mirrors the
+        # kernel flush's skip path
+        w_n = jnp.where(
+            hyper[HYP_SCALE] == 0.0, mst_n.astype(param_dtype), w_sr
+        )
     else:
         w_n = mst_n.astype(param_dtype)
     return w_n, mst_n, mu_n, nu_n, sq
@@ -1156,6 +1204,160 @@ def _epilogue_cotangents(glu, activation, out_scale, h_pre, g_pre, dy):
     return dh, dg
 
 
+# ---------------------------------------------------------------------------
+# backward self-healing — fallback-ladder rungs for the NT/TN launches
+#
+# The backward kernels run at grad-trace time, far from the forward ladder
+# in `core.gemm_backend`: a Mosaic/VMEM failure here must degrade *here*.
+# Each launch gets a two-rung ladder — the SFC kernel, then a plain-jnp
+# contraction with an f32 accumulator (`preferred_element_type`), which is
+# exactly the math the kernel performs.  The jnp rungs introduce
+# dot_general into the jaxpr, so they only ever appear in a trace where
+# the Pallas rung actually failed or is quarantined — the healthy-path
+# structure gates (zero dot_general) are unaffected.
+# ---------------------------------------------------------------------------
+
+
+def _bwd_shape_key(m: int, n: int, k: int, dtype) -> str:
+    from repro.tune.cache import shape_bucket
+
+    bm_, bn_, bk_ = shape_bucket(max(m, 1), max(n, 1), max(k, 1))
+    return f"{bm_}x{bn_}x{bk_}|{jnp.dtype(dtype).name}"
+
+
+def _jnp_nt(dh, b, dg=None, b_gate=None):
+    """jnp rung for `sfc_matmul_nt`: dh(...,M,N) @ b(K,N)ᵀ (+ dual)."""
+    out = jnp.einsum(
+        "...mn,kn->...mk", dh, b, preferred_element_type=jnp.float32
+    )
+    if dg is not None:
+        out = out + jnp.einsum(
+            "...mn,kn->...mk", dg, b_gate, preferred_element_type=jnp.float32
+        )
+    return out
+
+
+def _jnp_tn(a2d, dh2, dg2=None):
+    """jnp rung for `sfc_matmul_tn`: a(M,K)ᵀ @ dh(M,N) (dual: a pair)."""
+    db = jnp.einsum("mk,mn->kn", a2d, dh2, preferred_element_type=jnp.float32)
+    if dg2 is None:
+        return db
+    return db, jnp.einsum(
+        "mk,mn->kn", a2d, dg2, preferred_element_type=jnp.float32
+    )
+
+
+def _jnp_grouped_nt(dh, b, group_sizes, dg=None, b_gate=None):
+    """jnp rung for `sfc_grouped_matmul_nt` (per-expert row slabs)."""
+    parts = []
+    off = 0
+    for ei, g in enumerate(group_sizes):
+        slab = _jnp_nt(
+            dh[off : off + g],
+            b[ei],
+            dg[off : off + g] if dg is not None else None,
+            b_gate[ei] if dg is not None else None,
+        )
+        parts.append(slab)
+        off += g
+    return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+
+
+def _jnp_grouped_tn(a, dh, group_sizes, dg=None):
+    """jnp rung for `sfc_grouped_matmul_tn`: (E, K, N) dW stack(s)."""
+    dbs, dgs = [], []
+    off = 0
+    for g in group_sizes:
+        dbs.append(_jnp_tn(a[off : off + g], dh[off : off + g]))
+        if dg is not None:
+            dgs.append(_jnp_tn(a[off : off + g], dg[off : off + g]))
+        off += g
+    db = jnp.stack(dbs)
+    if dg is None:
+        return db
+    return db, jnp.stack(dgs)
+
+
+def _nt_with_fallback(dh_c, b, dg_c, b_gate, *, interpret):
+    from repro.robust import run_with_fallback
+
+    def kernel():
+        return sfc_matmul_nt(
+            dh_c, b, dg_c, b_gate, interpret=interpret,
+            out_dtype=jnp.float32,
+        )
+
+    m = int(np.prod(dh_c.shape[:-1]))
+    return run_with_fallback(
+        "nt",
+        (("sfc_pallas", kernel), ("xla", lambda: _jnp_nt(dh_c, b, dg_c, b_gate))),
+        shape_key=_bwd_shape_key(m, b.shape[0], dh_c.shape[-1], dh_c.dtype),
+    )
+
+
+def _tn_with_fallback(a2d, dh2, dg2, *, interpret):
+    from repro.robust import run_with_fallback
+
+    def kernel():
+        if dg2 is not None:
+            return sfc_matmul_tn(
+                a2d, dh2, dg2, interpret=interpret, out_dtype=jnp.float32
+            )
+        return sfc_matmul_tn(
+            a2d, dh2, interpret=interpret, out_dtype=jnp.float32
+        )
+
+    return run_with_fallback(
+        "tn",
+        (("sfc_pallas", kernel), ("xla", lambda: _jnp_tn(a2d, dh2, dg2))),
+        shape_key=_bwd_shape_key(
+            a2d.shape[-1], dh2.shape[-1], a2d.shape[0], a2d.dtype
+        ),
+    )
+
+
+def _grouped_nt_with_fallback(dh_c, b, gs, dg_c, b_gate, *, interpret):
+    from repro.robust import run_with_fallback
+
+    def kernel():
+        return sfc_grouped_matmul_nt(
+            dh_c, b, gs, dg_c, b_gate, interpret=interpret,
+            out_dtype=jnp.float32,
+        )
+
+    return run_with_fallback(
+        "grouped_nt",
+        (
+            ("sfc_pallas", kernel),
+            ("xla", lambda: _jnp_grouped_nt(dh_c, b, gs, dg_c, b_gate)),
+        ),
+        shape_key=_bwd_shape_key(
+            dh_c.shape[0], b.shape[-2], dh_c.shape[-1], dh_c.dtype
+        ),
+    )
+
+
+def _grouped_tn_with_fallback(a, dh_c, gs, dg_c, *, interpret):
+    from repro.robust import run_with_fallback
+
+    def kernel():
+        if dg_c is not None:
+            return sfc_grouped_matmul_tn(
+                a, dh_c, gs, dg_c, interpret=interpret, out_dtype=jnp.float32
+            )
+        return sfc_grouped_matmul_tn(
+            a, dh_c, gs, interpret=interpret, out_dtype=jnp.float32
+        )
+
+    return run_with_fallback(
+        "grouped_tn",
+        (("sfc_pallas", kernel), ("xla", lambda: _jnp_grouped_tn(a, dh_c, gs, dg_c))),
+        shape_key=_bwd_shape_key(
+            a.shape[-1], dh_c.shape[-1], a.shape[0], a.dtype
+        ),
+    )
+
+
 def _matmul_core_bwd(cfg, saved, dy):
     a, b, b_gate, h_pre, g_pre, bias, gate_bias, res_meta = saved
     interp = cfg.interpret
@@ -1182,22 +1384,21 @@ def _matmul_core_bwd(cfg, saved, dy):
         )
         dbg = None
     else:
-        da = sfc_matmul_nt(
+        da = _nt_with_fallback(
             dh_c, b,
             dg_c, b_gate if dg_c is not None else None,
-            interpret=interp, out_dtype=jnp.float32,
+            interpret=interp,
         )
         n = b.shape[-1]
         a2d = a.reshape(-1, a.shape[-1])
         if dg_c is not None:
-            db, dbg = sfc_matmul_tn(
+            db, dbg = _tn_with_fallback(
                 a2d, dh_c.reshape(-1, n), dg_c.reshape(-1, n),
-                interpret=interp, out_dtype=jnp.float32,
+                interpret=interp,
             )
         else:
-            db = sfc_matmul_tn(
-                a2d, dh_c.reshape(-1, n), interpret=interp,
-                out_dtype=jnp.float32,
+            db = _tn_with_fallback(
+                a2d, dh_c.reshape(-1, n), None, interpret=interp
             )
             dbg = None
 
@@ -1313,39 +1514,68 @@ def _update_core_fwd(cfg, a, b, b_gate, bias, gate_bias, opt, hyper, token):
 
 def _run_tn_update(cfg, a2d, dh_c, dg_c, b, b_gate, opt, hyper):
     """Dispatch the (possibly dual) fused TN update; returns the cotangent
-    pieces (w_cots, opt_cots, token_cots) in primal argument structure."""
+    pieces (w_cots, opt_cots, token_cots) in primal argument structure.
+
+    Self-healing: the grad-and-update flush is the deepest Pallas launch
+    in the train step, so it carries its own ladder rung — on a
+    classified failure the update falls back to the jnp oracle (`_jnp_tn`
+    dW + `_jnp_update`), which is the same AdamW program the flush runs."""
+    from repro.robust import run_with_fallback
+
     interp = cfg.base.interpret
     n = b.shape[-1]
-    if dg_c is not None:
-        if b_gate.dtype != b.dtype:
-            # one _TnUpdate.param_dtype serves both flush sets — a silent
-            # cast would round the gate weights through the value dtype
-            raise NotImplementedError(
-                f"fused GLU update requires matching weight dtypes, got "
-                f"value={b.dtype} gate={b_gate.dtype}; exclude the pair "
-                "via fused_filter"
+
+    def kernel():
+        if dg_c is not None:
+            if b_gate.dtype != b.dtype:
+                # one _TnUpdate.param_dtype serves both flush sets — a
+                # silent cast would round the gate weights through the
+                # value dtype; the ladder degrades this to the oracle,
+                # which keeps per-weight dtypes
+                raise NotImplementedError(
+                    f"fused GLU update requires matching weight dtypes, got "
+                    f"value={b.dtype} gate={b_gate.dtype}"
+                )
+            (ov, og) = opt
+            set_v, set_g = sfc_matmul_tn_update(
+                a2d, dh_c.reshape(-1, n), ov[0], ov[1], ov[2], hyper,
+                dg_c.reshape(-1, n), og[0], og[1], og[2],
+                param_dtype=b.dtype, stochastic_round=cfg.stochastic_round,
+                interpret=interp,
             )
-        (ov, og) = opt
-        set_v, set_g = sfc_matmul_tn_update(
-            a2d, dh_c.reshape(-1, n), ov[0], ov[1], ov[2], hyper,
-            dg_c.reshape(-1, n), og[0], og[1], og[2],
+            wv, mv, muv, nuv, sqv = set_v
+            wg, mg, mug, nug, sqg = set_g
+            return (
+                (wv, wg),
+                ((mv, muv, nuv), (mg, mug, nug)),
+                (sqv, sqg),
+            )
+        (mst, mu, nu) = opt
+        w_n, mst_n, mu_n, nu_n, sq = sfc_matmul_tn_update(
+            a2d, dh_c.reshape(-1, n), mst, mu, nu, hyper,
             param_dtype=b.dtype, stochastic_round=cfg.stochastic_round,
             interpret=interp,
         )
-        wv, mv, muv, nuv, sqv = set_v
-        wg, mg, mug, nug, sqg = set_g
-        return (
-            (wv, wg),
-            ((mv, muv, nuv), (mg, mug, nug)),
-            (sqv, sqg),
-        )
-    (mst, mu, nu) = opt
-    w_n, mst_n, mu_n, nu_n, sq = sfc_matmul_tn_update(
-        a2d, dh_c.reshape(-1, n), mst, mu, nu, hyper,
-        param_dtype=b.dtype, stochastic_round=cfg.stochastic_round,
-        interpret=interp,
+        return ((w_n, None), (mst_n, mu_n, nu_n), sq)
+
+    def oracle():
+        if dg_c is not None:
+            dw, dwg = _jnp_tn(a2d, dh_c.reshape(-1, n), dg_c.reshape(-1, n))
+            ov, og = opt
+            w_v, opt_v, sq_v = _oracle_update(cfg, dw, ov, b.dtype, hyper)
+            w_g, opt_g, sq_g = _oracle_update(cfg, dwg, og, b_gate.dtype, hyper)
+            return ((w_v, w_g), (opt_v, opt_g), (sq_v, sq_g))
+        dw = _jnp_tn(a2d, dh_c.reshape(-1, n), None)
+        w_n, opt_n, sq = _oracle_update(cfg, dw, opt, b.dtype, hyper)
+        return ((w_n, None), opt_n, sq)
+
+    return run_with_fallback(
+        "tn_update",
+        (("sfc_pallas", kernel), ("xla", oracle)),
+        shape_key=_bwd_shape_key(
+            a2d.shape[-1], n, a2d.shape[0], a2d.dtype
+        ),
     )
-    return ((w_n, None), (mst_n, mu_n, nu_n), sq)
 
 
 def _oracle_update(cfg, dw, opt_leaf, param_dtype, hyper):
@@ -1389,10 +1619,10 @@ def _update_core_bwd(cfg, saved, dy):
     dh_c = dh.astype(cdt)
     dg_c = dg.astype(cdt) if dg is not None else None
 
-    da = sfc_matmul_nt(
+    da = _nt_with_fallback(
         dh_c, b,
         dg_c, b_gate if dg_c is not None else None,
-        interpret=interp, out_dtype=jnp.float32,
+        interpret=interp,
     )
     a2d = a.reshape(-1, a.shape[-1])
     (w_v, w_g), opt_cots, token_cots = _run_tn_update(
@@ -1743,19 +1973,17 @@ def _grouped_core_bwd(cfg, saved, dy):
     dh_c = dh.astype(cdt)
     dg_c = dg.astype(cdt) if dg is not None else None
 
-    da = sfc_grouped_matmul_nt(
+    da = _grouped_nt_with_fallback(
         dh_c, b, gs,
         dg_c, b_gate if dg_c is not None else None,
-        interpret=interp, out_dtype=jnp.float32,
+        interpret=interp,
     )
     if dg_c is not None:
-        db, dbg = sfc_grouped_matmul_tn(
-            a, dh_c, gs, dg_c, interpret=interp, out_dtype=jnp.float32,
+        db, dbg = _grouped_tn_with_fallback(
+            a, dh_c, gs, dg_c, interpret=interp
         )
     else:
-        db = sfc_grouped_matmul_tn(
-            a, dh_c, gs, interpret=interp, out_dtype=jnp.float32,
-        )
+        db = _grouped_tn_with_fallback(a, dh_c, gs, None, interpret=interp)
         dbg = None
 
     e_cnt = len(gs)
@@ -1899,40 +2127,63 @@ def _grouped_update_core_bwd(cfg, saved, dy):
     dh_c = dh.astype(cdt)
     dg_c = dg.astype(cdt) if dg is not None else None
 
-    da = sfc_grouped_matmul_nt(
+    da = _grouped_nt_with_fallback(
         dh_c, b, gs,
         dg_c, b_gate if dg_c is not None else None,
-        interpret=interp, out_dtype=jnp.float32,
+        interpret=interp,
     )
-    if dg_c is not None:
-        if b_gate.dtype != b.dtype:
-            raise NotImplementedError(
-                f"fused grouped GLU update requires matching weight dtypes, "
-                f"got value={b.dtype} gate={b_gate.dtype}; exclude the pair "
-                "via fused_filter"
+
+    def kernel():
+        if dg_c is not None:
+            if b_gate.dtype != b.dtype:
+                # ladder degrades this config to the oracle, which keeps
+                # per-weight dtypes instead of silently casting the gate
+                raise NotImplementedError(
+                    f"fused grouped GLU update requires matching weight "
+                    f"dtypes, got value={b.dtype} gate={b_gate.dtype}"
+                )
+            (ov, og) = opt
+            set_v, set_g = sfc_grouped_matmul_tn_update(
+                a, dh_c, gs, ov[0], ov[1], ov[2], hyper,
+                dg_c, og[0], og[1], og[2],
+                param_dtype=b.dtype, stochastic_round=cfg.stochastic_round,
+                interpret=interp,
             )
-        (ov, og) = opt
-        set_v, set_g = sfc_grouped_matmul_tn_update(
-            a, dh_c, gs, ov[0], ov[1], ov[2], hyper,
-            dg_c, og[0], og[1], og[2],
-            param_dtype=b.dtype, stochastic_round=cfg.stochastic_round,
-            interpret=interp,
-        )
-        wv, mv, muv, nuv, sqv = set_v
-        wg, mg, mug, nug, sqg = set_g
-        w_cots = (wv, wg)
-        opt_cots = ((mv, muv, nuv), (mg, mug, nug))
-        token_cots = (sqv, sqg)
-    else:
+            wv, mv, muv, nuv, sqv = set_v
+            wg, mg, mug, nug, sqg = set_g
+            return (
+                (wv, wg),
+                ((mv, muv, nuv), (mg, mug, nug)),
+                (sqv, sqg),
+            )
         (mst, mu, nu) = opt
         w_n, mst_n, mu_n, nu_n, sq = sfc_grouped_matmul_tn_update(
             a, dh_c, gs, mst, mu, nu, hyper,
             param_dtype=b.dtype, stochastic_round=cfg.stochastic_round,
             interpret=interp,
         )
-        w_cots = (w_n, None)
-        opt_cots = (mst_n, mu_n, nu_n)
-        token_cots = sq
+        return ((w_n, None), (mst_n, mu_n, nu_n), sq)
+
+    def oracle():
+        if dg_c is not None:
+            dw, dwg = _jnp_grouped_tn(a, dh_c, gs, dg_c)
+            ov, og = opt
+            w_v, opt_v, sq_v = _oracle_update(cfg, dw, ov, b.dtype, hyper)
+            w_g, opt_g, sq_g = _oracle_update(cfg, dwg, og, b_gate.dtype, hyper)
+            return ((w_v, w_g), (opt_v, opt_g), (sq_v, sq_g))
+        dw = _jnp_grouped_tn(a, dh_c, gs, None)
+        w_n, opt_n, sq = _oracle_update(cfg, dw, opt, b.dtype, hyper)
+        return ((w_n, None), opt_n, sq)
+
+    from repro.robust import run_with_fallback
+
+    w_cots, opt_cots, token_cots = run_with_fallback(
+        "grouped_tn_update",
+        (("sfc_pallas", kernel), ("xla", oracle)),
+        shape_key=_bwd_shape_key(
+            a.shape[-1], dh_c.shape[-1], a.shape[0], a.dtype
+        ),
+    )
 
     e_cnt = len(gs)
     seg = jnp.asarray(np.repeat(np.arange(e_cnt), gs), jnp.int32)

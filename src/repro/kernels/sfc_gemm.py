@@ -78,7 +78,13 @@ from repro.optim.adamw import (
     seed_from_lane,
 )
 
+# bumped when a kernel change invalidates measured knobs / calibration
+# constants; `repro.tune.cache` stamps persisted entries with it and
+# drops stale generations on mismatch
+KERNEL_VERSION = 1
+
 __all__ = [
+    "KERNEL_VERSION",
     "sfc_gemm_pallas",
     "sfc_gemm_batched",
     "sfc_gemm_fused",
@@ -1043,23 +1049,40 @@ def _apply_update_flush(
 ) -> jax.Array:
     """AdamW on the f32 accumulator (the `optim.adamw.adamw_leaf_update`
     program, scalars from the SMEM hyper vector); writes W/master/mu/nu
-    tiles back and returns ``sum(dW^2)`` (pre-clip, for the global norm)."""
+    tiles back and returns ``sum(dW^2)`` (pre-clip, for the global norm).
+
+    ``scale == 0`` is the reserved skip-update sentinel (a finite grad
+    norm never clips to exactly 0): moments and master are written back
+    *unchanged* and W is the deterministic cast of the unchanged master
+    — stochastic rounding is bypassed so the skip is reproducible.  For
+    f32 (and bf16 without SR) params that cast is bitwise the previous
+    W; under bf16+SR it can differ by one ulp from the last dithered
+    write (the kernel has no old-W input to echo)."""
     ix = out_index
     sq = jnp.sum(acc * acc)
+    skip = hyp_ref[HYP_SCALE] == 0.0
     g = acc * hyp_ref[HYP_SCALE]
-    mu_n = hyp_ref[HYP_B1] * mu_ref[ix] + hyp_ref[HYP_1MB1] * g
-    nu_n = hyp_ref[HYP_B2] * nu_ref[ix] + hyp_ref[HYP_1MB2] * jnp.square(g)
+    mu, nu, mst = mu_ref[ix], nu_ref[ix], mst_ref[ix]
+    mu_n = hyp_ref[HYP_B1] * mu + hyp_ref[HYP_1MB1] * g
+    nu_n = hyp_ref[HYP_B2] * nu + hyp_ref[HYP_1MB2] * jnp.square(g)
     mhat = mu_n / hyp_ref[HYP_B1C]
     nhat = nu_n / hyp_ref[HYP_B2C]
-    mst = mst_ref[ix]
     step_v = mhat / (jnp.sqrt(nhat) + hyp_ref[HYP_EPS]) + hyp_ref[HYP_WD] * mst
     mst_n = mst - hyp_ref[HYP_LR] * step_v
+    # select (not multiply) so a NaN/Inf accumulator cannot leak through
+    mu_n = jnp.where(skip, mu, mu_n)
+    nu_n = jnp.where(skip, nu, nu_n)
+    mst_n = jnp.where(skip, mst, mst_n)
     mu_out[ix] = mu_n
     nu_out[ix] = nu_n
     mst_out[ix] = mst_n
     if upd.stochastic_round:
         bits = tile_random_bits(mst_n.shape, seed, hw_rng=upd.hw_rng)
-        w_out[ix] = stochastic_round_to(mst_n, bits, upd.param_dtype)
+        w_out[ix] = jnp.where(
+            skip,
+            mst_n.astype(upd.param_dtype),
+            stochastic_round_to(mst_n, bits, upd.param_dtype),
+        )
     else:
         w_out[ix] = mst_n.astype(upd.param_dtype)
     return sq

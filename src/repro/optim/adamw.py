@@ -118,9 +118,20 @@ def global_norm(tree) -> jax.Array:
     )
 
 
-def clip_scale(cfg: AdamWConfig, gnorm: jax.Array) -> jax.Array:
-    """min(1, clip_norm / gnorm) — the clip-by-global-norm gradient scale."""
-    return jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+def clip_scale(
+    cfg: AdamWConfig, gnorm: jax.Array, *, guard_nonfinite: bool = True
+) -> jax.Array:
+    """min(1, clip_norm / gnorm) — the clip-by-global-norm gradient scale.
+
+    With ``guard_nonfinite`` (the default) a NaN/Inf global norm binds
+    the scale to exactly 0.0 — the reserved skip-update sentinel every
+    update path (`adamw_leaf_update` and the fused TN flush) honours by
+    leaving moments and master untouched.  A finite norm never produces
+    scale 0 (clip_norm > 0 and the 1e-9 floor), so 0 is unambiguous."""
+    s = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    if not guard_nonfinite:
+        return s
+    return jnp.where(jnp.isfinite(gnorm), s, jnp.float32(0.0))
 
 
 def adamw_scalars(
@@ -154,15 +165,25 @@ def adamw_leaf_update(
     semantics of the fused TN-update kernel flush: the kernel runs the same
     expression order on its f32 accumulator (with f32 scalar hypers from the
     SMEM vector in place of the python floats here — agreement is rtol-1e-5
-    tight, not bit-exact; the *unfused* path stays bit-compatible)."""
+    tight, not bit-exact; the *unfused* path stays bit-compatible).
+
+    ``scale == 0`` is the reserved skip-update sentinel (see `clip_scale`):
+    the incoming state is returned bitwise unchanged through a select, so
+    a NaN/Inf gradient cannot leak into the moments or master."""
+    skip = jnp.asarray(scale) == 0.0
     g = g.astype(jnp.float32) * scale
-    mu = b1 * mu + (1 - b1) * g
-    nu = b2 * nu + (1 - b2) * jnp.square(g)
-    mhat = mu / b1c
-    nhat = nu / b2c
+    mu_n = b1 * mu + (1 - b1) * g
+    nu_n = b2 * nu + (1 - b2) * jnp.square(g)
+    mhat = mu_n / b1c
+    nhat = nu_n / b2c
     step_v = mhat / (jnp.sqrt(nhat) + eps) + weight_decay * master
-    master = master - lr * step_v
-    return mu, nu, master
+    master_n = master - lr * step_v
+    # select (not arithmetic): under skip the NaN branch is discarded and
+    # the non-skip branch returns the freshly computed values bitwise
+    mu_n = jnp.where(skip, mu, mu_n)
+    nu_n = jnp.where(skip, nu, nu_n)
+    master_n = jnp.where(skip, master, master_n)
+    return mu_n, nu_n, master_n
 
 
 def pack_adamw_hyper(
@@ -203,13 +224,18 @@ def adamw_apply(
     *,
     scale,
     step,
+    lr_scale=None,
 ) -> Tuple[Params, Dict[str, Any]]:
     """Elementwise-only AdamW over a (sub)tree with a precomputed gradient
     scale — no norm pass.  Returns (new_params, {mu, nu, master}).
     `adamw_update` composes it with the global-norm pass; the fused train
     step applies the same `adamw_leaf_update` core leaf-by-leaf inline
-    (its routed/unrouted split works on flattened leaves, not subtrees)."""
+    (its routed/unrouted split works on flattened leaves, not subtrees).
+    ``lr_scale`` (None = off) multiplies the schedule lr — the TrainLoop
+    nonfinite-recovery backoff hook."""
     lr, b1c, b2c = adamw_scalars(cfg, step)
+    if lr_scale is not None:
+        lr = lr * jnp.asarray(lr_scale, jnp.float32)
 
     def upd(g, mu, nu, master):
         return adamw_leaf_update(
@@ -237,14 +263,18 @@ def adamw_update(
     grads: Params,
     state: Dict[str, Any],
     params: Params,
+    *,
+    lr_scale=None,
 ) -> Tuple[Params, Dict[str, Any], Dict[str, jax.Array]]:
     """Returns (new_params, new_state, metrics). Params keep their dtype
-    (e.g. bf16) while the update runs on the f32 masters."""
+    (e.g. bf16) while the update runs on the f32 masters.  A nonfinite
+    global norm skips the update exactly (scale-0 sentinel, see
+    `clip_scale`)."""
     step = state["step"] + 1
     gnorm = global_norm(grads)
     scale = clip_scale(cfg, gnorm)
     new_params, slots = adamw_apply(
-        cfg, grads, state, params, scale=scale, step=step
+        cfg, grads, state, params, scale=scale, step=step, lr_scale=lr_scale
     )
     new_state = {"step": step, **slots}
     if "gnorm" in state:

@@ -1,0 +1,62 @@
+"""Execution guardrails: fallback ladder, health registry, fault injection.
+
+Every routed op (GEMM backends, attention backends, the fused-optimizer
+flush) degrades through one mechanism: :func:`run_with_fallback` walks a
+ladder of rungs — ``sfc_pallas → replicated → sfc_reference → xla`` — on
+*classified* failures (Mosaic/lowering errors, ``RESOURCE_EXHAUSTED`` /
+VMEM-budget overflow, interpret-mode asserts).  Unclassified exceptions
+propagate: the ladder heals platform breakage, it does not hide bugs.
+
+The :class:`HealthRegistry` quarantines a failing ``(namespace, rung,
+shape-class)`` so the broken path is skipped on later traces instead of
+retried forever, and `degradation_report()` summarises what actually
+served.  `repro.robust.inject` provides a deterministic contextvar fault
+harness so every rung transition is differentially testable without real
+hardware failures.
+
+Setting ``REPRO_STRICT=1`` turns silent (non-injected) fallbacks into
+hard `StrictFallbackError`s — the CI mode that catches the fast path
+quietly stopping being taken.
+"""
+
+from repro.robust.inject import (
+    FaultSpec,
+    InjectedCompileError,
+    InjectedFault,
+    InjectedResourceExhausted,
+    fault_injection,
+    injection_active,
+)
+from repro.robust.ladder import (
+    DEFAULT_LADDER,
+    PALLAS_RUNGS,
+    FallbackError,
+    HealthRegistry,
+    StrictFallbackError,
+    VmemBudgetError,
+    classify_failure,
+    degradation_report,
+    get_registry,
+    run_with_fallback,
+    strict_mode,
+)
+
+__all__ = [
+    "DEFAULT_LADDER",
+    "PALLAS_RUNGS",
+    "FallbackError",
+    "FaultSpec",
+    "HealthRegistry",
+    "InjectedCompileError",
+    "InjectedFault",
+    "InjectedResourceExhausted",
+    "StrictFallbackError",
+    "VmemBudgetError",
+    "classify_failure",
+    "degradation_report",
+    "fault_injection",
+    "get_registry",
+    "injection_active",
+    "run_with_fallback",
+    "strict_mode",
+]

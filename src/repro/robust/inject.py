@@ -1,0 +1,183 @@
+"""Deterministic fault injection for the fallback ladder.
+
+A contextvar harness that makes routed ops raise synthetic compile
+errors / OOM, or poison their outputs with NaN, at chosen call indices —
+so the ladder, quarantine, and recovery paths in `repro.robust.ladder`
+are all differentially testable without real hardware failures.
+
+    with fault_injection(FaultSpec("gemm", kind="compile")):
+        y = matmul(x, w)          # sfc_pallas rung raises, ladder heals
+
+Call counting is per *namespace* and advances once per
+`run_with_fallback` invocation, at trace time.  Under `jax.jit` a cached
+trace is not re-executed, so injection only affects functions traced
+while the context is active — tests should trace fresh (new closures /
+new engines) inside the context.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import fnmatch
+from typing import Callable, Optional, Sequence, Tuple
+
+
+class InjectedFault(Exception):
+    """Base class for synthetic failures raised by the harness.
+
+    The ladder grants injected failures strict-mode amnesty: a fallback
+    caused by an `InjectedFault` never trips ``REPRO_STRICT``.
+    """
+
+
+class InjectedCompileError(InjectedFault):
+    """Synthetic Mosaic/lowering failure (classified as ``compile``)."""
+
+    def __init__(self, namespace: str, rung: str, call: int):
+        super().__init__(
+            f"INJECTED Mosaic lowering failed for {namespace}/{rung} "
+            f"(call {call}): Unsupported operation in kernel body"
+        )
+
+
+class InjectedResourceExhausted(InjectedFault):
+    """Synthetic VMEM/HBM OOM (classified as ``oom``)."""
+
+    def __init__(self, namespace: str, rung: str, call: int):
+        super().__init__(
+            f"INJECTED RESOURCE_EXHAUSTED for {namespace}/{rung} "
+            f"(call {call}): ran out of memory allocating scratch"
+        )
+
+
+# rung names that launch Pallas kernels — the default injection target.
+# "replicated" (fuse=False) still runs sfc_gemm_pallas + add_reduce, so
+# "force a Pallas failure" must fault it too to reach sfc_reference.
+_PALLAS_RUNGS = ("sfc_pallas", "replicated")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One injection rule.
+
+    namespace: fnmatch pattern over ladder namespaces ("gemm", "attn_*",
+        "*", ...).
+    kind: "compile" (raise InjectedCompileError), "oom" (raise
+        InjectedResourceExhausted), or "nan" (poison the rung's floating
+        outputs with NaN — exercises the nonfinite-update guardrails,
+        not the ladder).
+    calls: call indices (per namespace, 0-based) to fault; None = every
+        call.
+    rungs: fnmatch patterns over rung names to fault; None = the Pallas
+        rungs ("sfc_pallas", "replicated").
+    """
+
+    namespace: str
+    kind: str = "compile"
+    calls: Optional[Tuple[int, ...]] = None
+    rungs: Optional[Tuple[str, ...]] = _PALLAS_RUNGS
+
+    def __post_init__(self):
+        if self.kind not in ("compile", "oom", "nan"):
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+        if self.calls is not None:
+            object.__setattr__(self, "calls", tuple(self.calls))
+        if self.rungs is not None:
+            object.__setattr__(self, "rungs", tuple(self.rungs))
+
+    def matches(self, namespace: str, rung: str, call: int) -> bool:
+        if not fnmatch.fnmatchcase(namespace, self.namespace):
+            return False
+        if self.calls is not None and call not in self.calls:
+            return False
+        if self.rungs is not None and not any(
+            fnmatch.fnmatchcase(rung, pat) for pat in self.rungs
+        ):
+            return False
+        return True
+
+
+class InjectionState:
+    """Active specs plus deterministic per-namespace call counters."""
+
+    def __init__(self, specs: Sequence[FaultSpec]):
+        self.specs = tuple(specs)
+        self.calls: dict = {}  # namespace -> number of ladder invocations
+        self.fired: list = []  # (namespace, rung, call, kind) log
+
+    def begin_call(self, namespace: str) -> int:
+        idx = self.calls.get(namespace, 0)
+        self.calls[namespace] = idx + 1
+        return idx
+
+    def check(self, namespace: str, rung: str, call: int):
+        """Raise / return a poison fn if a spec targets this attempt."""
+        for spec in self.specs:
+            if not spec.matches(namespace, rung, call):
+                continue
+            self.fired.append((namespace, rung, call, spec.kind))
+            if spec.kind == "compile":
+                raise InjectedCompileError(namespace, rung, call)
+            if spec.kind == "oom":
+                raise InjectedResourceExhausted(namespace, rung, call)
+            return _nan_poison
+        return None
+
+
+_STATE: contextvars.ContextVar[Optional[InjectionState]] = (
+    contextvars.ContextVar("repro_fault_injection", default=None)
+)
+
+
+@contextlib.contextmanager
+def fault_injection(*specs: FaultSpec):
+    """Activate fault specs; yields the InjectionState for inspection."""
+    state = InjectionState(specs)
+    token = _STATE.set(state)
+    try:
+        yield state
+    finally:
+        _STATE.reset(token)
+
+
+def injection_active() -> bool:
+    return _STATE.get() is not None
+
+
+def begin_call(namespace: str) -> int:
+    """Advance the per-namespace ladder-invocation counter."""
+    state = _STATE.get()
+    if state is None:
+        return -1
+    return state.begin_call(namespace)
+
+
+def check(namespace: str, rung: str, call: int) -> Optional[Callable]:
+    """Fault this rung attempt if a spec targets it.
+
+    Raises an `InjectedFault` for "compile"/"oom" kinds; returns an
+    output-poisoning transform for "nan"; returns None when clean.
+    """
+    state = _STATE.get()
+    if state is None:
+        return None
+    return state.check(namespace, rung, call)
+
+
+def _nan_poison(out):
+    """Poison every floating leaf of a rung output with NaN."""
+    import jax
+    import jax.numpy as jnp
+
+    def leaf(x):
+        try:
+            dt = jnp.asarray(x).dtype
+        except TypeError:
+            return x
+        if jnp.issubdtype(dt, jnp.floating):
+            return jnp.asarray(x) * jnp.asarray(float("nan"), dt)
+        return x
+
+    return jax.tree_util.tree_map(leaf, out)

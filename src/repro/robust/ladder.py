@@ -1,0 +1,417 @@
+"""Fallback ladder + health registry: the one degradation mechanism.
+
+`run_with_fallback` tries each rung of a ladder in order —
+``sfc_pallas → replicated (fuse=False) → sfc_reference → xla`` — and
+advances only on *classified* failures: Mosaic/lowering errors,
+``RESOURCE_EXHAUSTED`` / VMEM-budget overflow, interpret-mode asserts,
+and the synthetic faults from `repro.robust.inject`.  Anything else
+re-raises; the ladder heals platform breakage, it does not hide bugs.
+
+A failing ``(namespace, rung, shape-class)`` is quarantined in the
+process-wide :class:`HealthRegistry` so later traces skip it instead of
+retrying forever; re-tuning a namespace clears its quarantines.  The
+registry round-trips through the knob cache (``__health__|…`` entries)
+so a fleet replica restarting after a crash remembers what was broken.
+
+Rung selection happens at trace time: a healthy path costs nothing
+after `jax.jit` caches the trace, and a quarantine takes effect on the
+next trace (the serving engine re-traces on classified runtime errors).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+from repro.robust import inject
+from repro.robust.inject import InjectedFault
+
+DEFAULT_LADDER = ("sfc_pallas", "replicated", "sfc_reference", "xla")
+
+# rungs that launch Pallas kernels (replicated = fuse=False still does)
+PALLAS_RUNGS = ("sfc_pallas", "replicated")
+
+
+class VmemBudgetError(RuntimeError):
+    """Planned working set exceeds the VMEM budget (classified: oom).
+
+    Raised by the planning check inside the fused rung so the *ladder*
+    — not an ad-hoc local shrink loop — decides the degradation.  On
+    CPU interpret mode nothing would physically overflow, so the plan
+    check is what keeps rung selection platform-faithful.
+    """
+
+
+class FallbackError(RuntimeError):
+    """Every rung of a ladder failed or was quarantined."""
+
+
+class StrictFallbackError(RuntimeError):
+    """REPRO_STRICT=1 and a non-injected fallback occurred."""
+
+
+def strict_mode() -> bool:
+    return os.environ.get("REPRO_STRICT", "") not in ("", "0")
+
+
+# ---------------------------------------------------------------------------
+# failure classification
+# ---------------------------------------------------------------------------
+
+_OOM_MARKERS = (
+    "RESOURCE_EXHAUSTED",
+    "VMEM",
+    "vmem budget",
+    "ran out of memory",
+    "Ran out of memory",
+    "out of memory",
+)
+_COMPILE_MARKERS = (
+    "Mosaic",
+    "mosaic",
+    "lowering",
+    "Lowering",
+    "Unsupported",
+    "unsupported",
+    "INTERNAL: Generating",
+)
+_INTERPRET_MARKERS = (
+    "Bounds check",
+    "out-of-bounds",
+    "Out-of-bounds",
+    "must be divisible",
+    "not divisible",
+    "block shape",
+)
+
+
+def classify_failure(exc: BaseException) -> Optional[str]:
+    """Map an exception to a ladder-classified kind, or None (re-raise).
+
+    Returns "oom" for RESOURCE_EXHAUSTED / VMEM-budget overflow,
+    "compile" for Mosaic/lowering failures and NotImplemented kernel
+    paths, "interpret" for interpret-mode assert/bounds failures.
+    """
+    if isinstance(exc, inject.InjectedResourceExhausted):
+        return "oom"
+    if isinstance(exc, inject.InjectedCompileError):
+        return "compile"
+    if isinstance(exc, VmemBudgetError):
+        return "oom"
+    if isinstance(exc, NotImplementedError):
+        return "compile"
+    msg = str(exc)
+    if any(m in msg for m in _OOM_MARKERS):
+        return "oom"
+    if any(m in msg for m in _COMPILE_MARKERS):
+        return "compile"
+    if isinstance(exc, AssertionError) or any(
+        m in msg for m in _INTERPRET_MARKERS
+    ):
+        return "interpret"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# health registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class QuarantineRecord:
+    namespace: str
+    rung: str
+    shape: Optional[str]
+    reason: str
+    injected: bool = False
+    planned: bool = False
+    count: int = 1
+    error: str = ""
+
+    def as_dict(self) -> Dict:
+        return {
+            "namespace": self.namespace,
+            "rung": self.rung,
+            "shape": self.shape,
+            "reason": self.reason,
+            "injected": self.injected,
+            "planned": self.planned,
+            "count": self.count,
+            "error": self.error,
+        }
+
+
+def _qkey(namespace: str, rung: str, shape: Optional[str]) -> str:
+    return f"{namespace}|{rung}|{shape if shape is not None else '*'}"
+
+
+class HealthRegistry:
+    """Per-process quarantine + serving ledger for the fallback ladder.
+
+    Quarantine is keyed ``(namespace, rung, shape-class)``; a record
+    with shape ``None`` quarantines the rung for every shape in the
+    namespace (the serving engine uses this after a classified runtime
+    failure).  `clear(namespace=...)` lifts quarantines — the re-tune
+    path calls it after fresh knobs land, so a broken (backend, knobs,
+    shape) combination is retried only once it has been re-tuned.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._quarantine: Dict[str, QuarantineRecord] = {}
+        self._served: Dict[str, Dict[str, int]] = {}
+        self._fallback_calls = 0
+        self._total_calls = 0
+
+    # -- quarantine ---------------------------------------------------------
+
+    def quarantine(
+        self,
+        namespace: str,
+        rung: str,
+        shape: Optional[str],
+        reason: str,
+        *,
+        injected: bool = False,
+        planned: bool = False,
+        error: Optional[BaseException] = None,
+    ) -> QuarantineRecord:
+        key = _qkey(namespace, rung, shape)
+        with self._lock:
+            rec = self._quarantine.get(key)
+            if rec is None:
+                rec = QuarantineRecord(
+                    namespace,
+                    rung,
+                    shape,
+                    reason,
+                    injected=injected,
+                    planned=planned,
+                    error="" if error is None else str(error)[:200],
+                )
+                self._quarantine[key] = rec
+            else:
+                rec.count += 1
+                rec.reason = reason
+                rec.injected = rec.injected and injected
+                rec.planned = rec.planned and planned
+            return rec
+
+    def get_quarantine(
+        self, namespace: str, rung: str, shape: Optional[str]
+    ) -> Optional[QuarantineRecord]:
+        with self._lock:
+            rec = self._quarantine.get(_qkey(namespace, rung, shape))
+            if rec is None and shape is not None:
+                rec = self._quarantine.get(_qkey(namespace, rung, None))
+            return rec
+
+    def is_quarantined(
+        self, namespace: str, rung: str, shape: Optional[str]
+    ) -> bool:
+        return self.get_quarantine(namespace, rung, shape) is not None
+
+    def clear(
+        self, namespace: Optional[str] = None, rung: Optional[str] = None
+    ) -> int:
+        """Lift quarantines (all, per namespace, or per namespace+rung)."""
+        with self._lock:
+            keys = [
+                k
+                for k, r in self._quarantine.items()
+                if (namespace is None or r.namespace == namespace)
+                and (rung is None or r.rung == rung)
+            ]
+            for k in keys:
+                del self._quarantine[k]
+            return len(keys)
+
+    # -- serving ledger -----------------------------------------------------
+
+    def record_served(
+        self, namespace: str, rung: str, *, degraded: bool
+    ) -> None:
+        with self._lock:
+            self._total_calls += 1
+            if degraded:
+                self._fallback_calls += 1
+            per_ns = self._served.setdefault(namespace, {})
+            per_ns[rung] = per_ns.get(rung, 0) + 1
+
+    def quarantined_namespaces(self) -> Tuple[str, ...]:
+        with self._lock:
+            return tuple(
+                sorted({r.namespace for r in self._quarantine.values()})
+            )
+
+    def degradation_report(
+        self, namespaces: Optional[Sequence[str]] = None
+    ) -> Dict:
+        """Summarise what served and what is quarantined.
+
+        ``namespaces`` optionally filters to a prefix-or-exact match
+        set (e.g. the GEMM backend reports only its own namespaces).
+        """
+
+        def keep(ns: str) -> bool:
+            if namespaces is None:
+                return True
+            return any(ns == n or ns.startswith(n) for n in namespaces)
+
+        with self._lock:
+            return {
+                "strict": strict_mode(),
+                "total_calls": self._total_calls,
+                "fallback_calls": self._fallback_calls,
+                "served": {
+                    ns: dict(rungs)
+                    for ns, rungs in sorted(self._served.items())
+                    if keep(ns)
+                },
+                "quarantined": [
+                    rec.as_dict()
+                    for key, rec in sorted(self._quarantine.items())
+                    if keep(rec.namespace)
+                ],
+            }
+
+    def reset(self) -> None:
+        with self._lock:
+            self._quarantine.clear()
+            self._served.clear()
+            self._fallback_calls = 0
+            self._total_calls = 0
+
+    # -- persistence (knob-cache round trip) --------------------------------
+
+    def export_state(self) -> Dict[str, Dict]:
+        with self._lock:
+            return {k: r.as_dict() for k, r in self._quarantine.items()}
+
+    def load_state(self, state: Dict[str, Dict]) -> None:
+        with self._lock:
+            for key, d in state.items():
+                try:
+                    rec = QuarantineRecord(
+                        namespace=d["namespace"],
+                        rung=d["rung"],
+                        shape=d.get("shape"),
+                        reason=d.get("reason", "unknown"),
+                        injected=bool(d.get("injected", False)),
+                        planned=bool(d.get("planned", False)),
+                        count=int(d.get("count", 1)),
+                        error=str(d.get("error", "")),
+                    )
+                except (KeyError, TypeError, ValueError):
+                    continue  # malformed persisted entry: drop, don't crash
+                self._quarantine[key] = rec
+
+    def save_to_cache(self, cache) -> None:
+        """Persist quarantines as ``__health__|…`` knob-cache entries."""
+        cache.put_health(self.export_state())
+
+    def load_from_cache(self, cache) -> None:
+        self.load_state(cache.get_health())
+
+
+_REGISTRY = HealthRegistry()
+
+
+def get_registry() -> HealthRegistry:
+    return _REGISTRY
+
+
+def degradation_report(
+    namespaces: Optional[Sequence[str]] = None,
+) -> Dict:
+    return _REGISTRY.degradation_report(namespaces)
+
+
+# ---------------------------------------------------------------------------
+# the ladder
+# ---------------------------------------------------------------------------
+
+
+def run_with_fallback(
+    namespace: str,
+    rungs: Sequence[Tuple[str, Callable[[], object]]],
+    *,
+    shape_key: Optional[str] = None,
+    registry: Optional[HealthRegistry] = None,
+):
+    """Run the first healthy rung; degrade on classified failures.
+
+    ``rungs`` is an ordered sequence of ``(rung_name, thunk)`` pairs —
+    conventionally a suffix of :data:`DEFAULT_LADDER`.  Quarantined
+    rungs are skipped without retrying; a rung that fails with a
+    classified error is quarantined for this ``(namespace, rung,
+    shape_key)`` and the next rung runs.  Unclassified exceptions
+    propagate immediately.
+
+    Under ``REPRO_STRICT=1`` a degradation whose causes were not all
+    *benign* raises :class:`StrictFallbackError` instead of silently
+    serving a slower rung.  Benign causes: injected faults (the fault
+    harness is exercising the ladder on purpose) and
+    :class:`VmemBudgetError` (a deterministic capacity decision — the
+    fused plan not fitting VMEM is the same planned degradation the old
+    ``fuse=None`` auto-select performed silently, not platform
+    breakage).  Raises :class:`FallbackError` when every rung is
+    exhausted.
+    """
+    reg = registry if registry is not None else _REGISTRY
+    call = inject.begin_call(namespace)
+    failures = []
+    degraded = False
+    benign_only = True
+    for rung, thunk in rungs:
+        rec = reg.get_quarantine(namespace, rung, shape_key)
+        if rec is not None:
+            degraded = True
+            benign_only = benign_only and (rec.injected or rec.planned)
+            continue
+        try:
+            poison = inject.check(namespace, rung, call)
+            out = thunk()
+            if poison is not None:
+                out = poison(out)
+        except Exception as exc:  # noqa: BLE001 — classified below
+            kind = classify_failure(exc)
+            if kind is None:
+                raise
+            injected = isinstance(exc, InjectedFault)
+            planned = isinstance(exc, VmemBudgetError)
+            reg.quarantine(
+                namespace,
+                rung,
+                shape_key,
+                kind,
+                injected=injected,
+                planned=planned,
+                error=exc,
+            )
+            degraded = True
+            benign_only = benign_only and (injected or planned)
+            failures.append((rung, kind, exc))
+            continue
+        reg.record_served(namespace, rung, degraded=degraded)
+        if (
+            degraded
+            and strict_mode()
+            and not benign_only
+            and not inject.injection_active()
+        ):
+            raise StrictFallbackError(
+                f"REPRO_STRICT: namespace {namespace!r} "
+                f"(shape {shape_key!r}) degraded to rung {rung!r}; "
+                f"failures: "
+                + "; ".join(f"{r}:{k}: {e}" for r, k, e in failures[:3])
+            )
+        return out
+    last = failures[-1][2] if failures else None
+    raise FallbackError(
+        f"every rung failed for namespace {namespace!r} "
+        f"(shape {shape_key!r}): "
+        + "; ".join(f"{r}:{k}" for r, k, _ in failures)
+    ) from last

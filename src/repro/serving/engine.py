@@ -39,11 +39,22 @@ class Request:
     uid: int
     prompt: np.ndarray  # (S,) int32
     max_new_tokens: int = 16
+    # per-request latency budget, seconds from submission; None = no budget.
+    # Overrun waiting requests are shed before prefill; overrun live decodes
+    # retire at the next step boundary.  Either way status = "timed_out".
+    deadline_s: Optional[float] = None
     # filled by the engine:
+    status: str = "pending"  # pending | completed | timed_out
     output: Optional[List[int]] = None
     submitted_at: float = 0.0
     first_token_at: float = 0.0
     done_at: float = 0.0
+
+    def past_deadline(self, now: float) -> bool:
+        return (
+            self.deadline_s is not None
+            and now - self.submitted_at > self.deadline_s
+        )
 
 
 class ServingEngine:
@@ -70,9 +81,49 @@ class ServingEngine:
         self.max_seq = max_seq
         self.backend = gemm_backend
 
+        self._jit()
+        self._uid = 0
+
+    def _jit(self) -> None:
         self._prefill = jax.jit(self._prefill_impl)
         self._decode = jax.jit(self._decode_impl)
-        self._uid = 0
+
+    # namespaces a compiled engine program may have routed through the
+    # fallback ladder — what the runtime-failure path quarantines wholesale
+    _LADDER_NAMESPACES = (
+        "gemm", "glu", "grouped", "grouped_glu", "attn_fwd", "attn_decode",
+    )
+
+    def _run_healed(self, which: str, *args):
+        """Run a jitted program; on a *classified* failure quarantine the
+        Pallas rungs of every namespace this engine routes (shape ``None``
+        = whole rung), drop the jit caches so the next trace picks the
+        fallback rungs, and retry once.  Unclassified errors propagate —
+        self-healing covers platform breakage, not bugs."""
+        from repro.robust import PALLAS_RUNGS, classify_failure, get_registry
+        from repro.robust.inject import InjectedFault
+
+        try:
+            return getattr(self, which)(self.params, *args)
+        except Exception as exc:  # noqa: BLE001 — classified below
+            kind = classify_failure(exc)
+            if kind is None:
+                raise
+            reg = get_registry()
+            injected = isinstance(exc, InjectedFault)
+            for ns in self._LADDER_NAMESPACES:
+                for rung in PALLAS_RUNGS:
+                    reg.quarantine(
+                        ns, rung, None, kind, injected=injected, error=exc
+                    )
+            self._jit()  # drop caches: the retry re-traces on healthy rungs
+            return getattr(self, which)(self.params, *args)
+
+    def degradation_report(self) -> Dict[str, Any]:
+        """Health-registry summary for the namespaces this engine serves."""
+        from repro.robust import degradation_report as _report
+
+        return _report(namespaces=self._LADDER_NAMESPACES)
 
     # ---------------- warmup / tuning ----------------
 
@@ -231,7 +282,12 @@ class ServingEngine:
 
     # ---------------- serving loop ----------------
 
-    def submit_many(self, prompts: List[np.ndarray], max_new_tokens: int = 16) -> List[Request]:
+    def submit_many(
+        self,
+        prompts: List[np.ndarray],
+        max_new_tokens: int = 16,
+        deadline_s: Optional[float] = None,
+    ) -> List[Request]:
         reqs = []
         for p in prompts:
             self._uid += 1
@@ -241,6 +297,7 @@ class ServingEngine:
                     prompt=np.asarray(p, np.int32),
                     max_new_tokens=max_new_tokens,
                     submitted_at=time.perf_counter(),
+                    deadline_s=deadline_s,
                 )
             )
         return reqs
@@ -251,11 +308,30 @@ class ServingEngine:
         Requests of equal prompt length are grouped into prefill batches (a
         production engine would pad/bucket; grouping keeps the example free
         of padding logic); decode proceeds for all live slots jointly and
-        retired slots are immediately refilled from the queue."""
+        retired slots are immediately refilled from the queue.
+
+        Per-request ``deadline_s`` budgets are enforced at two points:
+        waiting requests past their deadline are *shed* before prefill
+        (overload never spends compute on a request that already missed),
+        and live decodes past their deadline retire at the next step
+        boundary — both with ``status="timed_out"``."""
         waiting = list(requests)
         results: List[Request] = []
 
+        def shed_overdue() -> None:
+            now = time.perf_counter()
+            for r in [r for r in waiting if r.past_deadline(now)]:
+                waiting.remove(r)
+                r.status = "timed_out"
+                r.done_at = now
+                if r.output is None:
+                    r.output = []
+                results.append(r)
+
         while waiting:
+            shed_overdue()
+            if not waiting:
+                break
             # group up to max_batch same-length prompts
             length = len(waiting[0].prompt)
             batch = [r for r in waiting if len(r.prompt) == length][: self.max_batch]
@@ -263,7 +339,7 @@ class ServingEngine:
                 waiting.remove(r)
 
             tokens = jnp.asarray(np.stack([r.prompt for r in batch]))
-            logits, cache = self._prefill(self.params, tokens)
+            logits, cache = self._run_healed("_prefill", tokens)
             now = time.perf_counter()
             next_tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
             for r in batch:
@@ -275,9 +351,16 @@ class ServingEngine:
 
             steps = max(r.max_new_tokens for r in batch) - 1
             for _ in range(steps):
+                now = time.perf_counter()
+                for i in list(live):
+                    r = batch[i]
+                    if r.past_deadline(now):
+                        r.status = "timed_out"
+                        r.done_at = now
+                        live.remove(i)
                 if not live:
                     break
-                logits, cache = self._decode(self.params, next_tok, cache)
+                logits, cache = self._run_healed("_decode", next_tok, cache)
                 next_tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
                 still = []
                 for i in live:
@@ -289,6 +372,7 @@ class ServingEngine:
                         eos_id is not None and tok == eos_id
                     )
                     if finished:
+                        r.status = "completed"
                         r.done_at = time.perf_counter()
                     else:
                         still.append(i)
@@ -296,6 +380,7 @@ class ServingEngine:
             now = time.perf_counter()
             for r in batch:
                 if not r.done_at:
+                    r.status = "completed"
                     r.done_at = now
             results.extend(batch)
         return results
@@ -304,13 +389,31 @@ class ServingEngine:
 
     @staticmethod
     def latency_report(requests: List[Request]) -> Dict[str, float]:
-        ttft = [r.first_token_at - r.submitted_at for r in requests]
+        """Latency summary; zeros on an empty list (a shed-everything
+        overload window is a valid report, not a crash).  Requests shed
+        before serving (``first_token_at == 0``) are excluded from the
+        TTFT mean and counted in ``n_timed_out``."""
+        if not requests:
+            return {
+                "n_requests": 0,
+                "n_timed_out": 0,
+                "ttft_mean_s": 0.0,
+                "latency_mean_s": 0.0,
+                "tokens_total": 0,
+                "tokens_per_s": 0.0,
+            }
+        ttft = [
+            r.first_token_at - r.submitted_at
+            for r in requests
+            if r.first_token_at > 0
+        ]
         total = [r.done_at - r.submitted_at for r in requests]
         n_tok = sum(len(r.output or []) for r in requests)
         wall = max(r.done_at for r in requests) - min(r.submitted_at for r in requests)
         return {
             "n_requests": len(requests),
-            "ttft_mean_s": float(np.mean(ttft)),
+            "n_timed_out": sum(1 for r in requests if r.status == "timed_out"),
+            "ttft_mean_s": float(np.mean(ttft)) if ttft else 0.0,
             "latency_mean_s": float(np.mean(total)),
             "tokens_total": n_tok,
             "tokens_per_s": n_tok / wall if wall > 0 else float("inf"),

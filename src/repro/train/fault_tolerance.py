@@ -17,6 +17,8 @@ Components:
 from __future__ import annotations
 
 import dataclasses
+import inspect
+import math
 import time
 from typing import Any, Callable, Dict, List, Optional
 
@@ -25,7 +27,12 @@ import numpy as np
 
 from repro.train.checkpoint import CheckpointManager
 
-__all__ = ["StragglerEvent", "StepWatchdog", "TrainLoop"]
+__all__ = [
+    "NonfinitePolicy",
+    "StragglerEvent",
+    "StepWatchdog",
+    "TrainLoop",
+]
 
 
 class StragglerEvent(RuntimeError):
@@ -39,15 +46,32 @@ class StragglerEvent(RuntimeError):
 
 
 class StepWatchdog:
-    """Rolling-median step-time monitor."""
+    """Rolling-median step-time monitor.
 
-    def __init__(self, threshold: float = 5.0, window: int = 50, min_samples: int = 5):
+    The first ``warmup_steps`` observations are discarded entirely — jit
+    compilation makes early steps orders of magnitude slower than steady
+    state, and letting them into the rolling window both inflates the
+    median (missing real stragglers) and flags the first post-compile
+    step as one."""
+
+    def __init__(
+        self,
+        threshold: float = 5.0,
+        window: int = 50,
+        min_samples: int = 5,
+        warmup_steps: int = 0,
+    ):
         self.threshold = threshold
         self.window = window
         self.min_samples = min_samples
+        self.warmup_steps = warmup_steps
+        self._seen = 0
         self._times: List[float] = []
 
     def observe(self, step: int, elapsed: float) -> Optional[StragglerEvent]:
+        self._seen += 1
+        if self._seen <= self.warmup_steps:
+            return None
         ev = None
         if len(self._times) >= self.min_samples:
             med = float(np.median(self._times))
@@ -57,6 +81,32 @@ class StepWatchdog:
         if len(self._times) > self.window:
             self._times.pop(0)
         return ev
+
+
+@dataclasses.dataclass(frozen=True)
+class NonfinitePolicy:
+    """Escalating response to consecutive nonfinite-loss steps.
+
+    The update-side guardrail (`optim.adamw.clip_scale`'s scale-0
+    sentinel) already keeps a nonfinite gradient out of params and
+    moments; this policy decides what the *loop* does about the streak:
+
+      streak 1..skip_steps                  log and continue (skip)
+      streak  ..skip_steps+backoff_steps    multiply lr by ``lr_backoff``
+                                            each further nonfinite step
+      beyond                                roll back to the last committed
+                                            checkpoint and skip the data
+                                            stream ahead past the poisoned
+                                            window
+
+    A finite loss resets the streak and restores the full lr.  More than
+    ``max_rollbacks`` rollbacks raise — a deterministic divergence is a
+    bug, not an infra fault."""
+
+    skip_steps: int = 2
+    backoff_steps: int = 3
+    lr_backoff: float = 0.5
+    max_rollbacks: int = 2
 
 
 @dataclasses.dataclass
@@ -72,6 +122,13 @@ class TrainLoop:
     ckpt: CheckpointManager
     watchdog: Optional[StepWatchdog] = None
     on_straggler: str = "log"  # log | checkpoint | raise
+    nonfinite_policy: Optional[NonfinitePolicy] = None
+
+    def _supports_lr_scale(self) -> bool:
+        try:
+            return "lr_scale" in inspect.signature(self.train_step).parameters
+        except (TypeError, ValueError):
+            return False
 
     def run(
         self,
@@ -93,17 +150,89 @@ class TrainLoop:
                 step = got_step
                 logger(f"[ft] resumed from checkpoint at step {step}")
 
+        policy = self.nonfinite_policy
+        has_lr_scale = policy is not None and self._supports_lr_scale()
+        streak = 0  # consecutive nonfinite-loss steps
+        lr_scale = 1.0
+        rollbacks = 0
+        # rollback skip-ahead: batch_fn(step + data_offset) — replaying the
+        # checkpointed steps on the batches that already poisoned them would
+        # deterministically diverge again
+        data_offset = 0
+
         history = []
         while step < num_steps:
             if fail_at is not None and step == fail_at:
                 raise KeyboardInterrupt(f"simulated preemption at step {step}")
             t0 = time.perf_counter()
-            batch = self.batch_fn(step)
-            params, opt_state, metrics = self.train_step(params, opt_state, batch)
+            batch = self.batch_fn(step + data_offset)
+            if has_lr_scale and lr_scale != 1.0:
+                params, opt_state, metrics = self.train_step(
+                    params, opt_state, batch, lr_scale=lr_scale
+                )
+            else:
+                params, opt_state, metrics = self.train_step(params, opt_state, batch)
             loss = float(metrics["loss"])
             elapsed = time.perf_counter() - t0
             step += 1
             history.append((step, loss))
+
+            if policy is not None:
+                if not math.isfinite(loss):
+                    streak += 1
+                    if streak <= policy.skip_steps:
+                        logger(
+                            f"[ft] nonfinite loss at step {step} "
+                            f"(streak {streak}): update skipped"
+                        )
+                    elif streak <= policy.skip_steps + policy.backoff_steps:
+                        if has_lr_scale:
+                            lr_scale *= policy.lr_backoff
+                            logger(
+                                f"[ft] nonfinite streak {streak}: "
+                                f"lr backoff to {lr_scale:g}"
+                            )
+                        else:
+                            logger(
+                                f"[ft] nonfinite streak {streak}: train_step "
+                                "has no lr_scale hook, continuing to skip"
+                            )
+                    else:
+                        rollbacks += 1
+                        if rollbacks > policy.max_rollbacks:
+                            raise RuntimeError(
+                                f"nonfinite loss persisted through "
+                                f"{policy.max_rollbacks} rollbacks "
+                                f"(step {step}); deterministic divergence "
+                                "is a bug, not an infra fault"
+                            )
+                        got_step, tree = self.ckpt.resume(
+                            target={"params": params, "opt": opt_state}
+                        )
+                        if got_step is not None:
+                            data_offset += step - got_step
+                            params, opt_state = tree["params"], tree["opt"]
+                            logger(
+                                f"[ft] nonfinite streak {streak}: rolled "
+                                f"back {step} -> {got_step}, data stream "
+                                f"skipped ahead by {data_offset}"
+                            )
+                            step = got_step
+                        else:
+                            logger(
+                                "[ft] nonfinite streak persists and no "
+                                "checkpoint to roll back to; continuing "
+                                "with skipped updates"
+                            )
+                        streak = 0
+                        lr_scale = 1.0
+                else:
+                    if streak or lr_scale != 1.0:
+                        logger(f"[ft] recovered: finite loss at step {step}")
+                    streak = 0
+                    lr_scale = 1.0
+
+            saved_this_step = False
             if self.watchdog is not None:
                 ev = self.watchdog.observe(step, elapsed)
                 if ev is not None:
@@ -118,7 +247,11 @@ class TrainLoop:
                         self.ckpt.maybe_save(
                             step, {"params": params, "opt": opt_state}, force=True
                         )
-            self.ckpt.maybe_save(step, {"params": params, "opt": opt_state})
+                        saved_this_step = True
+            if not saved_this_step:
+                # a straggler-forced save above already committed this step;
+                # the periodic path would write the same tree twice
+                self.ckpt.maybe_save(step, {"params": params, "opt": opt_state})
             if log_every and step % log_every == 0:
                 logger(f"[train] step={step} loss={loss:.4f} dt={elapsed*1e3:.1f}ms")
 

@@ -22,6 +22,7 @@ from jax import lax
 from repro.core.attention_backend import attention_backend as _attn_backend_ctx
 from repro.core.gemm_backend import gemm_backend as _gemm_backend_ctx
 from repro.optim.adamw import (
+    HYP_LR,
     AdamWConfig,
     adamw_init,
     adamw_leaf_update,
@@ -76,8 +77,17 @@ def make_train_step(
     fused_optimizer: bool = False,
     stochastic_round: bool = True,
     fused_filter: Optional[Callable[[str, Any], bool]] = None,
+    nonfinite_guard: bool = True,
 ) -> Callable:
     """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``nonfinite_guard`` (default on) makes a NaN/Inf global grad norm
+    bind the update scale to the reserved 0 sentinel — an *exact* skip:
+    moments, master, and params come back bitwise unchanged (f32 / non-SR
+    params; under bf16+SR the skipped W is the deterministic cast of the
+    unchanged master).  The returned step also accepts an optional
+    ``lr_scale`` keyword (None = 1.0) multiplying the schedule lr — the
+    `TrainLoop` nonfinite-recovery backoff hook.
 
     ``gemm_backend`` pins the projection-GEMM backend for the traced step
     ("xla" | "sfc_pallas" | "sfc_reference"); None inherits the caller's
@@ -120,13 +130,14 @@ def make_train_step(
             model, opt_cfg,
             remat=remat, gemm_backend=gemm_backend, attn_impl=attn_impl,
             stochastic_round=stochastic_round, fused_filter=fused_filter,
+            nonfinite_guard=nonfinite_guard,
         )
 
     def loss_fn(params, batch):
         with _backend_ctx(gemm_backend, attn_impl):
             return model.loss(params, batch, remat=remat)
 
-    def train_step(params, opt_state, batch):
+    def train_step(params, opt_state, batch, *, lr_scale=None):
         if microbatches == 1:
             loss, grads = jax.value_and_grad(loss_fn)(params, batch)
         else:
@@ -145,7 +156,7 @@ def make_train_step(
             grads = jax.tree.map(lambda g: g / microbatches, grads)
 
         new_params, new_state, opt_metrics = adamw_update(
-            opt_cfg, grads, opt_state, params
+            opt_cfg, grads, opt_state, params, lr_scale=lr_scale
         )
         metrics = {"loss": loss, **opt_metrics}
         return new_params, new_state, metrics
@@ -172,6 +183,7 @@ def _make_fused_train_step(
     attn_impl: Optional[str],
     stochastic_round: bool,
     fused_filter,
+    nonfinite_guard: bool = True,
 ) -> Callable:
     """Grad-and-update train step: routed weights are wrapped in
     `FusedParam` nodes, `jax.value_and_grad` returns their *applied AdamW
@@ -202,7 +214,7 @@ def _make_fused_train_step(
         ):
             return model.loss(wrapped, batch, remat=remat)
 
-    def train_step(params, opt_state, batch):
+    def train_step(params, opt_state, batch, *, lr_scale=None):
         step = opt_state["step"] + 1
         key = jax.tree_util.tree_structure(params)
         if key not in probe_cache:
@@ -213,6 +225,10 @@ def _make_fused_train_step(
 
         def backward(scale):
             hyper = pack_adamw_hyper(opt_cfg, step, scale)
+            if lr_scale is not None:
+                hyper = hyper.at[HYP_LR].multiply(
+                    jnp.asarray(lr_scale, jnp.float32)
+                )
             wrapped = wrap_routed(
                 params, opt_state["master"], opt_state["mu"],
                 opt_state["nu"], hyper, routed,
@@ -238,12 +254,18 @@ def _make_fused_train_step(
                 )
         gnorm = jnp.sqrt(sq_total)
 
-        if math.isfinite(opt_cfg.clip_norm):
+        if math.isfinite(opt_cfg.clip_norm) or nonfinite_guard:
             # phase 2 — update pass with the exact clip scale.  Only the
             # TN update flushes differ from phase 1 (the scale is a
             # late-bound scalar in the hyper vector); the forward and the
             # NT/dA chain are identical launches and CSE away under jit.
-            scale = clip_scale(opt_cfg, gnorm)
+            # The nonfinite guard rides the same late-bound scalar: a
+            # NaN/Inf gnorm binds scale 0 and the flush (and
+            # `adamw_leaf_update` for unrouted leaves) skips exactly —
+            # with an infinite clip_norm the guard alone forces the
+            # two-phase form, since phase 1's cotangents were computed
+            # at scale=1 and would apply a poisoned update.
+            scale = clip_scale(opt_cfg, gnorm, guard_nonfinite=nonfinite_guard)
             _, cots_upd = backward(scale)
             u_flat = flat_c(cots_upd)
         else:
@@ -256,6 +278,8 @@ def _make_fused_train_step(
         nu_flat = jax.tree.leaves(opt_state["nu"])
 
         lr, b1c, b2c = adamw_scalars(opt_cfg, step)
+        if lr_scale is not None:
+            lr = lr * jnp.asarray(lr_scale, jnp.float32)
         new_p, new_mst, new_mu, new_nu = [], [], [], []
         for p, g, u, mst, m, v in zip(
             p_flat, c_flat, u_flat, mst_flat, mu_flat, nu_flat

@@ -20,6 +20,15 @@ can be checked in / shipped with a model.  Writes are atomic
 (tmp + rename) and the read-merge-replace critical section runs under an
 ``fcntl`` advisory lock (sidecar ``<path>.lock`` file), so concurrent
 tuner processes never lose the slower writer's entries.
+
+Robustness: a corrupted/truncated cache file never crashes knob
+resolution — it is quarantined to ``<path>.corrupt-<ts>`` (warned once)
+and the cache rebuilds from empty.  A ``__meta__`` entry stamps the
+kernel version that produced the entries; on mismatch the persisted
+knobs and platform constants are stale (the kernels they were measured
+against no longer exist) and are dropped so tuning/calibration re-runs.
+``__health__|…`` entries round-trip the fallback-ladder quarantine state
+(`repro.robust.HealthRegistry`) across processes.
 """
 
 from __future__ import annotations
@@ -28,6 +37,8 @@ import dataclasses
 import json
 import os
 import tempfile
+import time
+import warnings
 from pathlib import Path
 from typing import Dict, Optional, Tuple
 
@@ -42,7 +53,29 @@ __all__ = [
     "shape_bucket",
     "default_cache_path",
     "detect_device_kind",
+    "current_kernel_version",
 ]
+
+META_KEY = "__meta__"
+HEALTH_PREFIX = "__health__|"
+
+# paths already warned about this process (corrupt / stale) — warn once
+_WARNED_CORRUPT: set = set()
+_WARNED_STALE: set = set()
+
+
+def current_kernel_version() -> int:
+    """Kernel-generation stamp persisted entries must match.
+
+    Sourced from `repro.kernels.sfc_gemm.KERNEL_VERSION` (bumped when a
+    kernel change invalidates measured knobs / calibration constants);
+    0 when the kernels are unimportable (pure cache tooling)."""
+    try:
+        from repro.kernels.sfc_gemm import KERNEL_VERSION
+
+        return int(KERNEL_VERSION)
+    except Exception:
+        return 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -161,13 +194,57 @@ class KnobCache:
 
     # ---------------- storage ----------------
 
+    def _quarantine_corrupt(self, err: Exception) -> None:
+        """Move an unreadable cache file aside so it never crashes again."""
+        dest = f"{self.path}.corrupt-{int(time.time())}"
+        try:
+            os.replace(self.path, dest)
+        except OSError:
+            dest = "<unmovable>"
+        if self.path not in _WARNED_CORRUPT:
+            _WARNED_CORRUPT.add(self.path)
+            warnings.warn(
+                f"knob cache {self.path} is corrupt ({err}); quarantined "
+                f"to {dest} and rebuilding from empty",
+                RuntimeWarning,
+                stacklevel=3,
+            )
+
+    def _check_version(self, raw: Dict[str, Dict]) -> Dict[str, Dict]:
+        """Drop entries stamped by a different kernel generation.
+
+        A missing stamp is legacy (pre-versioning files stay valid); a
+        *mismatched* stamp means the kernels the knobs were measured
+        against changed — re-tune/re-calibrate rather than trust them.
+        """
+        cur = current_kernel_version()
+        meta = raw.get(META_KEY)
+        stamped = meta.get("kernel_version") if isinstance(meta, dict) else None
+        if stamped is not None and int(stamped) != cur and len(raw) > 1:
+            if self.path not in _WARNED_STALE:
+                _WARNED_STALE.add(self.path)
+                warnings.warn(
+                    f"knob cache {self.path} was written by kernel "
+                    f"version {stamped} (current {cur}); dropping stale "
+                    f"entries — re-tune to repopulate",
+                    RuntimeWarning,
+                    stacklevel=3,
+                )
+            raw = {}
+        raw[META_KEY] = {"kernel_version": cur}
+        return raw
+
     def _load(self) -> Dict[str, Dict]:
         if self._entries is None:
             try:
                 with open(self.path) as f:
-                    self._entries = dict(json.load(f))
-            except (OSError, ValueError):
-                self._entries = {}
+                    raw = dict(json.load(f))
+            except OSError:
+                raw = {}
+            except ValueError as e:
+                self._quarantine_corrupt(e)
+                raw = {}
+            self._entries = self._check_version(raw)
         return self._entries
 
     def _locked(self):
@@ -206,10 +283,26 @@ class KnobCache:
             try:
                 with open(self.path) as f:
                     on_disk = dict(json.load(f))
-                on_disk.update(entries)
-                entries = on_disk
-            except (OSError, ValueError):
+                meta = on_disk.get(META_KEY)
+                stamped = (
+                    meta.get("kernel_version")
+                    if isinstance(meta, dict)
+                    else None
+                )
+                stale = (
+                    stamped is not None
+                    and int(stamped) != current_kernel_version()
+                )
+                if not stale:
+                    on_disk.update(entries)
+                    entries = on_disk
+            except OSError:
                 pass
+            except ValueError as e:
+                # corrupt file under the lock: quarantine it so the
+                # replace below starts a clean generation
+                self._quarantine_corrupt(e)
+            entries[META_KEY] = {"kernel_version": current_kernel_version()}
             self._entries = entries
             fd, tmp = tempfile.mkstemp(dir=d, suffix=".json.tmp")
             try:
@@ -260,6 +353,21 @@ class KnobCache:
         self._load()[self.platform_key(backend, self.device)] = dict(constants)
         self._save()
 
+    def get_health(self) -> Dict[str, Dict]:
+        """Persisted fallback-ladder quarantine records (key -> dict)."""
+        return {
+            k[len(HEALTH_PREFIX):]: dict(v)
+            for k, v in self._load().items()
+            if k.startswith(HEALTH_PREFIX) and isinstance(v, dict)
+        }
+
+    def put_health(self, state: Dict[str, Dict]) -> None:
+        """Persist `HealthRegistry.export_state()` quarantine records."""
+        entries = self._load()
+        for key, rec in state.items():
+            entries[HEALTH_PREFIX + key] = dict(rec)
+        self._save()
+
     def clear(self) -> None:
         self._entries = {}
         try:
@@ -268,4 +376,10 @@ class KnobCache:
             pass
 
     def __len__(self) -> int:
-        return len(self._load())
+        # knob + platform entries only: the version stamp and health
+        # records are bookkeeping, not tuning results
+        return sum(
+            1
+            for k in self._load()
+            if k != META_KEY and not k.startswith(HEALTH_PREFIX)
+        )

@@ -582,4 +582,18 @@ def tune_gemm(
             source="analytical",
         )
     cache.put(m, n, k, dtype, backend, best, op)
+    if best.source != "analytical":
+        # a confirmed winner vouches for the kernel path again: lift this
+        # namespace's ladder quarantines so the Pallas rung is retried with
+        # the fresh knobs instead of staying degraded forever.  (The
+        # analytical fall-back — every measurement failed — vouches for
+        # nothing.)
+        from repro.robust import get_registry
+
+        cleared = get_registry().clear(namespace=op)
+        if cleared:
+            print(
+                f"[tune] {op}: re-tune lifted {cleared} ladder "
+                "quarantine(s)"
+            )
     return best

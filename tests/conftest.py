@@ -19,6 +19,38 @@ if "--xla_backend_optimization_level" not in os.environ.get("XLA_FLAGS", ""):
     ).strip()
 
 
+@pytest.fixture(autouse=True)
+def fresh_health_registry():
+    """Reset the fallback-ladder health registry around every test.
+
+    A quarantine leaking between tests would silently reroute later
+    kernel launches onto the jnp fallback rungs — which introduce
+    `dot_general`, breaking the zero-dot_general jaxpr gates — so
+    isolation here is load-bearing, not hygiene."""
+    from repro.robust import get_registry
+
+    get_registry().reset()
+    yield
+    get_registry().reset()
+
+
+def pytest_sessionfinish(session, exitstatus):
+    """With REPRO_DEGRADATION_REPORT=<path> set, write the final health
+    registry as JSON — the strict CI job uploads it as an artifact."""
+    path = os.environ.get("REPRO_DEGRADATION_REPORT")
+    if not path:
+        return
+    try:
+        import json
+
+        from repro.robust import degradation_report
+
+        with open(path, "w") as f:
+            json.dump(degradation_report(), f, indent=2, sort_keys=True)
+    except Exception as exc:  # never fail the run over the artifact
+        print(f"[conftest] degradation report not written: {exc}")
+
+
 @pytest.fixture(autouse=True, scope="session")
 def isolated_tune_cache(tmp_path_factory):
     """Point the SFC knob cache at a per-session temp file so test runs never

@@ -1,0 +1,302 @@
+"""Nonfinite-update guardrails: the scale-0 skip sentinel end-to-end, the
+lr_scale backoff hook, and the TrainLoop streak policy."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gemm_backend as gb
+from repro.optim.adamw import (
+    AdamWConfig,
+    adamw_init,
+    adamw_leaf_update,
+    adamw_update,
+    clip_scale,
+)
+from repro.train.checkpoint import CheckpointManager
+from repro.train.fault_tolerance import NonfinitePolicy, StepWatchdog, TrainLoop
+from repro.train.step import make_train_step
+
+
+def _rand(*shape, seed=0):
+    return jnp.asarray(
+        np.random.RandomState(seed).randn(*shape).astype(np.float32)
+    )
+
+
+# ---------------------------------------------------------------------------
+# scale-0 sentinel, layer by layer
+# ---------------------------------------------------------------------------
+
+
+def test_clip_scale_binds_nonfinite_norm_to_zero():
+    cfg = AdamWConfig(clip_norm=1.0)
+    assert float(clip_scale(cfg, jnp.float32(2.0))) == pytest.approx(0.5)
+    assert float(clip_scale(cfg, jnp.float32(0.5))) == 1.0
+    for bad in (jnp.float32(np.nan), jnp.float32(np.inf)):
+        assert float(clip_scale(cfg, bad)) == 0.0
+    # with the guard off a NaN norm propagates into the scale (legacy)
+    assert math.isnan(
+        float(clip_scale(cfg, jnp.float32(np.nan), guard_nonfinite=False))
+    )
+
+
+def test_leaf_update_scale_zero_is_bitwise_noop():
+    g = jnp.full((8,), np.nan, jnp.float32)
+    mu, nu, mst = _rand(8, seed=1), jnp.abs(_rand(8, seed=2)), _rand(8, seed=3)
+    mu_n, nu_n, mst_n = adamw_leaf_update(
+        g, mu, nu, mst,
+        lr=1e-2, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+        b1c=0.1, b2c=0.05, scale=jnp.float32(0.0),
+    )
+    for old, new in ((mu, mu_n), (nu, nu_n), (mst, mst_n)):
+        assert np.asarray(old).tobytes() == np.asarray(new).tobytes()
+
+
+def test_unfused_update_skips_exactly_on_nan_grads():
+    cfg = AdamWConfig(lr=1e-2)
+    params = {"w": _rand(4, 6, seed=0)}
+    state = adamw_init(params)
+    grads = {"w": jnp.full((4, 6), np.nan, jnp.float32)}
+    new_params, new_state, metrics = adamw_update(cfg, grads, state, params)
+    assert not math.isfinite(float(metrics["grad_norm"]))
+    assert int(new_state["step"]) == 1  # step advances; update is skipped
+    assert (
+        np.asarray(new_params["w"]).tobytes()
+        == np.asarray(params["w"]).tobytes()
+    )
+    for slot in ("mu", "nu", "master"):
+        assert (
+            np.asarray(new_state[slot]["w"]).tobytes()
+            == np.asarray(state[slot]["w"]).tobytes()
+        )
+
+
+def test_unfused_update_lr_scale_hook():
+    cfg = AdamWConfig(lr=1e-2, schedule="constant", warmup_steps=0)
+    params = {"w": _rand(4, 6, seed=0)}
+    grads = {"w": _rand(4, 6, seed=1)}
+    p_half, _, _ = adamw_update(
+        cfg, grads, adamw_init(params), params, lr_scale=0.5
+    )
+    cfg2 = AdamWConfig(lr=0.5e-2, schedule="constant", warmup_steps=0)
+    p_ref, _, _ = adamw_update(cfg2, grads, adamw_init(params), params)
+    np.testing.assert_allclose(
+        np.asarray(p_half["w"]), np.asarray(p_ref["w"]), rtol=1e-6
+    )
+
+
+# ---------------------------------------------------------------------------
+# train-step level (fused and unfused): a NaN loss leaves everything
+# bitwise unchanged except the step counter
+# ---------------------------------------------------------------------------
+
+
+class _MiniModel:
+    def init(self, key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "w1": (jax.random.normal(k1, (16, 32)) * 0.1).astype(jnp.float32),
+            "w2": (jax.random.normal(k2, (32, 8)) * 0.1).astype(jnp.float32),
+            "scale": jnp.ones((16,), jnp.float32),
+        }
+
+    def loss(self, params, batch, *, remat="none"):
+        x = batch["x"] * params["scale"]
+        h = gb.matmul(x, params["w1"], activation="gelu")
+        y = gb.matmul(h, params["w2"])
+        return jnp.mean((y - batch["y"]) ** 2)
+
+
+@pytest.fixture()
+def mini():
+    model = _MiniModel()
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"x": _rand(6, 16, seed=3), "y": _rand(6, 8, seed=4)}
+    return model, params, batch
+
+
+def _assert_trees_bitwise(a, b):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert np.asarray(la).tobytes() == np.asarray(lb).tobytes()
+
+
+@pytest.mark.parametrize("fused", [False, True], ids=["unfused", "fused"])
+def test_nonfinite_step_is_bitwise_noop(mini, fused):
+    model, params, batch = mini
+    cfg = AdamWConfig(lr=1e-2, total_steps=10, warmup_steps=1)
+    step = make_train_step(
+        model, cfg, remat="none", gemm_backend="sfc_pallas",
+        fused_optimizer=fused, stochastic_round=False,
+    )
+    state = adamw_init(params)
+    nan_batch = {
+        "x": batch["x"],
+        "y": batch["y"].at[0, 0].set(np.nan),
+    }
+    new_params, new_state, metrics = step(params, state, nan_batch)
+    assert not math.isfinite(float(metrics["loss"]))
+    assert int(new_state["step"]) == int(state["step"]) + 1
+    _assert_trees_bitwise(new_params, params)
+    for slot in ("mu", "nu", "master"):
+        _assert_trees_bitwise(new_state[slot], state[slot])
+    # and a healthy batch through the same traced step still updates
+    p2, s2, m2 = step(params, state, batch)
+    assert math.isfinite(float(m2["loss"]))
+    assert np.any(np.asarray(p2["w1"]) != np.asarray(params["w1"]))
+
+
+def test_nonfinite_guard_can_be_disabled(mini):
+    model, params, batch = mini
+    cfg = AdamWConfig(lr=1e-2, total_steps=10, warmup_steps=1)
+    # the guard knob lives on the fused step (the unfused path guards
+    # unconditionally inside adamw_update)
+    step = make_train_step(
+        model, cfg, remat="none", gemm_backend="xla",
+        fused_optimizer=True, nonfinite_guard=False,
+    )
+    nan_batch = {"x": batch["x"], "y": batch["y"].at[0, 0].set(np.nan)}
+    new_params, _, _ = step(params, adamw_init(params), nan_batch)
+    assert np.isnan(np.asarray(new_params["w1"])).any()
+
+
+def test_train_step_lr_scale_kwarg(mini):
+    model, params, batch = mini
+    cfg = AdamWConfig(lr=1e-2, total_steps=10, warmup_steps=1)
+    for fused in (False, True):
+        step = make_train_step(
+            model, cfg, remat="none", gemm_backend="sfc_pallas",
+            fused_optimizer=fused, stochastic_round=False,
+        )
+        p_full, _, _ = step(params, adamw_init(params), batch)
+        p_zero, _, _ = step(params, adamw_init(params), batch, lr_scale=0.0)
+        # lr_scale=0: moments still accumulate but weights do not move
+        assert np.any(np.asarray(p_full["w1"]) != np.asarray(params["w1"]))
+        np.testing.assert_allclose(
+            np.asarray(p_zero["w1"]), np.asarray(params["w1"]), atol=1e-7
+        )
+
+
+# ---------------------------------------------------------------------------
+# watchdog warmup + TrainLoop streak policy
+# ---------------------------------------------------------------------------
+
+
+def test_watchdog_warmup_steps_excluded():
+    wd = StepWatchdog(threshold=2.0, min_samples=2, warmup_steps=2)
+    # two slow compile steps: neither recorded nor flagged
+    assert wd.observe(1, 100.0) is None
+    assert wd.observe(2, 80.0) is None
+    assert wd.observe(3, 1.0) is None
+    assert wd.observe(4, 1.0) is None
+    # a warmup-polluted median would be ~90 and never flag this straggler
+    ev = wd.observe(5, 5.0)
+    assert ev is not None and ev.median == pytest.approx(1.0)
+
+
+class _StubStep:
+    """Host train_step: finite batches bump w by 1, poisoned batches leave
+    params alone (the guard's skip), and lr_scale calls are recorded."""
+
+    def __init__(self):
+        self.lr_seen = []
+
+    def __call__(self, params, opt_state, batch, lr_scale=None):
+        self.lr_seen.append(lr_scale)
+        loss = float(batch["loss"])
+        if math.isfinite(loss):
+            params = {"w": params["w"] + 1.0}
+        return params, opt_state, {"loss": loss}
+
+
+def test_trainloop_streak_policy_rolls_back_and_skips_ahead(tmp_path):
+    stub = _StubStep()
+    poisoned = set(range(3, 10))  # data indices, not step indices
+    batch_fn = lambda i: {"loss": float("nan") if i in poisoned else 1.0}
+    ckpt = CheckpointManager(str(tmp_path), interval=1000, keep=3)
+    policy = NonfinitePolicy(
+        skip_steps=1, backoff_steps=1, lr_backoff=0.5, max_rollbacks=2
+    )
+    params = {"w": jnp.zeros((), jnp.float32)}
+    opt = {"step": jnp.zeros((), jnp.int32)}
+
+    # phase 1: three healthy steps, checkpoint committed on exit
+    loop = TrainLoop(stub, batch_fn, ckpt, nonfinite_policy=policy)
+    params, opt, _ = loop.run(
+        params, opt, num_steps=3, resume=False, log_every=0,
+        logger=lambda s: None,
+    )
+    assert float(params["w"]) == 3.0
+
+    # phase 2: resumes at step 3 straight into the poisoned data window
+    logs = []
+    params, opt, history = loop.run(
+        params, opt, num_steps=8, resume=True, log_every=0,
+        logger=logs.append,
+    )
+    # rolled back twice (each time from step 6 to the phase-1 checkpoint
+    # at step 3, advancing the data offset by 3), so the final five steps
+    # consume data indices 9..13 — four of them past the poisoned window
+    assert float(params["w"]) == 7.0
+    assert any("rolled back" in s for s in logs)
+    assert any("skipped ahead" in s for s in logs)
+    assert any("recovered" in s for s in logs)
+    # the lr backoff stage engaged before each rollback
+    assert 0.5 in stub.lr_seen
+    # final history entries are finite again
+    assert math.isfinite(history[-1][1])
+
+
+def test_trainloop_raises_after_max_rollbacks(tmp_path):
+    stub = _StubStep()
+    batch_fn = lambda i: {"loss": float("nan")}  # poisoned forever
+    ckpt = CheckpointManager(str(tmp_path), interval=1000, keep=3)
+    policy = NonfinitePolicy(
+        skip_steps=0, backoff_steps=0, lr_backoff=0.5, max_rollbacks=1
+    )
+    loop = TrainLoop(stub, batch_fn, ckpt, nonfinite_policy=policy)
+    params = {"w": jnp.zeros((), jnp.float32)}
+    opt = {"step": jnp.zeros((), jnp.int32)}
+    params, opt, _ = loop.run(
+        params, opt, num_steps=1, resume=False, log_every=0,
+        logger=lambda s: None,
+    )
+    with pytest.raises(RuntimeError, match="rollback"):
+        loop.run(
+            params, opt, num_steps=50, resume=True, log_every=0,
+            logger=lambda s: None,
+        )
+
+
+def test_trainloop_checkpoint_straggler_saves_once(tmp_path, monkeypatch):
+    """on_straggler='checkpoint' must not double-save the same step."""
+    saves = []
+    ckpt = CheckpointManager(str(tmp_path), interval=1, keep=10)
+    orig = CheckpointManager.maybe_save
+
+    def counting_save(self, step, tree, *, extra=None, force=False):
+        saves.append((step, force))
+        return orig(self, step, tree, extra=extra, force=force)
+
+    monkeypatch.setattr(CheckpointManager, "maybe_save", counting_save)
+    wd = StepWatchdog(threshold=0.0, min_samples=1, warmup_steps=0)
+    stub = _StubStep()
+    loop = TrainLoop(
+        stub, lambda i: {"loss": 1.0}, ckpt,
+        watchdog=wd, on_straggler="checkpoint",
+    )
+    params = {"w": jnp.zeros((), jnp.float32)}
+    opt = {"step": jnp.zeros((), jnp.int32)}
+    loop.run(
+        params, opt, num_steps=3, resume=False, log_every=0,
+        logger=lambda s: None,
+    )
+    per_step = {}
+    for step, _ in saves:
+        per_step[step] = per_step.get(step, 0) + 1
+    # every step (threshold 0 flags all post-min-sample steps as
+    # stragglers) saves exactly once, plus the final forced save
+    assert per_step == {1: 1, 2: 1, 3: 2}

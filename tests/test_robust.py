@@ -1,0 +1,431 @@
+"""Self-healing backend tests: fault injection, failure classification, the
+fallback ladder, rung differentials, quarantine persistence, strict mode."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import robust
+from repro.core import gemm_backend as gb
+from repro.robust import (
+    FallbackError,
+    FaultSpec,
+    HealthRegistry,
+    InjectedCompileError,
+    StrictFallbackError,
+    VmemBudgetError,
+    classify_failure,
+    fault_injection,
+    get_registry,
+    run_with_fallback,
+)
+from repro.tune.cache import KnobCache
+
+
+@pytest.fixture(autouse=True)
+def _no_ambient_strict(monkeypatch):
+    """These tests raise raw (non-injected) classified failures on purpose;
+    under an ambient REPRO_STRICT=1 run (the strict CI job) the ladder
+    would correctly escalate them.  Strict semantics are tested explicitly
+    below with monkeypatch.setenv, which overrides this."""
+    monkeypatch.delenv("REPRO_STRICT", raising=False)
+
+
+def _rand(*shape, seed=0, dtype=jnp.float32):
+    return jnp.asarray(
+        np.random.RandomState(seed).randn(*shape).astype(np.float32), dtype
+    )
+
+
+# ---------------------------------------------------------------------------
+# fault injection harness
+# ---------------------------------------------------------------------------
+
+
+def test_fault_spec_rejects_unknown_kind():
+    with pytest.raises(ValueError):
+        FaultSpec("gemm", kind="segfault")
+
+
+def test_injection_targets_namespace_and_call_index():
+    fired = []
+    spec = FaultSpec("ns_a", kind="compile", calls=(1,))
+    with fault_injection(spec):
+        for _ in range(3):
+            try:
+                run_with_fallback(
+                    "ns_a", (("sfc_pallas", lambda: "pallas"),),
+                    registry=HealthRegistry(),
+                )
+                fired.append(False)
+            except FallbackError:
+                fired.append(True)
+        # other namespaces never fault
+        assert (
+            run_with_fallback(
+                "ns_b", (("sfc_pallas", lambda: "ok"),),
+                registry=HealthRegistry(),
+            )
+            == "ok"
+        )
+    assert fired == [False, True, False]
+
+
+def test_injection_glob_pattern_matches_many_namespaces():
+    with fault_injection(FaultSpec("attn_*", kind="compile")):
+        for ns in ("attn_fwd", "attn_decode"):
+            got = run_with_fallback(
+                ns,
+                (("sfc_pallas", lambda: "pallas"), ("xla", lambda: "xla")),
+                registry=HealthRegistry(),
+            )
+            assert got == "xla"
+        assert (
+            run_with_fallback(
+                "gemm", (("sfc_pallas", lambda: "pallas"),),
+                registry=HealthRegistry(),
+            )
+            == "pallas"
+        )
+
+
+def test_nan_injection_poisons_outputs():
+    with fault_injection(FaultSpec("ns", kind="nan")):
+        out = run_with_fallback(
+            "ns",
+            (("sfc_pallas", lambda: jnp.ones((3,), jnp.float32)),),
+            registry=HealthRegistry(),
+        )
+    assert np.all(np.isnan(np.asarray(out)))
+
+
+# ---------------------------------------------------------------------------
+# classification
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "exc,kind",
+    [
+        (InjectedCompileError("gemm", "sfc_pallas", 0), "compile"),
+        (robust.InjectedResourceExhausted("gemm", "sfc_pallas", 0), "oom"),
+        (VmemBudgetError("plan exceeds budget"), "oom"),
+        (NotImplementedError("no lowering for op"), "compile"),
+        (RuntimeError("RESOURCE_EXHAUSTED: Ran out of memory in VMEM"), "oom"),
+        (RuntimeError("Mosaic lowering failed: Unsupported op"), "compile"),
+        (AssertionError("Bounds check failed"), "interpret"),
+        (RuntimeError("block shape not divisible"), "interpret"),
+        (ValueError("a plain bug"), None),
+        (KeyError("missing"), None),
+    ],
+)
+def test_classify_failure(exc, kind):
+    assert classify_failure(exc) == kind
+
+
+def test_unclassified_errors_propagate_through_ladder():
+    def bad():
+        raise ValueError("a plain bug, not platform breakage")
+
+    with pytest.raises(ValueError, match="plain bug"):
+        run_with_fallback(
+            "ns", (("sfc_pallas", bad), ("xla", lambda: 1)),
+            registry=HealthRegistry(),
+        )
+
+
+# ---------------------------------------------------------------------------
+# ladder + quarantine
+# ---------------------------------------------------------------------------
+
+
+def test_ladder_degrades_and_quarantines_then_skips():
+    reg = HealthRegistry()
+    calls = {"pallas": 0, "xla": 0}
+
+    def pallas():
+        calls["pallas"] += 1
+        raise NotImplementedError("Mosaic lowering failed")
+
+    def xla():
+        calls["xla"] += 1
+        return "xla"
+
+    rungs = (("sfc_pallas", pallas), ("xla", xla))
+    for _ in range(3):
+        assert run_with_fallback("ns", rungs, shape_key="64x64", registry=reg) == "xla"
+    # quarantined after the first failure: the broken rung runs exactly once
+    assert calls == {"pallas": 1, "xla": 3}
+    rec = reg.get_quarantine("ns", "sfc_pallas", "64x64")
+    assert rec is not None and rec.reason == "compile"
+    rep = reg.degradation_report()
+    assert rep["fallback_calls"] == 3 and rep["total_calls"] == 3
+    # clearing the namespace (the re-tune hook) lifts the quarantine
+    assert reg.clear("ns") == 1
+    assert run_with_fallback(
+        "ns", (("sfc_pallas", lambda: "pallas"), ("xla", xla)),
+        shape_key="64x64", registry=reg,
+    ) == "pallas"
+
+
+def test_quarantine_none_shape_covers_every_shape():
+    reg = HealthRegistry()
+    reg.quarantine("ns", "sfc_pallas", None, "oom")
+    assert reg.is_quarantined("ns", "sfc_pallas", "anything")
+    got = run_with_fallback(
+        "ns",
+        (("sfc_pallas", lambda: "pallas"), ("xla", lambda: "xla")),
+        shape_key="128x128", registry=reg,
+    )
+    assert got == "xla"
+
+
+def test_every_rung_exhausted_raises_fallback_error():
+    def bad():
+        raise NotImplementedError("Mosaic")
+
+    with pytest.raises(FallbackError):
+        run_with_fallback(
+            "ns", (("sfc_pallas", bad), ("xla", bad)),
+            registry=HealthRegistry(),
+        )
+
+
+# ---------------------------------------------------------------------------
+# differential: every ladder rung of the forward GEMM namespaces matches the
+# healthy Pallas rung at f32
+# ---------------------------------------------------------------------------
+
+
+def _gemm_case():
+    x = _rand(16, 48, seed=1)
+    w = _rand(48, 32, seed=2)
+    bias = _rand(32, seed=3) * 0.1
+    return x, w, bias
+
+
+@pytest.mark.parametrize(
+    "faulted",
+    [
+        (),
+        ("sfc_pallas",),
+        ("sfc_pallas", "replicated"),
+        ("sfc_pallas", "replicated", "sfc_reference"),
+    ],
+    ids=["sfc_pallas", "replicated", "sfc_reference", "xla"],
+)
+def test_matmul_rung_differential_f32(faulted):
+    x, w, bias = _gemm_case()
+    with gb.gemm_backend("sfc_pallas"):
+        want = gb.matmul(x, w, bias=bias, activation="gelu")
+    get_registry().reset()
+    specs = (
+        [FaultSpec("gemm", kind="compile", rungs=tuple(faulted))]
+        if faulted
+        else []
+    )
+    with fault_injection(*specs):
+        with gb.gemm_backend("sfc_pallas"):
+            got = gb.matmul(x, w, bias=bias, activation="gelu")
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5
+    )
+    if faulted:
+        assert "gemm" in get_registry().quarantined_namespaces()
+
+
+@pytest.mark.parametrize(
+    "faulted",
+    [(), ("sfc_pallas",), ("sfc_pallas", "replicated"),
+     ("sfc_pallas", "replicated", "sfc_reference")],
+    ids=["sfc_pallas", "replicated", "sfc_reference", "xla"],
+)
+def test_glu_matmul_rung_differential_f32(faulted):
+    x = _rand(8, 32, seed=4)
+    wg, wv = _rand(32, 24, seed=5), _rand(32, 24, seed=6)
+    with gb.gemm_backend("sfc_pallas"):
+        want = gb.glu_matmul(x, wg, wv, activation="silu")
+    get_registry().reset()
+    specs = (
+        [FaultSpec("glu", kind="compile", rungs=tuple(faulted))]
+        if faulted
+        else []
+    )
+    with fault_injection(*specs):
+        with gb.gemm_backend("sfc_pallas"):
+            got = gb.glu_matmul(x, wg, wv, activation="silu")
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_grouped_matmul_rung_differential_f32():
+    x = _rand(2, 4, 8, 16, seed=7)  # (G, E, C, K)
+    w = _rand(4, 16, 12, seed=8)
+    with gb.gemm_backend("sfc_pallas"):
+        want = gb.grouped_matmul(x, w)
+    for faulted in (("sfc_pallas",), ("sfc_pallas", "sfc_reference")):
+        get_registry().reset()
+        with fault_injection(
+            FaultSpec("grouped", kind="compile", rungs=faulted)
+        ):
+            with gb.gemm_backend("sfc_pallas"):
+                got = gb.grouped_matmul(x, w)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5
+        )
+
+
+def test_backward_ladder_differential_f32():
+    """Grads of an sfc_pallas projection survive NT/TN kernel faults."""
+    x, w, _ = _gemm_case()
+
+    def loss(x_, w_):
+        with gb.gemm_backend("sfc_pallas"):
+            return jnp.sum(gb.matmul(x_, w_, activation="gelu") ** 2)
+
+    want = jax.grad(loss, argnums=(0, 1))(x, w)
+    get_registry().reset()
+    with fault_injection(
+        FaultSpec("nt", kind="compile"), FaultSpec("tn", kind="compile")
+    ):
+        got = jax.grad(loss, argnums=(0, 1))(x, w)
+    for a, b in zip(want, got):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5
+        )
+    assert {"nt", "tn"} <= set(get_registry().quarantined_namespaces())
+
+
+def test_oom_injection_degrades_too():
+    x, w, bias = _gemm_case()
+    with gb.gemm_backend("sfc_pallas"):
+        want = gb.matmul(x, w, bias=bias)
+    get_registry().reset()
+    with fault_injection(FaultSpec("gemm", kind="oom")):
+        with gb.gemm_backend("sfc_pallas"):
+            got = gb.matmul(x, w, bias=bias)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5
+    )
+    reasons = {
+        r.reason
+        for r in get_registry()._quarantine.values()
+        if r.namespace == "gemm"
+    }
+    assert reasons == {"oom"}
+
+
+# ---------------------------------------------------------------------------
+# persistence: quarantines round-trip through the knob cache
+# ---------------------------------------------------------------------------
+
+
+def test_health_registry_knob_cache_roundtrip(tmp_path):
+    path = str(tmp_path / "knobs.json")
+    reg = HealthRegistry()
+    reg.quarantine(
+        "gemm", "sfc_pallas", "64x64x64|float32", "compile",
+        error=RuntimeError("Mosaic lowering failed"),
+    )
+    cache = KnobCache(path)
+    reg.save_to_cache(cache)
+
+    # a fresh process: new cache object at the same path, new registry
+    reg2 = HealthRegistry()
+    reg2.load_from_cache(KnobCache(path))
+    assert reg2.is_quarantined("gemm", "sfc_pallas", "64x64x64|float32")
+    rec = reg2.get_quarantine("gemm", "sfc_pallas", "64x64x64|float32")
+    assert rec.reason == "compile" and "Mosaic" in rec.error
+
+
+def test_health_entries_survive_knob_merge(tmp_path):
+    """__health__ entries coexist with knob entries across save/load."""
+    from repro.tune.cache import Knobs
+
+    path = str(tmp_path / "knobs.json")
+    cache = KnobCache(path)
+    cache.put(
+        64, 64, 64, np.float32, "cpu",
+        Knobs(bm=16, bn=16, k_layers=2, k_block_factor=1),
+    )
+    reg = HealthRegistry()
+    reg.quarantine("tn", "sfc_pallas", None, "oom")
+    reg.save_to_cache(cache)
+
+    fresh = KnobCache(path)
+    assert fresh.get(64, 64, 64, np.float32, "cpu") is not None
+    reg2 = HealthRegistry()
+    reg2.load_from_cache(fresh)
+    assert reg2.is_quarantined("tn", "sfc_pallas", "whatever")
+    # knob __len__ does not count meta/health bookkeeping entries
+    assert len(fresh) == 1
+
+
+def test_malformed_health_entries_are_dropped():
+    reg = HealthRegistry()
+    reg.load_state({"bad": {"rung": "sfc_pallas"}, "worse": {"namespace": 3}})
+    assert reg.export_state() == {} or all(
+        isinstance(r, dict) for r in reg.export_state().values()
+    )
+
+
+# ---------------------------------------------------------------------------
+# strict mode
+# ---------------------------------------------------------------------------
+
+
+def test_strict_mode_raises_on_real_degradation(monkeypatch):
+    monkeypatch.setenv("REPRO_STRICT", "1")
+
+    def bad():
+        raise NotImplementedError("Mosaic lowering failed")
+
+    with pytest.raises(StrictFallbackError):
+        run_with_fallback(
+            "ns", (("sfc_pallas", bad), ("xla", lambda: "xla")),
+            registry=HealthRegistry(),
+        )
+
+
+def test_strict_mode_amnesty_for_injected_faults(monkeypatch):
+    monkeypatch.setenv("REPRO_STRICT", "1")
+    with fault_injection(FaultSpec("ns", kind="compile")):
+        got = run_with_fallback(
+            "ns",
+            (("sfc_pallas", lambda: "pallas"), ("xla", lambda: "xla")),
+            registry=HealthRegistry(),
+        )
+    assert got == "xla"
+
+
+def test_strict_mode_allows_planned_vmem_degradation(monkeypatch):
+    monkeypatch.setenv("REPRO_STRICT", "1")
+
+    def fused():
+        raise VmemBudgetError("fused plan exceeds the VMEM budget")
+
+    got = run_with_fallback(
+        "gemm",
+        (("sfc_pallas", fused), ("replicated", lambda: "replicated")),
+        registry=HealthRegistry(),
+    )
+    assert got == "replicated"
+
+
+# ---------------------------------------------------------------------------
+# degradation report surfaces
+# ---------------------------------------------------------------------------
+
+
+def test_backend_degradation_reports_are_filtered():
+    get_registry().reset()
+    get_registry().quarantine("gemm", "sfc_pallas", None, "compile")
+    get_registry().quarantine("attn_fwd", "sfc_pallas", None, "compile")
+    gemm_rep = gb.degradation_report()
+    assert {r["namespace"] for r in gemm_rep["quarantined"]} == {"gemm"}
+    from repro.core import attention_backend as ab
+
+    attn_rep = ab.degradation_report()
+    assert {r["namespace"] for r in attn_rep["quarantined"]} == {"attn_fwd"}

@@ -65,3 +65,73 @@ def test_backend_equivalence_through_serving(small_model):
         [done] = engine.run([req])
         outs[backend] = done.output
     assert outs["xla"] == outs["sfc_pallas"]
+
+
+def test_deadline_sheds_waiting_and_retires_live(small_model):
+    cfg, model, params = small_model
+    engine = ServingEngine(cfg, params, max_batch=2, max_seq=32)
+    rng = np.random.default_rng(3)
+    prompts = [
+        rng.integers(0, cfg.vocab, size=8).astype(np.int32) for _ in range(3)
+    ]
+    reqs = engine.submit_many(prompts, max_new_tokens=4, deadline_s=60.0)
+    # one request "arrived" long ago: already past its budget when run()
+    # starts, so it must be shed before any compute is spent on it
+    reqs[1].submitted_at -= 120.0
+    done = engine.run(reqs)
+    assert len(done) == 3
+    by_uid = {r.uid: r for r in done}
+    shed = by_uid[reqs[1].uid]
+    assert shed.status == "timed_out"
+    assert shed.output == []
+    assert shed.first_token_at == 0.0  # never prefillled
+    for r in (by_uid[reqs[0].uid], by_uid[reqs[2].uid]):
+        assert r.status == "completed"
+        assert len(r.output) == 4
+    rep = engine.latency_report(done)
+    assert rep["n_requests"] == 3
+    assert rep["n_timed_out"] == 1
+    assert rep["tokens_total"] == 8
+    assert rep["ttft_mean_s"] >= 0.0
+
+
+def test_deadline_retires_mid_decode(small_model):
+    cfg, model, params = small_model
+    engine = ServingEngine(cfg, params, max_batch=1, max_seq=32)
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, cfg.vocab, size=8).astype(np.int32)
+    # a generous deadline survives the whole decode
+    [req] = engine.submit_many([prompt], max_new_tokens=16, deadline_s=1e9)
+    done = engine.run([req])[0]
+    assert done.status == "completed"
+    # an expiring one: admitted fresh, then the budget burns away during
+    # serving so a decode-boundary check retires it mid-generation
+    [req2] = engine.submit_many([prompt], max_new_tokens=16)
+
+    orig_decode = engine._decode
+
+    def slow_decode(*args):
+        req2.submitted_at -= 1.0  # burn the budget during serving
+        return orig_decode(*args)
+
+    engine._decode = slow_decode
+    req2.deadline_s = 0.5
+    done2 = engine.run([req2])[0]
+    assert done2.status == "timed_out"
+    assert 1 <= len(done2.output) < 16  # partial output kept
+    rep = engine.latency_report([done2])
+    assert rep["n_timed_out"] == 1
+
+
+def test_latency_report_empty_is_zeros(small_model):
+    cfg, model, params = small_model
+    engine = ServingEngine(cfg, params, max_batch=1, max_seq=16)
+    rep = engine.latency_report([])
+    assert rep == {
+        "n_requests": 0,
+        "n_timed_out": 0,
+        "ttft_mean_s": 0.0,
+        "latency_mean_s": 0.0,
+        "tokens_total": 0,
+        "tokens_per_s": 0.0,
+    }

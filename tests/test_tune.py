@@ -184,3 +184,91 @@ def test_concurrent_writers_merge_not_clobber(tmp_path):
         for j in range(5):
             assert final.get(64, 64, 64, np.float32, "cpu", op=f"op{i}_{j}") \
                 is not None, f"lost op{i}_{j}"
+
+
+def test_corrupt_cache_quarantined_to_sidecar(tmp_path):
+    import json
+    import warnings
+
+    p = tmp_path / "knobs.json"
+    p.write_text("{truncated json")
+    c = KnobCache(str(p))
+    with pytest.warns(RuntimeWarning, match="corrupt"):
+        assert c.get(64, 64, 64, np.float32, "cpu") is None
+    # the broken bytes are preserved for forensics, not deleted
+    quarantined = list(tmp_path.glob("knobs.json.corrupt-*"))
+    assert len(quarantined) == 1
+    assert quarantined[0].read_text() == "{truncated json"
+    # the cache rebuilds cleanly in place
+    c.put(64, 64, 64, np.float32, "cpu", Knobs(16, 16, 1, 1))
+    assert KnobCache(str(p)).get(64, 64, 64, np.float32, "cpu") is not None
+    json.loads(p.read_text())  # and the new file is valid JSON
+    # warn-once per path: a second corruption of the same file is silent
+    p.write_text("{also bad")
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        KnobCache(str(p)).get(64, 64, 64, np.float32, "cpu")
+    assert not [w for w in caught if "corrupt" in str(w.message)]
+
+
+def test_stale_kernel_version_purges_entries(tmp_path):
+    import json
+
+    from repro.tune.cache import META_KEY, current_kernel_version
+
+    p = tmp_path / "knobs.json"
+    KnobCache(str(p)).put(64, 64, 64, np.float32, "cpu", Knobs(16, 16, 1, 1))
+    raw = json.loads(p.read_text())
+    assert raw[META_KEY]["kernel_version"] == current_kernel_version()
+    # stamp the file as written by a different kernel generation
+    raw[META_KEY] = {"kernel_version": current_kernel_version() + 1}
+    p.write_text(json.dumps(raw))
+    with pytest.warns(RuntimeWarning, match="kernel"):
+        assert KnobCache(str(p)).get(64, 64, 64, np.float32, "cpu") is None
+    # legacy files without a stamp stay valid (no retroactive purge)
+    del raw[META_KEY]
+    p.write_text(json.dumps(raw))
+    assert KnobCache(str(p)).get(64, 64, 64, np.float32, "cpu") is not None
+
+
+def test_save_does_not_resurrect_stale_on_disk_entries(tmp_path):
+    import json
+
+    from repro.tune.cache import META_KEY, current_kernel_version
+
+    p = tmp_path / "knobs.json"
+    a = KnobCache(str(p))
+    a.put(64, 64, 64, np.float32, "cpu", Knobs(16, 16, 1, 1))
+    # another process persisted an extra winner, then the file got stamped
+    # as a stale kernel generation
+    KnobCache(str(p)).put(128, 128, 128, np.float32, "cpu", Knobs(32, 32, 1, 1))
+    raw = json.loads(p.read_text())
+    raw[META_KEY] = {"kernel_version": current_kernel_version() + 7}
+    p.write_text(json.dumps(raw))
+    # a's next save merges with the on-disk file — but must refuse to
+    # resurrect entries measured against different kernels
+    a.put(256, 256, 256, np.float32, "cpu", Knobs(64, 64, 1, 1))
+    fresh = KnobCache(str(p))
+    assert fresh.get(64, 64, 64, np.float32, "cpu") is not None
+    assert fresh.get(256, 256, 256, np.float32, "cpu") is not None
+    assert fresh.get(128, 128, 128, np.float32, "cpu") is None
+    assert (
+        json.loads(p.read_text())[META_KEY]["kernel_version"]
+        == current_kernel_version()
+    )
+
+
+def test_retune_lifts_ladder_quarantine(cache):
+    from repro.robust import get_registry
+
+    reg = get_registry()
+    reg.quarantine("gemm", "sfc_pallas", None, "compile")
+    reg.quarantine("glu", "sfc_pallas", None, "compile")
+    assert "gemm" in reg.quarantined_namespaces()
+    tune_gemm(
+        64, 64, 64, np.float32,
+        cache=cache, measure_fn=lambda m, n, k, d, kn: 1e-3,
+    )
+    # the measured winner vouches for the gemm path again — and only it
+    assert "gemm" not in reg.quarantined_namespaces()
+    assert "glu" in reg.quarantined_namespaces()
