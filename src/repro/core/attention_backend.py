@@ -49,6 +49,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.namespaces import (
+    NS_ATTN_BWD,
+    NS_ATTN_DECODE,
+    NS_ATTN_FWD,
+    RUNG_SFC_PALLAS,
+    RUNG_XLA,
+)
+
 __all__ = [
     "ATTN_IMPLS",
     "attention_backend",
@@ -167,11 +175,14 @@ def _attn_shape_key(sq: int, sk: int, d: int, dtype) -> str:
     )
 
 
-def _reference_attention(q, k, v, *, causal: bool, seq_q: int, seq_k: int):
+def _reference_attention(
+    q, k, v, *, causal: bool, seq_q: int, seq_k: int, q_offset: int = 0
+):
     """Differentiable jnp rung: the kernels' exact semantics in einsum form.
 
     Same 1/sqrt(D) scale, start-aligned causal mask (query i attends
-    k[0..i]) and (kpos < seq_k) & (qpos < seq_q) padding mask as
+    k[0..i], shifted by ``q_offset`` for chunked prefill) and
+    (kpos < seq_k) & (qpos < seq_q) padding mask as
     `kernels.sfc_attention`; f32 softmax on GQA-repeated heads.  Only
     ever traced on a faulted/quarantined path — it introduces
     dot_general, which the healthy-path structure gates forbid."""
@@ -194,7 +205,7 @@ def _reference_attention(q, k, v, *, causal: bool, seq_q: int, seq_k: int):
     kpos = jnp.arange(sk)[None, :]
     mask = (kpos < seq_k) & (qpos < seq_q)
     if causal:
-        mask = mask & (kpos <= qpos)
+        mask = mask & (kpos <= qpos + q_offset)
     s = jnp.where(mask, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum(
@@ -221,6 +232,7 @@ class _FlashCfg:
     q_chunk_hint: Optional[int]
     k_chunk_hint: Optional[int]
     interpret: bool
+    q_offset: int = 0
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
@@ -230,7 +242,8 @@ def _flash_core(cfg: _FlashCfg, q, k, v):
     o, _ = sfc_flash_fwd(
         q, k, v,
         causal=cfg.causal, seq_q=cfg.seq_q, seq_k=cfg.seq_k,
-        q_chunk=cfg.q_chunk, k_chunk=cfg.k_chunk, interpret=cfg.interpret,
+        q_chunk=cfg.q_chunk, k_chunk=cfg.k_chunk, q_offset=cfg.q_offset,
+        interpret=cfg.interpret,
     )
     return o
 
@@ -241,7 +254,8 @@ def _flash_core_fwd(cfg: _FlashCfg, q, k, v):
     o, lse = sfc_flash_fwd(
         q, k, v,
         causal=cfg.causal, seq_q=cfg.seq_q, seq_k=cfg.seq_k,
-        q_chunk=cfg.q_chunk, k_chunk=cfg.k_chunk, interpret=cfg.interpret,
+        q_chunk=cfg.q_chunk, k_chunk=cfg.k_chunk, q_offset=cfg.q_offset,
+        interpret=cfg.interpret,
     )
     return o, (q, k, v, o, lse)
 
@@ -260,7 +274,7 @@ def _flash_core_bwd(cfg: _FlashCfg, saved, do):
         # (two extra streamed tiles, TN-move contractions) differs from the
         # forward's, exactly like the GEMM nt/tn split
         qc, kc = resolve_attn_knobs(
-            cfg.seq_q, cfg.seq_k, q.shape[-1], q.dtype, op="attn_bwd",
+            cfg.seq_q, cfg.seq_k, q.shape[-1], q.dtype, op=NS_ATTN_BWD,
             q_chunk=cfg.q_chunk_hint, k_chunk=cfg.k_chunk_hint,
         )
         sq_p = _round_up(q.shape[1], qc)
@@ -276,7 +290,8 @@ def _flash_core_bwd(cfg: _FlashCfg, saved, do):
         )
         kw = dict(
             causal=cfg.causal, seq_q=cfg.seq_q, seq_k=cfg.seq_k,
-            q_chunk=qc, k_chunk=kc, interpret=cfg.interpret,
+            q_chunk=qc, k_chunk=kc, q_offset=cfg.q_offset,
+            interpret=cfg.interpret,
         )
         dq = sfc_flash_bwd_dq(qp, kp, vp, dop, lsep, delta, **kw)
         dk, dv = sfc_flash_bwd_dkv(qp, kp, vp, dop, lsep, delta, **kw)
@@ -293,14 +308,15 @@ def _flash_core_bwd(cfg: _FlashCfg, saved, do):
             return _reference_attention(
                 q_, k_, v_,
                 causal=cfg.causal, seq_q=cfg.seq_q, seq_k=cfg.seq_k,
+                q_offset=cfg.q_offset,
             )
 
         _, vjp = jax.vjp(ref, q, k, v)
         return vjp(do.astype(q.dtype))
 
     return run_with_fallback(
-        "attn_bwd",
-        (("sfc_pallas", kernel), ("xla", oracle)),
+        NS_ATTN_BWD,
+        ((RUNG_SFC_PALLAS, kernel), (RUNG_XLA, oracle)),
         shape_key=_attn_shape_key(
             cfg.seq_q, cfg.seq_k, q.shape[-1], q.dtype
         ),
@@ -318,6 +334,7 @@ def flash_attention(
     causal: bool = True,
     q_chunk: Optional[int] = None,
     k_chunk: Optional[int] = None,
+    q_offset: int = 0,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Differentiable SFC flash attention in the model's (B, S, H, D)
@@ -325,33 +342,43 @@ def flash_attention(
     (no `jnp.repeat` expansion); arbitrary Sq/Sk are zero-padded to chunk
     multiples and masked.  ``q_chunk``/``k_chunk`` act as hints — a
     measured ``op="attn_fwd"`` tune-cache winner takes precedence, the
-    backward resolves ``op="attn_bwd"`` independently."""
+    backward resolves ``op="attn_bwd"`` independently.
+
+    ``q_offset`` positions the q block at global rows ``[q_offset,
+    q_offset + S)`` of a longer causal stream whose first ``q_offset`` k
+    positions are already cached — the chunked-prefill call shape.  The
+    causal band (both the task table and the intra-tile masks) shifts
+    accordingly; ``q_offset=0`` is ordinary self-attention."""
     if interpret is None:
         interpret = default_interpret()
+    if q_offset < 0:
+        raise ValueError(f"q_offset must be >= 0, got {q_offset}")
     b, s, h, d = q.shape
     _, t, hkv, _ = k.shape
     if h % hkv:
         raise ValueError(f"GQA heads {h} not a multiple of kv heads {hkv}")
     qc, kc = resolve_attn_knobs(
-        s, t, d, q.dtype, op="attn_fwd", q_chunk=q_chunk, k_chunk=k_chunk
+        s, t, d, q.dtype, op=NS_ATTN_FWD, q_chunk=q_chunk, k_chunk=k_chunk
     )
     sq_p, sk_p = _round_up(s, qc), _round_up(t, kc)
     cfg = _FlashCfg(
         causal=causal, seq_q=s, seq_k=t, q_chunk=qc, k_chunk=kc,
         q_chunk_hint=q_chunk, k_chunk_hint=k_chunk, interpret=interpret,
+        q_offset=q_offset,
     )
     from repro.robust import run_with_fallback
 
     qp = _pad_seq(q, sq_p)
     kp, vp = _pad_seq(k, sk_p), _pad_seq(v, sk_p)
     o = run_with_fallback(
-        "attn_fwd",
+        NS_ATTN_FWD,
         (
-            ("sfc_pallas", lambda: _flash_core(cfg, qp, kp, vp)),
+            (RUNG_SFC_PALLAS, lambda: _flash_core(cfg, qp, kp, vp)),
             # plain autodiff through the reference — bypasses the custom
             # VJP, so its backward never touches the Pallas kernels either
-            ("xla", lambda: _reference_attention(
-                qp, kp, vp, causal=causal, seq_q=s, seq_k=t
+            (RUNG_XLA, lambda: _reference_attention(
+                qp, kp, vp, causal=causal, seq_q=s, seq_k=t,
+                q_offset=q_offset,
             )),
         ),
         shape_key=_attn_shape_key(s, t, d, q.dtype),
@@ -390,7 +417,7 @@ def decode_attention(
     _, t, hkv, _ = k.shape
     groups = h // hkv
     _, kc = resolve_attn_knobs(
-        h, t, d, q.dtype, op="attn_decode", q_chunk=None, k_chunk=k_chunk
+        h, t, d, q.dtype, op=NS_ATTN_DECODE, q_chunk=None, k_chunk=k_chunk
     )
     t_p = _round_up(t, kc)
     if t_p != t:
@@ -429,12 +456,12 @@ def decode_attention(
     from repro.robust import run_with_fallback
 
     o = run_with_fallback(
-        "attn_decode",
+        NS_ATTN_DECODE,
         (
-            ("sfc_pallas", lambda: sfc_decode_attention_pallas(
+            (RUNG_SFC_PALLAS, lambda: sfc_decode_attention_pallas(
                 qg, k, v, valid_len, k_chunk=kc, interpret=interpret
             )),
-            ("xla", oracle),
+            (RUNG_XLA, oracle),
         ),
         shape_key=_attn_shape_key(h, t, d, q.dtype),
     )

@@ -56,6 +56,22 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.namespaces import (
+    NS_GEMM,
+    NS_GEMM_UPDATE,
+    NS_GLU,
+    NS_GLU_UPDATE,
+    NS_GROUPED,
+    NS_GROUPED_GLU,
+    NS_GROUPED_GLU_UPDATE,
+    NS_GROUPED_UPDATE,
+    NS_NT,
+    NS_TN,
+    RUNG_REPLICATED,
+    RUNG_SFC_PALLAS,
+    RUNG_SFC_REFERENCE,
+    RUNG_XLA,
+)
 from repro.optim.fused import FusedParam, ProbeParam, current_update_config
 
 __all__ = [
@@ -66,11 +82,12 @@ __all__ = [
     "glu_matmul",
     "grouped_matmul",
     "grouped_glu_matmul",
+    "chunk_einsum",
 ]
 
 # every ladder namespace this backend owns (forward, fused-update and the
 # backward kernels ops.py routes for it) — the degradation_report filter
-_NAMESPACES = ("gemm", "glu", "grouped", "nt", "tn")
+_NAMESPACES = (NS_GEMM, NS_GLU, NS_GROUPED, NS_NT, NS_TN)
 
 
 def degradation_report() -> dict:
@@ -93,13 +110,13 @@ def _shape_key(m: int, n: int, k: int, dtype) -> str:
     return f"{bm}x{bn}x{bk}|{jnp.dtype(dtype).name}"
 
 _BACKEND: contextvars.ContextVar[str] = contextvars.ContextVar(
-    "gemm_backend", default="xla"
+    "gemm_backend", default=RUNG_XLA
 )
 
 
 @contextlib.contextmanager
 def gemm_backend(name: str):
-    if name not in ("xla", "sfc_pallas", "sfc_reference"):
+    if name not in (RUNG_XLA, RUNG_SFC_PALLAS, RUNG_SFC_REFERENCE):
         raise ValueError(f"unknown gemm backend {name}")
     tok = _BACKEND.set(name)
     try:
@@ -132,7 +149,7 @@ def _epilogue(y, *, bias=None, activation=None, out_scale=None, residual=None):
     return y
 
 
-def _reference_matmul(x2: jax.Array, w: jax.Array, op: str = "gemm") -> jax.Array:
+def _reference_matmul(x2: jax.Array, w: jax.Array, op: str = NS_GEMM) -> jax.Array:
     """Listing-1 reference with knobs from the shared resolver (tune cache /
     analytical model, divisor-clipped) instead of a hardcoded 32.  ``op``
     selects the tune-cache namespace so a measured GLU winner applies to
@@ -194,26 +211,26 @@ def matmul(
                 backend=be, stochastic_round=sr,
             )
 
-        if backend != "sfc_pallas":
+        if backend != RUNG_SFC_PALLAS:
             return _fused(backend)
         from repro.robust import run_with_fallback
 
         m = x.shape[-2] if x.ndim >= 2 else 1
         return run_with_fallback(
-            "gemm_update",
+            NS_GEMM_UPDATE,
             (
-                ("sfc_pallas", lambda: _fused("sfc_pallas")),
-                ("xla", lambda: _fused("xla")),
+                (RUNG_SFC_PALLAS, lambda: _fused(RUNG_SFC_PALLAS)),
+                (RUNG_XLA, lambda: _fused(RUNG_XLA)),
             ),
             shape_key=_shape_key(m, w.w.shape[-1], x.shape[-1], x.dtype),
         )
     name = _BACKEND.get()
-    if name == "xla" or w.ndim != 2:
+    if name == RUNG_XLA or w.ndim != 2:
         return _epilogue(
             x @ w, bias=bias, activation=activation,
             out_scale=out_scale, residual=residual,
         )
-    if name == "sfc_pallas":
+    if name == RUNG_SFC_PALLAS:
         from repro.kernels.ops import ensure_fused_fits, sfc_matmul
         from repro.robust import run_with_fallback
 
@@ -252,12 +269,12 @@ def matmul(
             )
 
         out = run_with_fallback(
-            "gemm",
+            NS_GEMM,
             (
-                ("sfc_pallas", fused_rung),
-                ("replicated", lambda: sfc_matmul(x_run, w, fuse=False, **kw)),
-                ("sfc_reference", reference_rung),
-                ("xla", lambda: _epilogue(
+                (RUNG_SFC_PALLAS, fused_rung),
+                (RUNG_REPLICATED, lambda: sfc_matmul(x_run, w, fuse=False, **kw)),
+                (RUNG_SFC_REFERENCE, reference_rung),
+                (RUNG_XLA, lambda: _epilogue(
                     x_run @ w, bias=bias, activation=activation,
                     out_scale=out_scale, residual=res_run,
                 )),
@@ -299,11 +316,11 @@ def glu_matmul(
         fusable = out_scale is None and residual is None
         if isinstance(w_gate, ProbeParam):
             if fusable:
-                w_gate.observe("glu")
+                w_gate.observe(NS_GLU)
             w_gate = w_gate.w
         if isinstance(w_val, ProbeParam):
             if fusable:
-                w_val.observe("glu")
+                w_val.observe(NS_GLU)
             w_val = w_val.w
     elif isinstance(w_gate, FusedParam) or isinstance(w_val, FusedParam):
         if not (isinstance(w_gate, FusedParam) and isinstance(w_val, FusedParam)):
@@ -331,23 +348,23 @@ def glu_matmul(
                 backend=be, stochastic_round=sr,
             )
 
-        if backend != "sfc_pallas":
+        if backend != RUNG_SFC_PALLAS:
             return _fused(backend)
         from repro.robust import run_with_fallback
 
         m = x.shape[-2] if x.ndim >= 2 else 1
         return run_with_fallback(
-            "glu_update",
+            NS_GLU_UPDATE,
             (
-                ("sfc_pallas", lambda: _fused("sfc_pallas")),
-                ("xla", lambda: _fused("xla")),
+                (RUNG_SFC_PALLAS, lambda: _fused(RUNG_SFC_PALLAS)),
+                (RUNG_XLA, lambda: _fused(RUNG_XLA)),
             ),
             shape_key=_shape_key(
                 m, w_val.w.shape[-1], x.shape[-1], x.dtype
             ),
         )
     name = _BACKEND.get()
-    if name == "xla" or w_val.ndim != 2:
+    if name == RUNG_XLA or w_val.ndim != 2:
         g = x @ w_gate
         if gate_bias is not None:
             g = g + gate_bias
@@ -357,7 +374,7 @@ def glu_matmul(
         return _epilogue(
             _act(activation)(g) * h, out_scale=out_scale, residual=residual
         )
-    if name == "sfc_pallas":
+    if name == RUNG_SFC_PALLAS:
         from repro.kernels.ops import ensure_fused_fits, sfc_glu_matmul
         from repro.robust import run_with_fallback
 
@@ -388,8 +405,8 @@ def glu_matmul(
         def reference_rung():
             x2 = x_run.reshape(-1, k)
             lead = x_run.shape[:-1]
-            g = _reference_matmul(x2, w_gate, op="glu").reshape(*lead, n)
-            h = _reference_matmul(x2, w_val, op="glu").reshape(*lead, n)
+            g = _reference_matmul(x2, w_gate, op=NS_GLU).reshape(*lead, n)
+            h = _reference_matmul(x2, w_val, op=NS_GLU).reshape(*lead, n)
             if gate_bias is not None:
                 g = g + gate_bias
             if bias is not None:
@@ -412,14 +429,14 @@ def glu_matmul(
             )
 
         out = run_with_fallback(
-            "glu",
+            NS_GLU,
             (
-                ("sfc_pallas", fused_rung),
-                ("replicated", lambda: sfc_glu_matmul(
+                (RUNG_SFC_PALLAS, fused_rung),
+                (RUNG_REPLICATED, lambda: sfc_glu_matmul(
                     x_run, w_gate, w_val, fuse=False, **kw
                 )),
-                ("sfc_reference", reference_rung),
-                ("xla", xla_rung),
+                (RUNG_SFC_REFERENCE, reference_rung),
+                (RUNG_XLA, xla_rung),
             ),
             shape_key=_shape_key(m, n, k, x_run.dtype),
         )
@@ -427,8 +444,8 @@ def glu_matmul(
     lead = x.shape[:-1]
     k = x.shape[-1]
     x2 = x.reshape(-1, k)
-    g = _reference_matmul(x2, w_gate, op="glu").reshape(*lead, w_gate.shape[1])
-    h = _reference_matmul(x2, w_val, op="glu").reshape(*lead, w_val.shape[1])
+    g = _reference_matmul(x2, w_gate, op=NS_GLU).reshape(*lead, w_gate.shape[1])
+    h = _reference_matmul(x2, w_val, op=NS_GLU).reshape(*lead, w_val.shape[1])
     if gate_bias is not None:
         g = g + gate_bias
     if bias is not None:
@@ -474,7 +491,7 @@ def grouped_matmul(
     """
     if isinstance(w, ProbeParam):
         if out_scale is None:
-            w.observe("grouped")  # 3-D consumption -> grouped fused route
+            w.observe(NS_GROUPED)  # 3-D consumption -> grouped fused route
         w = w.w
     elif isinstance(w, FusedParam):
         if out_scale is not None:
@@ -496,16 +513,16 @@ def grouped_matmul(
                 backend=be, stochastic_round=sr,
             )
 
-        if backend != "sfc_pallas":
+        if backend != RUNG_SFC_PALLAS:
             out = _fused(backend)
         else:
             from repro.robust import run_with_fallback
 
             out = run_with_fallback(
-                "grouped_update",
+                NS_GROUPED_UPDATE,
                 (
-                    ("sfc_pallas", lambda: _fused("sfc_pallas")),
-                    ("xla", lambda: _fused("xla")),
+                    (RUNG_SFC_PALLAS, lambda: _fused(RUNG_SFC_PALLAS)),
+                    (RUNG_XLA, lambda: _fused(RUNG_XLA)),
                 ),
                 shape_key=_shape_key(
                     rows.shape[0], w.w.shape[-1], rows.shape[-1], rows.dtype
@@ -513,7 +530,7 @@ def grouped_matmul(
             )
         return restore(out, w.w.shape[-1])
     name = _BACKEND.get()
-    if name == "xla":
+    if name == RUNG_XLA:
         y = jnp.einsum("...eck,ekn->...ecn", x, w)
         if bias is not None:
             y = y + bias[..., :, None, :]
@@ -533,7 +550,7 @@ def grouped_matmul(
             jnp.concatenate(parts), activation=activation, out_scale=out_scale
         )
 
-    if name == "sfc_pallas":
+    if name == RUNG_SFC_PALLAS:
         from repro.kernels.ops import sfc_grouped_matmul
         from repro.robust import run_with_fallback
 
@@ -556,11 +573,11 @@ def grouped_matmul(
             )
 
         out = run_with_fallback(
-            "grouped",
+            NS_GROUPED,
             (
-                ("sfc_pallas", pallas_rung),
-                ("sfc_reference", reference_rung),
-                ("xla", xla_rung),
+                (RUNG_SFC_PALLAS, pallas_rung),
+                (RUNG_SFC_REFERENCE, reference_rung),
+                (RUNG_XLA, xla_rung),
             ),
             shape_key=_shape_key(rows.shape[0], n, rows.shape[-1], rows.dtype),
         )
@@ -588,7 +605,7 @@ def grouped_glu_matmul(
         for w_ in (w_gate, w_val):
             if isinstance(w_, ProbeParam):
                 if out_scale is None:
-                    w_.observe("grouped_glu")
+                    w_.observe(NS_GROUPED_GLU)
                 w_ = w_.w
             unwrapped.append(w_)
         w_gate, w_val = unwrapped
@@ -620,16 +637,16 @@ def grouped_glu_matmul(
                 backend=be, stochastic_round=sr,
             )
 
-        if backend != "sfc_pallas":
+        if backend != RUNG_SFC_PALLAS:
             out = _fused(backend)
         else:
             from repro.robust import run_with_fallback
 
             out = run_with_fallback(
-                "grouped_glu_update",
+                NS_GROUPED_GLU_UPDATE,
                 (
-                    ("sfc_pallas", lambda: _fused("sfc_pallas")),
-                    ("xla", lambda: _fused("xla")),
+                    (RUNG_SFC_PALLAS, lambda: _fused(RUNG_SFC_PALLAS)),
+                    (RUNG_XLA, lambda: _fused(RUNG_XLA)),
                 ),
                 shape_key=_shape_key(
                     rows.shape[0], w_val.w.shape[-1],
@@ -638,7 +655,7 @@ def grouped_glu_matmul(
             )
         return restore(out, w_val.w.shape[-1])
     name = _BACKEND.get()
-    if name == "xla":
+    if name == RUNG_XLA:
         g_ = jnp.einsum("...eck,ekn->...ecn", x, w_gate)
         h = jnp.einsum("...eck,ekn->...ecn", x, w_val)
         return _epilogue(_act(activation)(g_) * h, out_scale=out_scale)
@@ -649,12 +666,12 @@ def grouped_glu_matmul(
         parts = []
         for ei in range(e):
             xe = rows[ei * g * c : (ei + 1) * g * c]
-            ge = _reference_matmul(xe, w_gate[ei], op="glu")
-            he = _reference_matmul(xe, w_val[ei], op="glu")
+            ge = _reference_matmul(xe, w_gate[ei], op=NS_GLU)
+            he = _reference_matmul(xe, w_val[ei], op=NS_GLU)
             parts.append(_act(activation)(ge) * he)
         return _epilogue(jnp.concatenate(parts), out_scale=out_scale)
 
-    if name == "sfc_pallas":
+    if name == RUNG_SFC_PALLAS:
         from repro.kernels.ops import sfc_grouped_glu_matmul
         from repro.robust import run_with_fallback
 
@@ -672,14 +689,96 @@ def grouped_glu_matmul(
             return _epilogue(jnp.concatenate(parts), out_scale=out_scale)
 
         out = run_with_fallback(
-            "grouped_glu",
+            NS_GROUPED_GLU,
             (
-                ("sfc_pallas", pallas_rung),
-                ("sfc_reference", reference_rung),
-                ("xla", xla_rung),
+                (RUNG_SFC_PALLAS, pallas_rung),
+                (RUNG_SFC_REFERENCE, reference_rung),
+                (RUNG_XLA, xla_rung),
             ),
             shape_key=_shape_key(rows.shape[0], n, rows.shape[-1], rows.dtype),
         )
     else:
         out = reference_rung()
     return restore(out, n)
+
+
+# ---------------------------------------------------------------------------
+# chunked-recurrence einsums (xLSTM / SSM intra-chunk blocks)
+# ---------------------------------------------------------------------------
+
+# Each supported signature is a pure transpose framing of a batched
+# (..., M, K) @ (..., K, N) product: (a_perm, b_perm, swap_b, out_perm).
+# ``swap_b`` transposes B's trailing pair (the qk/scores forms contract
+# against Kᵀ/Bᵀ); perms of None mean identity.  Adding a signature here is
+# the *entire* cost of covering a new chunked op family — the task table,
+# tune bucket and fallback ladder all come from the schedule compiler.
+_CHUNK_EINSUMS = {
+    # xLSTM intra-chunk attention scores: q·kᵀ per (batch, head)
+    "blhp,bjhp->bljh": ((0, 2, 1, 3), (0, 2, 1, 3), True, (0, 2, 3, 1)),
+    # xLSTM intra-chunk numerator: att·v per (batch, head)
+    "bljh,bjhp->blhp": ((0, 3, 1, 2), (0, 2, 1, 3), False, (0, 2, 1, 3)),
+    # SSD intra-chunk scores: C·Bᵀ per (batch, chunk)
+    "bcin,bcjn->bcij": (None, None, True, None),
+    # SSD intra-chunk output: w·x per (batch, chunk, head)
+    "bcijh,bcjhp->bcihp": (
+        (0, 1, 4, 2, 3), (0, 1, 3, 2, 4), False, (0, 1, 3, 2, 4)
+    ),
+}
+
+
+def chunk_einsum(subs: str, a: jax.Array, b: jax.Array, *,
+                 preferred_element_type=None) -> jax.Array:
+    """Backend-routed two-operand einsum for chunked-recurrence intra-chunk
+    blocks (the registered signatures in ``_CHUNK_EINSUMS``).
+
+    Under the "xla" / reference backends this *is* ``jnp.einsum`` —
+    byte-identical jaxpr, GSPMD keeps sharding it.  Under "sfc_pallas" the
+    operands are transposed into a batched (..., M, K) @ (..., K, N)
+    product and launched on the SFC batched kernel grid, knobs and tune
+    namespace from `kernels.ops.chunk_gemm_plan` — the namespace is
+    schedule-qualified (``"gemm@<spec-key>"``), so these blocks tune and
+    quarantine independently of the dense projections.  Differentiable:
+    `sfc_matmul`'s custom VJP covers the batched-B form, so a train step
+    whose recurrence routes through here stays dot_general-free.
+    """
+    if subs not in _CHUNK_EINSUMS:
+        raise ValueError(
+            f"chunk_einsum does not know {subs!r}; registered signatures: "
+            f"{sorted(_CHUNK_EINSUMS)}"
+        )
+    name = _BACKEND.get()
+    if name != RUNG_SFC_PALLAS:
+        return jnp.einsum(
+            subs, a, b, preferred_element_type=preferred_element_type
+        )
+
+    from repro.kernels.ops import chunk_gemm_plan, sfc_matmul
+    from repro.robust import run_with_fallback
+
+    pa, pb, swap_b, po = _CHUNK_EINSUMS[subs]
+    at = jnp.transpose(a, pa) if pa is not None else a
+    bt = jnp.transpose(b, pb) if pb is not None else b
+    if swap_b:
+        bt = jnp.swapaxes(bt, -1, -2)
+    out_dtype = preferred_element_type or jnp.result_type(a.dtype, b.dtype)
+    m, k = at.shape[-2], at.shape[-1]
+    n = bt.shape[-1]
+    namespace, knobs = chunk_gemm_plan(m, n, k, at.dtype)
+
+    out = run_with_fallback(
+        namespace,
+        (
+            (RUNG_SFC_PALLAS,
+             lambda: sfc_matmul(at, bt, out_dtype=out_dtype, fuse=True,
+                                **knobs)),
+            (RUNG_REPLICATED,
+             lambda: sfc_matmul(at, bt, out_dtype=out_dtype, fuse=False,
+                                **knobs)),
+            (RUNG_XLA,
+             lambda: jnp.matmul(
+                 at, bt, preferred_element_type=jnp.float32
+             ).astype(out_dtype)),
+        ),
+        shape_key=_shape_key(m, n, k, at.dtype),
+    )
+    return jnp.transpose(out, po) if po is not None else out

@@ -150,9 +150,24 @@ def sfc_band_table(
     n_minor: int,
     *,
     band: "np.ndarray | None" = None,
+    causal_chunks: "Tuple[int, int] | None" = None,
+    q_offset: int = 0,
 ) -> np.ndarray:
     """``(4, T)`` int32 task table over a ragged band of an
     ``n_major x n_minor`` tile grid: rows = (i_major, i_minor, first, last).
+
+    .. note:: **Migration.**  This entry point is now a thin front-end over
+       the unified schedule compiler: ``repro.core.schedule.compile_schedule``
+       with a ``band_spec`` (or ``attention_spec``) emits the same table as
+       part of a :class:`~repro.core.schedule.Schedule` artifact, which is
+       what the kernels consume.  New code should build a ``ScheduleSpec``
+       instead of calling this directly.
+
+    ``causal_chunks=(q_chunk, k_chunk)`` derives the *causal* band from the
+    chunk sizes instead of an explicit ``band`` array, and ``q_offset``
+    shifts that band by a KV-cache offset (global q position = ``q_offset +
+    local position``) — the chunked-prefill schedule, where each prefill
+    chunk's q tiles attend every cached k position before them.
 
     This is the attention analogue of the GEMM task tables: the (q, k) tile
     space of a flash-attention pass is a rectangle (non-causal) or a ragged
@@ -179,29 +194,30 @@ def sfc_band_table(
     n-1 tests in the dense GEMM grids, which a ragged row count cannot
     express statically).
     """
-    if band is None:
-        band = np.full(n_major, n_minor, dtype=np.int64)
-    band = np.asarray(band)
-    cols = []
-    flip = False
-    for i in range(n_major):
-        hi = int(band[i])
-        if hi <= 0:
-            continue
-        ks = np.arange(hi, dtype=np.int32)
-        if flip:
-            ks = ks[::-1]
-        flip = not flip
-        first = np.zeros(hi, np.int32)
-        last = np.zeros(hi, np.int32)
-        first[0] = 1
-        last[-1] = 1
-        cols.append(
-            np.stack([np.full(hi, i, np.int32), ks, first, last])
+    # lazy import: schedule.py consumes this module's gilbert primitives
+    from repro.core.schedule import (
+        attention_spec,
+        band_spec,
+        compile_schedule,
+    )
+
+    if causal_chunks is not None:
+        if band is not None:
+            raise ValueError("pass either band or causal_chunks, not both")
+        q_chunk, k_chunk = causal_chunks
+        spec = attention_spec(
+            n_major, n_minor, causal=True,
+            q_chunk=int(q_chunk), k_chunk=int(k_chunk),
+            q_offset=int(q_offset),
         )
-    if not cols:
-        return np.zeros((4, 0), np.int32)
-    return np.concatenate(cols, axis=1).astype(np.int32)
+    else:
+        if q_offset:
+            raise ValueError("q_offset needs causal_chunks to shift a band")
+        spec = band_spec(
+            n_major, n_minor,
+            band=None if band is None else tuple(int(b) for b in np.asarray(band)),
+        )
+    return compile_schedule(spec).table
 
 
 class SFCMap:

@@ -44,6 +44,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.namespaces import (
+    NS_GEMM,
+    NS_GLU,
+    NS_GROUPED_NT,
+    NS_GROUPED_TN,
+    NS_GROUPED_TN_UPDATE,
+    NS_NT,
+    NS_NT_DUAL,
+    NS_TN,
+    NS_TN_DUAL,
+    NS_TN_UPDATE,
+    NS_TN_UPDATE_DUAL,
+    RUNG_SFC_PALLAS,
+    RUNG_XLA,
+)
 from repro.core.perf_model import TPU_V5E, choose_knobs_analytical
 from repro.kernels.sfc_gemm import (
     activation_fn,
@@ -79,6 +94,7 @@ __all__ = [
     "resolve_knobs",
     "reference_knobs",
     "fused_path_fits_vmem",
+    "chunk_gemm_plan",
 ]
 
 # Mosaic VMEM is ~16 MiB/core on current TPUs; when the fused step's working
@@ -118,7 +134,7 @@ def _resolve_knobs(
     bn: Optional[int],
     k_layers: Optional[int],
     k_block_factor: Optional[int],
-    op: str = "gemm",
+    op: str = NS_GEMM,
 ) -> Tuple[int, int, int, int]:
     """Fill unspecified knobs: measured tune-cache winner first (paper §III-C
     method (1)), analytical model + MXU alignment rules as the fallback.
@@ -161,7 +177,7 @@ def resolve_knobs(
     bn: Optional[int] = None,
     k_layers: Optional[int] = None,
     k_block_factor: Optional[int] = None,
-    op: str = "gemm",
+    op: str = NS_GEMM,
 ) -> Tuple[int, int, int, int]:
     """Public knob resolution: tune cache -> analytical model -> alignment.
 
@@ -169,6 +185,42 @@ def resolve_knobs(
     Listing-1 reference, the tuner's candidate seeding) consults, so a
     measured winner applies everywhere."""
     return _resolve_knobs(m, n, k, dtype, bm, bn, k_layers, k_block_factor, op)
+
+
+def chunk_gemm_plan(m: int, n: int, k: int, dtype):
+    """Tune namespace + knobs for one batched intra-chunk GEMM (the
+    chunked-recurrence einsums routed through `core.gemm_backend.chunk_einsum`).
+
+    The schedule compiler is the identity: knobs resolved from the base
+    "gemm" namespace fix the padded tile grid, and the compiled
+    `ScheduleSpec` key of that grid qualifies the namespace
+    (``"gemm@<key>"`` via `namespaces.schedule_namespace`) — so a chunked
+    xLSTM qk block and a plain projection with the same padded shape tune
+    into *distinct* buckets, and the fallback ladder quarantines them
+    per-schedule.  Knobs then re-resolve under the qualified namespace so
+    a measured winner in the schedule's own bucket overrides the base
+    choice (the spec key itself stays canonical: it names the tile space,
+    not the winning knobs).
+
+    Returns ``(namespace, knobs)`` with ``knobs`` the explicit
+    bm/bn/k_layers/k_block_factor kwargs for `sfc_matmul`.
+    """
+    from repro.core.namespaces import schedule_namespace
+    from repro.core.schedule import compile_schedule, gemm_spec
+
+    bm, bn, kl, kbf = _resolve_knobs(
+        m, n, k, dtype, None, None, None, None, NS_GEMM
+    )
+    mb_cnt = _round_up(m, bm) // bm
+    nb_cnt = _round_up(n, bn) // bn
+    sched = compile_schedule(gemm_spec(mb_cnt, nb_cnt, kl))
+    namespace = schedule_namespace(NS_GEMM, sched.key)
+    bm, bn, kl, kbf = _resolve_knobs(
+        m, n, k, dtype, None, None, None, None, namespace
+    )
+    return namespace, dict(
+        bm=bm, bn=bn, k_layers=kl, k_block_factor=kbf
+    )
 
 
 def _divisor_block(dim: int, cap: int) -> int:
@@ -182,7 +234,7 @@ def _divisor_block(dim: int, cap: int) -> int:
 
 
 def reference_knobs(
-    m: int, n: int, k: int, dtype, op: str = "gemm"
+    m: int, n: int, k: int, dtype, op: str = NS_GEMM
 ) -> Tuple[int, int, int, int, int]:
     """(bm, bn, bk, k_layers, k_block_factor) for `sfc_ca_gemm_reference`.
 
@@ -252,7 +304,7 @@ def ensure_fused_fits(
     `_resolve_knobs` pipeline the launch itself uses."""
     from repro.robust import VmemBudgetError
 
-    op = "glu" if glu else "gemm"
+    op = NS_GLU if glu else NS_GEMM
     bm, bn, k_layers, k_block_factor = _resolve_knobs(
         m, n, k, jnp.dtype(dtype), None, None, None, None, op
     )
@@ -357,7 +409,7 @@ def _matmul_impl(
         )
     out_dtype = out_dtype or a.dtype
 
-    op = "glu" if glu else "gemm"
+    op = NS_GLU if glu else NS_GEMM
     bm, bn, k_layers, k_block_factor = _resolve_knobs(
         m, n, k, a.dtype, bm, bn, k_layers, k_block_factor, op
     )
@@ -576,7 +628,7 @@ def sfc_matmul_nt(
     auto_kbf = k_block_factor is None
     bm, bn, k_layers, k_block_factor = _resolve_knobs(
         m, n, k, a.dtype, bm, bn, k_layers, k_block_factor,
-        "nt_dual" if dual else "nt",
+        NS_NT_DUAL if dual else NS_NT,
     )
     if auto_kbf:
         k_block_factor = _bump_kbf_to_fit(
@@ -639,7 +691,7 @@ def sfc_matmul_tn(
     # the output is (K, N); the contraction runs over M
     bm, bn, k_layers, k_block_factor = _resolve_knobs(
         k, n, m, a.dtype, bm, bn, k_layers, k_block_factor,
-        "tn_dual" if dual else "tn",
+        NS_TN_DUAL if dual else NS_TN,
     )
     if auto_kbf:
         k_block_factor = _bump_kbf_to_fit(
@@ -779,7 +831,7 @@ def sfc_matmul_tn_update(
     opt_sets = 2 if dual else 1
     bm, bn, k_layers, k_block_factor = _resolve_knobs(
         k, n, m, a.dtype, bm, bn, k_layers, k_block_factor,
-        "tn_update_dual" if dual else "tn_update",
+        NS_TN_UPDATE_DUAL if dual else NS_TN_UPDATE,
     )
     if auto_kbf:
         k_block_factor = _bump_kbf_to_fit(
@@ -1289,8 +1341,8 @@ def _nt_with_fallback(dh_c, b, dg_c, b_gate, *, interpret):
 
     m = int(np.prod(dh_c.shape[:-1]))
     return run_with_fallback(
-        "nt",
-        (("sfc_pallas", kernel), ("xla", lambda: _jnp_nt(dh_c, b, dg_c, b_gate))),
+        NS_NT,
+        ((RUNG_SFC_PALLAS, kernel), (RUNG_XLA, lambda: _jnp_nt(dh_c, b, dg_c, b_gate))),
         shape_key=_bwd_shape_key(m, b.shape[0], dh_c.shape[-1], dh_c.dtype),
     )
 
@@ -1308,8 +1360,8 @@ def _tn_with_fallback(a2d, dh2, dg2, *, interpret):
         )
 
     return run_with_fallback(
-        "tn",
-        (("sfc_pallas", kernel), ("xla", lambda: _jnp_tn(a2d, dh2, dg2))),
+        NS_TN,
+        ((RUNG_SFC_PALLAS, kernel), (RUNG_XLA, lambda: _jnp_tn(a2d, dh2, dg2))),
         shape_key=_bwd_shape_key(
             a2d.shape[-1], dh2.shape[-1], a2d.shape[0], a2d.dtype
         ),
@@ -1326,10 +1378,10 @@ def _grouped_nt_with_fallback(dh_c, b, gs, dg_c, b_gate, *, interpret):
         )
 
     return run_with_fallback(
-        "grouped_nt",
+        NS_GROUPED_NT,
         (
-            ("sfc_pallas", kernel),
-            ("xla", lambda: _jnp_grouped_nt(dh_c, b, gs, dg_c, b_gate)),
+            (RUNG_SFC_PALLAS, kernel),
+            (RUNG_XLA, lambda: _jnp_grouped_nt(dh_c, b, gs, dg_c, b_gate)),
         ),
         shape_key=_bwd_shape_key(
             dh_c.shape[0], b.shape[-2], dh_c.shape[-1], dh_c.dtype
@@ -1350,8 +1402,8 @@ def _grouped_tn_with_fallback(a, dh_c, gs, dg_c, *, interpret):
         )
 
     return run_with_fallback(
-        "grouped_tn",
-        (("sfc_pallas", kernel), ("xla", lambda: _jnp_grouped_tn(a, dh_c, gs, dg_c))),
+        NS_GROUPED_TN,
+        ((RUNG_SFC_PALLAS, kernel), (RUNG_XLA, lambda: _jnp_grouped_tn(a, dh_c, gs, dg_c))),
         shape_key=_bwd_shape_key(
             a.shape[-1], dh_c.shape[-1], a.shape[0], a.dtype
         ),
@@ -1570,8 +1622,8 @@ def _run_tn_update(cfg, a2d, dh_c, dg_c, b, b_gate, opt, hyper):
         return ((w_n, None), opt_n, sq)
 
     return run_with_fallback(
-        "tn_update",
-        (("sfc_pallas", kernel), ("xla", oracle)),
+        NS_TN_UPDATE,
+        ((RUNG_SFC_PALLAS, kernel), (RUNG_XLA, oracle)),
         shape_key=_bwd_shape_key(
             a2d.shape[-1], n, a2d.shape[0], a2d.dtype
         ),
@@ -1659,7 +1711,7 @@ def fused_update_matmul(
     *,
     bias: Optional[jax.Array] = None,
     activation: Optional[str] = None,
-    backend: str = "sfc_pallas",
+    backend: str = RUNG_SFC_PALLAS,
     stochastic_round: bool = True,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
@@ -1675,7 +1727,7 @@ def fused_update_matmul(
             bm=None, bn=None, k_layers=None, k_block_factor=None,
             interpret=interpret, out_dtype=None, fuse=None,
         ),
-        fused=backend == "sfc_pallas",
+        fused=backend == RUNG_SFC_PALLAS,
         stochastic_round=stochastic_round,
     )
     return _update_core(
@@ -1695,7 +1747,7 @@ def fused_update_glu_matmul(
     activation: str = "silu",
     bias: Optional[jax.Array] = None,
     gate_bias: Optional[jax.Array] = None,
-    backend: str = "sfc_pallas",
+    backend: str = RUNG_SFC_PALLAS,
     stochastic_round: bool = True,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
@@ -1708,7 +1760,7 @@ def fused_update_glu_matmul(
             bm=None, bn=None, k_layers=None, k_block_factor=None,
             interpret=interpret, out_dtype=None, fuse=None,
         ),
-        fused=backend == "sfc_pallas",
+        fused=backend == RUNG_SFC_PALLAS,
         stochastic_round=stochastic_round,
     )
     return _update_core(
@@ -2178,8 +2230,8 @@ def _grouped_update_core_bwd(cfg, saved, dy):
     from repro.robust import run_with_fallback
 
     w_cots, opt_cots, token_cots = run_with_fallback(
-        "grouped_tn_update",
-        (("sfc_pallas", kernel), ("xla", oracle)),
+        NS_GROUPED_TN_UPDATE,
+        ((RUNG_SFC_PALLAS, kernel), (RUNG_XLA, oracle)),
         shape_key=_bwd_shape_key(
             a.shape[-1], dh_c.shape[-1], a.shape[0], a.dtype
         ),
@@ -2218,7 +2270,7 @@ def fused_update_grouped_matmul(
     *,
     bias: Optional[jax.Array] = None,
     activation: Optional[str] = None,
-    backend: str = "sfc_pallas",
+    backend: str = RUNG_SFC_PALLAS,
     stochastic_round: bool = True,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
@@ -2234,7 +2286,7 @@ def fused_update_grouped_matmul(
             bm=None, bn=None, k_block_factor=None,
             interpret=interpret, out_dtype=None,
         ),
-        fused=backend == "sfc_pallas",
+        fused=backend == RUNG_SFC_PALLAS,
         stochastic_round=stochastic_round,
     )
     return _grouped_update_core(
@@ -2255,7 +2307,7 @@ def fused_update_grouped_glu_matmul(
     activation: str = "silu",
     bias: Optional[jax.Array] = None,
     gate_bias: Optional[jax.Array] = None,
-    backend: str = "sfc_pallas",
+    backend: str = RUNG_SFC_PALLAS,
     stochastic_round: bool = True,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
@@ -2269,7 +2321,7 @@ def fused_update_grouped_glu_matmul(
             bm=None, bn=None, k_block_factor=None,
             interpret=interpret, out_dtype=None,
         ),
-        fused=backend == "sfc_pallas",
+        fused=backend == RUNG_SFC_PALLAS,
         stochastic_round=stochastic_round,
     )
     return _grouped_update_core(

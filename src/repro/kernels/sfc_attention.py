@@ -1,8 +1,9 @@
 """Pallas TPU kernels: SFC-scheduled flash attention (fwd/bwd) + decode.
 
 The attention analogue of the SFC-CA GEMM stack (`kernels/sfc_gemm.py`):
-every kernel here walks a **band task table** built by
-`core.sfc.sfc_band_table` through a scalar-prefetched grid, so
+every kernel here walks a **band task table** compiled by the unified
+schedule compiler (`core.schedule.attention_spec` →
+`compile_schedule`) through a scalar-prefetched grid, so
 
   * masked (q, k) tile pairs of the causal band are dropped from the task
     list entirely — no grid step, no copy, no predicated-off MXU slot
@@ -57,7 +58,7 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.sfc import sfc_band_table
+from repro.core.schedule import attention_spec, compile_schedule
 from repro.kernels.pallas_compat import CompilerParams as _CompilerParams
 
 __all__ = [
@@ -80,62 +81,46 @@ def build_attention_task_table(
     q_chunk: int,
     k_chunk: int,
     transpose: bool = False,
+    q_offset: int = 0,
 ) -> np.ndarray:
     """(4, T) band task table for the (nq, nk) attention tile grid.
 
+    Thin front-end over the unified schedule compiler
+    (`repro.core.schedule.attention_spec`); kept so callers and tests can
+    grab the raw table without building a spec by hand.
+
     ``causal`` bounds each q row's k extent at the diagonal (start-aligned
-    convention: q position i attends k[0..i], matching
-    `ref.flash_attention_ref`); with ``transpose`` the table is k-row-major
-    — rows (ik, iq, first, last), each k tile's band of contributing q
-    tiles walked contiguously (the dK/dV traversal)."""
-    if not causal:
-        if transpose:
-            return sfc_band_table(nk, nq)
-        return sfc_band_table(nq, nk)
-    if not transpose:
-        # q row i covers k tiles whose first position <= i's last position
-        band = np.minimum(
-            (np.arange(nq, dtype=np.int64) * q_chunk + q_chunk - 1) // k_chunk
-            + 1,
-            nk,
-        )
-        return sfc_band_table(nq, nk, band=band)
-    # k row j contributes to q tiles whose last position >= j's first —
-    # a ragged *start* instead of a ragged end, same serpentine walk
-    start = np.minimum(
-        (np.arange(nk, dtype=np.int64) * k_chunk) // q_chunk, nq
+    convention: global q position ``q_offset + i`` attends k[0..q_offset+i],
+    matching `ref.flash_attention_ref`); with ``transpose`` the table is
+    k-row-major — rows (ik, iq, first, last), each k tile's band of
+    contributing q tiles walked contiguously (the dK/dV traversal)."""
+    spec = attention_spec(
+        nq,
+        nk,
+        causal=causal,
+        q_chunk=q_chunk,
+        k_chunk=k_chunk,
+        transpose=transpose,
+        q_offset=q_offset,
     )
-    cols = []
-    flip = False
-    for j in range(nk):
-        lo = int(start[j])
-        if lo >= nq:
-            # k tile entirely past the last q position (Sk > Sq causal):
-            # no q tile contributes, but its dK/dV output block must still
-            # be written — one fully-masked task flushes exact zeros
-            cols.append(
-                np.asarray([[j], [nq - 1], [1], [1]], np.int32)
-            )
-            continue
-        qs = np.arange(lo, nq, dtype=np.int32)
-        if flip:
-            qs = qs[::-1]
-        flip = not flip
-        n = qs.size
-        first = np.zeros(n, np.int32)
-        last = np.zeros(n, np.int32)
-        first[0] = 1
-        last[-1] = 1
-        cols.append(np.stack([np.full(n, j, np.int32), qs, first, last]))
-    if not cols:
-        return np.zeros((4, 0), np.int32)
-    return np.concatenate(cols, axis=1).astype(np.int32)
+    return compile_schedule(spec).table
 
 
 def _tile_mask(
-    iq, ik, q_chunk: int, k_chunk: int, seq_q: int, seq_k: int, causal: bool
+    iq,
+    ik,
+    q_chunk: int,
+    k_chunk: int,
+    seq_q: int,
+    seq_k: int,
+    causal: bool,
+    q_offset: int = 0,
 ):
-    """(q_chunk, k_chunk) bool validity of one tile (padding + causal)."""
+    """(q_chunk, k_chunk) bool validity of one tile (padding + causal).
+
+    ``q_offset`` shifts local q positions to global ones for the causal
+    comparison (chunked prefill against a KV cache): local row i sits at
+    global position ``q_offset + i`` and attends k[0..q_offset+i]."""
     qpos = iq * q_chunk + lax.broadcasted_iota(
         jnp.int32, (q_chunk, k_chunk), 0
     )
@@ -144,7 +129,7 @@ def _tile_mask(
     )
     valid = (kpos < seq_k) & (qpos < seq_q)
     if causal:
-        valid = valid & (kpos <= qpos)
+        valid = valid & (kpos <= qpos + q_offset)
     return valid
 
 
@@ -170,6 +155,7 @@ def _flash_fwd_kernel(
     k_chunk: int,
     seq_q: int,
     seq_k: int,
+    q_offset: int,
 ):
     t = pl.program_id(1)
     iq, ik = tab_ref[0, t], tab_ref[1, t]
@@ -186,7 +172,9 @@ def _flash_fwd_kernel(
     s = lax.dot_general(
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     )  # (qc, kc)
-    valid = _tile_mask(iq, ik, q_chunk, k_chunk, seq_q, seq_k, causal)
+    valid = _tile_mask(
+        iq, ik, q_chunk, k_chunk, seq_q, seq_k, causal, q_offset
+    )
     s = jnp.where(valid, s, NEG)
 
     m_prev = m_ref[...]
@@ -209,7 +197,8 @@ def _flash_fwd_kernel(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "causal", "seq_q", "seq_k", "q_chunk", "k_chunk", "interpret",
+        "causal", "seq_q", "seq_k", "q_chunk", "k_chunk", "q_offset",
+        "interpret",
     ),
 )
 def sfc_flash_fwd(
@@ -222,6 +211,7 @@ def sfc_flash_fwd(
     seq_k: int,
     q_chunk: int,
     k_chunk: int,
+    q_offset: int = 0,
     interpret: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
     """Band-scheduled flash forward: returns (o, lse).
@@ -229,7 +219,9 @@ def sfc_flash_fwd(
     ``lse`` is (B, Sq_p, H, 1) f32 — the logsumexp residual the custom VJP
     saves.  Padded rows (>= seq_q) carry a harmless sentinel; the backward
     masks them explicitly.  Requires Sq_p % q_chunk == Sk_p % k_chunk == 0
-    (`core.attention_backend` pads)."""
+    (`core.attention_backend` pads).  ``q_offset`` shifts the causal band
+    by a KV-cache offset (chunked prefill): local q row i is global row
+    ``q_offset + i``."""
     b, sq_p, h, d = q.shape
     _, sk_p, hkv, _ = k.shape
     assert h % hkv == 0, (h, hkv)
@@ -237,11 +229,14 @@ def sfc_flash_fwd(
     assert sq_p % q_chunk == 0 and sk_p % k_chunk == 0
 
     nq, nk = sq_p // q_chunk, sk_p // k_chunk
-    tab = jnp.asarray(
-        build_attention_task_table(
-            nq, nk, causal=causal, q_chunk=q_chunk, k_chunk=k_chunk
+    sched = compile_schedule(
+        attention_spec(
+            nq, nk, causal=causal, q_chunk=q_chunk, k_chunk=k_chunk,
+            q_offset=q_offset,
         )
     )
+    tab = jnp.asarray(sched.table)
+    maj, mnr = sched.selector("major"), sched.selector("minor")
     kernel = functools.partial(
         _flash_fwd_kernel,
         scale=1.0 / float(np.sqrt(d)),
@@ -250,13 +245,14 @@ def sfc_flash_fwd(
         k_chunk=k_chunk,
         seq_q=seq_q,
         seq_k=seq_k,
+        q_offset=q_offset,
     )
 
     def q_map(i, t, tab):
-        return (i // h, tab[0, t], i % h, 0)
+        return (i // h, maj(tab, t), i % h, 0)
 
     def kv_map(i, t, tab):
-        return (i // h, tab[1, t], (i % h) // groups, 0)
+        return (i // h, mnr(tab, t), (i % h) // groups, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -329,6 +325,7 @@ def _flash_bwd_dq_kernel(
     k_chunk: int,
     seq_q: int,
     seq_k: int,
+    q_offset: int,
 ):
     t = pl.program_id(1)
     iq, ik = tab_ref[0, t], tab_ref[1, t]
@@ -337,7 +334,9 @@ def _flash_bwd_dq_kernel(
     def _zero():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    valid = _tile_mask(iq, ik, q_chunk, k_chunk, seq_q, seq_k, causal)
+    valid = _tile_mask(
+        iq, ik, q_chunk, k_chunk, seq_q, seq_k, causal, q_offset
+    )
     k = k_ref[0, :, 0, :].astype(jnp.float32)
     _, ds = _bwd_p_ds(
         q_ref[0, :, 0, :].astype(jnp.float32),
@@ -378,6 +377,7 @@ def _flash_bwd_dkv_kernel(
     k_chunk: int,
     seq_q: int,
     seq_k: int,
+    q_offset: int,
 ):
     t, g = pl.program_id(1), pl.program_id(2)
     ik, iq = tab_ref[0, t], tab_ref[1, t]
@@ -387,7 +387,9 @@ def _flash_bwd_dkv_kernel(
         dk_acc[...] = jnp.zeros_like(dk_acc)
         dv_acc[...] = jnp.zeros_like(dv_acc)
 
-    valid = _tile_mask(iq, ik, q_chunk, k_chunk, seq_q, seq_k, causal)
+    valid = _tile_mask(
+        iq, ik, q_chunk, k_chunk, seq_q, seq_k, causal, q_offset
+    )
     q = q_ref[0, :, 0, :].astype(jnp.float32)
     do = do_ref[0, :, 0, :].astype(jnp.float32)
     p, ds = _bwd_p_ds(
@@ -419,7 +421,8 @@ def _flash_bwd_dkv_kernel(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "causal", "seq_q", "seq_k", "q_chunk", "k_chunk", "interpret",
+        "causal", "seq_q", "seq_k", "q_chunk", "k_chunk", "q_offset",
+        "interpret",
     ),
 )
 def sfc_flash_bwd_dq(
@@ -435,6 +438,7 @@ def sfc_flash_bwd_dq(
     seq_k: int,
     q_chunk: int,
     k_chunk: int,
+    q_offset: int = 0,
     interpret: bool = False,
 ) -> jax.Array:
     """dQ over the q-major band table; returns (B, Sq_p, H, D) f32."""
@@ -442,11 +446,14 @@ def sfc_flash_bwd_dq(
     _, sk_p, hkv, _ = k.shape
     groups = h // hkv
     nq, nk = sq_p // q_chunk, sk_p // k_chunk
-    tab = jnp.asarray(
-        build_attention_task_table(
-            nq, nk, causal=causal, q_chunk=q_chunk, k_chunk=k_chunk
+    sched = compile_schedule(
+        attention_spec(
+            nq, nk, causal=causal, q_chunk=q_chunk, k_chunk=k_chunk,
+            q_offset=q_offset,
         )
     )
+    tab = jnp.asarray(sched.table)
+    maj, mnr = sched.selector("major"), sched.selector("minor")
     kernel = functools.partial(
         _flash_bwd_dq_kernel,
         scale=1.0 / float(np.sqrt(d)),
@@ -455,16 +462,17 @@ def sfc_flash_bwd_dq(
         k_chunk=k_chunk,
         seq_q=seq_q,
         seq_k=seq_k,
+        q_offset=q_offset,
     )
 
     def q_map(i, t, tab):
-        return (i // h, tab[0, t], i % h, 0)
+        return (i // h, maj(tab, t), i % h, 0)
 
     def kv_map(i, t, tab):
-        return (i // h, tab[1, t], (i % h) // groups, 0)
+        return (i // h, mnr(tab, t), (i % h) // groups, 0)
 
     def stat_map(i, t, tab):
-        return (i // h, tab[0, t], i % h, 0)
+        return (i // h, maj(tab, t), i % h, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -494,7 +502,8 @@ def sfc_flash_bwd_dq(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "causal", "seq_q", "seq_k", "q_chunk", "k_chunk", "interpret",
+        "causal", "seq_q", "seq_k", "q_chunk", "k_chunk", "q_offset",
+        "interpret",
     ),
 )
 def sfc_flash_bwd_dkv(
@@ -510,6 +519,7 @@ def sfc_flash_bwd_dkv(
     seq_k: int,
     q_chunk: int,
     k_chunk: int,
+    q_offset: int = 0,
     interpret: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
     """(dK, dV) over the k-major (transposed) band table.
@@ -522,12 +532,15 @@ def sfc_flash_bwd_dkv(
     _, sk_p, hkv, _ = k.shape
     groups = h // hkv
     nq, nk = sq_p // q_chunk, sk_p // k_chunk
-    tab = jnp.asarray(
-        build_attention_task_table(
+    sched = compile_schedule(
+        attention_spec(
             nq, nk, causal=causal, q_chunk=q_chunk, k_chunk=k_chunk,
-            transpose=True,
+            transpose=True, q_offset=q_offset,
         )
     )
+    tab = jnp.asarray(sched.table)
+    # transpose table: major = k tile, minor = q tile
+    maj, mnr = sched.selector("major"), sched.selector("minor")
     kernel = functools.partial(
         _flash_bwd_dkv_kernel,
         scale=1.0 / float(np.sqrt(d)),
@@ -537,13 +550,14 @@ def sfc_flash_bwd_dkv(
         k_chunk=k_chunk,
         seq_q=seq_q,
         seq_k=seq_k,
+        q_offset=q_offset,
     )
 
     def q_map(i, t, g, tab):
-        return (i // hkv, tab[1, t], (i % hkv) * groups + g, 0)
+        return (i // hkv, mnr(tab, t), (i % hkv) * groups + g, 0)
 
     def kv_map(i, t, g, tab):
-        return (i // hkv, tab[0, t], i % hkv, 0)
+        return (i // hkv, maj(tab, t), i % hkv, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,

@@ -60,7 +60,12 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.sfc import create_sfc_map
+from repro.core.schedule import (
+    compile_schedule,
+    gemm_spec,
+    grouped_gemm_spec,
+    grouped_tn_spec,
+)
 from repro.kernels.pallas_compat import CompilerParams as _CompilerParams
 from repro.optim.adamw import (
     HYP_B1,
@@ -107,14 +112,12 @@ __all__ = [
 
 def build_task_table(mb: int, nb: int, k_layers: int) -> np.ndarray:
     """(3, K_layers*Mb*Nb) int32: rows = (im, in, layer) per task, in
-    Listing-1 task order (layer-major, gilbert order within each layer)."""
-    sfc = create_sfc_map(mb, nb)
-    im = sfc.im_table()
-    in_ = sfc.in_table()
-    ims = np.tile(im, k_layers)
-    ins = np.tile(in_, k_layers)
-    layers = np.repeat(np.arange(k_layers, dtype=np.int32), mb * nb)
-    return np.stack([ims, ins, layers]).astype(np.int32)
+    Listing-1 task order (layer-major, gilbert order within each layer).
+
+    Thin compatibility wrapper: the table is emitted by the unified
+    schedule compiler (`repro.core.schedule`); kernels consume the
+    `Schedule` artifact directly."""
+    return compile_schedule(gemm_spec(mb, nb, k_layers)).table
 
 
 def build_grouped_task_table(
@@ -125,23 +128,9 @@ def build_grouped_task_table(
     Rows = (im_global, in, expert): each expert e owns its own ``row_blocks[e]
     x nb`` tile grid, walked in gilbert order (one SFC map per expert), with
     ``im_global`` offset by the padded row blocks of the experts before it.
-    Experts with zero rows contribute no tasks."""
-    ims: list = []
-    ins: list = []
-    exps: list = []
-    row_off = 0
-    for e, mb_e in enumerate(row_blocks):
-        if mb_e > 0:
-            sfc = create_sfc_map(mb_e, nb)
-            ims.append(sfc.im_table() + row_off)
-            ins.append(sfc.in_table())
-            exps.append(np.full(mb_e * nb, e, dtype=np.int32))
-        row_off += mb_e
-    if not ims:
-        return np.zeros((3, 0), np.int32)
-    return np.stack(
-        [np.concatenate(ims), np.concatenate(ins), np.concatenate(exps)]
-    ).astype(np.int32)
+    Experts with zero rows contribute no tasks.  Compatibility wrapper over
+    the unified schedule compiler (`repro.core.schedule`)."""
+    return compile_schedule(grouped_gemm_spec(tuple(row_blocks), nb)).table
 
 
 # ---------------------------------------------------------------------------
@@ -382,7 +371,9 @@ def sfc_gemm_fused(
     k_chunk = k // (k_layers * k_block_factor)
     n_k_chunks = k_block_factor
 
-    tab = jnp.asarray(build_task_table(mb_cnt, nb_cnt, 1))
+    sched = compile_schedule(gemm_spec(mb_cnt, nb_cnt, 1))
+    tab = jnp.asarray(sched.table)
+    maj, mnr = sched.selector("major"), sched.selector("minor")
     spec = _FusedSpec(
         mode="plain",
         glu=b_gate is not None,
@@ -398,20 +389,20 @@ def sfc_gemm_fused(
         preact_out=preact_out,
     )
 
-    # Block index maps (units of blocks).  `t` walks gilbert order; layer
-    # `l` then chunk `kc` are innermost, so the C tile (and both epilogue
-    # operands) are resident across the whole contraction.
+    # Block index maps (units of blocks).  `t` walks the compiled schedule
+    # order; layer `l` then chunk `kc` are innermost, so the C tile (and
+    # both epilogue operands) are resident across the whole contraction.
     def a_map(t, l, kc, tab):
-        return (tab[0, t], l * n_k_chunks + kc)
+        return (maj(tab, t), l * n_k_chunks + kc)
 
     def b_map(t, l, kc, tab):
-        return (l * n_k_chunks + kc, tab[1, t])
+        return (l * n_k_chunks + kc, mnr(tab, t))
 
     def o_map(t, l, kc, tab):
-        return (tab[0, t], tab[1, t])
+        return (maj(tab, t), mnr(tab, t))
 
     def col_map(t, l, kc, tab):  # (1, N) epilogue vectors
-        return (0, tab[1, t])
+        return (0, mnr(tab, t))
 
     inputs = [a, b]
     in_specs = [
@@ -508,7 +499,9 @@ def sfc_gemm_batched_fused(
     k_chunk = k // (k_layers * k_block_factor)
     n_k_chunks = k_block_factor
 
-    tab = jnp.asarray(build_task_table(mb_cnt, nb_cnt, 1))
+    sched = compile_schedule(gemm_spec(mb_cnt, nb_cnt, 1))
+    tab = jnp.asarray(sched.table)
+    maj, mnr = sched.selector("major"), sched.selector("minor")
     spec = _FusedSpec(
         mode="batched",
         glu=b_gate is not None,
@@ -525,22 +518,22 @@ def sfc_gemm_batched_fused(
     )
 
     def a_map(bi, t, l, kc, tab):
-        return (bi, tab[0, t], l * n_k_chunks + kc)
+        return (bi, maj(tab, t), l * n_k_chunks + kc)
 
     def o_map(bi, t, l, kc, tab):
-        return (bi, tab[0, t], tab[1, t])
+        return (bi, maj(tab, t), mnr(tab, t))
 
     def col_map(bi, t, l, kc, tab):
-        return (0, tab[1, t])
+        return (0, mnr(tab, t))
 
     if b_batched:
         def b_map(bi, t, l, kc, tab):
-            return (bi, l * n_k_chunks + kc, tab[1, t])
+            return (bi, l * n_k_chunks + kc, mnr(tab, t))
 
         b_spec = pl.BlockSpec((1, k_chunk, bn), b_map)
     else:
         def b_map(bi, t, l, kc, tab):
-            return (l * n_k_chunks + kc, tab[1, t])
+            return (l * n_k_chunks + kc, mnr(tab, t))
 
         b_spec = pl.BlockSpec((k_chunk, bn), b_map)
 
@@ -649,20 +642,25 @@ def sfc_gemm_pallas(
     n_k_chunks = k_block_factor
     n_tasks = k_layers * mb_cnt * nb_cnt
 
-    tab = jnp.asarray(build_task_table(mb_cnt, nb_cnt, k_layers))
+    sched = compile_schedule(gemm_spec(mb_cnt, nb_cnt, k_layers))
+    tab = jnp.asarray(sched.table)
+    maj, mnr, lyr = (
+        sched.selector("major"), sched.selector("minor"),
+        sched.selector("layer"),
+    )
 
     # Block index maps (units of blocks).  `t` walks Listing-1 task order;
     # `kc` is the K-chunk (innermost, so the C tile is revisited/resident).
     kc_per_layer = k_per_layer // k_chunk
 
     def a_map(t, kc, tab):
-        return (tab[0, t], tab[2, t] * kc_per_layer + kc)
+        return (maj(tab, t), lyr(tab, t) * kc_per_layer + kc)
 
     def b_map(t, kc, tab):
-        return (tab[2, t] * kc_per_layer + kc, tab[1, t])
+        return (lyr(tab, t) * kc_per_layer + kc, mnr(tab, t))
 
     def o_map(t, kc, tab):
-        return (tab[2, t], tab[0, t], tab[1, t])
+        return (lyr(tab, t), maj(tab, t), mnr(tab, t))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -772,22 +770,27 @@ def sfc_gemm_batched(
     n_tasks = k_layers * mb_cnt * nb_cnt
     kc_per_layer = k_per_layer // k_chunk
 
-    tab = jnp.asarray(build_task_table(mb_cnt, nb_cnt, k_layers))
+    sched = compile_schedule(gemm_spec(mb_cnt, nb_cnt, k_layers))
+    tab = jnp.asarray(sched.table)
+    maj, mnr, lyr = (
+        sched.selector("major"), sched.selector("minor"),
+        sched.selector("layer"),
+    )
 
     def a_map(bi, t, kc, tab):
-        return (bi, tab[0, t], tab[2, t] * kc_per_layer + kc)
+        return (bi, maj(tab, t), lyr(tab, t) * kc_per_layer + kc)
 
     def o_map(bi, t, kc, tab):
-        return (bi, tab[2, t], tab[0, t], tab[1, t])
+        return (bi, lyr(tab, t), maj(tab, t), mnr(tab, t))
 
     if b_batched:
         def b_map(bi, t, kc, tab):
-            return (bi, tab[2, t] * kc_per_layer + kc, tab[1, t])
+            return (bi, lyr(tab, t) * kc_per_layer + kc, mnr(tab, t))
 
         b_spec = pl.BlockSpec((1, k_chunk, bn), b_map)
     else:
         def b_map(bi, t, kc, tab):
-            return (tab[2, t] * kc_per_layer + kc, tab[1, t])
+            return (lyr(tab, t) * kc_per_layer + kc, mnr(tab, t))
 
         b_spec = pl.BlockSpec((k_chunk, bn), b_map)
 
@@ -884,12 +887,16 @@ def sfc_gemm_grouped(
     k_chunk = k // k_block_factor
     n_k_chunks = k_block_factor
 
-    tab_np = build_grouped_task_table(tuple(row_blocks), nb_cnt)
-    n_tasks = tab_np.shape[1]
+    sched = compile_schedule(grouped_gemm_spec(tuple(row_blocks), nb_cnt))
+    n_tasks = sched.num_tasks
     if n_tasks == 0:
         zero = jnp.zeros((m_total, n), out_dtype)
         return (zero, zero) if preact_out else zero
-    tab = jnp.asarray(tab_np)
+    tab = jnp.asarray(sched.table)
+    maj, mnr, grp = (
+        sched.selector("major"), sched.selector("minor"),
+        sched.selector("group"),
+    )
     spec = _FusedSpec(
         mode="grouped",
         glu=b_gate is not None,
@@ -906,16 +913,16 @@ def sfc_gemm_grouped(
     )
 
     def a_map(t, kc, tab):
-        return (tab[0, t], kc)
+        return (maj(tab, t), kc)
 
     def b_map(t, kc, tab):
-        return (tab[2, t], kc, tab[1, t])
+        return (grp(tab, t), kc, mnr(tab, t))
 
     def o_map(t, kc, tab):
-        return (tab[0, t], tab[1, t])
+        return (maj(tab, t), mnr(tab, t))
 
     def col_map(t, kc, tab):  # (E, 1, N) per-expert epilogue vectors
-        return (tab[2, t], 0, tab[1, t])
+        return (grp(tab, t), 0, mnr(tab, t))
 
     inputs = [a, b]
     in_specs = [
@@ -1199,16 +1206,18 @@ def sfc_gemm_nt(
     mb_cnt, nb_cnt = m // bm, n // bn
     k_chunk = k // (k_layers * k_block_factor)
     n_k_chunks = k_block_factor
-    tab = jnp.asarray(build_task_table(mb_cnt, nb_cnt, 1))
+    sched = compile_schedule(gemm_spec(mb_cnt, nb_cnt, 1))
+    tab = jnp.asarray(sched.table)
+    maj, mnr = sched.selector("major"), sched.selector("minor")
 
     def a_map(t, l, kc, tab):
-        return (tab[0, t], l * n_k_chunks + kc)
+        return (maj(tab, t), l * n_k_chunks + kc)
 
     def b_map(t, l, kc, tab):  # row slab of the (N, K) operand
-        return (tab[1, t], l * n_k_chunks + kc)
+        return (mnr(tab, t), l * n_k_chunks + kc)
 
     def o_map(t, l, kc, tab):
-        return (tab[0, t], tab[1, t])
+        return (maj(tab, t), mnr(tab, t))
 
     inputs = [a, b]
     in_specs = [
@@ -1426,16 +1435,18 @@ def sfc_gemm_tn(
     kb_cnt, nb_cnt = k // bm, n // bn
     m_chunk = m // (k_layers * k_block_factor)
     n_k_chunks = k_block_factor
-    tab = jnp.asarray(build_task_table(kb_cnt, nb_cnt, 1))
+    sched = compile_schedule(gemm_spec(kb_cnt, nb_cnt, 1))
+    tab = jnp.asarray(sched.table)
+    maj, mnr = sched.selector("major"), sched.selector("minor")
 
     def a_map(t, l, kc, tab, *_):  # column slab of the (M, K) operand
-        return (l * n_k_chunks + kc, tab[0, t])
+        return (l * n_k_chunks + kc, maj(tab, t))
 
     def b_map(t, l, kc, tab, *_):
-        return (l * n_k_chunks + kc, tab[1, t])
+        return (l * n_k_chunks + kc, mnr(tab, t))
 
     def o_map(t, l, kc, tab, *_):
-        return (tab[0, t], tab[1, t])
+        return (maj(tab, t), mnr(tab, t))
 
     def norm_map(t, l, kc, tab, *_):
         return (0, 0)
@@ -1592,20 +1603,24 @@ def sfc_gemm_grouped_nt(
     k_chunk = k // k_block_factor
     n_k_chunks = k_block_factor
 
-    tab_np = build_grouped_task_table(tuple(row_blocks), nb_cnt)
-    n_tasks = tab_np.shape[1]
+    sched = compile_schedule(grouped_gemm_spec(tuple(row_blocks), nb_cnt))
+    n_tasks = sched.num_tasks
     if n_tasks == 0:
         return jnp.zeros((m_total, n), out_dtype)
-    tab = jnp.asarray(tab_np)
+    tab = jnp.asarray(sched.table)
+    maj, mnr, grp = (
+        sched.selector("major"), sched.selector("minor"),
+        sched.selector("group"),
+    )
 
     def a_map(t, kc, tab):
-        return (tab[0, t], kc)
+        return (maj(tab, t), kc)
 
     def b_map(t, kc, tab):  # (expert, row-of-bᵀ, k-chunk)
-        return (tab[2, t], tab[1, t], kc)
+        return (grp(tab, t), mnr(tab, t), kc)
 
     def o_map(t, kc, tab):
-        return (tab[0, t], tab[1, t])
+        return (maj(tab, t), mnr(tab, t))
 
     inputs = [a, b]
     in_specs = [
@@ -1651,26 +1666,11 @@ def build_grouped_tn_task_table(
     Rows = (ik, in, expert, row_off_blocks, rb): every expert owns the same
     ``kb x nb`` weight-grad tile grid, walked in gilbert order, plus the
     block offset/extent of its row slab in the packed activation buffer so
-    the kernel can bound the ragged contraction."""
-    sfc = create_sfc_map(kb, nb)
-    iks = sfc.im_table()
-    ins = sfc.in_table()
-    cols = []
-    row_off = 0
-    for e, rb in enumerate(row_blocks):
-        cols.append(
-            np.stack(
-                [
-                    iks,
-                    ins,
-                    np.full(kb * nb, e, dtype=np.int32),
-                    np.full(kb * nb, row_off, dtype=np.int32),
-                    np.full(kb * nb, rb, dtype=np.int32),
-                ]
-            )
-        )
-        row_off += rb
-    return np.concatenate(cols, axis=1).astype(np.int32)
+    the kernel can bound the ragged contraction.  Compatibility wrapper over
+    the unified schedule compiler (`repro.core.schedule`)."""
+    return compile_schedule(
+        grouped_tn_spec(tuple(row_blocks), kb, nb)
+    ).table
 
 
 def _grouped_tn_kernel(
@@ -1856,24 +1856,32 @@ def sfc_gemm_grouped_tn(
         return (zero, zero) if dual else zero
     total_blocks = m_total // row_block
 
-    tab = jnp.asarray(build_grouped_tn_task_table(tuple(row_blocks), kb_cnt, nb_cnt))
+    sched = compile_schedule(
+        grouped_tn_spec(tuple(row_blocks), kb_cnt, nb_cnt)
+    )
+    tab = jnp.asarray(sched.table)
+    maj, mnr, grp, goff, glen = (
+        sched.selector("major"), sched.selector("minor"),
+        sched.selector("group"), sched.selector("group_off"),
+        sched.selector("group_len"),
+    )
 
     def row_idx(t, kc, tab):
         # clamp into the expert's slab (and the buffer) — out-of-extent
         # chunks are predicated off in the kernel, the fetch just needs a
         # legal address
-        rb = tab[4, t]
+        rb = glen(tab, t)
         kc_c = jnp.minimum(kc, jnp.maximum(rb - 1, 0))
-        return jnp.minimum(tab[3, t] + kc_c, total_blocks - 1)
+        return jnp.minimum(goff(tab, t) + kc_c, total_blocks - 1)
 
     def a_map(t, kc, tab, *_):
-        return (row_idx(t, kc, tab), tab[0, t])
+        return (row_idx(t, kc, tab), maj(tab, t))
 
     def b_map(t, kc, tab, *_):
-        return (row_idx(t, kc, tab), tab[1, t])
+        return (row_idx(t, kc, tab), mnr(tab, t))
 
     def o_map(t, kc, tab, *_):
-        return (tab[2, t], tab[0, t], tab[1, t])
+        return (grp(tab, t), maj(tab, t), mnr(tab, t))
 
     def norm_map(t, kc, tab, *_):
         return (0, 0)

@@ -29,7 +29,7 @@ from repro.parallel.act_sharding import activation_sharding
 from repro.parallel.sharding import batch_specs, data_axes, make_shardings, spec_for_tree
 from repro.train.checkpoint import CheckpointManager
 from repro.train.fault_tolerance import StepWatchdog, TrainLoop
-from repro.train.step import make_train_step
+from repro.train.step import BackendConfig, make_train_step
 
 
 def build_trainer(
@@ -60,8 +60,7 @@ def build_trainer(
     opt_cfg = AdamWConfig(lr=lr, total_steps=total_steps, warmup_steps=min(100, total_steps // 10 + 1))
     step_fn = make_train_step(
         model, opt_cfg, remat=remat, microbatches=microbatches,
-        gemm_backend=gemm_backend, fused_optimizer=fused_optimizer,
-        stochastic_round=stochastic_round,
+        backend=BackendConfig(gemm_backend=gemm_backend, fused_optimizer=fused_optimizer, stochastic_round=stochastic_round),
     )
 
     params = model.init(jax.random.PRNGKey(seed))

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.core.gemm_backend import chunk_einsum
 from repro.models.layers import Params, dense_init, rmsnorm
 
 CONV_WIDTH = 4
@@ -93,12 +94,14 @@ def ssd_chunked(
     # --- intra-chunk (masked quadratic with decay) ---
     # vmem_fused: one SSD kernel on TPU; (L,L) weights stay in VMEM
     with jax.named_scope("vmem_fused_ssd"):
-        scores = jnp.einsum("bcin,bcjn->bcij", cc, bc, preferred_element_type=jnp.float32)
+        scores = chunk_einsum(
+            "bcin,bcjn->bcij", cc, bc, preferred_element_type=jnp.float32
+        )
         decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,NC,i,j,H)
         mask = jnp.tril(jnp.ones((L, L), bool))
         w = jnp.where(mask[None, None, :, :, None], jnp.exp(decay), 0.0)
         w = w * scores[..., None]  # (B,NC,i,j,H)
-        y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w.astype(x.dtype), xc)
+        y_intra = chunk_einsum("bcijh,bcjhp->bcihp", w.astype(x.dtype), xc)
 
         # --- chunk states ---
         last = cum[:, :, -1:, :]  # (B,NC,1,H)

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.core.gemm_backend import chunk_einsum
 from repro.models.layers import Params, dense_init, rmsnorm, rmsnorm_init
 
 CONV_WIDTH = 4
@@ -81,9 +82,13 @@ def mlstm_chunked(
         )  # (B, i, j, H)
         mask = jnp.tril(jnp.ones((i_i.shape[1], i_i.shape[1]), bool))
         w = jnp.where(mask[None, :, :, None], jnp.exp(dlog), 0.0)
-        qk = jnp.einsum("blhp,bjhp->bljh", q_i, k_i, preferred_element_type=jnp.float32)
-        att = w * qk.transpose(0, 1, 2, 3)  # (B,i,j,H)
-        num_intra = jnp.einsum("bljh,bjhp->blhp", att, v_i.astype(jnp.float32))
+        qk = chunk_einsum(
+            "blhp,bjhp->bljh", q_i, k_i, preferred_element_type=jnp.float32
+        )
+        att = w * qk  # (B,i,j,H)
+        num_intra = chunk_einsum(
+            "bljh,bjhp->blhp", att, v_i.astype(jnp.float32)
+        )
         den_intra = jnp.sum(att, axis=2)  # (B,L,H)
         # inter-chunk contribution, decayed from chunk start
         inter_scale = jnp.exp(m_prev[:, None, :] + fcum_i - m_loc)  # (B,L,H)

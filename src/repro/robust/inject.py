@@ -55,7 +55,7 @@ class InjectedResourceExhausted(InjectedFault):
 # rung names that launch Pallas kernels — the default injection target.
 # "replicated" (fuse=False) still runs sfc_gemm_pallas + add_reduce, so
 # "force a Pallas failure" must fault it too to reach sfc_reference.
-_PALLAS_RUNGS = ("sfc_pallas", "replicated")
+from repro.core.namespaces import PALLAS_RUNGS as _PALLAS_RUNGS  # noqa: E402
 
 
 @dataclasses.dataclass(frozen=True)

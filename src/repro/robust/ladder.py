@@ -25,13 +25,24 @@ import os
 import threading
 from typing import Callable, Dict, Optional, Sequence, Tuple
 
+from repro.core.namespaces import DEFAULT_LADDER, PALLAS_RUNGS
 from repro.robust import inject
 from repro.robust.inject import InjectedFault
 
-DEFAULT_LADDER = ("sfc_pallas", "replicated", "sfc_reference", "xla")
-
-# rungs that launch Pallas kernels (replicated = fuse=False still does)
-PALLAS_RUNGS = ("sfc_pallas", "replicated")
+__all__ = [  # DEFAULT_LADDER / PALLAS_RUNGS re-exported from the registry
+    "DEFAULT_LADDER",
+    "PALLAS_RUNGS",
+    "VmemBudgetError",
+    "FallbackError",
+    "StrictFallbackError",
+    "strict_mode",
+    "classify_failure",
+    "QuarantineRecord",
+    "HealthRegistry",
+    "get_registry",
+    "degradation_report",
+    "run_with_fallback",
+]
 
 
 class VmemBudgetError(RuntimeError):

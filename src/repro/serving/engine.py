@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core import namespaces as ns
 from repro.models.registry import build_model
 from repro.serving import backend as backend_lib
 
@@ -91,7 +92,8 @@ class ServingEngine:
     # namespaces a compiled engine program may have routed through the
     # fallback ladder — what the runtime-failure path quarantines wholesale
     _LADDER_NAMESPACES = (
-        "gemm", "glu", "grouped", "grouped_glu", "attn_fwd", "attn_decode",
+        ns.NS_GEMM, ns.NS_GLU, ns.NS_GROUPED, ns.NS_GROUPED_GLU,
+        ns.NS_ATTN_FWD, ns.NS_ATTN_DECODE,
     )
 
     def _run_healed(self, which: str, *args):
@@ -111,10 +113,11 @@ class ServingEngine:
                 raise
             reg = get_registry()
             injected = isinstance(exc, InjectedFault)
-            for ns in self._LADDER_NAMESPACES:
+            for namespace in self._LADDER_NAMESPACES:
                 for rung in PALLAS_RUNGS:
                     reg.quarantine(
-                        ns, rung, None, kind, injected=injected, error=exc
+                        namespace, rung, None, kind,
+                        injected=injected, error=exc,
                     )
             self._jit()  # drop caches: the retry re-traces on healthy rungs
             return getattr(self, which)(self.params, *args)
@@ -136,11 +139,16 @@ class ServingEngine:
         fused dual-B kernel has its own knob landscape — two B panels share
         the A traversal) and "gemm" otherwise."""
         d, ff, v = self.cfg.d_model, self.cfg.d_ff, self.cfg.vocab
-        shapes = [("gemm", prompt_len, d, d)]
+        shapes = [(ns.NS_GEMM, prompt_len, d, d)]
         if ff:
-            up_op = "glu" if getattr(self.cfg, "gated_mlp", True) else "gemm"
-            shapes += [(up_op, prompt_len, ff, d), ("gemm", prompt_len, d, ff)]
-        shapes.append(("gemm", self.max_batch, v, d))
+            up_op = (
+                ns.NS_GLU if getattr(self.cfg, "gated_mlp", True)
+                else ns.NS_GEMM
+            )
+            shapes += [
+                (up_op, prompt_len, ff, d), (ns.NS_GEMM, prompt_len, d, ff),
+            ]
+        shapes.append((ns.NS_GEMM, self.max_batch, v, d))
         return shapes
 
     def tune_table(
@@ -171,12 +179,19 @@ class ServingEngine:
             if not (backward or update):
                 continue
             bwd = backward_gemm_shapes(m, n, k)
-            suffix = "_dual" if op == "glu" else ""
+            dual = op == ns.NS_GLU
             if backward:
-                entries.append(("nt" + suffix, *bwd["nt"]))
-                entries.append(("tn" + suffix, *bwd["tn"]))
+                entries.append(
+                    (ns.NS_NT_DUAL if dual else ns.NS_NT, *bwd[ns.NS_NT])
+                )
+                entries.append(
+                    (ns.NS_TN_DUAL if dual else ns.NS_TN, *bwd[ns.NS_TN])
+                )
             if update:
-                entries.append(("tn_update" + suffix, *bwd["tn"]))
+                entries.append((
+                    ns.NS_TN_UPDATE_DUAL if dual else ns.NS_TN_UPDATE,
+                    *bwd[ns.NS_TN],
+                ))
         if getattr(self.cfg, "attn_impl", "") == "sfc":
             # the SFC attention kernels resolve their own namespaces:
             # prefill/training flash (and its backward, for fine-tuning
@@ -185,10 +200,10 @@ class ServingEngine:
                 prompt_len, prompt_len, self.cfg.head_dim_,
                 n_heads=self.cfg.n_heads, cache_len=self.max_seq,
             )
-            entries.append(("attn_fwd", *attn["attn_fwd"]))
+            entries.append((ns.NS_ATTN_FWD, *attn[ns.NS_ATTN_FWD]))
             if backward:
-                entries.append(("attn_bwd", *attn["attn_bwd"]))
-            entries.append(("attn_decode", *attn["attn_decode"]))
+                entries.append((ns.NS_ATTN_BWD, *attn[ns.NS_ATTN_BWD]))
+            entries.append((ns.NS_ATTN_DECODE, *attn[ns.NS_ATTN_DECODE]))
         return entries
 
     def warmup(

@@ -11,8 +11,10 @@ rather than left to the caller's context manager (jit retraces outside any
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import functools
 import math
+import warnings
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -41,7 +43,63 @@ from repro.optim.fused import (
 )
 from repro.parallel.act_sharding import constrain
 
-__all__ = ["make_train_step", "make_eval_step"]
+__all__ = ["BackendConfig", "make_train_step", "make_eval_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendConfig:
+    """Every trace-time backend decision of a train/eval step, in one value.
+
+    gemm_backend: projection-GEMM backend pin for the traced step
+        ("xla" | "sfc_pallas" | "sfc_reference"); None inherits the
+        caller's `gemm_backend()` context.  Under "sfc_pallas" both
+        directions run on the SFC kernels — the backward via the NT/TN
+        custom-VJP path, no dot_general fallback.
+    attn_impl: attention backend pin ("blockwise" | "flash_pallas" |
+        "sfc"), overriding the model config's value for the traced step;
+        None inherits.  With ``gemm_backend="sfc_pallas"`` and
+        ``attn_impl="sfc"`` the full forward+backward jaxpr contains
+        *zero* dot_general.
+    fused_optimizer: fuse AdamW into the backward pass for every routed
+        2-D projection weight (the TN kernel flush updates moments/master
+        in place and writes W_new; dW never exists in HBM).  Requires
+        ``microbatches == 1``.
+    stochastic_round: stochastically round bf16 params in the fused
+        flush (ignored unless ``fused_optimizer=True``).
+    """
+
+    gemm_backend: Optional[str] = None
+    attn_impl: Optional[str] = None
+    fused_optimizer: bool = False
+    stochastic_round: bool = True
+
+
+_UNSET: Any = object()  # sentinel: legacy kwarg not passed
+
+
+def _resolve_backend(backend, where, **legacy):
+    """Merge deprecated per-kwarg backend flags into a BackendConfig.
+
+    ``legacy`` maps field name -> passed value or _UNSET.  Any explicit
+    legacy kwarg warns; mixing them with ``backend=`` is an error (two
+    sources of truth for the same field)."""
+    passed = {k: v for k, v in legacy.items() if v is not _UNSET}
+    if not passed:
+        return backend if backend is not None else BackendConfig()
+    if backend is not None:
+        raise ValueError(
+            f"{where}: pass backend=BackendConfig(...) or the legacy "
+            f"kwargs {sorted(passed)}, not both"
+        )
+    warnings.warn(
+        f"{where}({', '.join(f'{k}=...' for k in sorted(passed))}) is "
+        f"deprecated; pass backend=BackendConfig("
+        f"{', '.join(f'{k}={v!r}' for k, v in sorted(passed.items()))}) "
+        "instead",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+    return BackendConfig(**passed)
 
 
 def _split_microbatches(batch: Dict[str, jax.Array], k: int) -> Dict[str, jax.Array]:
@@ -72,12 +130,13 @@ def make_train_step(
     *,
     remat: str = "dots",
     microbatches: int = 1,
-    gemm_backend: Optional[str] = None,
-    attn_impl: Optional[str] = None,
-    fused_optimizer: bool = False,
-    stochastic_round: bool = True,
+    backend: Optional[BackendConfig] = None,
     fused_filter: Optional[Callable[[str, Any], bool]] = None,
     nonfinite_guard: bool = True,
+    gemm_backend: Optional[str] = _UNSET,
+    attn_impl: Optional[str] = _UNSET,
+    fused_optimizer: bool = _UNSET,
+    stochastic_round: bool = _UNSET,
 ) -> Callable:
     """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
 
@@ -89,22 +148,16 @@ def make_train_step(
     ``lr_scale`` keyword (None = 1.0) multiplying the schedule lr — the
     `TrainLoop` nonfinite-recovery backoff hook.
 
-    ``gemm_backend`` pins the projection-GEMM backend for the traced step
-    ("xla" | "sfc_pallas" | "sfc_reference"); None inherits the caller's
-    context.  Under "sfc_pallas" both directions run on the SFC kernels —
-    the backward via the NT/TN custom-VJP path, no dot_general fallback.
+    ``backend`` collects every trace-time backend decision — see
+    :class:`BackendConfig`.  The legacy per-kwarg spellings
+    (``gemm_backend=``, ``attn_impl=``, ``fused_optimizer=``,
+    ``stochastic_round=``) still work but emit a ``DeprecationWarning``
+    and may not be mixed with ``backend=``.
 
-    ``attn_impl`` likewise pins the attention backend ("blockwise" |
-    "flash_pallas" | "sfc"), overriding the model config's value for the
-    traced step.  With ``gemm_backend="sfc_pallas"`` and
-    ``attn_impl="sfc"`` the full forward+backward jaxpr contains *zero*
-    dot_general — attention scores included, via the differentiable SFC
-    flash kernels' custom VJP.
-
-    ``fused_optimizer=True`` fuses AdamW into the backward pass for every
+    ``backend.fused_optimizer=True`` fuses AdamW into the backward pass for every
     routed 2-D projection weight: the TN kernel's flush updates the
     moments/master in place and writes W_new (stochastically rounded for
-    bf16 params unless ``stochastic_round=False``) — dW never exists in
+    bf16 params unless ``backend.stochastic_round=False``) — dW never exists in
     HBM and the train-step jaxpr contains no standalone optimizer
     elementwise pass for routed weights.  Routing is discovered by an
     abstract probe trace and can be overridden with
@@ -119,7 +172,12 @@ def make_train_step(
     Requires ``microbatches == 1`` (the update must run once per step, not
     once per accumulation slice).
     """
-    if fused_optimizer:
+    cfg = _resolve_backend(
+        backend, "make_train_step",
+        gemm_backend=gemm_backend, attn_impl=attn_impl,
+        fused_optimizer=fused_optimizer, stochastic_round=stochastic_round,
+    )
+    if cfg.fused_optimizer:
         if microbatches != 1:
             raise ValueError(
                 "fused_optimizer requires microbatches=1: the in-kernel "
@@ -128,13 +186,14 @@ def make_train_step(
             )
         return _make_fused_train_step(
             model, opt_cfg,
-            remat=remat, gemm_backend=gemm_backend, attn_impl=attn_impl,
-            stochastic_round=stochastic_round, fused_filter=fused_filter,
+            remat=remat, gemm_backend=cfg.gemm_backend,
+            attn_impl=cfg.attn_impl,
+            stochastic_round=cfg.stochastic_round, fused_filter=fused_filter,
             nonfinite_guard=nonfinite_guard,
         )
 
     def loss_fn(params, batch):
-        with _backend_ctx(gemm_backend, attn_impl):
+        with _backend_ctx(cfg.gemm_backend, cfg.attn_impl):
             return model.loss(params, batch, remat=remat)
 
     def train_step(params, opt_state, batch, *, lr_scale=None):
@@ -327,11 +386,16 @@ def _make_fused_train_step(
 
 
 def make_eval_step(
-    model, *, remat: str = "none", gemm_backend: Optional[str] = None,
-    attn_impl: Optional[str] = None,
+    model, *, remat: str = "none", backend: Optional[BackendConfig] = None,
+    gemm_backend: Optional[str] = _UNSET, attn_impl: Optional[str] = _UNSET,
 ) -> Callable:
+    cfg = _resolve_backend(
+        backend, "make_eval_step",
+        gemm_backend=gemm_backend, attn_impl=attn_impl,
+    )
+
     def eval_step(params, batch):
-        with _backend_ctx(gemm_backend, attn_impl):
+        with _backend_ctx(cfg.gemm_backend, cfg.attn_impl):
             return model.loss(params, batch, remat=remat)
 
     return eval_step

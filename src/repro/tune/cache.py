@@ -42,6 +42,8 @@ import warnings
 from pathlib import Path
 from typing import Dict, Optional, Tuple
 
+from repro.core.namespaces import NS_GEMM
+
 try:  # unix-only; the lock degrades to best-effort elsewhere
     import fcntl
 except ImportError:  # pragma: no cover - non-posix platform
@@ -171,7 +173,7 @@ class KnobCache:
         k: int,
         dtype,
         backend: str,
-        op: str = "gemm",
+        op: str = NS_GEMM,
         device: str = "",
     ) -> str:
         bm_, bn_, bk_ = shape_bucket(m, n, k)
@@ -185,7 +187,7 @@ class KnobCache:
         # fused-op namespace: the dual-B GLU kernel has its own knob
         # landscape; plain "gemm" keeps the legacy key so existing cache
         # files stay valid
-        return base if op == "gemm" else f"{base}|{op}"
+        return base if op == NS_GEMM else f"{base}|{op}"
 
     @staticmethod
     def platform_key(backend: str, device: str = "") -> str:
@@ -319,7 +321,7 @@ class KnobCache:
     # ---------------- API ----------------
 
     def get(
-        self, m: int, n: int, k: int, dtype, backend: str, op: str = "gemm"
+        self, m: int, n: int, k: int, dtype, backend: str, op: str = NS_GEMM
     ) -> Optional[Knobs]:
         entries = self._load()
         d = entries.get(self.key(m, n, k, dtype, backend, op, self.device))
@@ -333,7 +335,7 @@ class KnobCache:
 
     def put(
         self, m: int, n: int, k: int, dtype, backend: str, knobs: Knobs,
-        op: str = "gemm",
+        op: str = NS_GEMM,
     ) -> None:
         self._load()[
             self.key(m, n, k, dtype, backend, op, self.device)

@@ -115,22 +115,26 @@ def candidate_knobs(
 # their own knob landscapes (extra streamed panels / resident state tiles).
 # The attn_* namespaces tune the SFC attention kernels' (q_chunk, k_chunk)
 # — carried in the Knobs record's bm/bn fields; k_layers/k_block_factor are
-# inert there — with buckets (Sq, Sk, D) (decode: (H, T, D)).
-TUNE_OPS = (
-    "gemm",
-    "glu",
-    "nt",
-    "nt_dual",
-    "tn",
-    "tn_dual",
-    "tn_update",
-    "tn_update_dual",
-    "attn_fwd",
-    "attn_bwd",
-    "attn_decode",
+# inert there — with buckets (Sq, Sk, D) (decode: (H, T, D)).  The tokens
+# themselves live in `repro.core.namespaces` (re-exported here for the
+# established import path); schedule-qualified names ("gemm@<spec-key>")
+# tune the base op's kernel into their own bucket.
+from repro.core.namespaces import (  # noqa: E402
+    ATTN_OPS,
+    NS_ATTN_BWD,
+    NS_ATTN_DECODE,
+    NS_ATTN_FWD,
+    NS_GEMM,
+    NS_GLU,
+    NS_NT,
+    NS_NT_DUAL,
+    NS_TN,
+    NS_TN_DUAL,
+    NS_TN_UPDATE,
+    NS_TN_UPDATE_DUAL,
+    TUNE_OPS,
+    base_namespace,
 )
-
-ATTN_OPS = ("attn_fwd", "attn_bwd", "attn_decode")
 
 
 def _op_call(op: str, knobs: Knobs, *, interpret: bool = False):
@@ -156,17 +160,18 @@ def _op_call(op: str, knobs: Knobs, *, interpret: bool = False):
     )
     if interpret:
         kw["interpret"] = True
-    if op == "glu":
+    op = base_namespace(op)
+    if op == NS_GLU:
         return lambda a, b, bg: sfc_glu_matmul(a, bg, b, **kw)
-    if op == "nt":
+    if op == NS_NT:
         return lambda a, b, bg: sfc_matmul_nt(a, b, **kw)
-    if op == "nt_dual":
+    if op == NS_NT_DUAL:
         return lambda a, b, bg: sfc_matmul_nt(a, b, a, b, **kw)
-    if op == "tn":
+    if op == NS_TN:
         return lambda a, b, bg: sfc_matmul_tn(a, b, **kw)
-    if op == "tn_dual":
+    if op == NS_TN_DUAL:
         return lambda a, b, bg: sfc_matmul_tn(a, b, b, **kw)
-    if op in ("tn_update", "tn_update_dual"):
+    if op in (NS_TN_UPDATE, NS_TN_UPDATE_DUAL):
         import jax.numpy as jnp
 
         from repro.optim.adamw import AdamWConfig, pack_adamw_hyper
@@ -180,7 +185,7 @@ def _op_call(op: str, knobs: Knobs, *, interpret: bool = False):
             mst = jnp.zeros(kn, jnp.float32)
             mu = jnp.zeros(kn, jnp.float32)
             nu = jnp.zeros(kn, jnp.float32)
-            if _op == "tn_update_dual":
+            if _op == NS_TN_UPDATE_DUAL:
                 return sfc_matmul_tn_update(
                     a, b, mst, mu, nu, hyper, b, mst, mu, nu,
                     param_dtype=a.dtype, **kw,
@@ -200,7 +205,7 @@ def _op_call(op: str, knobs: Knobs, *, interpret: bool = False):
 
         qc, kc = knobs.bm, knobs.bn
 
-        if op == "attn_decode":
+        if op == NS_ATTN_DECODE:
             def call(q, k, bg):
                 valid = jnp.full((q.shape[0],), k.shape[1], jnp.int32)
                 return sfc_decode_attention_pallas(
@@ -217,7 +222,7 @@ def _op_call(op: str, knobs: Knobs, *, interpret: bool = False):
                 q_chunk=min(qc, sq), k_chunk=min(kc, sk),
                 interpret=interpret,
             )[0]
-            if _op == "attn_fwd":
+            if _op == NS_ATTN_FWD:
                 return fwd(q, k, k)
             # attn_bwd: score the whole backward (dQ + dK/dV launches)
             import jax
@@ -258,22 +263,23 @@ def _op_operand_shapes(op: str, m: int, n: int, k: int):
     rows, producing (m, n).  Attention buckets are (Sq, Sk, D) — operands
     in the kernels' native (B, S, H, D) layout — and decode (H, T, D)
     with the GQA group folded into the q tile's rows."""
-    if op in ("nt", "nt_dual"):
+    op = base_namespace(op)
+    if op in (NS_NT, NS_NT_DUAL):
         return (m, k), (n, k), None
-    if op in ("tn", "tn_dual", "tn_update", "tn_update_dual"):
+    if op in (NS_TN, NS_TN_DUAL, NS_TN_UPDATE, NS_TN_UPDATE_DUAL):
         return (k, m), (k, n), None
-    if op == "glu":
+    if op == NS_GLU:
         return (m, k), (k, n), (k, n)
-    if op in ("attn_fwd", "attn_bwd"):
+    if op in (NS_ATTN_FWD, NS_ATTN_BWD):
         return (1, m, 1, k), (1, n, 1, k), None
-    if op == "attn_decode":
+    if op == NS_ATTN_DECODE:
         gp = 1 << max(3, (int(m) - 1).bit_length())
         return (1, 1, gp, k), (1, n, 1, k), None
     return (m, k), (k, n), None
 
 
 def _measure_wallclock(
-    m, n, k, dtype, knobs: Knobs, *, op: str = "gemm", iters: int = 3
+    m, n, k, dtype, knobs: Knobs, *, op: str = NS_GEMM, iters: int = 3
 ) -> float:
     """Median wall-clock of the real jitted kernel (TPU path)."""
     import jax
@@ -295,7 +301,7 @@ def _measure_wallclock(
     return float(np.median(ts))
 
 
-def _measure_hlo_cost(m, n, k, dtype, knobs: Knobs, *, op: str = "gemm") -> float:
+def _measure_hlo_cost(m, n, k, dtype, knobs: Knobs, *, op: str = NS_GEMM) -> float:
     """Modeled seconds from the loop-aware HLO cost walker over the
     interpret-mode lowering, weighted by the γ/β hardware model."""
     import jax
@@ -318,7 +324,7 @@ def _measure_hlo_cost(m, n, k, dtype, knobs: Knobs, *, op: str = "gemm") -> floa
 
 
 def _simulate_candidate(
-    m, n, k, dtype, knobs: Knobs, *, op: str = "gemm",
+    m, n, k, dtype, knobs: Knobs, *, op: str = NS_GEMM,
     hw: HardwareModel = TPU_V5E,
 ) -> Dict[str, float]:
     """Exact BRGEMM-taxonomy simulation of one candidate on one device.
@@ -332,13 +338,14 @@ def _simulate_candidate(
     from repro.core.perf_model import optimizer_update_bytes
 
     dtype_bytes = np.dtype(dtype).itemsize
+    op = base_namespace(op)
     if op in ATTN_OPS:
         from repro.core.perf_model import (
             simulate_decode_attention,
             simulate_flash_attention,
         )
 
-        if op == "attn_decode":
+        if op == NS_ATTN_DECODE:
             r = simulate_decode_attention(
                 1, max(m, 1), 1, n, k, hw=hw, dtype_bytes=dtype_bytes
             )
@@ -346,7 +353,7 @@ def _simulate_candidate(
             r = simulate_flash_attention(
                 1, 1, m, n, k,
                 q_chunk=min(knobs.bm, m), k_chunk=min(knobs.bn, n),
-                causal=True, phase="bwd" if op == "attn_bwd" else "fwd",
+                causal=True, phase="bwd" if op == NS_ATTN_BWD else "fwd",
                 hw=hw, dtype_bytes=dtype_bytes,
             )
         return {
@@ -357,7 +364,7 @@ def _simulate_candidate(
         }
     mp = ((m + knobs.bm - 1) // knobs.bm) * knobs.bm
     np_ = ((n + knobs.bn - 1) // knobs.bn) * knobs.bn
-    dual = op in ("glu", "nt_dual", "tn_dual", "tn_update_dual")
+    dual = op in (NS_GLU, NS_NT_DUAL, NS_TN_DUAL, NS_TN_UPDATE_DUAL)
     # one worker team per K layer, serialized below: a single device runs
     # the layer teams back to back.  (n_workers=1 with k_layers>1 is not
     # decomposable — it used to raise here, silently dropping every
@@ -380,7 +387,7 @@ def _simulate_candidate(
         + float(r["reuse_time_s"]) + float(r["drain_time_s"])
         + hw.drain_byte_s * float(r["drain_step_bytes"])
     )
-    if op.startswith("tn_update"):
+    if op in (NS_TN_UPDATE, NS_TN_UPDATE_DUAL):
         # the fused flush streams the resident optimizer state tiles too
         # (knob-independent, but it keeps update scores comparable to the
         # wall-clock regime's absolute times)
@@ -401,7 +408,7 @@ def _simulate_candidate(
 
 
 def _measure_simulated(
-    m, n, k, dtype, knobs: Knobs, *, op: str = "gemm",
+    m, n, k, dtype, knobs: Knobs, *, op: str = NS_GEMM,
     hw: HardwareModel = TPU_V5E,
 ) -> float:
     """Exact BRGEMM-taxonomy simulator fallback (always available).  ``hw``
@@ -411,7 +418,7 @@ def _measure_simulated(
 
 
 def predict_candidate(
-    m: int, n: int, k: int, dtype, knobs: Knobs, *, op: str = "gemm",
+    m: int, n: int, k: int, dtype, knobs: Knobs, *, op: str = NS_GEMM,
     hw: Optional[HardwareModel] = None,
 ) -> float:
     """Modeled seconds for one candidate under the calibrated performance
@@ -426,7 +433,7 @@ def predict_candidate(
 
 
 def measure_candidate(
-    m: int, n: int, k: int, dtype, knobs: Knobs, *, op: str = "gemm"
+    m: int, n: int, k: int, dtype, knobs: Knobs, *, op: str = NS_GEMM
 ) -> float:
     """Backend-appropriate score (seconds, lower is better)."""
     if _backend_name() == "tpu":
@@ -439,7 +446,7 @@ def measure_candidate(
 
 def lookup_knobs(
     m: int, n: int, k: int, dtype, *,
-    cache: Optional[KnobCache] = None, op: str = "gemm",
+    cache: Optional[KnobCache] = None, op: str = NS_GEMM,
 ) -> Optional[Knobs]:
     """Cache-only consult (never measures) — the `sfc_matmul` fast path."""
     cache = cache if cache is not None else default_cache()
@@ -456,7 +463,7 @@ def tune_gemm(
     measure_fn: Optional[Callable[[int, int, int, object, Knobs], float]] = None,
     max_candidates: int = 12,
     force: bool = False,
-    op: str = "gemm",
+    op: str = NS_GEMM,
     strategy: str = "predict",
     confirm_top: int = 2,
     report: Optional[List[Dict]] = None,
@@ -480,11 +487,11 @@ def tune_gemm(
     candidate is appended (op, bucket, knobs, predicted_s, measured_s) so
     callers can aggregate predicted-vs-measured error.
     """
-    if op not in TUNE_OPS:
+    if base_namespace(op) not in TUNE_OPS:
         raise ValueError(
-            f"unknown tune namespace {op!r}; pick from {TUNE_OPS} — a typo "
-            "here would measure the plain forward GEMM and persist a "
-            "mis-keyed winner"
+            f"unknown tune namespace {op!r}; pick from {TUNE_OPS} (or a "
+            "schedule-qualified form base@<spec-key>) — a typo here would "
+            "measure the plain forward GEMM and persist a mis-keyed winner"
         )
     if strategy not in ("predict", "exhaustive"):
         raise ValueError(
@@ -501,7 +508,7 @@ def tune_gemm(
         measure = functools.partial(measure_candidate, op=op)
     else:
         measure = measure_fn
-        if op != "gemm":
+        if op != NS_GEMM:
             # thread the op through when the custom measurer can take it, so
             # a GLU sweep is not silently scored with the single-B kernel
             import inspect

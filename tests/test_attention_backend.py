@@ -218,6 +218,84 @@ def test_flash_grad_is_three_pallas_launches_no_dots():
 
 
 # ---------------------------------------------------------------------------
+# chunked prefill (q_offset)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("off", [16, 40])
+def test_flash_fwd_q_offset_matches_full_causal(off):
+    """A q block at global rows [off, off+s) with q_offset=off reproduces
+    the matching slice of full-sequence causal attention — the chunked
+    prefill identity."""
+    b, t, h, hkv, d, s = 2, 96, 4, 2, 32, 32
+    q_full, k, v = _qkv(b, t, t, h, hkv, d)
+    want = flash_attention_ref(q_full, k, v, causal=True)
+    got = ab.flash_attention(
+        q_full[:, off : off + s], k, v, causal=True,
+        q_chunk=16, k_chunk=16, q_offset=off,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want[:, off : off + s]),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_flash_fwd_q_offset_zero_is_identity():
+    q, k, v = _qkv(1, 33, 33, 4, 2, 16)
+    base = ab.flash_attention(q, k, v, causal=True, q_chunk=16, k_chunk=16)
+    off0 = ab.flash_attention(
+        q, k, v, causal=True, q_chunk=16, k_chunk=16, q_offset=0
+    )
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(off0))
+
+
+def test_flash_q_offset_grads_match_xla():
+    """custom-VJP grads at a nonzero KV-cache offset vs XLA autodiff of an
+    offset-masked dense reference, f32 rtol 1e-4."""
+    b, s, t, h, hkv, d, off = 1, 32, 80, 4, 2, 16, 40
+    q, k, v = _qkv(b, s, t, h, hkv, d)
+    w = _rand(b, s, h, d, seed=9)
+
+    def f_sfc(q, k, v):
+        o = ab.flash_attention(
+            q, k, v, causal=True, q_chunk=16, k_chunk=16, q_offset=off
+        )
+        return jnp.sum(o.astype(jnp.float32) * w)
+
+    def f_ref(q, k, v):
+        kr = jnp.repeat(k, h // hkv, axis=2)
+        vr = jnp.repeat(v, h // hkv, axis=2)
+        sc = jnp.einsum(
+            "bqhd,bkhd->bhqk", q, kr, preferred_element_type=jnp.float32
+        ) / np.sqrt(d)
+        mask = (
+            jnp.arange(t)[None, :] <= jnp.arange(s)[:, None] + off
+        )
+        sc = jnp.where(mask[None, None], sc, -1e30)
+        o = jnp.einsum(
+            "bhqk,bkhd->bqhd",
+            jax.nn.softmax(sc, axis=-1),
+            vr.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        return jnp.sum(o * w)
+
+    gs = jax.grad(f_sfc, argnums=(0, 1, 2))(q, k, v)
+    gx = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for got, want, name in zip(gs, gx, "qkv"):
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5,
+            err_msg=f"d{name} q_offset={off}",
+        )
+
+
+def test_flash_q_offset_negative_rejected():
+    q, k, v = _qkv(1, 16, 16, 2, 2, 8)
+    with pytest.raises(ValueError, match="q_offset"):
+        ab.flash_attention(q, k, v, causal=True, q_offset=-1)
+
+
+# ---------------------------------------------------------------------------
 # decode
 # ---------------------------------------------------------------------------
 
@@ -306,7 +384,7 @@ def test_train_step_jaxpr_is_dot_general_free():
     attention scores included (PR 3 only gated rank-2 projections)."""
     from repro.models.registry import build_model
     from repro.optim.adamw import AdamWConfig, adamw_init
-    from repro.train.step import make_train_step
+    from repro.train.step import BackendConfig, make_train_step
 
     cfg = _tiny_cfg()
     model = build_model(cfg)
@@ -317,8 +395,7 @@ def test_train_step_jaxpr_is_dot_general_free():
         "labels": jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)), jnp.int32),
     }
     step = make_train_step(
-        model, AdamWConfig(lr=1e-3), remat="none", gemm_backend="sfc_pallas"
-    )
+        model, AdamWConfig(lr=1e-3), remat="none", backend=BackendConfig(gemm_backend="sfc_pallas"))
     jx = jax.make_jaxpr(step)(params, adamw_init(params), batch)
     c = _census(jx.jaxpr, {"dot": 0, "pallas": 0, "dot_shapes": []})
     assert c["pallas"] > 0
@@ -332,7 +409,7 @@ def test_train_step_grads_match_xla_with_sfc_attention():
     the XLA/blockwise step at f32."""
     from repro.models.registry import build_model
     from repro.optim.adamw import AdamWConfig, adamw_init
-    from repro.train.step import make_train_step
+    from repro.train.step import BackendConfig, make_train_step
 
     cfg = _tiny_cfg()
     model = build_model(cfg)
@@ -344,11 +421,9 @@ def test_train_step_grads_match_xla_with_sfc_attention():
     }
     opt = AdamWConfig(lr=1e-3)
     step_s = make_train_step(
-        model, opt, remat="none", gemm_backend="sfc_pallas"
-    )
+        model, opt, remat="none", backend=BackendConfig(gemm_backend="sfc_pallas"))
     step_x = make_train_step(
-        model, opt, remat="none", gemm_backend="xla", attn_impl="blockwise"
-    )
+        model, opt, remat="none", backend=BackendConfig(gemm_backend="xla", attn_impl="blockwise"))
     p_s, _, m_s = step_s(params, adamw_init(params), batch)
     p_x, _, m_x = step_x(params, adamw_init(params), batch)
     np.testing.assert_allclose(

@@ -33,7 +33,7 @@ from repro.optim.adamw import (
     seed_to_lane,
 )
 from repro.optim.fused import probe_routed
-from repro.train.step import make_train_step
+from repro.train.step import BackendConfig, make_train_step
 
 
 def _rand(*shape, dtype=jnp.float32, seed=0, scale=1.0):
@@ -351,14 +351,13 @@ def test_fused_step_matches_unfused_f32(mini):
     model, params, batch = mini
     cfg = AdamWConfig(lr=1e-2, total_steps=10, warmup_steps=1, clip_norm=1e9)
 
-    unfused = make_train_step(model, cfg, remat="none", gemm_backend="xla")
+    unfused = make_train_step(model, cfg, remat="none", backend=BackendConfig(gemm_backend="xla"))
     st_u = adamw_init(params)
     p_u, s_u, m_u = unfused(params, st_u, batch)
 
     for backend in ("sfc_pallas", "xla"):
         fused = make_train_step(
-            model, cfg, remat="none", gemm_backend=backend,
-            fused_optimizer=True, stochastic_round=False,
+            model, cfg, remat="none", backend=BackendConfig(gemm_backend=backend, fused_optimizer=True, stochastic_round=False),
         )
         st_f = adamw_init(params, with_gnorm=True)
         p_f, s_f, m_f = fused(params, st_f, batch)
@@ -390,21 +389,20 @@ def test_fused_step_exact_clip_matches_unfused_f32(mini):
     # pick a clip well below the actual first-step norm so the scale != 1
     probe_cfg = AdamWConfig(lr=1e-2, total_steps=10, warmup_steps=1)
     unfused_probe = make_train_step(model, probe_cfg, remat="none",
-                                    gemm_backend="xla")
+                                    backend=BackendConfig(gemm_backend="xla"))
     _, _, m_probe = unfused_probe(params, adamw_init(params), batch)
     clip = 0.5 * float(m_probe["grad_norm"])
     assert clip > 0
     cfg = AdamWConfig(lr=1e-2, total_steps=10, warmup_steps=1,
                       clip_norm=clip)
 
-    unfused = make_train_step(model, cfg, remat="none", gemm_backend="xla")
+    unfused = make_train_step(model, cfg, remat="none", backend=BackendConfig(gemm_backend="xla"))
     p_u, s_u, m_u = unfused(params, adamw_init(params), batch)
     assert float(m_u["grad_norm"]) > clip, "clip must actually engage"
 
     for backend in ("sfc_pallas", "xla"):
         fused = make_train_step(
-            model, cfg, remat="none", gemm_backend=backend,
-            fused_optimizer=True, stochastic_round=False,
+            model, cfg, remat="none", backend=BackendConfig(gemm_backend=backend, fused_optimizer=True, stochastic_round=False),
         )
         p_f, s_f, m_f = fused(params, adamw_init(params), batch)
         np.testing.assert_allclose(
@@ -445,8 +443,7 @@ def test_fused_step_legacy_gnorm_state_still_accepted(mini):
     model, params, batch = mini
     cfg = AdamWConfig(lr=1e-2, total_steps=10, warmup_steps=1, clip_norm=0.5)
     fused = make_train_step(
-        model, cfg, remat="none", gemm_backend="sfc_pallas",
-        fused_optimizer=True, stochastic_round=False,
+        model, cfg, remat="none", backend=BackendConfig(gemm_backend="sfc_pallas", fused_optimizer=True, stochastic_round=False),
     )
     st = adamw_init(params, with_gnorm=True)
     p1, s1, m1 = fused(params, st, batch)
@@ -500,10 +497,9 @@ def test_fused_step_jaxpr_has_no_optimizer_pass_for_routed_weights(mini):
     w_shape = tuple(params["w1"].shape)
 
     fused = make_train_step(
-        model, cfg, remat="none", gemm_backend="sfc_pallas",
-        fused_optimizer=True, stochastic_round=False,
+        model, cfg, remat="none", backend=BackendConfig(gemm_backend="sfc_pallas", fused_optimizer=True, stochastic_round=False),
     )
-    unfused = make_train_step(model, cfg, remat="none", gemm_backend="sfc_pallas")
+    unfused = make_train_step(model, cfg, remat="none", backend=BackendConfig(gemm_backend="sfc_pallas"))
 
     st_f = adamw_init(params, with_gnorm=True)
     st_u = adamw_init(params)
@@ -523,7 +519,7 @@ def test_fused_step_rejects_microbatching(mini):
     model, _, _ = mini
     with pytest.raises(ValueError, match="microbatches"):
         make_train_step(
-            model, AdamWConfig(), fused_optimizer=True, microbatches=2
+            model, AdamWConfig(), backend=BackendConfig(fused_optimizer=True), microbatches=2
         )
 
 
@@ -666,13 +662,12 @@ def test_moe_fused_step_matches_unfused_f32():
     model, params, batch = _moe_fixture()
     cfg = AdamWConfig(lr=1e-2, total_steps=10, warmup_steps=1, clip_norm=1e9)
 
-    unfused = make_train_step(model, cfg, remat="none", gemm_backend="xla")
+    unfused = make_train_step(model, cfg, remat="none", backend=BackendConfig(gemm_backend="xla"))
     p_u, s_u, m_u = unfused(params, adamw_init(params), batch)
 
     for backend in ("sfc_pallas", "xla"):
         fused = make_train_step(
-            model, cfg, remat="none", gemm_backend=backend,
-            fused_optimizer=True, stochastic_round=False,
+            model, cfg, remat="none", backend=BackendConfig(gemm_backend=backend, fused_optimizer=True, stochastic_round=False),
         )
         p_f, s_f, m_f = fused(params, adamw_init(params, with_gnorm=True), batch)
         np.testing.assert_allclose(
@@ -706,12 +701,10 @@ def test_moe_fused_step_jaxpr_no_expert_optimizer_pass():
     w_shape = tuple(params["layers"]["moe"]["w_in"].shape)  # (L, E, K, N)
 
     fused = make_train_step(
-        model, cfg, remat="none", gemm_backend="sfc_pallas",
-        fused_optimizer=True, stochastic_round=False,
+        model, cfg, remat="none", backend=BackendConfig(gemm_backend="sfc_pallas", fused_optimizer=True, stochastic_round=False),
     )
     unfused = make_train_step(
-        model, cfg, remat="none", gemm_backend="sfc_pallas"
-    )
+        model, cfg, remat="none", backend=BackendConfig(gemm_backend="sfc_pallas"))
     jx_f = jax.make_jaxpr(fused)(params, adamw_init(params, with_gnorm=True), batch)
     jx_u = jax.make_jaxpr(unfused)(params, adamw_init(params), batch)
     n_f = _count_elementwise_at_shape(jx_f.jaxpr, w_shape)["n"]

@@ -366,7 +366,7 @@ def test_train_step_backward_no_projection_dot_general():
     from repro.core.gemm_backend import gemm_backend
     from repro.models.registry import build_model
     from repro.optim.adamw import AdamWConfig, adamw_init
-    from repro.train.step import make_train_step
+    from repro.train.step import BackendConfig, make_train_step
 
     cfg = _tiny_cfg()
     model = build_model(cfg)
@@ -380,8 +380,7 @@ def test_train_step_backward_no_projection_dot_general():
     }
 
     step = make_train_step(
-        model, opt_cfg, remat="none", gemm_backend="sfc_pallas"
-    )
+        model, opt_cfg, remat="none", backend=BackendConfig(gemm_backend="sfc_pallas"))
     jx = jax.make_jaxpr(step)(params, opt_state, batch)
     c = _census(jx.jaxpr, {"dot": 0, "pallas": 0, "dot_shapes": []})
     assert c["pallas"] > 0, "sfc backend did not launch any SFC kernels"
@@ -400,7 +399,7 @@ def test_train_step_runs_on_sfc_backend():
     matches the XLA step (same loss metric, params advance identically)."""
     from repro.models.registry import build_model
     from repro.optim.adamw import AdamWConfig, adamw_init
-    from repro.train.step import make_train_step
+    from repro.train.step import BackendConfig, make_train_step
 
     cfg = _tiny_cfg()
     model = build_model(cfg)
@@ -415,8 +414,7 @@ def test_train_step_runs_on_sfc_backend():
     outs = {}
     for backend in ("xla", "sfc_pallas"):
         step = make_train_step(
-            model, opt_cfg, remat="none", gemm_backend=backend
-        )
+            model, opt_cfg, remat="none", backend=BackendConfig(gemm_backend=backend))
         new_params, _, metrics = step(params, adamw_init(params), batch)
         outs[backend] = (new_params, metrics["loss"])
     np.testing.assert_allclose(

@@ -18,7 +18,7 @@ from repro.optim.adamw import (
 )
 from repro.train.checkpoint import CheckpointManager
 from repro.train.fault_tolerance import NonfinitePolicy, StepWatchdog, TrainLoop
-from repro.train.step import make_train_step
+from repro.train.step import BackendConfig, make_train_step
 
 
 def _rand(*shape, seed=0):
@@ -129,8 +129,7 @@ def test_nonfinite_step_is_bitwise_noop(mini, fused):
     model, params, batch = mini
     cfg = AdamWConfig(lr=1e-2, total_steps=10, warmup_steps=1)
     step = make_train_step(
-        model, cfg, remat="none", gemm_backend="sfc_pallas",
-        fused_optimizer=fused, stochastic_round=False,
+        model, cfg, remat="none", backend=BackendConfig(gemm_backend="sfc_pallas", fused_optimizer=fused, stochastic_round=False),
     )
     state = adamw_init(params)
     nan_batch = {
@@ -155,8 +154,7 @@ def test_nonfinite_guard_can_be_disabled(mini):
     # the guard knob lives on the fused step (the unfused path guards
     # unconditionally inside adamw_update)
     step = make_train_step(
-        model, cfg, remat="none", gemm_backend="xla",
-        fused_optimizer=True, nonfinite_guard=False,
+        model, cfg, remat="none", backend=BackendConfig(gemm_backend="xla", fused_optimizer=True), nonfinite_guard=False,
     )
     nan_batch = {"x": batch["x"], "y": batch["y"].at[0, 0].set(np.nan)}
     new_params, _, _ = step(params, adamw_init(params), nan_batch)
@@ -168,8 +166,7 @@ def test_train_step_lr_scale_kwarg(mini):
     cfg = AdamWConfig(lr=1e-2, total_steps=10, warmup_steps=1)
     for fused in (False, True):
         step = make_train_step(
-            model, cfg, remat="none", gemm_backend="sfc_pallas",
-            fused_optimizer=fused, stochastic_round=False,
+            model, cfg, remat="none", backend=BackendConfig(gemm_backend="sfc_pallas", fused_optimizer=fused, stochastic_round=False),
         )
         p_full, _, _ = step(params, adamw_init(params), batch)
         p_zero, _, _ = step(params, adamw_init(params), batch, lr_scale=0.0)

@@ -1,0 +1,146 @@
+"""Namespace registry: typed constants, schedule-qualified names, and the
+AST gate that keeps bare namespace literals out of the consuming modules.
+
+The gate walks each ported module's AST and fails on any string constant
+equal to a registry namespace token outside `repro.core.namespaces`
+itself (docstrings excluded) — the regression test for the "typo'd
+namespace tunes into a bucket nothing reads" failure mode.
+"""
+
+import ast
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import namespaces as ns
+
+SRC = Path(__file__).resolve().parents[1] / "src" / "repro"
+
+# every module that keys tune-cache buckets or ladder namespaces; a new
+# consumer of the registry should be added here
+GATED_MODULES = [
+    "tune/tuner.py",
+    "tune/cache.py",
+    "robust/ladder.py",
+    "robust/inject.py",
+    "serving/engine.py",
+    "core/gemm_backend.py",
+    "core/attention_backend.py",
+    "kernels/ops.py",
+]
+
+
+def _docstring_nodes(tree):
+    """id()s of the Constant nodes that are docstrings."""
+    out = set()
+    for node in ast.walk(tree):
+        if isinstance(
+            node,
+            (ast.Module, ast.ClassDef, ast.FunctionDef, ast.AsyncFunctionDef),
+        ):
+            body = getattr(node, "body", [])
+            if (
+                body
+                and isinstance(body[0], ast.Expr)
+                and isinstance(body[0].value, ast.Constant)
+                and isinstance(body[0].value.value, str)
+            ):
+                out.add(id(body[0].value))
+    return out
+
+
+def _bare_namespace_literals(path):
+    tree = ast.parse(path.read_text(), filename=str(path))
+    docs = _docstring_nodes(tree)
+    tokens = set(ns.ALL_NAMESPACES)
+    hits = []
+    for node in ast.walk(tree):
+        if (
+            isinstance(node, ast.Constant)
+            and isinstance(node.value, str)
+            and node.value in tokens
+            and id(node) not in docs
+        ):
+            hits.append((node.lineno, node.value))
+    return hits
+
+
+@pytest.mark.parametrize("rel", GATED_MODULES)
+def test_no_bare_namespace_literals(rel):
+    path = SRC / rel
+    assert path.exists(), f"gated module moved: {rel}"
+    hits = _bare_namespace_literals(path)
+    assert not hits, (
+        f"{rel} spells tune/ladder namespaces as bare literals "
+        f"{sorted(set(hits))}; import the constants from "
+        "repro.core.namespaces instead"
+    )
+
+
+def test_registry_is_the_single_spelling():
+    # the tokens the rest of the repo was built around
+    assert ns.NS_GEMM == "gemm"
+    assert ns.NS_NT_DUAL == "nt_dual"
+    assert ns.NS_ATTN_FWD == "attn_fwd"
+    assert len(set(ns.ALL_NAMESPACES)) == len(ns.ALL_NAMESPACES)
+    assert set(ns.ATTN_OPS) <= set(ns.TUNE_OPS)
+    assert not (set(ns.TUNE_OPS) & set(ns.LADDER_ONLY_NAMESPACES))
+    assert set(ns.PALLAS_RUNGS) <= set(ns.DEFAULT_LADDER)
+
+
+def test_tuner_reexports_registry():
+    from repro.tune import tuner
+
+    assert tuner.TUNE_OPS is ns.TUNE_OPS
+    assert tuner.ATTN_OPS is ns.ATTN_OPS
+
+
+def test_schedule_namespace_roundtrip():
+    qualified = ns.schedule_namespace(ns.NS_GEMM, "1a2b3c4d5e6f")
+    assert qualified == "gemm@1a2b3c4d5e6f"
+    assert ns.is_schedule_namespace(qualified)
+    assert not ns.is_schedule_namespace(ns.NS_GEMM)
+    assert ns.base_namespace(qualified) == ns.NS_GEMM
+    assert ns.base_namespace(ns.NS_TN) == ns.NS_TN
+    with pytest.raises(ValueError):
+        ns.schedule_namespace("not_a_namespace", "abc")
+    with pytest.raises(ValueError):
+        ns.schedule_namespace(ns.NS_GEMM, "")
+    with pytest.raises(ValueError):
+        ns.schedule_namespace(ns.NS_GEMM, "a@b")
+
+
+def test_tune_gemm_accepts_schedule_namespace(tmp_path):
+    from repro.tune.cache import KnobCache
+    from repro.tune.tuner import tune_gemm
+
+    cache = KnobCache(path=str(tmp_path / "knobs.json"))
+    qualified = ns.schedule_namespace(ns.NS_GEMM, "deadbeef1234")
+    calls = []
+
+    def measure(m, n, k, dtype, knobs, **kw):
+        calls.append(kw.get("op"))
+        return 1.0
+
+    best = tune_gemm(
+        64, 64, 64, np.float32, cache=cache, measure_fn=measure,
+        op=qualified, strategy="exhaustive",
+    )
+    assert best is not None and calls
+    assert all(op == qualified for op in calls)
+    # the winner lands in the qualified bucket, not the base one
+    assert cache.get(64, 64, 64, np.float32, "cpu", qualified) is not None
+    assert cache.get(64, 64, 64, np.float32, "cpu", ns.NS_GEMM) is None
+
+
+def test_tune_gemm_still_rejects_unknown_namespace(tmp_path):
+    from repro.tune.cache import KnobCache
+    from repro.tune.tuner import tune_gemm
+
+    cache = KnobCache(path=str(tmp_path / "knobs.json"))
+    with pytest.raises(ValueError, match="unknown tune namespace"):
+        tune_gemm(64, 64, 64, np.float32, cache=cache, op="gemmm")
+    with pytest.raises(ValueError, match="unknown tune namespace"):
+        # schedule-qualified names must still base on a real namespace
+        tune_gemm(64, 64, 64, np.float32, cache=cache, op="bogus@abc123")

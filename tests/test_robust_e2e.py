@@ -14,7 +14,7 @@ from repro.models.registry import build_model
 from repro.optim.adamw import AdamWConfig, adamw_init
 from repro.robust import FaultSpec, fault_injection, get_registry
 from repro.serving.engine import ServingEngine
-from repro.train.step import make_train_step
+from repro.train.step import BackendConfig, make_train_step
 
 FAULT_EVERYTHING = FaultSpec("*", kind="compile")
 
@@ -43,7 +43,7 @@ def test_train_step_survives_total_pallas_failure():
     def one_step():
         step = make_train_step(
             model, opt_cfg, remat="none",
-            gemm_backend="sfc_pallas", attn_impl="sfc",
+            backend=BackendConfig(gemm_backend="sfc_pallas", attn_impl="sfc"),
         )
         return step(params, adamw_init(params), batch)
 
@@ -84,8 +84,7 @@ def test_fused_train_step_survives_total_pallas_failure():
     def one_step():
         step = make_train_step(
             model, opt_cfg, remat="none",
-            gemm_backend="sfc_pallas", attn_impl="sfc",
-            fused_optimizer=True, stochastic_round=False,
+            backend=BackendConfig(gemm_backend="sfc_pallas", attn_impl="sfc", fused_optimizer=True, stochastic_round=False),
         )
         return step(params, adamw_init(params), batch)
 

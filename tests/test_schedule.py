@@ -1,0 +1,548 @@
+"""Schedule-compiler gate: byte-identical tables vs. the pre-refactor
+builders, plus P1/P2 properties on *masked* tile spaces.
+
+The ``_legacy_*`` functions below are verbatim copies of the per-kernel
+table builders this compiler replaced (``build_task_table`` /
+``build_grouped_task_table`` / ``build_grouped_tn_task_table`` in
+``kernels/sfc_gemm.py``, ``sfc_band_table`` in ``core/sfc.py``,
+``build_attention_task_table`` in ``kernels/sfc_attention.py``).  They are
+frozen here — NOT imported — so the differential tests keep guarding the
+compiled tables even after the kernels stop carrying their own builders.
+
+This file is also the standalone suite the CI ``schedule-api`` job runs.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.schedule import (
+    Schedule,
+    ScheduleSpec,
+    attention_spec,
+    band_spec,
+    compile_schedule,
+    gemm_spec,
+    grouped_gemm_spec,
+    grouped_tn_spec,
+)
+from repro.core.sfc import create_sfc_map, sfc_band_table
+
+# ---------------------------------------------------------------------------
+# legacy builders (pre-refactor, frozen verbatim)
+# ---------------------------------------------------------------------------
+
+
+def _legacy_build_task_table(mb, nb, k_layers):
+    sfc = create_sfc_map(mb, nb)
+    im = sfc.im_table()
+    in_ = sfc.in_table()
+    ims = np.tile(im, k_layers)
+    ins = np.tile(in_, k_layers)
+    layers = np.repeat(np.arange(k_layers, dtype=np.int32), mb * nb)
+    return np.stack([ims, ins, layers]).astype(np.int32)
+
+
+def _legacy_build_grouped_task_table(row_blocks, nb):
+    ims, ins, exps = [], [], []
+    row_off = 0
+    for e, mb_e in enumerate(row_blocks):
+        if mb_e > 0:
+            sfc = create_sfc_map(mb_e, nb)
+            ims.append(sfc.im_table() + row_off)
+            ins.append(sfc.in_table())
+            exps.append(np.full(mb_e * nb, e, dtype=np.int32))
+        row_off += mb_e
+    if not ims:
+        return np.zeros((3, 0), np.int32)
+    return np.stack(
+        [np.concatenate(ims), np.concatenate(ins), np.concatenate(exps)]
+    ).astype(np.int32)
+
+
+def _legacy_build_grouped_tn_task_table(row_blocks, kb, nb):
+    sfc = create_sfc_map(kb, nb)
+    iks = sfc.im_table()
+    ins = sfc.in_table()
+    cols = []
+    row_off = 0
+    for e, rb in enumerate(row_blocks):
+        cols.append(
+            np.stack(
+                [
+                    iks,
+                    ins,
+                    np.full(kb * nb, e, dtype=np.int32),
+                    np.full(kb * nb, row_off, dtype=np.int32),
+                    np.full(kb * nb, rb, dtype=np.int32),
+                ]
+            )
+        )
+        row_off += rb
+    return np.concatenate(cols, axis=1).astype(np.int32)
+
+
+def _legacy_sfc_band_table(n_major, n_minor, *, band=None):
+    if band is None:
+        band = np.full(n_major, n_minor, dtype=np.int64)
+    band = np.asarray(band)
+    cols = []
+    flip = False
+    for i in range(n_major):
+        hi = int(band[i])
+        if hi <= 0:
+            continue
+        ks = np.arange(hi, dtype=np.int32)
+        if flip:
+            ks = ks[::-1]
+        flip = not flip
+        first = np.zeros(hi, np.int32)
+        last = np.zeros(hi, np.int32)
+        first[0] = 1
+        last[-1] = 1
+        cols.append(np.stack([np.full(hi, i, np.int32), ks, first, last]))
+    if not cols:
+        return np.zeros((4, 0), np.int32)
+    return np.concatenate(cols, axis=1).astype(np.int32)
+
+
+def _legacy_build_attention_task_table(
+    nq, nk, *, causal, q_chunk, k_chunk, transpose=False
+):
+    if not causal:
+        if transpose:
+            return _legacy_sfc_band_table(nk, nq)
+        return _legacy_sfc_band_table(nq, nk)
+    if not transpose:
+        band = np.minimum(
+            (np.arange(nq, dtype=np.int64) * q_chunk + q_chunk - 1)
+            // k_chunk
+            + 1,
+            nk,
+        )
+        return _legacy_sfc_band_table(nq, nk, band=band)
+    start = np.minimum(
+        (np.arange(nk, dtype=np.int64) * k_chunk) // q_chunk, nq
+    )
+    cols = []
+    flip = False
+    for j in range(nk):
+        lo = int(start[j])
+        if lo >= nq:
+            cols.append(np.asarray([[j], [nq - 1], [1], [1]], np.int32))
+            continue
+        qs = np.arange(lo, nq, dtype=np.int32)
+        if flip:
+            qs = qs[::-1]
+        flip = not flip
+        n = qs.size
+        first = np.zeros(n, np.int32)
+        last = np.zeros(n, np.int32)
+        first[0] = 1
+        last[-1] = 1
+        cols.append(np.stack([np.full(n, j, np.int32), qs, first, last]))
+    if not cols:
+        return np.zeros((4, 0), np.int32)
+    return np.concatenate(cols, axis=1).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# byte-identical differential tests (the port gate)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "mb,nb,k_layers",
+    [(1, 1, 1), (4, 4, 1), (8, 4, 2), (5, 7, 3), (16, 16, 4), (3, 1, 2)],
+)
+def test_gemm_table_byte_identical(mb, nb, k_layers):
+    sched = compile_schedule(gemm_spec(mb, nb, k_layers))
+    ref = _legacy_build_task_table(mb, nb, k_layers)
+    assert sched.table.dtype == ref.dtype
+    assert sched.table.tobytes() == ref.tobytes()
+
+
+@pytest.mark.parametrize(
+    "row_blocks,nb",
+    [
+        ((2, 3), 4),
+        ((0, 5, 0, 1), 3),
+        ((4,), 1),
+        ((0, 0), 2),
+        ((1, 2, 3, 4, 5), 8),
+    ],
+)
+def test_grouped_table_byte_identical(row_blocks, nb):
+    sched = compile_schedule(grouped_gemm_spec(row_blocks, nb))
+    ref = _legacy_build_grouped_task_table(row_blocks, nb)
+    assert sched.table.shape == ref.shape
+    assert sched.table.tobytes() == ref.tobytes()
+
+
+@pytest.mark.parametrize(
+    "row_blocks,kb,nb",
+    [((2, 3), 4, 4), ((1,), 2, 8), ((0, 4, 2), 3, 5), ((5, 5, 5), 1, 1)],
+)
+def test_grouped_tn_table_byte_identical(row_blocks, kb, nb):
+    sched = compile_schedule(grouped_tn_spec(row_blocks, kb, nb))
+    ref = _legacy_build_grouped_tn_task_table(row_blocks, kb, nb)
+    assert sched.table.tobytes() == ref.tobytes()
+
+
+@pytest.mark.parametrize(
+    "n_major,n_minor,band",
+    [
+        (4, 6, None),
+        (1, 1, None),
+        (5, 5, (1, 2, 3, 4, 5)),
+        (4, 8, (0, 3, 0, 8)),     # empty rows interleaved
+        (3, 4, (0, 0, 0)),        # fully empty space
+        (6, 3, (3, 0, 2, 2, 0, 1)),
+    ],
+)
+def test_band_table_byte_identical(n_major, n_minor, band):
+    sched = compile_schedule(band_spec(n_major, n_minor, band))
+    ref = _legacy_sfc_band_table(n_major, n_minor, band=None if band is None else np.asarray(band))
+    assert sched.table.tobytes() == ref.tobytes()
+    # the public core.sfc entry point routes through the same compiler
+    via_sfc = sfc_band_table(n_major, n_minor, band=None if band is None else np.asarray(band))
+    assert via_sfc.tobytes() == ref.tobytes()
+
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("transpose", [False, True])
+@pytest.mark.parametrize(
+    "nq,nk,qc,kc",
+    [(4, 4, 16, 16), (8, 4, 16, 32), (2, 8, 64, 16), (1, 1, 8, 8), (3, 5, 32, 16)],
+)
+def test_attention_table_byte_identical(nq, nk, qc, kc, causal, transpose):
+    sched = compile_schedule(
+        attention_spec(
+            nq, nk, causal=causal, q_chunk=qc, k_chunk=kc,
+            transpose=transpose,
+        )
+    )
+    ref = _legacy_build_attention_task_table(
+        nq, nk, causal=causal, q_chunk=qc, k_chunk=kc, transpose=transpose
+    )
+    assert sched.table.tobytes() == ref.tobytes()
+
+
+def test_kernels_emit_compiler_tables():
+    """The live kernel builders return the compiled tables (the port)."""
+    from repro.kernels.sfc_attention import build_attention_task_table
+    from repro.kernels.sfc_gemm import (
+        build_grouped_task_table,
+        build_grouped_tn_task_table,
+        build_task_table,
+    )
+
+    assert (
+        build_task_table(5, 7, 3).tobytes()
+        == _legacy_build_task_table(5, 7, 3).tobytes()
+    )
+    assert (
+        build_grouped_task_table((0, 3, 2), 4).tobytes()
+        == _legacy_build_grouped_task_table((0, 3, 2), 4).tobytes()
+    )
+    assert (
+        build_grouped_tn_task_table((2, 0, 3), 4, 5).tobytes()
+        == _legacy_build_grouped_tn_task_table((2, 0, 3), 4, 5).tobytes()
+    )
+    for causal in (False, True):
+        for tr in (False, True):
+            assert (
+                build_attention_task_table(
+                    6, 9, causal=causal, q_chunk=16, k_chunk=16,
+                    transpose=tr,
+                ).tobytes()
+                == _legacy_build_attention_task_table(
+                    6, 9, causal=causal, q_chunk=16, k_chunk=16,
+                    transpose=tr,
+                ).tobytes()
+            )
+
+
+# ---------------------------------------------------------------------------
+# satellite: q_offset shifts the causal band (chunked prefill)
+# ---------------------------------------------------------------------------
+
+
+def _covered(tab):
+    """Set of (major, minor) pairs in a (4, T) band table."""
+    return {(int(a), int(b)) for a, b in zip(tab[0], tab[1])}
+
+
+@pytest.mark.parametrize("q_offset", [0, 16, 40, 128])
+def test_q_offset_band_matches_mask(q_offset):
+    nq, nk, qc, kc = 4, 12, 16, 16
+    sched = compile_schedule(
+        attention_spec(
+            nq, nk, causal=True, q_chunk=qc, k_chunk=kc,
+            q_offset=q_offset,
+        )
+    )
+    tab = sched.table
+    # a (q tile, k tile) pair is needed iff some position pair inside it
+    # satisfies the shifted causal mask kpos <= q_offset + qpos
+    need = set()
+    for i in range(nq):
+        for j in range(nk):
+            q_last = q_offset + i * qc + qc - 1
+            k_first = j * kc
+            if k_first <= q_last:
+                need.add((i, j))
+    assert _covered(tab) == need
+    if q_offset == 0:
+        ref = _legacy_build_attention_task_table(
+            nq, nk, causal=True, q_chunk=qc, k_chunk=kc
+        )
+        assert tab.tobytes() == ref.tobytes()
+
+
+@pytest.mark.parametrize("q_offset", [0, 16, 40, 1000])
+def test_q_offset_transpose_band_matches_mask(q_offset):
+    nq, nk, qc, kc = 3, 8, 16, 16
+    sched = compile_schedule(
+        attention_spec(
+            nq, nk, causal=True, q_chunk=qc, k_chunk=kc,
+            transpose=True, q_offset=q_offset,
+        )
+    )
+    tab = sched.table
+    need = set()
+    masked_rows = set(range(nk))
+    for j in range(nk):
+        for i in range(nq):
+            q_last = q_offset + i * qc + qc - 1
+            k_first = j * kc
+            if k_first <= q_last:
+                need.add((j, i))
+                masked_rows.discard(j)
+    live = {
+        (int(a), int(b))
+        for t, (a, b) in enumerate(zip(tab[0], tab[1]))
+        if int(tab[0, t]) not in masked_rows
+    }
+    assert live == need
+    # fully-masked k rows keep exactly one sentinel flush task
+    for j in masked_rows:
+        idx = np.nonzero(tab[0] == j)[0]
+        assert idx.size == 1
+        t = int(idx[0])
+        assert int(tab[2, t]) == 1 and int(tab[3, t]) == 1
+
+
+def test_sfc_band_table_q_offset_kwarg():
+    """`core.sfc.sfc_band_table` threads q_offset through to the causal
+    band helper (the renamed-entry-point compatibility path)."""
+    nq, nk, qc = 4, 8, 16
+    shifted = sfc_band_table(
+        nq, nk, causal_chunks=(qc, qc), q_offset=32
+    )
+    spec = attention_spec(
+        nq, nk, causal=True, q_chunk=qc, k_chunk=qc, q_offset=32
+    )
+    assert shifted.tobytes() == compile_schedule(spec).table.tobytes()
+
+
+# ---------------------------------------------------------------------------
+# satellite: P1 / P2 properties on masked tile spaces
+# ---------------------------------------------------------------------------
+
+
+def _check_masked_bijection(sched: Schedule, allowed):
+    """Every allowed tile appears exactly once; nothing else appears."""
+    tab = sched.table
+    seen = list(zip(tab[0].tolist(), tab[1].tolist()))
+    assert len(seen) == len(set(seen))
+    assert set(seen) == allowed
+
+
+def _check_p1_adjacency(tab, *, max_diag=1, max_step=1):
+    """Consecutive tasks are Chebyshev-``max_step`` neighbours (P1 is
+    ``max_step=1``); ``max_diag`` bounds the non-axis steps.  Ragged bands
+    whose edge moves by more than one tile per major row (band slope > 1)
+    cannot be Chebyshev-1 at the row turns — callers pass the slope bound."""
+    n_diag = 0
+    for t in range(1, tab.shape[1]):
+        dm = abs(int(tab[0, t]) - int(tab[0, t - 1]))
+        dn = abs(int(tab[1, t]) - int(tab[1, t - 1]))
+        assert 1 <= max(dm, dn) <= max_step, (
+            f"task {t}: step ({dm},{dn}) breaks P1 adjacency"
+        )
+        if dm >= 1 and dn >= 1:
+            n_diag += 1
+    assert n_diag <= max_diag
+
+
+def _check_p2_connected(cells):
+    """8-connectivity BFS: the cell set is one connected patch (P2)."""
+    cells = set(cells)
+    if not cells:
+        return
+    start = next(iter(cells))
+    frontier = [start]
+    seen = {start}
+    while frontier:
+        x, y = frontier.pop()
+        for dx in (-1, 0, 1):
+            for dy in (-1, 0, 1):
+                nxt = (x + dx, y + dy)
+                if nxt in cells and nxt not in seen:
+                    seen.add(nxt)
+                    frontier.append(nxt)
+    assert seen == cells, "contiguous task range is not a connected patch"
+
+
+@pytest.mark.parametrize(
+    "nq,nk,qc,kc",
+    [(6, 6, 16, 16), (8, 4, 16, 32), (4, 16, 64, 16)],
+)
+def test_p1_p2_on_causal_band(nq, nk, qc, kc):
+    sched = compile_schedule(
+        attention_spec(nq, nk, causal=True, q_chunk=qc, k_chunk=kc)
+    )
+    tab = sched.table
+    band = [
+        min((i * qc + qc - 1) // kc + 1, nk) for i in range(nq)
+    ]
+    allowed = {(i, j) for i in range(nq) for j in range(band[i])}
+    _check_masked_bijection(sched, allowed)
+    # the band edge moves by at most ceil(qc/kc) tiles per major row, so
+    # the boustrophedon's row turns are Chebyshev-bounded by the band
+    # slope (slope <= 1 gives true P1 adjacency; a diagonal step can
+    # occur at every other row turn, where the row ends on the growing
+    # edge)
+    slope = max(1, -(-qc // kc))
+    _check_p1_adjacency(tab, max_diag=nq, max_step=slope)
+    if slope == 1:
+        # P2: every contiguous task range covers one connected patch (a
+        # slope-1 band's row turns are Chebyshev-1, so any window is
+        # connected; steeper bands jump at the growing edge by design)
+        T = tab.shape[1]
+        for start, stop in [(0, T), (0, T // 2), (T // 3, 2 * T // 3 + 1), (T // 2, T)]:
+            _check_p2_connected(
+                zip(tab[0, start:stop].tolist(), tab[1, start:stop].tolist())
+            )
+
+
+def test_p1_p2_on_ragged_group_space():
+    row_blocks, nb = (3, 0, 5, 2), 4
+    sched = compile_schedule(grouped_gemm_spec(row_blocks, nb))
+    tab = sched.table
+    # bijection over the packed (non-empty) tile space
+    allowed = set()
+    off = 0
+    for rows in row_blocks:
+        allowed |= {(off + r, c) for r in range(rows) for c in range(nb)}
+        off += rows
+    _check_masked_bijection(sched, allowed)
+    # P1/P2 hold per group (each group is its own gilbert curve); the
+    # inter-group seam is exempt — groups are independent accumulator
+    # regions, not one connected traversal
+    for g in set(tab[2].tolist()):
+        cols = np.nonzero(tab[2] == g)[0]
+        sub = tab[:, cols]
+        _check_p1_adjacency(sub)
+        T = sub.shape[1]
+        for start, stop in [(0, T), (T // 4, 3 * T // 4 + 1)]:
+            _check_p2_connected(
+                zip(sub[0, start:stop].tolist(), sub[1, start:stop].tolist())
+            )
+
+
+def test_p1_on_empty_row_band():
+    """Empty major rows drop out without breaking within-row adjacency."""
+    band = (3, 0, 0, 4, 2, 0, 1)
+    sched = compile_schedule(band_spec(7, 4, band))
+    tab = sched.table
+    allowed = {
+        (i, j) for i in range(7) for j in range(band[i])
+    }
+    _check_masked_bijection(sched, allowed)
+    # within each major row the serpentine is strictly ±1 in minor
+    for i in set(tab[0].tolist()):
+        cols = np.nonzero(tab[0] == i)[0]
+        minors = tab[1, cols].tolist()
+        for a, b in zip(minors, minors[1:]):
+            assert abs(b - a) == 1
+
+
+def test_flip_restarts_after_fully_masked_rows():
+    """The boustrophedon flip state skips fully-masked major rows: the
+    table with empty rows interleaved equals the table with those rows
+    deleted, re-labelled — the serpentine continues as if they never
+    existed (this is what keeps end/start panels adjacent across gaps)."""
+    band_with_gaps = (3, 0, 4, 0, 0, 2, 3)
+    live_rows = [i for i, b in enumerate(band_with_gaps) if b > 0]
+    band_packed = tuple(b for b in band_with_gaps if b > 0)
+
+    gapped = compile_schedule(band_spec(7, 4, band_with_gaps)).table
+    packed = compile_schedule(band_spec(len(band_packed), 4, band_packed)).table
+
+    relabel = {i: live_rows[i] for i in range(len(live_rows))}
+    expect = packed.copy()
+    expect[0] = np.asarray([relabel[int(i)] for i in packed[0]], np.int32)
+    assert gapped.tobytes() == expect.tobytes()
+
+
+def test_flip_restart_masked_sentinel_rows():
+    """Sentinel tasks (causal-transpose fully-masked k rows) also leave
+    the flip state untouched."""
+    nq, nk, qc, kc = 2, 6, 16, 16
+    sched = compile_schedule(
+        attention_spec(
+            nq, nk, causal=True, q_chunk=qc, k_chunk=kc, transpose=True
+        )
+    )
+    tab = sched.table
+    # rows 0..1 are live (start < nq), rows 2.. are sentinels; the live
+    # rows must alternate direction exactly as if sentinels were absent
+    live = [j for j in range(nk) if (j * kc) // qc < nq]
+    directions = []
+    for j in live:
+        cols = np.nonzero(tab[0] == j)[0]
+        minors = tab[1, cols]
+        if minors.size > 1:
+            directions.append(int(np.sign(minors[1] - minors[0])))
+    for a, b in zip(directions, directions[1:]):
+        assert a == -b, "flip must alternate across live rows only"
+
+
+# ---------------------------------------------------------------------------
+# the Schedule artifact: columns, selectors, keys
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_columns_and_selector():
+    sched = compile_schedule(gemm_spec(4, 4, 2))
+    assert sched.columns == ("major", "minor", "layer")
+    assert sched.col("layer") == 2
+    sel = sched.selector("minor")
+    assert int(sel(sched.table, 3)) == int(sched.table[1, 3])
+    with pytest.raises(KeyError):
+        sched.col("group")
+
+
+def test_schedule_key_is_stable_and_spec_sensitive():
+    a = gemm_spec(8, 8, 2)
+    b = gemm_spec(8, 8, 2)
+    c = gemm_spec(8, 8, 3)
+    assert a.key == b.key
+    assert a.key != c.key
+    assert a.key != band_spec(8, 8).key
+    # memoized compile returns the same artifact object
+    assert compile_schedule(a) is compile_schedule(b)
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        ScheduleSpec(order="zigzag", major=2, minor=2)
+    with pytest.raises(ValueError):
+        ScheduleSpec(order="serpentine", major=2, minor=2, layers=2)
+    with pytest.raises(ValueError):
+        ScheduleSpec(order="grouped", major=2, minor=2)
+    with pytest.raises(ValueError):
+        ScheduleSpec(order="serpentine", major=3, minor=2, band=(1,))
+    with pytest.raises(ValueError):
+        ScheduleSpec(order="gilbert", major=2, minor=2, masked_sentinel=True)
