@@ -1,0 +1,84 @@
+"""ABFT checksum-lane overhead rows (robustness ladder, `repro.robust.abft`).
+
+Two row families:
+
+``abft/model/<M>x<N>x<K>``
+    Modeled detect-mode overhead (us) from `perf_model.abft_overhead` on the
+    paper's forward-GEMM cells — the operand-checksum reference pass
+    ``(eᵀA)·(Be)`` plus the in-kernel accumulator-sum lane.  Deterministic,
+    so these rows sit under the `compare.py` regression gate; the headline
+    ``rel=`` field is the overhead as a fraction of the modeled GEMM time
+    (acceptance: < 0.15 on every gated forward row).
+
+``abft/cpu_check/<mode>_<N>``
+    Measured wall-clock of the full op path (`gemm_backend` → ladder →
+    interpret-mode kernel) with ``abft="off"`` vs ``"detect"`` on the host.
+    Interpreter timings say nothing about TPU overhead — they only prove
+    the detect path stays live end-to-end — so they are reported, never
+    gated (see `compare.MEASURED_PREFIXES`).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, time_fn
+from repro.configs.paper_gemm import FIG7_SHAPES
+from repro.core.perf_model import abft_overhead, simulate_gemm
+
+DTYPE_BYTES = 2  # bf16 operands, f32 checksum lane
+
+# the dual-B GLU projection cell (from data_movement.GLU_SHAPES) — the
+# checksum reference reads both B panels, so it is the worst-case family
+GLU_CELL = (4096, 11008, 4096)
+
+
+def run(n_workers: int = 256):
+    cells = [(m, n, k, 1) for (m, n, k) in FIG7_SHAPES] + [GLU_CELL + (2,)]
+    for m, n, k, n_b in cells:
+        g = simulate_gemm(
+            m, n, k, n_workers=n_workers, k_layers=1, k_block_factor=2,
+            dtype_bytes=DTYPE_BYTES, n_b_mats=n_b,
+        )
+        o = abft_overhead(
+            m, n, k, k_block_factor=2, dtype_bytes=DTYPE_BYTES, n_b_mats=n_b,
+            n_workers=n_workers,
+        )
+        rel = o["time_s"] / g["time_s"]
+        tag = "glu/" if n_b == 2 else ""
+        emit(
+            f"abft/model/{tag}{m}x{n}x{k}",
+            o["time_s"] * 1e6,
+            f"rel={rel:.4f};chk_MB={o['bytes']/1e6:.2f};"
+            f"chk_mflops={o['flops']/1e6:.1f};gemm_us={g['time_s']*1e6:.1f}",
+        )
+
+
+def run_measured(n: int = 256):
+    """Host wall-clock through the real op path, detect vs off."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import gemm_backend as backend_lib
+
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (n, n), dtype=jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (n, n), dtype=jnp.float32)
+
+    times = {}
+    for mode in ("off", "detect"):
+        def call(x=x, w=w, mode=mode):
+            with backend_lib.gemm_backend("sfc_pallas", abft=mode):
+                return backend_lib.matmul(x, w)
+
+        times[mode] = time_fn(call, warmup=1, iters=3)
+        emit(f"abft/cpu_check/{mode}_{n}", times[mode], "interpret=1")
+    rel = times["detect"] / max(times["off"], 1e-9) - 1.0
+    emit(f"abft/cpu_check/rel_{n}", 0.0, f"detect_vs_off={rel:+.3f}")
+
+
+def main():
+    run()
+    run_measured()
+
+
+if __name__ == "__main__":
+    main()

@@ -37,7 +37,7 @@ from typing import Dict, List, Optional, Tuple
 
 # name prefixes of rows measured in wall-clock on the host — not
 # reproducible across runners, reported but not gated by default
-MEASURED_PREFIXES = ("gemm_cpu_check/", "llm_prefill/", "gemm_tune/")
+MEASURED_PREFIXES = ("gemm_cpu_check/", "llm_prefill/", "gemm_tune/", "abft/cpu_check/")
 
 # below this many microseconds the ratio is numerically meaningless
 MIN_BASELINE_US = 1e-9

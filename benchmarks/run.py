@@ -53,6 +53,7 @@ def main(argv=None) -> None:
     args = p.parse_args(argv)
 
     from benchmarks import (
+        abft,
         data_movement,
         distributed_gemm,
         gemm_sweep,
@@ -69,11 +70,14 @@ def main(argv=None) -> None:
         data_movement.run_train()        # fwd + NT/TN backward traffic
         data_movement.run_train_update()  # fused-optimizer flush rows
         data_movement.run_attention()    # SFC flash prefill + decode rows
+        abft.run()                       # checksum-lane overhead (gated)
+        abft.run_measured()              # detect-vs-off liveness check
         llm_prefill.run(smoke=True)      # paper Fig. 10 (one cell)
     else:
         gemm_sweep.run(full=args.full)   # paper Figs. 1 / 6 / 9
         gemm_sweep.run_backward()        # NT/TN + grouped/MoE buckets
         data_movement.main()             # paper Fig. 7 + fused gated-MLP
+        abft.main()                      # checksum-lane overhead rows
         knob_prediction.main()           # paper Fig. 8
         llm_prefill.main()               # paper Fig. 10
         distributed_gemm.main()          # paper Fig. 11

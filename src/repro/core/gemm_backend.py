@@ -115,12 +115,26 @@ _BACKEND: contextvars.ContextVar[str] = contextvars.ContextVar(
 
 
 @contextlib.contextmanager
-def gemm_backend(name: str):
+def gemm_backend(name: str, *, abft: Optional[str] = None):
+    """Select the GEMM backend; optionally set the ABFT checksum mode.
+
+    ``abft`` ("off" | "detect" | "strict", default: leave the ambient
+    `repro.robust.abft` context untouched) applies to every kernel
+    launch traced while the context is active — checksum mismatches
+    raise `SdcDetected`, which the fallback ladder classifies as "sdc"
+    (retry once, then quarantine and degrade).
+    """
     if name not in (RUNG_XLA, RUNG_SFC_PALLAS, RUNG_SFC_REFERENCE):
         raise ValueError(f"unknown gemm backend {name}")
     tok = _BACKEND.set(name)
     try:
-        yield
+        if abft is None:
+            yield
+        else:
+            from repro.robust.abft import abft_mode
+
+            with abft_mode(abft):
+                yield
     finally:
         _BACKEND.reset(tok)
 

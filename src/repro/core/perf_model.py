@@ -59,6 +59,7 @@ __all__ = [
     "choose_knobs_autotune",
     "NearestNeighborModel",
     "gemm_flops",
+    "abft_overhead",
 ]
 
 
@@ -404,6 +405,60 @@ def shared_memory_floor(
     """
     bytes_ = (M * K + n_b_mats * K * N + M * N) * dtype_bytes
     return bytes_ * hw.beta
+
+
+def abft_overhead(
+    M: int,
+    N: int,
+    K: int,
+    *,
+    bm: int = 256,
+    bn: int = 256,
+    k_block_factor: int = 1,
+    hw: HardwareModel = TPU_V5E,
+    dtype_bytes: int = 2,
+    n_b_mats: int = 1,
+    n_workers: int = 1,
+) -> Dict[str, float]:
+    """Modeled cost of the ABFT checksum lane (``abft="detect"``).
+
+    Two components, per the Walker & Skjellum data-movement accounting:
+
+    * **Operand checksum reference** ``(eᵀA)·(Be)``: one extra streaming
+      read of A and each B panel (``M·K + n_b_mats·K·N`` elements) plus
+      ~2 FLOPs per element for the row/column sum reductions and the
+      final length-K dot.  This runs at op level (XLA), so it pays the
+      full slow-memory β on its reads.
+    * **In-kernel checksum lane**: the flush sums its f32 accumulator
+      tile (``bm·bn`` VPU adds per drain; every output tile drains
+      ``k_block_factor`` times) and accumulates into a single f32 launch
+      output — a 4-byte HBM write per launch, which is noise.  The lane
+      reads nothing extra: the accumulator is already VMEM-resident at
+      flush time.
+
+    Relative to the GEMM itself the extra traffic is the
+    O(1/bm + 1/bn) sliver the paper's analysis predicts — this function
+    prices it so `tune`/bench gates can bound the overhead instead of
+    guessing.  Both components partition perfectly (the ref pass over
+    operand slices, the lane over output tiles), so pass the same
+    ``n_workers`` as `simulate_gemm` to get a comparable per-worker time
+    — `simulate_gemm`'s β/γ are per-worker rates and its ``time_s`` is
+    the max over workers.  Returns ``{"time_s", "bytes", "flops"}`` with
+    bytes/flops as chip totals and ``time_s`` per-worker.
+    """
+    ref_elems = M * K + n_b_mats * K * N
+    ref_bytes = ref_elems * dtype_bytes
+    ref_flops = 2.0 * ref_elems + 2.0 * K
+    n_tiles = max(1, (M // max(bm, 1)) * (N // max(bn, 1)))
+    lane_flops = float(n_tiles * k_block_factor) * bm * bn * n_b_mats
+    lane_bytes = 4.0  # the per-launch f32 residual scalar
+    flops = ref_flops + lane_flops
+    bytes_ = ref_bytes + lane_bytes
+    return {
+        "time_s": (bytes_ * hw.beta + flops * hw.gamma) / max(n_workers, 1),
+        "bytes": float(bytes_),
+        "flops": float(flops),
+    }
 
 
 def backward_gemm_shapes(M: int, N: int, K: int) -> Dict[str, Tuple[int, int, int]]:

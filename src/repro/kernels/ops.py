@@ -47,6 +47,8 @@ import numpy as np
 from repro.core.namespaces import (
     NS_GEMM,
     NS_GLU,
+    NS_GROUPED,
+    NS_GROUPED_GLU,
     NS_GROUPED_NT,
     NS_GROUPED_TN,
     NS_GROUPED_TN_UPDATE,
@@ -73,6 +75,7 @@ from repro.kernels.sfc_gemm import (
     sfc_gemm_pallas,
     sfc_gemm_tn,
 )
+from repro.robust import abft as _abft
 
 __all__ = [
     "sfc_matmul",
@@ -373,6 +376,7 @@ def _matmul_impl(
     out_dtype,
     fuse: Optional[bool],
     preact: bool = False,
+    abft: Optional[str] = None,
 ) -> jax.Array:
     if interpret is None:
         interpret = default_interpret()
@@ -410,9 +414,18 @@ def _matmul_impl(
     out_dtype = out_dtype or a.dtype
 
     op = NS_GLU if glu else NS_GEMM
+    abft_mode = abft if abft is not None else _abft.current_mode(op)
+    abft_on = abft_mode != "off"
     bm, bn, k_layers, k_block_factor = _resolve_knobs(
         m, n, k, a.dtype, bm, bn, k_layers, k_block_factor, op
     )
+
+    def _verify(out, chk, cast_dtype=None):
+        ref, mag = _abft.gemm_checksum_ref(a, b, b_gate)
+        return _abft.verify(
+            op, out, chk, ref, mag,
+            contract_dim=k, mode=abft_mode, cast_dtype=cast_dtype,
+        )
 
     mp = _round_up(m, bm)
     np_ = _round_up(n, bn)
@@ -429,13 +442,15 @@ def _matmul_impl(
             has_residual=residual is not None,
         )
     if not fuse and glu:
-        # unfused GLU: two independent products + jnp epilogue
+        # unfused GLU: two independent products + jnp epilogue (each inner
+        # product carries its own ABFT check under the gemm namespace)
         val = _matmul_impl(
             a, b, None,
             bias=None, gate_bias=None, residual=None,
             activation=None, out_scale=None,
             bm=bm, bn=bn, k_layers=k_layers, k_block_factor=k_block_factor,
             interpret=interpret, out_dtype=jnp.float32, fuse=False,
+            abft=abft_mode,
         )
         gate = _matmul_impl(
             a, b_gate, None,
@@ -443,6 +458,7 @@ def _matmul_impl(
             activation=None, out_scale=None,
             bm=bm, bn=bn, k_layers=k_layers, k_block_factor=k_block_factor,
             interpret=interpret, out_dtype=jnp.float32, fuse=False,
+            abft=abft_mode,
         )
         if preact:
             if bias is not None:
@@ -479,18 +495,26 @@ def _matmul_impl(
             res_p = None
             if residual is not None:
                 res_p = jnp.pad(residual, ((0, mp - m), (0, np_ - n)))
-            c_full = sfc_gemm_fused(
+            out = sfc_gemm_fused(
                 a_p, b_p, b_gate_p, bias_p, gate_bias_p, res_p,
                 activation=activation, out_scale=out_scale,
                 bm=bm, bn=bn,
                 k_layers=k_layers, k_block_factor=k_block_factor,
                 interpret=interpret, out_dtype=out_dtype,
-                preact_out=preact,
+                preact_out=preact, abft=abft_on,
             )
+            chk = None
+            if abft_on:
+                *rest, chk = out
+                c_full = tuple(rest) if preact else rest[0]
+            else:
+                c_full = out
             if preact:
                 h_full, g_full = c_full
-                return h_full[:m, :n], g_full[:m, :n]
-            return c_full[:m, :n]
+                res = (h_full[:m, :n], g_full[:m, :n])
+            else:
+                res = c_full[:m, :n]
+            return _verify(res, chk) if abft_on else res
         copies = sfc_gemm_pallas(
             a_p, b_p,
             bm=bm, bn=bn,
@@ -501,10 +525,16 @@ def _matmul_impl(
             c_full = add_reduce_pallas(copies, bm=bm, bn=bn, interpret=interpret)
         else:
             c_full = copies[0]
-        return _epilogue_jnp(
+        res = _epilogue_jnp(
             c_full[:m, :n], bias=bias, activation=activation,
             out_scale=out_scale, residual=residual, out_dtype=out_dtype,
         )
+        if abft_on:
+            # op-level check: the replicated output is the raw (cast)
+            # accumulator, pre-epilogue — its sum is the checksum
+            chk = jnp.sum(c_full, dtype=jnp.float32)
+            res = _verify(res, chk, cast_dtype=out_dtype)
+        return res
 
     # batched path: fold leading dims into one batch axis for the kernel grid
     bsz = 1
@@ -527,21 +557,29 @@ def _matmul_impl(
                 residual.reshape(bsz, m, n),
                 ((0, 0), (0, mp - m), (0, np_ - n)),
             )
-        c_full = sfc_gemm_batched_fused(
+        out = sfc_gemm_batched_fused(
             a3, b3, b_gate_p, bias_p, gate_bias_p, res_p,
             activation=activation, out_scale=out_scale,
             bm=bm, bn=bn,
             k_layers=k_layers, k_block_factor=k_block_factor,
             interpret=interpret, out_dtype=out_dtype,
-            preact_out=preact,
+            preact_out=preact, abft=abft_on,
         )  # (B, Mp, Np)
+        chk = None
+        if abft_on:
+            *rest, chk = out
+            c_full = tuple(rest) if preact else rest[0]
+        else:
+            c_full = out
         if preact:
             h_full, g_full = c_full
-            return (
+            res = (
                 h_full[:, :m, :n].reshape(*lead, m, n),
                 g_full[:, :m, :n].reshape(*lead, m, n),
             )
-        return c_full[:, :m, :n].reshape(*lead, m, n)
+        else:
+            res = c_full[:, :m, :n].reshape(*lead, m, n)
+        return _verify(res, chk) if abft_on else res
 
     copies = sfc_gemm_batched(
         a3, b3,
@@ -555,10 +593,14 @@ def _matmul_impl(
     else:
         c_full = copies[:, 0]
     out = c_full[:, :m, :n].reshape(*lead, m, n)
-    return _epilogue_jnp(
+    res = _epilogue_jnp(
         out, bias=bias, activation=activation,
         out_scale=out_scale, residual=residual, out_dtype=out_dtype,
     )
+    if abft_on:
+        chk = jnp.sum(c_full, dtype=jnp.float32)
+        res = _verify(res, chk, cast_dtype=out_dtype)
+    return res
 
 
 # ---------------------------------------------------------------------------
@@ -603,6 +645,7 @@ def sfc_matmul_nt(
     k_block_factor: Optional[int] = None,
     interpret: Optional[bool] = None,
     out_dtype=None,
+    abft: Optional[str] = None,
 ) -> jax.Array:
     """C = A @ Bᵀ (+ A2 @ B2ᵀ) via the SFC NT kernel — the dA backward GEMM
     (``dA = dC @ Wᵀ``; the dual form is the GLU ``dg·Wgᵀ + dh·Wvᵀ`` in one
@@ -654,7 +697,22 @@ def sfc_matmul_nt(
         k_layers=k_layers, k_block_factor=k_block_factor,
         interpret=interpret, out_dtype=out_dtype,
     )
-    return out[:m, :n].reshape(*lead, a.shape[-2], n)
+    ns = NS_NT_DUAL if dual else NS_NT
+    mode = abft if abft is not None else _abft.current_mode(ns)
+    res = out[:m, :n].reshape(*lead, a.shape[-2], n)
+    if mode != "off":
+        # op-level check: the NT output *is* the raw accumulator cast to
+        # out_dtype (no epilogue), so its sum is the checksum
+        chk = jnp.sum(out, dtype=jnp.float32)
+        ref, mag = _abft.nt_checksum_ref(a2d, b)
+        if dual:
+            r2, m2_ = _abft.nt_checksum_ref(a22d, b2)
+            ref, mag = ref + r2, mag + m2_
+        res = _abft.verify(
+            ns, res, chk, ref, mag,
+            contract_dim=k, mode=mode, cast_dtype=out_dtype,
+        )
+    return res
 
 
 def sfc_matmul_tn(
@@ -668,6 +726,7 @@ def sfc_matmul_tn(
     k_block_factor: Optional[int] = None,
     interpret: Optional[bool] = None,
     out_dtype=None,
+    abft: Optional[str] = None,
 ):
     """C = Aᵀ @ B (and Aᵀ @ B2) via the SFC TN kernel — the dW backward GEMM
     (``dW = Aᵀ @ dC``); with ``b2`` one activation traversal flushes both
@@ -708,6 +767,8 @@ def sfc_matmul_tn(
             return jnp.pad(x, ((0, rows - r), (0, cols - c)))
         return x
 
+    ns = NS_TN_DUAL if dual else NS_TN
+    mode = abft if abft is not None else _abft.current_mode(ns)
     out = sfc_gemm_tn(
         pad2(a2d, mp, kp),
         pad2(b2d, mp, np_),
@@ -715,7 +776,21 @@ def sfc_matmul_tn(
         bm=bm, bn=bn,
         k_layers=k_layers, k_block_factor=k_block_factor,
         interpret=interpret, out_dtype=out_dtype,
+        abft=mode != "off",
     )
+    if mode != "off":
+        *outs, chk = out
+        res = (outs[0][:k, :n], outs[1][:k, :n]) if dual else outs[0][:k, :n]
+        ref, mag = _abft.tn_checksum_ref(a2d, b2d)
+        res = _abft.verify(
+            ns, res, chk[0, 0], ref, mag, contract_dim=m, mode=mode
+        )
+        if dual:
+            r2, m2_ = _abft.tn_checksum_ref(a2d, b22d)
+            res = _abft.verify(
+                ns, res, chk[1, 0], r2, m2_, contract_dim=m, mode=mode
+            )
+        return res
     if dual:
         return out[0][:k, :n], out[1][:k, :n]
     return out[:k, :n]
@@ -805,6 +880,7 @@ def sfc_matmul_tn_update(
     k_layers: Optional[int] = None,
     k_block_factor: Optional[int] = None,
     interpret: Optional[bool] = None,
+    abft: Optional[str] = None,
 ):
     """Fused dW-and-AdamW: one TN launch computes ``dW = Aᵀ @ dY`` in the
     f32 accumulator and applies the update in the flush — returns
@@ -851,6 +927,8 @@ def sfc_matmul_tn_update(
             return jnp.pad(x, ((0, rows - r), (0, cols - c)))
         return x
 
+    ns = NS_TN_UPDATE_DUAL if dual else NS_TN_UPDATE
+    mode = abft if abft is not None else _abft.current_mode(ns)
     f32 = jnp.float32
     out = sfc_gemm_tn(
         pad2(a2d, mp, kp),
@@ -867,7 +945,11 @@ def sfc_matmul_tn_update(
         k_layers=k_layers, k_block_factor=k_block_factor,
         interpret=interpret, out_dtype=f32,
         update_dtype=param_dtype, stochastic_round=stochastic_round,
+        abft=mode != "off",
     )
+    chk = None
+    if mode != "off":
+        *out, chk = out
 
     def crop(set_):
         w_n, mst_n, mu_n, nu_n = set_
@@ -880,11 +962,26 @@ def sfc_matmul_tn_update(
 
     if dual:
         norm = out[8]
-        return (
+        res = (
             (*crop(out[0:4]), norm[0, 0]),
             (*crop(out[4:8]), norm[1, 0]),
         )
-    return (*crop(out[0:4]), out[4][0, 0])
+    else:
+        res = (*crop(out[0:4]), out[4][0, 0])
+    if mode != "off":
+        # the checksum is the raw dW accumulator, caught *before* the
+        # in-flush AdamW consumes it — a flip in the gradient contraction
+        # is detected even though dW itself never reaches HBM
+        ref, mag = _abft.tn_checksum_ref(a2d, b2d)
+        res = _abft.verify(
+            ns, res, chk[0, 0], ref, mag, contract_dim=m, mode=mode
+        )
+        if dual:
+            r2, m2_ = _abft.tn_checksum_ref(a2d, b22d)
+            res = _abft.verify(
+                ns, res, chk[1, 0], r2, m2_, contract_dim=m, mode=mode
+            )
+    return res
 
 
 def sfc_grouped_matmul_tn_update(
@@ -1178,6 +1275,7 @@ class _VjpCfg:
     interpret: Optional[bool]
     out_dtype: Any
     fuse: Optional[bool]
+    abft: Optional[str] = None
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
@@ -1189,6 +1287,7 @@ def _matmul_core(cfg, a, b, b_gate, bias, gate_bias, residual):
         bm=cfg.bm, bn=cfg.bn,
         k_layers=cfg.k_layers, k_block_factor=cfg.k_block_factor,
         interpret=cfg.interpret, out_dtype=cfg.out_dtype, fuse=cfg.fuse,
+        abft=cfg.abft,
     )
 
 
@@ -1197,7 +1296,7 @@ def _matmul_core_fwd(cfg, a, b, b_gate, bias, gate_bias, residual):
     kw = dict(
         bm=cfg.bm, bn=cfg.bn,
         k_layers=cfg.k_layers, k_block_factor=cfg.k_block_factor,
-        interpret=cfg.interpret, fuse=cfg.fuse,
+        interpret=cfg.interpret, fuse=cfg.fuse, abft=cfg.abft,
     )
     h_pre = g_pre = None
     if cfg.glu:
@@ -1784,6 +1883,7 @@ def sfc_matmul(
     interpret: Optional[bool] = None,
     out_dtype=None,
     fuse: Optional[bool] = None,
+    abft: Optional[str] = None,
 ) -> jax.Array:
     """C = epilogue(A @ B) via the SFC-CA Pallas kernel, any leading batch
     dims on A.
@@ -1807,11 +1907,16 @@ def sfc_matmul(
     Differentiable end-to-end on the SFC backend: a `jax.custom_vjp` routes
     the backward GEMMs through `sfc_matmul_nt`/`sfc_matmul_tn` (transposes
     stay in VMEM, knobs from the "nt"/"tn" tune namespaces).
+
+    ``abft``: "off" | "detect" | "strict" checksum verification of the
+    forward launch (`repro.robust.abft`); None defers to the ambient
+    `abft_mode` context (backward launches always resolve from the
+    context — the cfg only pins the forward).
     """
     cfg = _VjpCfg(
         glu=False, activation=activation, out_scale=out_scale,
         bm=bm, bn=bn, k_layers=k_layers, k_block_factor=k_block_factor,
-        interpret=interpret, out_dtype=out_dtype, fuse=fuse,
+        interpret=interpret, out_dtype=out_dtype, fuse=fuse, abft=abft,
     )
     return _matmul_core(cfg, a, b, None, bias, None, residual)
 
@@ -1833,6 +1938,7 @@ def sfc_glu_matmul(
     interpret: Optional[bool] = None,
     out_dtype=None,
     fuse: Optional[bool] = None,
+    abft: Optional[str] = None,
 ) -> jax.Array:
     """Gated-MLP projection: ``act(A@Wg + gate_bias) * (A@Wv + bias)`` in
     one SFC traversal of A (dual-B kernel: two weight panels, two f32
@@ -1846,7 +1952,7 @@ def sfc_glu_matmul(
     cfg = _VjpCfg(
         glu=True, activation=activation, out_scale=out_scale,
         bm=bm, bn=bn, k_layers=k_layers, k_block_factor=k_block_factor,
-        interpret=interpret, out_dtype=out_dtype, fuse=fuse,
+        interpret=interpret, out_dtype=out_dtype, fuse=fuse, abft=abft,
     )
     return _matmul_core(cfg, a, b_val, b_gate, bias, gate_bias, residual)
 
@@ -1867,6 +1973,7 @@ def _grouped_impl(
     interpret: Optional[bool],
     out_dtype,
     preact: bool = False,
+    abft: Optional[str] = None,
 ) -> jax.Array:
     if interpret is None:
         interpret = default_interpret()
@@ -1931,6 +2038,8 @@ def _grouped_impl(
             return None
         return jnp.pad(v.reshape(e_cnt, 1, n), ((0, 0), (0, 0), (0, np_ - n)))
 
+    ns = NS_GROUPED_GLU if glu else NS_GROUPED
+    mode = abft if abft is not None else _abft.current_mode(ns)
     out_p = sfc_gemm_grouped(
         a_p, b_p, bg_p, pad_vec(bias), pad_vec(gate_bias),
         row_blocks=row_blocks,
@@ -1938,16 +2047,40 @@ def _grouped_impl(
         bm=bm, bn=bn,
         k_block_factor=k_block_factor,
         interpret=interpret, out_dtype=out_dtype,
-        preact_out=preact,
+        preact_out=preact, abft=mode != "off",
     )  # (sum(row_blocks)*bm, Np), or the (value, gate) preact pair
+    chk = None
+    if mode != "off":
+        *out_p, chk = out_p
+    elif not isinstance(out_p, tuple):
+        out_p = (out_p,)
 
     # slice the valid rows of each group back out
     def unpad(full):
         return _grouped_row_unpad(full, group_sizes, row_blocks, bm, n)
 
     if preact:
-        return unpad(out_p[0]), unpad(out_p[1])
-    return unpad(out_p)
+        res = (unpad(out_p[0]), unpad(out_p[1]))
+    else:
+        res = unpad(out_p[0])
+    if mode != "off":
+        # per-expert operand checksums: each group contracts its own rows
+        # against its own weight slab
+        ref = mag = jnp.float32(0.0)
+        off = 0
+        for ei, g in enumerate(group_sizes):
+            if g == 0:
+                continue
+            r, mg = _abft.gemm_checksum_ref(
+                a[off:off + g], b[ei],
+                b_gate[ei] if glu else None,
+            )
+            ref, mag = ref + r, mag + mg
+            off += g
+        res = _abft.verify(
+            ns, res, chk, ref, mag, contract_dim=k, mode=mode
+        )
+    return res
 
 
 @dataclasses.dataclass(frozen=True)

@@ -86,7 +86,7 @@ from repro.optim.adamw import (
 # bumped when a kernel change invalidates measured knobs / calibration
 # constants; `repro.tune.cache` stamps persisted entries with it and
 # drops stale generations on mismatch
-KERNEL_VERSION = 1
+KERNEL_VERSION = 2  # v2: ABFT checksum lane in the fused/TN flush paths
 
 __all__ = [
     "KERNEL_VERSION",
@@ -172,6 +172,10 @@ class _FusedSpec:
     # GLU pre-activations (value+bias, gate+gate_bias) as separate outputs —
     # the residuals `jax.custom_vjp` needs, still from one A traversal.
     preact_out: bool = False
+    # ABFT checksum lane: a launch-resident (1, 1) f32 output accumulating
+    # sum(raw accumulator) across every flush — pre-epilogue, so it equals
+    # the operand checksum (eᵀA)·(Be) up to roundoff (repro.robust.abft).
+    abft: bool = False
 
 
 def _fused_kernel(*refs, spec: _FusedSpec):
@@ -193,6 +197,7 @@ def _fused_kernel(*refs, spec: _FusedSpec):
     res_ref = next(it) if spec.has_residual else None
     o_ref = next(it)
     og_ref = next(it) if (spec.glu and spec.preact_out) else None
+    chk_ref = next(it) if spec.abft else None
     acc_ref = next(it)
     accg_ref = next(it) if spec.glu else None
 
@@ -207,6 +212,17 @@ def _fused_kernel(*refs, spec: _FusedSpec):
     last = kc == spec.n_k_chunks - 1
     if lyr is not None:
         last = (lyr == spec.n_layers - 1) & last
+
+    if spec.abft:
+        # the checksum output is launch-resident (every grid step maps to
+        # block (0, 0)): zero it exactly once, at the global first step
+        launch_start = first
+        for d in range(2 if spec.mode == "batched" else 1):
+            launch_start = (pl.program_id(d) == 0) & launch_start
+
+        @pl.when(launch_start)
+        def _zero_chk():
+            chk_ref[...] = jnp.zeros_like(chk_ref)
 
     @pl.when(first)
     def _zero():  # zero_tpp (Listing 1 line 16) — once per C tile
@@ -227,6 +243,13 @@ def _fused_kernel(*refs, spec: _FusedSpec):
 
     @pl.when(last)
     def _flush():
+        if spec.abft:
+            # checksum the *raw* accumulator(s): epilogues (bias, activation,
+            # residual) are nonlinear in sum(C) and would break the identity
+            chk = jnp.sum(acc_ref[...])
+            if spec.glu:
+                chk = chk + jnp.sum(accg_ref[...])
+            chk_ref[0, 0] += chk
         acc = acc_ref[...]
         if spec.has_bias:
             bias = bias_ref[0] if spec.mode == "grouped" else bias_ref[...]
@@ -289,6 +312,13 @@ def _fused_call(
         # second output: the gate pre-activation, same tiling as the value
         out_specs = [out_spec, out_spec]
         out_shapes = [out_shape, out_shape]
+    if spec.abft:
+        # trailing launch-resident checksum scalar (block (0, 0) at every
+        # grid step — stays in VMEM, one 4-byte write at launch end)
+        if not isinstance(out_specs, list):
+            out_specs, out_shapes = [out_specs], [out_shapes]
+        out_specs = out_specs + [pl.BlockSpec((1, 1), lambda *args: (0, 0))]
+        out_shapes = out_shapes + [jax.ShapeDtypeStruct((1, 1), jnp.float32)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
@@ -319,6 +349,7 @@ def _fused_call(
         "interpret",
         "out_dtype",
         "preact_out",
+        "abft",
     ),
 )
 def sfc_gemm_fused(
@@ -338,6 +369,7 @@ def sfc_gemm_fused(
     interpret: bool = False,
     out_dtype=None,
     preact_out: bool = False,
+    abft: bool = False,
 ) -> jax.Array:
     """Single-launch SFC GEMM with in-kernel 2.5D reduction + fused epilogue.
 
@@ -387,6 +419,7 @@ def sfc_gemm_fused(
         out_scale=out_scale,
         out_dtype=out_dtype,
         preact_out=preact_out,
+        abft=abft,
     )
 
     # Block index maps (units of blocks).  `t` walks the compiled schedule
@@ -422,7 +455,7 @@ def sfc_gemm_fused(
         inputs.append(residual)
         in_specs.append(pl.BlockSpec((bm, bn), o_map))
 
-    return _fused_call(
+    out = _fused_call(
         spec=spec,
         tab=tab,
         grid=(mb_cnt * nb_cnt, k_layers, n_k_chunks),
@@ -434,6 +467,10 @@ def sfc_gemm_fused(
         bn=bn,
         interpret=interpret,
     )
+    if abft:
+        # (..., chk): trailing scalar checksum joins the regular output(s)
+        return (*out[:-1], out[-1][0, 0])
+    return out
 
 
 @functools.partial(
@@ -448,6 +485,7 @@ def sfc_gemm_fused(
         "interpret",
         "out_dtype",
         "preact_out",
+        "abft",
     ),
 )
 def sfc_gemm_batched_fused(
@@ -467,6 +505,7 @@ def sfc_gemm_batched_fused(
     interpret: bool = False,
     out_dtype=None,
     preact_out: bool = False,
+    abft: bool = False,
 ) -> jax.Array:
     """Batched fused form: (B, M, N) written once, no replicated copies.
 
@@ -515,6 +554,7 @@ def sfc_gemm_batched_fused(
         out_scale=out_scale,
         out_dtype=out_dtype,
         preact_out=preact_out,
+        abft=abft,
     )
 
     def a_map(bi, t, l, kc, tab):
@@ -552,7 +592,7 @@ def sfc_gemm_batched_fused(
         inputs.append(residual)
         in_specs.append(pl.BlockSpec((1, bm, bn), o_map))
 
-    return _fused_call(
+    out = _fused_call(
         spec=spec,
         tab=tab,
         grid=(bsz, mb_cnt * nb_cnt, k_layers, n_k_chunks),
@@ -564,6 +604,9 @@ def sfc_gemm_batched_fused(
         bn=bn,
         interpret=interpret,
     )
+    if abft:
+        return (*out[:-1], out[-1][0, 0])
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -834,6 +877,7 @@ def sfc_gemm_batched(
         "interpret",
         "out_dtype",
         "preact_out",
+        "abft",
     ),
 )
 def sfc_gemm_grouped(
@@ -852,6 +896,7 @@ def sfc_gemm_grouped(
     interpret: bool = False,
     out_dtype=None,
     preact_out: bool = False,
+    abft: bool = False,
 ) -> jax.Array:
     """Grouped (ragged) SFC GEMM: per-expert row slabs against per-expert
     weights, one SFC map per expert tile grid (paper's shape-obliviousness
@@ -891,7 +936,10 @@ def sfc_gemm_grouped(
     n_tasks = sched.num_tasks
     if n_tasks == 0:
         zero = jnp.zeros((m_total, n), out_dtype)
-        return (zero, zero) if preact_out else zero
+        outs = (zero, zero) if preact_out else (zero,)
+        if abft:
+            outs = (*outs, jnp.float32(0.0))
+        return outs if len(outs) > 1 else outs[0]
     tab = jnp.asarray(sched.table)
     maj, mnr, grp = (
         sched.selector("major"), sched.selector("minor"),
@@ -910,6 +958,7 @@ def sfc_gemm_grouped(
         out_scale=out_scale,
         out_dtype=out_dtype,
         preact_out=preact_out,
+        abft=abft,
     )
 
     def a_map(t, kc, tab):
@@ -939,7 +988,7 @@ def sfc_gemm_grouped(
         inputs.append(gate_bias)
         in_specs.append(pl.BlockSpec((1, 1, bn), col_map))
 
-    return _fused_call(
+    out = _fused_call(
         spec=spec,
         tab=tab,
         grid=(n_tasks, n_k_chunks),
@@ -951,6 +1000,9 @@ def sfc_gemm_grouped(
         bn=bn,
         interpret=interpret,
     )
+    if abft:
+        return (*out[:-1], out[-1][0, 0])
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -1263,6 +1315,7 @@ def _tn_kernel(
     dual: bool,
     out_dtype,
     update: Optional[_TnUpdate] = None,
+    abft: bool = False,
 ):
     """out[t] += aᵀ-slab @ b-slab (+ second output for b2): contraction over
     the operands' shared *first* (row) dim.
@@ -1299,16 +1352,20 @@ def _tn_kernel(
     else:
         o_ref = next(it)
         o2_ref = next(it) if dual else None
+    chk_o = next(it) if abft else None
     acc_ref = next(it)
     acc2_ref = next(it) if dual else None
 
     t, lyr, kc = pl.program_id(0), pl.program_id(1), pl.program_id(2)
 
-    if update is not None:
+    if update is not None or abft:
 
         @pl.when((t == 0) & (lyr == 0) & (kc == 0))
-        def _zero_norm():  # once per launch; the block is launch-resident
-            norm_o[...] = jnp.zeros_like(norm_o)
+        def _zero_norm():  # once per launch; the blocks are launch-resident
+            if update is not None:
+                norm_o[...] = jnp.zeros_like(norm_o)
+            if abft:
+                chk_o[...] = jnp.zeros_like(chk_o)
 
     @pl.when((lyr == 0) & (kc == 0))
     def _zero():
@@ -1328,6 +1385,12 @@ def _tn_kernel(
 
     @pl.when((lyr == n_layers - 1) & (kc == n_k_chunks - 1))
     def _flush():
+        if abft:
+            # checksum the raw dW accumulator(s) before the optimizer (or
+            # the cast) touches them — one per operand set
+            chk_o[0, 0] += jnp.sum(acc_ref[...])
+            if dual:
+                chk_o[1, 0] += jnp.sum(acc2_ref[...])
         if update is None:
             o_ref[...] = acc_ref[...].astype(out_dtype)
             if dual:
@@ -1360,6 +1423,7 @@ def _tn_kernel(
         "out_dtype",
         "update_dtype",
         "stochastic_round",
+        "abft",
     ),
 )
 def sfc_gemm_tn(
@@ -1382,6 +1446,7 @@ def sfc_gemm_tn(
     out_dtype=None,
     update_dtype=None,  # W_new output dtype (the param dtype)
     stochastic_round: bool = False,
+    abft: bool = False,
 ):
     """C = Aᵀ @ B (and Aᵀ @ B2) via the SFC traversal of the (K, N) output.
 
@@ -1489,6 +1554,16 @@ def sfc_gemm_tn(
         out_shapes = [out_shape, out_shape] if dual else out_shape
         prefetch = (tab,)
         n_prefetch = 1
+    if abft:
+        # trailing launch-resident checksum: sum of the raw accumulator(s)
+        # per operand set, pre-update/pre-cast (repro.robust.abft)
+        n_sets_chk = 2 if dual else 1
+        if not isinstance(out_specs, list):
+            out_specs, out_shapes = [out_specs], [out_shapes]
+        out_specs = out_specs + [pl.BlockSpec((n_sets_chk, 1), norm_map)]
+        out_shapes = out_shapes + [
+            jax.ShapeDtypeStruct((n_sets_chk, 1), jnp.float32)
+        ]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=n_prefetch,
@@ -1504,6 +1579,7 @@ def sfc_gemm_tn(
         dual=dual,
         out_dtype=out_dtype,
         update=update,
+        abft=abft,
     )
     return pl.pallas_call(
         kernel,

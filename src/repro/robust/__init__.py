@@ -17,8 +17,22 @@ hardware failures.
 Setting ``REPRO_STRICT=1`` turns silent (non-injected) fallbacks into
 hard `StrictFallbackError`s — the CI mode that catches the fast path
 quietly stopping being taken.
+
+`repro.robust.abft` adds the silent-corruption layer: checksum lanes in
+the GEMM flush paths compare ``sum(C)`` against the operand contraction
+``(eᵀA)·(Be)``; a mismatch raises :class:`SdcDetected`, which the ladder
+classifies as ``"sdc"`` — retry once on the same rung, then quarantine.
 """
 
+from repro.robust.abft import (
+    InjectedSdc,
+    SdcDetected,
+    abft_mode,
+    current_mode,
+    reset_runtime_sdc,
+    runtime_sdc_counts,
+    runtime_sdc_total,
+)
 from repro.robust.inject import (
     FaultSpec,
     InjectedCompileError,
@@ -50,13 +64,20 @@ __all__ = [
     "InjectedCompileError",
     "InjectedFault",
     "InjectedResourceExhausted",
+    "InjectedSdc",
+    "SdcDetected",
     "StrictFallbackError",
     "VmemBudgetError",
+    "abft_mode",
     "classify_failure",
+    "current_mode",
     "degradation_report",
     "fault_injection",
     "get_registry",
     "injection_active",
+    "reset_runtime_sdc",
     "run_with_fallback",
+    "runtime_sdc_counts",
+    "runtime_sdc_total",
     "strict_mode",
 ]

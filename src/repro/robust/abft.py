@@ -1,0 +1,333 @@
+"""ABFT checksum verification: detect (and heal) silent data corruption.
+
+Classic algorithm-based fault tolerance for GEMM: the linear checksum
+``sum(C) == (eᵀA)·(Be)`` holds for every contraction the SFC kernels
+launch, and both sides are nearly free — the kernels accumulate
+``sum(raw accumulator)`` into a launch-resident ``(1, 1)`` f32 output at
+flush time (the same plumbing as the fused optimizer's grad-norm
+scalar), while the operand-side reference is two rank-1 contractions
+(``O(MK + KN)`` reads against the kernel's ``O(MNK)``).  A bit flipped
+in the MXU, VMEM, or HBM perturbs one side but not the other; roundoff
+perturbs both by ``O(eps)``, so a relative threshold scaled by the
+contraction depth separates corruption from noise.
+
+Three modes, resolved per ladder namespace at trace time (contextvar
+default + per-namespace overrides, same pattern as `gemm_backend`):
+
+``"off"``
+    no checksum lane, byte-identical behavior to before this module.
+``"detect"``
+    eager calls (concrete operands — tests, the tuner, the serving
+    engine's sampled verification) raise :class:`SdcDetected`, which the
+    fallback ladder classifies as ``"sdc"``: retry once on the same rung
+    (transients), then quarantine and degrade.  Traced calls (under
+    ``jax.jit`` nothing can raise at run time) report through a
+    `jax.debug.callback` that bumps the process SDC counters — consumers
+    (`TrainLoop`, `ServingEngine`) poll the counter between steps.
+``"strict"``
+    additionally poisons the detected output with NaN *in-graph*, so the
+    existing nonfinite guardrails (the scale-0 update skip,
+    `NonfinitePolicy`) stop a corrupted result from propagating even
+    mid-trace.
+
+Detection sensitivity is the standard ABFT trade: a flip in the exponent
+or high mantissa bits moves ``sum(C)`` far outside the roundoff band and
+is caught; a flip in the low mantissa bits of one element is below the
+noise floor of a large reduction and passes — which is also the flip
+that is numerically harmless.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import os
+import threading
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.robust.inject import InjectedFault
+
+__all__ = [
+    "ABFT_MODES",
+    "SdcDetected",
+    "InjectedSdc",
+    "abft_mode",
+    "current_mode",
+    "gemm_checksum_ref",
+    "nt_checksum_ref",
+    "tn_checksum_ref",
+    "tolerance",
+    "verify",
+    "runtime_sdc_total",
+    "runtime_sdc_counts",
+    "reset_runtime_sdc",
+]
+
+ABFT_MODES = ("off", "detect", "strict")
+
+# roundoff slack: both sides of the checksum accumulate in f32 but in
+# different orders, so the residual of a clean run is O(eps32 * sqrt(ops))
+# relative to the absolute-magnitude checksum.  The factor is deliberately
+# generous — a false positive quarantines a healthy kernel, a missed
+# low-mantissa flip is numerically harmless.
+_SLACK = 64.0
+
+
+class SdcDetected(RuntimeError):
+    """Checksum residual exceeded tolerance: silent data corruption.
+
+    Classified by the fallback ladder as ``"sdc"``: retry once on the
+    same rung (a transient flip heals for free), then quarantine the
+    (namespace, rung, shape-class) and degrade."""
+
+    def __init__(self, namespace: str, residual: float, tol: float):
+        self.namespace = namespace
+        self.residual = residual
+        self.tol = tol
+        super().__init__(
+            f"ABFT checksum failure in {namespace!r}: residual "
+            f"{residual:.3e} exceeds tolerance {tol:.3e} — silent data "
+            "corruption detected"
+        )
+
+
+class InjectedSdc(SdcDetected, InjectedFault):
+    """Synthetic SDC detection from the fault harness (``kind="bitflip"``
+    with an ABFT mode active).  Carries strict-mode amnesty like every
+    injected fault."""
+
+    def __init__(self, namespace: str, rung: str, call: int):
+        SdcDetected.__init__(self, namespace, float("inf"), 0.0)
+        # overwrite the SdcDetected message with the injection provenance
+        self.args = (
+            f"INJECTED ABFT checksum failure for {namespace}/{rung} "
+            f"(call {call}): simulated accumulator bit flip",
+        )
+
+
+# ---------------------------------------------------------------------------
+# mode resolution: contextvar default + per-namespace overrides
+# ---------------------------------------------------------------------------
+
+# (default_mode or None=env, ((namespace, mode), ...)) — None default defers
+# to the REPRO_ABFT env var so a fleet can flip detection on without code.
+_MODE: contextvars.ContextVar[
+    Tuple[Optional[str], Tuple[Tuple[str, str], ...]]
+] = contextvars.ContextVar("repro_abft_mode", default=(None, ()))
+
+
+def _check(mode: str) -> str:
+    if mode not in ABFT_MODES:
+        raise ValueError(f"unknown abft mode {mode!r}; pick from {ABFT_MODES}")
+    return mode
+
+
+@contextlib.contextmanager
+def abft_mode(mode: str, namespace: Optional[str] = None):
+    """Set the ABFT mode — the default, or for one ladder namespace.
+
+    Nested contexts stack: an inner per-namespace override wins over an
+    outer default.  Mode resolution happens at *trace* time (it changes
+    the traced program), like backend selection."""
+    _check(mode)
+    default, overrides = _MODE.get()
+    if namespace is None:
+        tok = _MODE.set((mode, overrides))
+    else:
+        tok = _MODE.set((default, overrides + ((namespace, mode),)))
+    try:
+        yield
+    finally:
+        _MODE.reset(tok)
+
+
+def current_mode(namespace: str) -> str:
+    """Effective ABFT mode for a ladder namespace."""
+    default, overrides = _MODE.get()
+    for ns, mode in reversed(overrides):
+        if ns == namespace:
+            return mode
+    if default is not None:
+        return default
+    env = os.environ.get("REPRO_ABFT", "off")
+    return env if env in ABFT_MODES else "off"
+
+
+# ---------------------------------------------------------------------------
+# checksum math
+# ---------------------------------------------------------------------------
+
+
+def gemm_checksum_ref(
+    a: jax.Array,
+    b: jax.Array,
+    b_gate: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """(ref, mag): the operand-side checksum of ``sum(A @ B)`` and its
+    absolute-magnitude companion ``sum(|A| @ |B|)``.
+
+    ``ref = (eᵀA)·(Be)`` — mathematically equal to the kernel-side
+    ``sum(raw accumulator)``; ``mag`` is the same contraction on the
+    absolute values, the scale the roundoff tolerance is relative to.
+    Leading batch dims on either operand sum into the checksum (the
+    kernel lane accumulates across the whole launch); with ``b_gate``
+    the dual-B (GLU) second accumulator is folded in."""
+    # column sums of A over every leading+row dim -> (K,) or (..., K)
+    ca = jnp.sum(a, axis=-2, dtype=jnp.float32)
+    rb = jnp.sum(b, axis=-1, dtype=jnp.float32)
+    ca_mag = jnp.sum(jnp.abs(a), axis=-2, dtype=jnp.float32)
+    rb_mag = jnp.sum(jnp.abs(b), axis=-1, dtype=jnp.float32)
+    if a.ndim > 2 and b.ndim == 2:
+        # shared weights: fold the batch into the column sums first
+        ca = jnp.sum(ca.reshape(-1, ca.shape[-1]), axis=0)
+        ca_mag = jnp.sum(ca_mag.reshape(-1, ca_mag.shape[-1]), axis=0)
+    ref = jnp.sum(ca * rb)
+    mag = jnp.sum(ca_mag * rb_mag)
+    if b_gate is not None:
+        cg = jnp.sum(b_gate, axis=-1, dtype=jnp.float32)
+        cg_mag = jnp.sum(jnp.abs(b_gate), axis=-1, dtype=jnp.float32)
+        ref = ref + jnp.sum(ca * cg)
+        mag = mag + jnp.sum(ca_mag * cg_mag)
+    return ref, mag
+
+
+def nt_checksum_ref(
+    a: jax.Array, b: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """(ref, mag) for the NT form ``sum(A @ Bᵀ)``: both operands store the
+    contraction dim last, so the checksum is the dot of their column
+    sums."""
+    ca = jnp.sum(a, axis=0, dtype=jnp.float32)
+    cb = jnp.sum(b, axis=0, dtype=jnp.float32)
+    ca_m = jnp.sum(jnp.abs(a), axis=0, dtype=jnp.float32)
+    cb_m = jnp.sum(jnp.abs(b), axis=0, dtype=jnp.float32)
+    return jnp.sum(ca * cb), jnp.sum(ca_m * cb_m)
+
+
+def tn_checksum_ref(
+    a: jax.Array, b: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """(ref, mag) for the TN form ``sum(Aᵀ @ B)``: the contraction runs
+    over the shared row dim, so the checksum is the dot of the row
+    sums."""
+    ra = jnp.sum(a, axis=1, dtype=jnp.float32)
+    rb = jnp.sum(b, axis=1, dtype=jnp.float32)
+    ra_m = jnp.sum(jnp.abs(a), axis=1, dtype=jnp.float32)
+    rb_m = jnp.sum(jnp.abs(b), axis=1, dtype=jnp.float32)
+    return jnp.sum(ra * rb), jnp.sum(ra_m * rb_m)
+
+
+def tolerance(
+    mag: jax.Array, contract_dim: int, cast_dtype=None
+) -> jax.Array:
+    """Roundoff threshold for a checksum over a depth-``contract_dim``
+    contraction: relative to the absolute-magnitude checksum, growing
+    with sqrt(K) (the random-walk growth of f32 accumulation error), and
+    floored so an all-zero problem cannot false-positive.
+
+    ``cast_dtype``: for op-level checks that sum an *already cast* kernel
+    output (the replicated and NT paths) rather than the in-kernel f32
+    accumulator, each element carries an extra eps(cast_dtype) relative
+    rounding — bounded overall by eps(cast_dtype) * mag."""
+    eps = float(jnp.finfo(jnp.float32).eps)
+    k = max(int(contract_dim), 1)
+    tol = eps * _SLACK * (k ** 0.5) * mag
+    if cast_dtype is not None and jnp.issubdtype(
+        jnp.dtype(cast_dtype), jnp.floating
+    ):
+        tol = tol + 2.0 * float(jnp.finfo(jnp.dtype(cast_dtype)).eps) * mag
+    return tol + jnp.float32(1e-30)
+
+
+# ---------------------------------------------------------------------------
+# runtime SDC counters (the traced-mode detection channel)
+# ---------------------------------------------------------------------------
+
+_RUNTIME_LOCK = threading.Lock()
+_RUNTIME_SDC: Dict[str, int] = {}
+
+
+def _record_runtime_sdc(namespace: str, bad, residual, tol) -> None:
+    """debug.callback target: runs host-side when a traced checksum
+    comparison lands outside tolerance."""
+    if not bool(bad):
+        return
+    with _RUNTIME_LOCK:
+        _RUNTIME_SDC[namespace] = _RUNTIME_SDC.get(namespace, 0) + 1
+    # mirror into the health registry so degradation_report() covers it
+    from repro.robust.ladder import get_registry
+
+    get_registry().record_sdc(namespace, healed=False)
+
+
+def runtime_sdc_total() -> int:
+    """Total traced-mode SDC detections in this process.
+
+    Call `jax.effects_barrier()` first when consuming after a jitted
+    step — debug callbacks may still be in flight."""
+    with _RUNTIME_LOCK:
+        return sum(_RUNTIME_SDC.values())
+
+
+def runtime_sdc_counts() -> Dict[str, int]:
+    with _RUNTIME_LOCK:
+        return dict(_RUNTIME_SDC)
+
+
+def reset_runtime_sdc() -> None:
+    with _RUNTIME_LOCK:
+        _RUNTIME_SDC.clear()
+
+
+# ---------------------------------------------------------------------------
+# verification
+# ---------------------------------------------------------------------------
+
+
+def _nan_where(out, bad):
+    """NaN-poison every floating leaf of ``out`` where ``bad`` (strict
+    in-graph containment: the nonfinite guardrails take over)."""
+
+    def leaf(x):
+        if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating):
+            x = jnp.asarray(x)
+            return jnp.where(bad, jnp.asarray(float("nan"), x.dtype), x)
+        return x
+
+    return jax.tree_util.tree_map(leaf, out)
+
+
+def verify(
+    namespace: str,
+    out,
+    chk: jax.Array,
+    ref: jax.Array,
+    mag: jax.Array,
+    *,
+    contract_dim: int,
+    mode: str,
+    cast_dtype=None,
+):
+    """Compare the kernel-side checksum against the operand-side
+    reference; return ``out`` (possibly NaN-poisoned under "strict").
+
+    Concrete values (eager calls) raise :class:`SdcDetected` so the
+    fallback ladder can retry/quarantine/degrade.  Traced values report
+    through a `jax.debug.callback` into the runtime SDC counters; under
+    ``"strict"`` the output is additionally NaN-poisoned in-graph."""
+    if mode == "off":
+        return out
+    tol = tolerance(mag, contract_dim, cast_dtype)
+    resid = jnp.abs(jnp.asarray(chk, jnp.float32) - ref)
+    bad = resid > tol
+    if not isinstance(bad, jax.core.Tracer):
+        if bool(bad):
+            raise SdcDetected(namespace, float(resid), float(tol))
+        return out
+    jax.debug.callback(_record_runtime_sdc, namespace, bad, resid, tol)
+    if mode == "strict":
+        out = _nan_where(out, bad)
+    return out

@@ -21,6 +21,7 @@ import contextlib
 import contextvars
 import dataclasses
 import fnmatch
+import functools
 from typing import Callable, Optional, Sequence, Tuple
 
 
@@ -65,22 +66,31 @@ class FaultSpec:
     namespace: fnmatch pattern over ladder namespaces ("gemm", "attn_*",
         "*", ...).
     kind: "compile" (raise InjectedCompileError), "oom" (raise
-        InjectedResourceExhausted), or "nan" (poison the rung's floating
+        InjectedResourceExhausted), "nan" (poison the rung's floating
         outputs with NaN — exercises the nonfinite-update guardrails,
-        not the ladder).
+        not the ladder), or "bitflip" (silent data corruption: with ABFT
+        active the rung raises `InjectedSdc`, modelling a checksum
+        mismatch; with ABFT off it flips bit ``bit`` of one output
+        element — the negative control that goes undetected).
     calls: call indices (per namespace, 0-based) to fault; None = every
         call.
     rungs: fnmatch patterns over rung names to fault; None = the Pallas
         rungs ("sfc_pallas", "replicated").
+    fires: max number of times this spec fires in total; None =
+        unlimited.  ``fires=1`` models a transient flip — the ladder's
+        retry-once on the same rung succeeds.
+    bit: which bit of the f32 bit pattern to flip for "bitflip".
     """
 
     namespace: str
     kind: str = "compile"
     calls: Optional[Tuple[int, ...]] = None
     rungs: Optional[Tuple[str, ...]] = _PALLAS_RUNGS
+    fires: Optional[int] = None
+    bit: int = 30
 
     def __post_init__(self):
-        if self.kind not in ("compile", "oom", "nan"):
+        if self.kind not in ("compile", "oom", "nan", "bitflip"):
             raise ValueError(f"unknown fault kind {self.kind!r}")
         if self.calls is not None:
             object.__setattr__(self, "calls", tuple(self.calls))
@@ -106,6 +116,7 @@ class InjectionState:
         self.specs = tuple(specs)
         self.calls: dict = {}  # namespace -> number of ladder invocations
         self.fired: list = []  # (namespace, rung, call, kind) log
+        self.fire_counts: dict = {}  # spec index -> times fired
 
     def begin_call(self, namespace: str) -> int:
         idx = self.calls.get(namespace, 0)
@@ -114,14 +125,26 @@ class InjectionState:
 
     def check(self, namespace: str, rung: str, call: int):
         """Raise / return a poison fn if a spec targets this attempt."""
-        for spec in self.specs:
+        for i, spec in enumerate(self.specs):
             if not spec.matches(namespace, rung, call):
                 continue
+            if (
+                spec.fires is not None
+                and self.fire_counts.get(i, 0) >= spec.fires
+            ):
+                continue
+            self.fire_counts[i] = self.fire_counts.get(i, 0) + 1
             self.fired.append((namespace, rung, call, spec.kind))
             if spec.kind == "compile":
                 raise InjectedCompileError(namespace, rung, call)
             if spec.kind == "oom":
                 raise InjectedResourceExhausted(namespace, rung, call)
+            if spec.kind == "bitflip":
+                from repro.robust import abft
+
+                if abft.current_mode(namespace) != "off":
+                    raise abft.InjectedSdc(namespace, rung, call)
+                return functools.partial(_bitflip_poison, bit=spec.bit)
             return _nan_poison
         return None
 
@@ -181,3 +204,33 @@ def _nan_poison(out):
         return x
 
     return jax.tree_util.tree_map(leaf, out)
+
+
+def _bitflip_poison(out, *, bit: int = 30):
+    """Flip one bit of the first floating leaf's first element.
+
+    Models undetected SDC for the ABFT-off negative control: a single
+    corrupted value that no guardrail notices (bit 30 of the f32 pattern
+    perturbs the exponent, so the damage is large but finite).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    leaves, treedef = jax.tree_util.tree_flatten(out)
+    for i, x in enumerate(leaves):
+        try:
+            arr = jnp.asarray(x)
+        except TypeError:
+            continue
+        if not jnp.issubdtype(arr.dtype, jnp.floating) or arr.size == 0:
+            continue
+        flat = arr.astype(jnp.float32).reshape(-1)
+        bits = jax.lax.bitcast_convert_type(flat[0], jnp.uint32)
+        flipped = jax.lax.bitcast_convert_type(
+            bits ^ jnp.uint32(1 << bit), jnp.float32
+        )
+        leaves[i] = (
+            flat.at[0].set(flipped).reshape(arr.shape).astype(arr.dtype)
+        )
+        break
+    return jax.tree_util.tree_unflatten(treedef, leaves)

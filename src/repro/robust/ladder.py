@@ -27,6 +27,7 @@ from typing import Callable, Dict, Optional, Sequence, Tuple
 
 from repro.core.namespaces import DEFAULT_LADDER, PALLAS_RUNGS
 from repro.robust import inject
+from repro.robust.abft import SdcDetected
 from repro.robust.inject import InjectedFault
 
 __all__ = [  # DEFAULT_LADDER / PALLAS_RUNGS re-exported from the registry
@@ -35,6 +36,7 @@ __all__ = [  # DEFAULT_LADDER / PALLAS_RUNGS re-exported from the registry
     "VmemBudgetError",
     "FallbackError",
     "StrictFallbackError",
+    "SdcDetected",
     "strict_mode",
     "classify_failure",
     "QuarantineRecord",
@@ -103,8 +105,13 @@ def classify_failure(exc: BaseException) -> Optional[str]:
 
     Returns "oom" for RESOURCE_EXHAUSTED / VMEM-budget overflow,
     "compile" for Mosaic/lowering failures and NotImplemented kernel
-    paths, "interpret" for interpret-mode assert/bounds failures.
+    paths, "interpret" for interpret-mode assert/bounds failures, and
+    "sdc" for ABFT checksum mismatches (`SdcDetected`, including the
+    injected variant) — the one kind the ladder retries on the same
+    rung before quarantining, because real SDC is usually transient.
     """
+    if isinstance(exc, SdcDetected):
+        return "sdc"
     if isinstance(exc, inject.InjectedResourceExhausted):
         return "oom"
     if isinstance(exc, inject.InjectedCompileError):
@@ -173,6 +180,7 @@ class HealthRegistry:
         self._lock = threading.Lock()
         self._quarantine: Dict[str, QuarantineRecord] = {}
         self._served: Dict[str, Dict[str, int]] = {}
+        self._sdc: Dict[str, Dict[str, int]] = {}
         self._fallback_calls = 0
         self._total_calls = 0
 
@@ -251,6 +259,19 @@ class HealthRegistry:
             per_ns = self._served.setdefault(namespace, {})
             per_ns[rung] = per_ns.get(rung, 0) + 1
 
+    def record_sdc(self, namespace: str, *, healed: bool) -> None:
+        """Count an ABFT detection (``healed=False``) or a successful
+        same-rung retry after one (``healed=True``)."""
+        with self._lock:
+            per_ns = self._sdc.setdefault(
+                namespace, {"detected": 0, "healed": 0}
+            )
+            per_ns["healed" if healed else "detected"] += 1
+
+    def sdc_counts(self) -> Dict[str, Dict[str, int]]:
+        with self._lock:
+            return {ns: dict(c) for ns, c in self._sdc.items()}
+
     def quarantined_namespaces(self) -> Tuple[str, ...]:
         with self._lock:
             return tuple(
@@ -286,12 +307,18 @@ class HealthRegistry:
                     for key, rec in sorted(self._quarantine.items())
                     if keep(rec.namespace)
                 ],
+                "sdc": {
+                    ns: dict(counts)
+                    for ns, counts in sorted(self._sdc.items())
+                    if keep(ns)
+                },
             }
 
     def reset(self) -> None:
         with self._lock:
             self._quarantine.clear()
             self._served.clear()
+            self._sdc.clear()
             self._fallback_calls = 0
             self._total_calls = 0
 
@@ -358,8 +385,10 @@ def run_with_fallback(
     conventionally a suffix of :data:`DEFAULT_LADDER`.  Quarantined
     rungs are skipped without retrying; a rung that fails with a
     classified error is quarantined for this ``(namespace, rung,
-    shape_key)`` and the next rung runs.  Unclassified exceptions
-    propagate immediately.
+    shape_key)`` and the next rung runs.  The one exception is "sdc"
+    (an ABFT checksum mismatch): SDC is usually a transient flip, so
+    the same rung is retried once before quarantining.  Unclassified
+    exceptions propagate immediately.
 
     Under ``REPRO_STRICT=1`` a degradation whose causes were not all
     *benign* raises :class:`StrictFallbackError` instead of silently
@@ -382,15 +411,28 @@ def run_with_fallback(
             degraded = True
             benign_only = benign_only and (rec.injected or rec.planned)
             continue
-        try:
-            poison = inject.check(namespace, rung, call)
-            out = thunk()
-            if poison is not None:
-                out = poison(out)
-        except Exception as exc:  # noqa: BLE001 — classified below
-            kind = classify_failure(exc)
-            if kind is None:
-                raise
+        failed = None  # (kind, exc) once both attempts are spent
+        for attempt in (0, 1):
+            try:
+                poison = inject.check(namespace, rung, call)
+                out = thunk()
+                if poison is not None:
+                    out = poison(out)
+            except Exception as exc:  # noqa: BLE001 — classified below
+                kind = classify_failure(exc)
+                if kind is None:
+                    raise
+                if kind == "sdc":
+                    reg.record_sdc(namespace, healed=False)
+                    if attempt == 0:
+                        continue  # transient flip? retry the same rung
+                failed = (kind, exc)
+            else:
+                if attempt == 1:
+                    reg.record_sdc(namespace, healed=True)
+            break
+        if failed is not None:
+            kind, exc = failed
             injected = isinstance(exc, InjectedFault)
             planned = isinstance(exc, VmemBudgetError)
             reg.quarantine(

@@ -74,6 +74,7 @@ class ServingEngine:
         max_seq: int = 256,
         gemm_backend: str = "xla",
         greedy: bool = True,
+        verify_every: Optional[int] = None,
     ):
         self.cfg = cfg
         self.model = build_model(cfg)
@@ -81,6 +82,15 @@ class ServingEngine:
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.backend = gemm_backend
+        # sampled ABFT verification: every Nth decode step runs a program
+        # traced under abft="detect" — its kernel checksum lanes surface
+        # silent corruption through the runtime SDC counters; a detection
+        # quarantines the Pallas rungs and redoes the step on the healed
+        # trace.  None/0 = off.
+        self._verify_every = verify_every
+        self._decode_steps = 0
+        self._verified_steps = 0
+        self._sdc_detections = 0
 
         self._jit()
         self._uid = 0
@@ -88,6 +98,7 @@ class ServingEngine:
     def _jit(self) -> None:
         self._prefill = jax.jit(self._prefill_impl)
         self._decode = jax.jit(self._decode_impl)
+        self._decode_verify = jax.jit(self._decode_verify_impl)
 
     # namespaces a compiled engine program may have routed through the
     # fallback ladder — what the runtime-failure path quarantines wholesale
@@ -123,10 +134,48 @@ class ServingEngine:
             return getattr(self, which)(self.params, *args)
 
     def degradation_report(self) -> Dict[str, Any]:
-        """Health-registry summary for the namespaces this engine serves."""
+        """Health-registry summary for the namespaces this engine serves,
+        plus this engine's sampled-verification ledger (decode steps run,
+        steps verified, runtime SDC detections that forced a redo)."""
         from repro.robust import degradation_report as _report
 
-        return _report(namespaces=self._LADDER_NAMESPACES)
+        rep = _report(namespaces=self._LADDER_NAMESPACES)
+        rep["verify"] = {
+            "verify_every": self._verify_every,
+            "decode_steps": self._decode_steps,
+            "verified_steps": self._verified_steps,
+            "sdc_detections": self._sdc_detections,
+        }
+        return rep
+
+    def _verified_decode(self, token, cache):
+        """One decode step under abft="detect" with runtime-SDC handling.
+
+        The verification program's checksum mismatches surface through
+        `repro.robust.abft`'s runtime counters (debug callbacks — the
+        jitted program cannot raise).  On a detection the Pallas rungs of
+        every routed namespace are quarantined, the jit caches dropped,
+        and the step *redone* on the healed trace — the corrupted logits
+        and cache are discarded, so the KV state never absorbs the flip.
+        """
+        from repro.robust import abft as _abft
+
+        self._verified_steps += 1
+        before = _abft.runtime_sdc_total()
+        out = self._run_healed("_decode_verify", token, cache)
+        jax.effects_barrier()
+        delta = _abft.runtime_sdc_total() - before
+        if not delta:
+            return out
+        from repro.robust import PALLAS_RUNGS, get_registry
+
+        self._sdc_detections += delta
+        reg = get_registry()
+        for namespace in self._LADDER_NAMESPACES:
+            for rung in PALLAS_RUNGS:
+                reg.quarantine(namespace, rung, None, "sdc")
+        self._jit()  # drop caches: the redo re-traces on healthy rungs
+        return self._run_healed("_decode", token, cache)
 
     # ---------------- warmup / tuning ----------------
 
@@ -295,6 +344,12 @@ class ServingEngine:
         with backend_lib.gemm_backend(self.backend):
             return self.model.decode_step(params, token, cache)
 
+    def _decode_verify_impl(self, params, token, cache):
+        from repro.robust.abft import abft_mode
+
+        with backend_lib.gemm_backend(self.backend), abft_mode("detect"):
+            return self.model.decode_step(params, token, cache)
+
     # ---------------- serving loop ----------------
 
     def submit_many(
@@ -357,12 +412,19 @@ class ServingEngine:
             logits, cache = self._run_healed("_prefill", tokens)
             now = time.perf_counter()
             next_tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-            for r in batch:
-                r.first_token_at = now
-                r.output = []
-            live = list(range(len(batch)))
+            # post-prefill deadline check: a long prefill can eat a whole
+            # budget — retire those requests here (no first token emitted)
+            # instead of letting them leak into the decode loop
+            live = []
             for i, r in enumerate(batch):
-                r.output.append(int(next_tok[i, 0]))
+                r.output = []
+                if r.past_deadline(now):
+                    r.status = "timed_out"
+                    r.done_at = now
+                else:
+                    r.first_token_at = now
+                    r.output.append(int(next_tok[i, 0]))
+                    live.append(i)
 
             steps = max(r.max_new_tokens for r in batch) - 1
             for _ in range(steps):
@@ -375,7 +437,13 @@ class ServingEngine:
                         live.remove(i)
                 if not live:
                     break
-                logits, cache = self._run_healed("_decode", next_tok, cache)
+                self._decode_steps += 1
+                if self._verify_every and (
+                    self._decode_steps % self._verify_every == 0
+                ):
+                    logits, cache = self._verified_decode(next_tok, cache)
+                else:
+                    logits, cache = self._run_healed("_decode", next_tok, cache)
                 next_tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
                 still = []
                 for i in live:

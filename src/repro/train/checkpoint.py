@@ -19,6 +19,7 @@ tensorstore writes; the manifest/commit protocol is unchanged.)
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import re
@@ -39,7 +40,28 @@ _VIEW_DTYPES = {
     "float8_e5m2": np.uint8,
 }
 
-__all__ = ["save", "save_async", "restore", "latest_step", "cleanup", "CheckpointManager"]
+__all__ = [
+    "CheckpointIntegrityError",
+    "save",
+    "save_async",
+    "restore",
+    "latest_step",
+    "cleanup",
+    "CheckpointManager",
+]
+
+
+class CheckpointIntegrityError(RuntimeError):
+    """A restored leaf's bytes do not match its manifest digest.
+
+    Raised instead of silently loading a torn or bit-rotted checkpoint —
+    the rollback path in `train.fault_tolerance` depends on restored
+    state actually being the state that was saved."""
+
+
+def _digest(arr: np.ndarray) -> str:
+    """Content digest of a leaf's stored byte representation."""
+    return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()
 
 _SAFE = re.compile(r"[^A-Za-z0-9_.-]")
 
@@ -84,7 +106,12 @@ def save(ckpt_dir: str, step: int, tree: Any, *, extra: Optional[Dict] = None) -
             arr = arr.view(_VIEW_DTYPES[logical])
         np.save(os.path.join(tmp, name + ".npy"), arr)
         manifest["leaves"].append(
-            {"name": name, "shape": list(arr.shape), "dtype": logical}
+            {
+                "name": name,
+                "shape": list(arr.shape),
+                "dtype": logical,
+                "digest": _digest(arr),
+            }
         )
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
@@ -127,7 +154,12 @@ def restore(
     matching the saved tree) is given, leaves are placed sharded — this is
     the elastic-reshard path.  If `target` (an abstract or concrete pytree)
     is given, the result follows its treedef; otherwise a nested dict is
-    rebuilt from leaf paths."""
+    rebuilt from leaf paths.
+
+    Every leaf whose manifest entry carries a ``digest`` is verified
+    against its stored bytes; a mismatch raises
+    :class:`CheckpointIntegrityError` (legacy manifests without digests
+    load unverified)."""
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
@@ -139,6 +171,12 @@ def restore(
     arrays = {}
     for leaf in manifest["leaves"]:
         arr = np.load(os.path.join(d, leaf["name"] + ".npy"))
+        want = leaf.get("digest")
+        if want is not None and _digest(arr) != want:
+            raise CheckpointIntegrityError(
+                f"checkpoint leaf {leaf['name']!r} in {d} is corrupt: "
+                f"stored bytes do not match the manifest digest"
+            )
         if leaf["dtype"] in _VIEW_DTYPES:
             arr = arr.view(getattr(ml_dtypes, leaf["dtype"]))
         arrays[leaf["name"]] = arr

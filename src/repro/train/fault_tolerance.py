@@ -28,6 +28,7 @@ import numpy as np
 from repro.train.checkpoint import CheckpointManager
 
 __all__ = [
+    "CorruptionPolicy",
     "NonfinitePolicy",
     "StragglerEvent",
     "StepWatchdog",
@@ -84,12 +85,15 @@ class StepWatchdog:
 
 
 @dataclasses.dataclass(frozen=True)
-class NonfinitePolicy:
-    """Escalating response to consecutive nonfinite-loss steps.
+class CorruptionPolicy:
+    """Escalating response to corrupted training steps.
 
-    The update-side guardrail (`optim.adamw.clip_scale`'s scale-0
-    sentinel) already keeps a nonfinite gradient out of params and
-    moments; this policy decides what the *loop* does about the streak:
+    Covers two corruption channels:
+
+    **Nonfinite loss.**  The update-side guardrail
+    (`optim.adamw.clip_scale`'s scale-0 sentinel) already keeps a
+    nonfinite gradient out of params and moments; this policy decides
+    what the *loop* does about the streak:
 
       streak 1..skip_steps                  log and continue (skip)
       streak  ..skip_steps+backoff_steps    multiply lr by ``lr_backoff``
@@ -99,14 +103,31 @@ class NonfinitePolicy:
                                             stream ahead past the poisoned
                                             window
 
-    A finite loss resets the streak and restores the full lr.  More than
-    ``max_rollbacks`` rollbacks raise — a deterministic divergence is a
-    bug, not an infra fault."""
+    A finite loss resets the streak and restores the full lr.
+
+    **Silent data corruption.**  With ``rollback_on_sdc=True`` and ABFT
+    active on the traced step (``BackendConfig(abft="detect")``), the
+    loop compares `repro.robust.abft.runtime_sdc_total()` across each
+    step (after `jax.effects_barrier()` flushes the in-graph detection
+    callbacks).  A detection means a checksum mismatched *inside* the
+    completed step — the corrupt update already landed in params or
+    moments, so skipping is not enough: the loop rolls back to the last
+    committed checkpoint immediately and skips the data stream ahead.
+
+    More than ``max_rollbacks`` rollbacks (either channel) raise — a
+    deterministic divergence is a bug, not an infra fault."""
 
     skip_steps: int = 2
     backoff_steps: int = 3
     lr_backoff: float = 0.5
     max_rollbacks: int = 2
+    rollback_on_sdc: bool = True
+
+
+# legacy name: the nonfinite-only policy grew the SDC channel and became
+# CorruptionPolicy (rollback_on_sdc is inert unless the step traces with
+# ABFT on, so old call sites keep their exact behavior)
+NonfinitePolicy = CorruptionPolicy
 
 
 @dataclasses.dataclass
@@ -122,7 +143,10 @@ class TrainLoop:
     ckpt: CheckpointManager
     watchdog: Optional[StepWatchdog] = None
     on_straggler: str = "log"  # log | checkpoint | raise
-    nonfinite_policy: Optional[NonfinitePolicy] = None
+    # `corruption_policy` is the current name; `nonfinite_policy` is the
+    # legacy spelling of the same slot (first non-None wins)
+    nonfinite_policy: Optional[CorruptionPolicy] = None
+    corruption_policy: Optional[CorruptionPolicy] = None
 
     def _supports_lr_scale(self) -> bool:
         try:
@@ -150,7 +174,11 @@ class TrainLoop:
                 step = got_step
                 logger(f"[ft] resumed from checkpoint at step {step}")
 
-        policy = self.nonfinite_policy
+        policy = (
+            self.corruption_policy
+            if self.corruption_policy is not None
+            else self.nonfinite_policy
+        )
         has_lr_scale = policy is not None and self._supports_lr_scale()
         streak = 0  # consecutive nonfinite-loss steps
         lr_scale = 1.0
@@ -159,6 +187,35 @@ class TrainLoop:
         # checkpointed steps on the batches that already poisoned them would
         # deterministically diverge again
         data_offset = 0
+        watch_sdc = policy is not None and getattr(
+            policy, "rollback_on_sdc", False
+        )
+        if watch_sdc:
+            from repro.robust import abft as _abft
+
+        def rollback(cur_step, params, opt_state, why):
+            nonlocal rollbacks, data_offset
+            rollbacks += 1
+            if rollbacks > policy.max_rollbacks:
+                raise RuntimeError(
+                    f"{why} persisted through {policy.max_rollbacks} "
+                    f"rollbacks (step {cur_step}); deterministic divergence "
+                    "is a bug, not an infra fault"
+                )
+            got_step, tree = self.ckpt.resume(
+                target={"params": params, "opt": opt_state}
+            )
+            if got_step is not None:
+                data_offset += cur_step - got_step
+                logger(
+                    f"[ft] {why}: rolled back {cur_step} -> {got_step}, "
+                    f"data stream skipped ahead by {data_offset}"
+                )
+                return got_step, tree["params"], tree["opt"]
+            logger(
+                f"[ft] {why} and no checkpoint to roll back to; continuing"
+            )
+            return cur_step, params, opt_state
 
         history = []
         while step < num_steps:
@@ -166,6 +223,7 @@ class TrainLoop:
                 raise KeyboardInterrupt(f"simulated preemption at step {step}")
             t0 = time.perf_counter()
             batch = self.batch_fn(step + data_offset)
+            sdc_before = _abft.runtime_sdc_total() if watch_sdc else 0
             if has_lr_scale and lr_scale != 1.0:
                 params, opt_state, metrics = self.train_step(
                     params, opt_state, batch, lr_scale=lr_scale
@@ -175,6 +233,26 @@ class TrainLoop:
             loss = float(metrics["loss"])
             elapsed = time.perf_counter() - t0
             step += 1
+
+            if watch_sdc:
+                # in-graph ABFT detections surface through debug callbacks;
+                # the barrier guarantees they have run before we compare
+                jax.effects_barrier()
+                sdc_delta = _abft.runtime_sdc_total() - sdc_before
+                if sdc_delta:
+                    # the corrupt update already landed in params/moments —
+                    # the step completed before the callback fired — so a
+                    # skip is not enough; restore the last committed state
+                    # and do NOT checkpoint or record the poisoned step
+                    step, params, opt_state = rollback(
+                        step, params, opt_state,
+                        f"SDC detected in step ({sdc_delta} checksum "
+                        "mismatches)",
+                    )
+                    streak = 0
+                    lr_scale = 1.0
+                    continue
+
             history.append((step, loss))
 
             if policy is not None:
@@ -198,32 +276,10 @@ class TrainLoop:
                                 "has no lr_scale hook, continuing to skip"
                             )
                     else:
-                        rollbacks += 1
-                        if rollbacks > policy.max_rollbacks:
-                            raise RuntimeError(
-                                f"nonfinite loss persisted through "
-                                f"{policy.max_rollbacks} rollbacks "
-                                f"(step {step}); deterministic divergence "
-                                "is a bug, not an infra fault"
-                            )
-                        got_step, tree = self.ckpt.resume(
-                            target={"params": params, "opt": opt_state}
+                        step, params, opt_state = rollback(
+                            step, params, opt_state,
+                            f"nonfinite streak {streak}",
                         )
-                        if got_step is not None:
-                            data_offset += step - got_step
-                            params, opt_state = tree["params"], tree["opt"]
-                            logger(
-                                f"[ft] nonfinite streak {streak}: rolled "
-                                f"back {step} -> {got_step}, data stream "
-                                f"skipped ahead by {data_offset}"
-                            )
-                            step = got_step
-                        else:
-                            logger(
-                                "[ft] nonfinite streak persists and no "
-                                "checkpoint to roll back to; continuing "
-                                "with skipped updates"
-                            )
                         streak = 0
                         lr_scale = 1.0
                 else:

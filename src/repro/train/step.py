@@ -66,12 +66,19 @@ class BackendConfig:
         ``microbatches == 1``.
     stochastic_round: stochastically round bf16 params in the fused
         flush (ignored unless ``fused_optimizer=True``).
+    abft: ABFT checksum mode pin for the traced step ("off" | "detect" |
+        "strict"); None inherits the caller's `repro.robust.abft`
+        context.  Under "detect" every SFC kernel launch in the step
+        carries a checksum lane — mismatches raise `SdcDetected` at
+        trace time (ladder-healed) or bump the runtime SDC counters
+        under jit (consumed by `train.fault_tolerance.CorruptionPolicy`).
     """
 
     gemm_backend: Optional[str] = None
     attn_impl: Optional[str] = None
     fused_optimizer: bool = False
     stochastic_round: bool = True
+    abft: Optional[str] = None
 
 
 _UNSET: Any = object()  # sentinel: legacy kwarg not passed
@@ -187,13 +194,13 @@ def make_train_step(
         return _make_fused_train_step(
             model, opt_cfg,
             remat=remat, gemm_backend=cfg.gemm_backend,
-            attn_impl=cfg.attn_impl,
+            attn_impl=cfg.attn_impl, abft=cfg.abft,
             stochastic_round=cfg.stochastic_round, fused_filter=fused_filter,
             nonfinite_guard=nonfinite_guard,
         )
 
     def loss_fn(params, batch):
-        with _backend_ctx(cfg.gemm_backend, cfg.attn_impl):
+        with _backend_ctx(cfg.gemm_backend, cfg.attn_impl, cfg.abft):
             return model.loss(params, batch, remat=remat)
 
     def train_step(params, opt_state, batch, *, lr_scale=None):
@@ -223,13 +230,21 @@ def make_train_step(
     return train_step
 
 
-def _backend_ctx(gemm_backend: Optional[str], attn_impl: Optional[str]):
-    """Stacked trace-time backend pins (either may be None = inherit)."""
+def _backend_ctx(
+    gemm_backend: Optional[str],
+    attn_impl: Optional[str],
+    abft: Optional[str] = None,
+):
+    """Stacked trace-time backend pins (each may be None = inherit)."""
     ctx = contextlib.ExitStack()
     if gemm_backend is not None:
         ctx.enter_context(_gemm_backend_ctx(gemm_backend))
     if attn_impl is not None:
         ctx.enter_context(_attn_backend_ctx(attn_impl))
+    if abft is not None:
+        from repro.robust.abft import abft_mode
+
+        ctx.enter_context(abft_mode(abft))
     return ctx
 
 
@@ -243,6 +258,7 @@ def _make_fused_train_step(
     stochastic_round: bool,
     fused_filter,
     nonfinite_guard: bool = True,
+    abft: Optional[str] = None,
 ) -> Callable:
     """Grad-and-update train step: routed weights are wrapped in
     `FusedParam` nodes, `jax.value_and_grad` returns their *applied AdamW
@@ -268,7 +284,7 @@ def _make_fused_train_step(
             return model.loss(p, b, remat="none")
 
     def loss_fn(wrapped, batch):
-        with _backend_ctx(gemm_backend, attn_impl), fused_update_config(
+        with _backend_ctx(gemm_backend, attn_impl, abft), fused_update_config(
             FusedUpdateConfig(stochastic_round=stochastic_round)
         ):
             return model.loss(wrapped, batch, remat=remat)
@@ -395,7 +411,7 @@ def make_eval_step(
     )
 
     def eval_step(params, batch):
-        with _backend_ctx(cfg.gemm_backend, cfg.attn_impl):
+        with _backend_ctx(cfg.gemm_backend, cfg.attn_impl, cfg.abft):
             return model.loss(params, batch, remat=remat)
 
     return eval_step

@@ -64,6 +64,7 @@ HEALTH_PREFIX = "__health__|"
 # paths already warned about this process (corrupt / stale) — warn once
 _WARNED_CORRUPT: set = set()
 _WARNED_STALE: set = set()
+_WARNED_PLATFORM: set = set()
 
 
 def current_kernel_version() -> int:
@@ -274,7 +275,7 @@ class KnobCache:
 
         return hold()
 
-    def _save(self) -> None:
+    def _save(self, drop_keys: Tuple[str, ...] = ()) -> None:
         d = os.path.dirname(self.path) or "."
         os.makedirs(d, exist_ok=True)
         with self._locked():
@@ -304,6 +305,11 @@ class KnobCache:
                 # corrupt file under the lock: quarantine it so the
                 # replace below starts a clean generation
                 self._quarantine_corrupt(e)
+            for k in drop_keys:
+                # deletions (lifted quarantines, purged stale constants)
+                # must survive the merge above, or the on-disk copy would
+                # resurrect them
+                entries.pop(k, None)
             entries[META_KEY] = {"kernel_version": current_kernel_version()}
             self._entries = entries
             fd, tmp = tempfile.mkstemp(dir=d, suffix=".json.tmp")
@@ -344,15 +350,50 @@ class KnobCache:
 
     def get_platform(self, backend: str) -> Optional[Dict]:
         """Raw persisted platform-constants dict for this device (legacy
-        device-less entry as fallback), or None."""
+        device-less entry as fallback), or None.
+
+        Each entry carries its own ``kernel_version`` stamp (written by
+        `put_platform`): calibration constants are fitted against a
+        specific kernel generation, so an entry from a different
+        generation — or a legacy unstamped one — is *purged* from the
+        cache (warned once) and None is returned, forcing
+        `repro.tune.calibrate` to re-fit."""
         entries = self._load()
-        d = entries.get(self.platform_key(backend, self.device))
-        if d is None and self.device:
-            d = entries.get(self.platform_key(backend))
-        return dict(d) if d is not None else None
+        cur = current_kernel_version()
+        for key in dict.fromkeys(
+            (
+                self.platform_key(backend, self.device),
+                self.platform_key(backend),
+            )
+        ):
+            d = entries.get(key)
+            if d is None:
+                continue
+            d = dict(d)
+            stamped = d.pop("kernel_version", None)
+            if stamped is not None and int(stamped) == cur:
+                return d
+            # stale or unstamped constants: same policy as knob entries
+            # on a kernel-version bump — drop rather than trust
+            del entries[key]
+            self._save(drop_keys=(key,))
+            warn_key = (self.path, backend)
+            if warn_key not in _WARNED_PLATFORM:
+                _WARNED_PLATFORM.add(warn_key)
+                warnings.warn(
+                    f"platform constants for {backend!r} in {self.path} "
+                    f"were calibrated against kernel version "
+                    f"{stamped if stamped is not None else '<unstamped>'} "
+                    f"(current {cur}); purged — re-calibrating",
+                    RuntimeWarning,
+                    stacklevel=3,
+                )
+        return None
 
     def put_platform(self, backend: str, constants: Dict) -> None:
-        self._load()[self.platform_key(backend, self.device)] = dict(constants)
+        self._load()[self.platform_key(backend, self.device)] = dict(
+            constants, kernel_version=current_kernel_version()
+        )
         self._save()
 
     def get_health(self) -> Dict[str, Dict]:
@@ -364,11 +405,24 @@ class KnobCache:
         }
 
     def put_health(self, state: Dict[str, Dict]) -> None:
-        """Persist `HealthRegistry.export_state()` quarantine records."""
+        """Persist `HealthRegistry.export_state()` quarantine records.
+
+        A full replacement, not an upsert: quarantines lifted since the
+        last save (e.g. by a successful re-tune) are removed from the
+        persisted set too — otherwise a fresh process would reload a
+        quarantine this one already healed."""
         entries = self._load()
+        keep = {HEALTH_PREFIX + k for k in state}
+        drop = tuple(
+            k
+            for k in entries
+            if k.startswith(HEALTH_PREFIX) and k not in keep
+        )
+        for k in drop:
+            del entries[k]
         for key, rec in state.items():
             entries[HEALTH_PREFIX + key] = dict(rec)
-        self._save()
+        self._save(drop_keys=drop)
 
     def clear(self) -> None:
         self._entries = {}

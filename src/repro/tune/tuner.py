@@ -597,8 +597,13 @@ def tune_gemm(
         # nothing.)
         from repro.robust import get_registry
 
-        cleared = get_registry().clear(namespace=op)
+        reg = get_registry()
+        cleared = reg.clear(namespace=op)
         if cleared:
+            # persist the lift too: put_health replaces the __health__|
+            # set, so a fresh process no longer reloads the quarantine
+            # this re-tune just healed
+            reg.save_to_cache(cache)
             print(
                 f"[tune] {op}: re-tune lifted {cleared} ladder "
                 "quarantine(s)"

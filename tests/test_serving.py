@@ -135,3 +135,104 @@ def test_latency_report_empty_is_zeros(small_model):
         "tokens_total": 0,
         "tokens_per_s": 0.0,
     }
+
+
+def test_deadline_retires_at_prefill_boundary(small_model):
+    """A budget that burns away *during* prefill retires the request at
+    the prefill boundary — no first token, no decode compute — while its
+    batchmates decode normally."""
+    cfg, model, params = small_model
+    engine = ServingEngine(cfg, params, max_batch=2, max_seq=32)
+    rng = np.random.default_rng(7)
+    prompts = [
+        rng.integers(0, cfg.vocab, size=8).astype(np.int32) for _ in range(2)
+    ]
+    reqs = engine.submit_many(prompts, max_new_tokens=4)
+    reqs[0].deadline_s = 0.5  # alive at admission...
+
+    orig_prefill = engine._prefill
+
+    def slow_prefill(*args):
+        reqs[0].submitted_at -= 1.0  # ...but the budget burns inside prefill
+        return orig_prefill(*args)
+
+    engine._prefill = slow_prefill
+    done = engine.run(reqs)
+    by_uid = {r.uid: r for r in done}
+    timed_out = by_uid[reqs[0].uid]
+    assert timed_out.status == "timed_out"
+    assert timed_out.output == []
+    assert timed_out.first_token_at == 0.0
+    ok = by_uid[reqs[1].uid]
+    assert ok.status == "completed" and len(ok.output) == 4
+    rep = engine.latency_report(done)
+    assert rep["n_timed_out"] == 1
+    assert rep["tokens_total"] == 4
+
+
+def test_sampled_abft_verification_counts_and_matches(small_model):
+    """verify_every=N runs every Nth decode step under abft="detect";
+    a clean run verifies without perturbing outputs or counting SDC."""
+    from repro.robust import reset_runtime_sdc
+
+    cfg, model, params = small_model
+    reset_runtime_sdc()
+    rng = np.random.default_rng(8)
+    prompt = rng.integers(0, cfg.vocab, size=8).astype(np.int32)
+
+    base = ServingEngine(cfg, params, max_batch=1, max_seq=32,
+                         gemm_backend="sfc_pallas")
+    [r1] = base.submit_many([prompt], max_new_tokens=6)
+    [d1] = base.run([r1])
+
+    eng = ServingEngine(cfg, params, max_batch=1, max_seq=32,
+                        gemm_backend="sfc_pallas", verify_every=2)
+    [r2] = eng.submit_many([prompt], max_new_tokens=6)
+    [d2] = eng.run([r2])
+
+    assert d2.output == d1.output
+    rep = eng.degradation_report()["verify"]
+    assert rep == {
+        "verify_every": 2,
+        "decode_steps": 5,      # max_new_tokens - 1 loop iterations
+        "verified_steps": 2,    # steps 2 and 4
+        "sdc_detections": 0,
+    }
+
+
+def test_sampled_verification_detection_redoes_step(small_model):
+    """A runtime SDC detection during a verified step quarantines the
+    Pallas rungs, re-jits, and redoes the step — the request completes
+    and the detection is ledgered."""
+    from repro.robust import abft, get_registry
+
+    cfg, model, params = small_model
+    abft.reset_runtime_sdc()
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(0, cfg.vocab, size=8).astype(np.int32)
+    eng = ServingEngine(cfg, params, max_batch=1, max_seq=32,
+                        verify_every=3)
+
+    orig_verify = eng._decode_verify
+
+    def corrupted_verify(params, token, cache):
+        # model an in-kernel checksum mismatch surfacing via the runtime
+        # counter mid-step (the jitted program cannot raise)
+        abft._record_runtime_sdc("gemm", True, 1.0, 0.0)
+        return orig_verify(params, token, cache)
+
+    eng._decode_verify = corrupted_verify
+    [req] = eng.submit_many([prompt], max_new_tokens=6)
+    [done] = eng.run([req])
+
+    assert done.status == "completed"
+    assert len(done.output) == 6
+    rep = eng.degradation_report()["verify"]
+    # step 3 detected and was redone; the re-jit replaced the corrupted
+    # wrapper, so step 6 (if verified) runs clean
+    assert rep["sdc_detections"] == 1
+    assert rep["verified_steps"] >= 1
+    reg = get_registry()
+    assert "gemm" in reg.quarantined_namespaces()
+    assert {r["reason"] for r in reg.export_state().values()} == {"sdc"}
+    abft.reset_runtime_sdc()
