@@ -50,6 +50,9 @@ def main(argv=None) -> None:
                         "llm_prefill cell")
     p.add_argument("--full", action="store_true",
                    help="full 125-shape gemm sweep")
+    p.add_argument("--obs-jsonl", metavar="PATH", default=None,
+                   help="write the repro.obs JSONL telemetry snapshot here "
+                        "after the benchmarks run (the obs-smoke artifact)")
     args = p.parse_args(argv)
 
     from benchmarks import (
@@ -59,6 +62,7 @@ def main(argv=None) -> None:
         gemm_sweep,
         knob_prediction,
         llm_prefill,
+        serving_smoke,
     )
 
     print("name,us_per_call,derived")
@@ -73,6 +77,7 @@ def main(argv=None) -> None:
         abft.run()                       # checksum-lane overhead (gated)
         abft.run_measured()              # detect-vs-off liveness check
         llm_prefill.run(smoke=True)      # paper Fig. 10 (one cell)
+        serving_smoke.run()              # obs series liveness (tune/serve)
     else:
         gemm_sweep.run(full=args.full)   # paper Figs. 1 / 6 / 9
         gemm_sweep.run_backward()        # NT/TN + grouped/MoE buckets
@@ -84,6 +89,11 @@ def main(argv=None) -> None:
 
     if args.json:
         _write_json(args.json)
+    if args.obs_jsonl:
+        from repro import obs
+
+        n = obs.to_jsonl(args.obs_jsonl)
+        print(f"# wrote {n} obs series to {args.obs_jsonl}", file=sys.stderr)
 
 
 if __name__ == "__main__":

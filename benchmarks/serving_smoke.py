@@ -1,0 +1,71 @@
+"""Serving + tuning telemetry smoke: drive every obs series family once.
+
+Not a perf benchmark — a liveness harness for the `obs-smoke` CI job: one
+simulator-scored tune sweep (miss) plus re-resolution (hit), one tiny
+`sfc_matmul` routed through the fallback ladder, and one `ServingEngine`
+batch (admission → prefill → decode → retire), so the JSONL telemetry
+export contains the tune-cache, ladder, ABFT, and serving-lifecycle
+series the CI gate requires.  Emits a few informational CSV rows; their
+wall-clock is CPU/interpret noise, so `compare.py` gating never keys on
+them.
+"""
+
+from __future__ import annotations
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+
+
+def run():
+    from repro.configs import get_config
+    from repro.core.gemm_backend import gemm_backend, matmul
+    from repro.models.registry import build_model
+    from repro.robust.abft import abft_mode
+    from repro.serving.engine import ServingEngine
+    from repro.tune import tune_gemm
+    from repro.tune.cache import KnobCache
+    from repro.tune.tuner import _measure_simulated
+
+    # -- tune-cache hit + miss: one simulator-scored sweep, then a re-ask --
+    with tempfile.TemporaryDirectory() as tmp:
+        cache = KnobCache(path=f"{tmp}/knobs.json")
+        tune_gemm(256, 256, 256, np.float32, cache=cache,
+                  measure_fn=_measure_simulated)   # miss -> sweep -> put
+        tune_gemm(256, 256, 256, np.float32, cache=cache,
+                  measure_fn=_measure_simulated)   # pure cache hit
+    emit("serving_smoke/tune_roundtrip", 0.0, "cache=miss+hit")
+
+    # -- fallback ladder + ABFT: one backend GEMM on the Pallas rung with
+    # checksum verification on, so `ladder.served` and `abft.checks` series
+    # exist even in a run where serving stays on the XLA backend
+    a = jnp.asarray(np.random.default_rng(0).normal(size=(64, 64)), jnp.float32)
+    with gemm_backend("sfc_pallas"), abft_mode("detect"):
+        out = matmul(a, a)
+    err = float(jnp.max(jnp.abs(out - a @ a)))
+    emit("serving_smoke/ladder_gemm_check", 0.0, f"max_abs_err={err:.2e}")
+
+    # -- serving lifecycle: one continuous-batching window -----------------
+    cfg = get_config("yi_6b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServingEngine(cfg, params, max_batch=2, max_seq=48)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, size=16) for _ in range(3)]
+    reqs = engine.submit_many(prompts, max_new_tokens=4)
+    done = engine.run(reqs)
+    rep = engine.latency_report(done)
+    emit(
+        "serving_smoke/engine_batch",
+        rep["ttft_mean_s"] * 1e6,
+        f"n={rep['n_requests']};ttft_p95_us={rep['ttft_p95_s'] * 1e6:.0f};"
+        f"tokens={rep['tokens_total']}",
+    )
+
+
+if __name__ == "__main__":
+    run()

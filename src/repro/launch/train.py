@@ -134,6 +134,11 @@ def main():
         "--no-stochastic-round", action="store_true",
         help="round-to-nearest bf16 write-back in the fused flush",
     )
+    ap.add_argument(
+        "--obs-export", default=None, metavar="PATH",
+        help="write the JSONL telemetry snapshot here on exit "
+             "(train-step spans, [ft] event counters, tune/ladder series)",
+    )
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -161,13 +166,20 @@ def main():
     loop = TrainLoop(
         train_step=jitted, batch_fn=batch_fn, ckpt=ckpt, watchdog=StepWatchdog()
     )
-    params, opt_state, history = loop.run(
-        params,
-        opt_state,
-        num_steps=args.steps,
-        resume=args.ckpt_dir is not None,
-        fail_at=args.fail_at,
-    )
+    try:
+        params, opt_state, history = loop.run(
+            params,
+            opt_state,
+            num_steps=args.steps,
+            resume=args.ckpt_dir is not None,
+            fail_at=args.fail_at,
+        )
+    finally:
+        if args.obs_export:
+            from repro import obs
+
+            n = obs.to_jsonl(args.obs_export)
+            print(f"[obs] wrote {n} series to {args.obs_export}")
     print(f"final loss: {history[-1][1]:.4f}  (from {history[0][1]:.4f})")
 
 

@@ -48,6 +48,8 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import span
 from repro.robust.inject import InjectedFault
 
 __all__ = [
@@ -257,6 +259,7 @@ def _record_runtime_sdc(namespace: str, bad, residual, tol) -> None:
         return
     with _RUNTIME_LOCK:
         _RUNTIME_SDC[namespace] = _RUNTIME_SDC.get(namespace, 0) + 1
+    obs_metrics.inc("abft.runtime_sdc", namespace=namespace)
     # mirror into the health registry so degradation_report() covers it
     from repro.robust.ladder import get_registry
 
@@ -320,14 +323,17 @@ def verify(
     ``"strict"`` the output is additionally NaN-poisoned in-graph."""
     if mode == "off":
         return out
-    tol = tolerance(mag, contract_dim, cast_dtype)
-    resid = jnp.abs(jnp.asarray(chk, jnp.float32) - ref)
-    bad = resid > tol
-    if not isinstance(bad, jax.core.Tracer):
-        if bool(bad):
-            raise SdcDetected(namespace, float(resid), float(tol))
+    with span("abft/verify"):
+        obs_metrics.inc("abft.checks", namespace=namespace, mode=mode)
+        tol = tolerance(mag, contract_dim, cast_dtype)
+        resid = jnp.abs(jnp.asarray(chk, jnp.float32) - ref)
+        bad = resid > tol
+        if not isinstance(bad, jax.core.Tracer):
+            if bool(bad):
+                obs_metrics.inc("abft.sdc", namespace=namespace, mode=mode)
+                raise SdcDetected(namespace, float(resid), float(tol))
+            return out
+        jax.debug.callback(_record_runtime_sdc, namespace, bad, resid, tol)
+        if mode == "strict":
+            out = _nan_where(out, bad)
         return out
-    jax.debug.callback(_record_runtime_sdc, namespace, bad, resid, tol)
-    if mode == "strict":
-        out = _nan_where(out, bad)
-    return out

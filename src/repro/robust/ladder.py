@@ -26,6 +26,8 @@ import threading
 from typing import Callable, Dict, Optional, Sequence, Tuple
 
 from repro.core.namespaces import DEFAULT_LADDER, PALLAS_RUNGS
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import span
 from repro.robust import inject
 from repro.robust.abft import SdcDetected
 from repro.robust.inject import InjectedFault
@@ -179,10 +181,11 @@ class HealthRegistry:
     def __init__(self):
         self._lock = threading.Lock()
         self._quarantine: Dict[str, QuarantineRecord] = {}
-        self._served: Dict[str, Dict[str, int]] = {}
-        self._sdc: Dict[str, Dict[str, int]] = {}
-        self._fallback_calls = 0
-        self._total_calls = 0
+        # the serving/SDC ledger lives in a private always-on metrics
+        # store — degradation_report() is a view over it, and it cannot
+        # go dark under REPRO_OBS=0.  Every write is mirrored into the
+        # gated process registry so exports carry the same series.
+        self._store = obs_metrics.Registry()
 
     # -- quarantine ---------------------------------------------------------
 
@@ -216,7 +219,10 @@ class HealthRegistry:
                 rec.reason = reason
                 rec.injected = rec.injected and injected
                 rec.planned = rec.planned and planned
-            return rec
+        obs_metrics.inc(
+            "ladder.quarantine", namespace=namespace, rung=rung, reason=reason
+        )
+        return rec
 
     def get_quarantine(
         self, namespace: str, rung: str, shape: Optional[str]
@@ -252,25 +258,41 @@ class HealthRegistry:
     def record_served(
         self, namespace: str, rung: str, *, degraded: bool
     ) -> None:
-        with self._lock:
-            self._total_calls += 1
-            if degraded:
-                self._fallback_calls += 1
-            per_ns = self._served.setdefault(namespace, {})
-            per_ns[rung] = per_ns.get(rung, 0) + 1
+        self._store.counter("ladder.served").inc(
+            namespace=namespace, rung=rung
+        )
+        if degraded:
+            self._store.counter("ladder.fallback").inc(namespace=namespace)
+        obs_metrics.inc("ladder.served", namespace=namespace, rung=rung)
+        if degraded:
+            obs_metrics.inc("ladder.fallback", namespace=namespace)
 
     def record_sdc(self, namespace: str, *, healed: bool) -> None:
         """Count an ABFT detection (``healed=False``) or a successful
         same-rung retry after one (``healed=True``)."""
-        with self._lock:
-            per_ns = self._sdc.setdefault(
-                namespace, {"detected": 0, "healed": 0}
+        state = "healed" if healed else "detected"
+        self._store.counter("ladder.sdc").inc(namespace=namespace, state=state)
+        obs_metrics.inc("ladder.sdc", namespace=namespace, state=state)
+
+    def _served_view(self) -> Dict[str, Dict[str, int]]:
+        out: Dict[str, Dict[str, int]] = {}
+        for key, v in self._store.counter("ladder.served").series().items():
+            labels = dict(key)
+            out.setdefault(labels["namespace"], {})[labels["rung"]] = int(v)
+        return out
+
+    def _sdc_view(self) -> Dict[str, Dict[str, int]]:
+        out: Dict[str, Dict[str, int]] = {}
+        for key, v in self._store.counter("ladder.sdc").series().items():
+            labels = dict(key)
+            per_ns = out.setdefault(
+                labels["namespace"], {"detected": 0, "healed": 0}
             )
-            per_ns["healed" if healed else "detected"] += 1
+            per_ns[labels["state"]] = int(v)
+        return out
 
     def sdc_counts(self) -> Dict[str, Dict[str, int]]:
-        with self._lock:
-            return {ns: dict(c) for ns, c in self._sdc.items()}
+        return self._sdc_view()
 
     def quarantined_namespaces(self) -> Tuple[str, ...]:
         with self._lock:
@@ -292,35 +314,39 @@ class HealthRegistry:
                 return True
             return any(ns == n or ns.startswith(n) for n in namespaces)
 
+        served = self._served_view()
+        sdc = self._sdc_view()
         with self._lock:
-            return {
-                "strict": strict_mode(),
-                "total_calls": self._total_calls,
-                "fallback_calls": self._fallback_calls,
-                "served": {
-                    ns: dict(rungs)
-                    for ns, rungs in sorted(self._served.items())
-                    if keep(ns)
-                },
-                "quarantined": [
-                    rec.as_dict()
-                    for key, rec in sorted(self._quarantine.items())
-                    if keep(rec.namespace)
-                ],
-                "sdc": {
-                    ns: dict(counts)
-                    for ns, counts in sorted(self._sdc.items())
-                    if keep(ns)
-                },
-            }
+            quarantined = [
+                rec.as_dict()
+                for key, rec in sorted(self._quarantine.items())
+                if keep(rec.namespace)
+            ]
+        return {
+            "strict": strict_mode(),
+            "total_calls": int(
+                self._store.counter("ladder.served").total()
+            ),
+            "fallback_calls": int(
+                self._store.counter("ladder.fallback").total()
+            ),
+            "served": {
+                ns: dict(rungs)
+                for ns, rungs in sorted(served.items())
+                if keep(ns)
+            },
+            "quarantined": quarantined,
+            "sdc": {
+                ns: dict(counts)
+                for ns, counts in sorted(sdc.items())
+                if keep(ns)
+            },
+        }
 
     def reset(self) -> None:
         with self._lock:
             self._quarantine.clear()
-            self._served.clear()
-            self._sdc.clear()
-            self._fallback_calls = 0
-            self._total_calls = 0
+            self._store.reset()
 
     # -- persistence (knob-cache round trip) --------------------------------
 
@@ -381,6 +407,10 @@ def run_with_fallback(
 ):
     """Run the first healthy rung; degrade on classified failures.
 
+    Traced as the ``ladder/run`` span — the walk happens at trace time,
+    so span duration is dominated by tracing/compilation of the rung
+    that actually serves.
+
     ``rungs`` is an ordered sequence of ``(rung_name, thunk)`` pairs —
     conventionally a suffix of :data:`DEFAULT_LADDER`.  Quarantined
     rungs are skipped without retrying; a rung that fails with a
@@ -400,6 +430,19 @@ def run_with_fallback(
     breakage).  Raises :class:`FallbackError` when every rung is
     exhausted.
     """
+    with span("ladder/run"):
+        return _walk_ladder(
+            namespace, rungs, shape_key=shape_key, registry=registry
+        )
+
+
+def _walk_ladder(
+    namespace: str,
+    rungs: Sequence[Tuple[str, Callable[[], object]]],
+    *,
+    shape_key: Optional[str],
+    registry: Optional[HealthRegistry],
+):
     reg = registry if registry is not None else _REGISTRY
     call = inject.begin_call(namespace)
     failures = []

@@ -32,6 +32,8 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core import namespaces as ns
 from repro.models.registry import build_model
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import span
 from repro.serving import backend as backend_lib
 
 
@@ -170,6 +172,7 @@ class ServingEngine:
         from repro.robust import PALLAS_RUNGS, get_registry
 
         self._sdc_detections += delta
+        obs_metrics.inc("serving.sdc_redo", value=delta)
         reg = get_registry()
         for namespace in self._LADDER_NAMESPACES:
             for rung in PALLAS_RUNGS:
@@ -387,6 +390,7 @@ class ServingEngine:
         boundary — both with ``status="timed_out"``."""
         waiting = list(requests)
         results: List[Request] = []
+        obs_metrics.inc("serving.requests", value=len(requests))
 
         def shed_overdue() -> None:
             now = time.perf_counter()
@@ -396,20 +400,25 @@ class ServingEngine:
                 r.done_at = now
                 if r.output is None:
                     r.output = []
+                self._record_retired(r)
                 results.append(r)
 
         while waiting:
-            shed_overdue()
-            if not waiting:
-                break
-            # group up to max_batch same-length prompts
-            length = len(waiting[0].prompt)
-            batch = [r for r in waiting if len(r.prompt) == length][: self.max_batch]
-            for r in batch:
-                waiting.remove(r)
+            with span("serving/admission"):
+                shed_overdue()
+                if not waiting:
+                    break
+                # group up to max_batch same-length prompts
+                length = len(waiting[0].prompt)
+                batch = [
+                    r for r in waiting if len(r.prompt) == length
+                ][: self.max_batch]
+                for r in batch:
+                    waiting.remove(r)
 
             tokens = jnp.asarray(np.stack([r.prompt for r in batch]))
-            logits, cache = self._run_healed("_prefill", tokens)
+            with span("serving/prefill", batch=len(batch)):
+                logits, cache = self._run_healed("_prefill", tokens)
             now = time.perf_counter()
             next_tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
             # post-prefill deadline check: a long prefill can eat a whole
@@ -438,12 +447,15 @@ class ServingEngine:
                 if not live:
                     break
                 self._decode_steps += 1
-                if self._verify_every and (
-                    self._decode_steps % self._verify_every == 0
-                ):
-                    logits, cache = self._verified_decode(next_tok, cache)
-                else:
-                    logits, cache = self._run_healed("_decode", next_tok, cache)
+                with span("serving/decode", step=self._decode_steps):
+                    if self._verify_every and (
+                        self._decode_steps % self._verify_every == 0
+                    ):
+                        logits, cache = self._verified_decode(next_tok, cache)
+                    else:
+                        logits, cache = self._run_healed(
+                            "_decode", next_tok, cache
+                        )
                 next_tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
                 still = []
                 for i in live:
@@ -460,44 +472,101 @@ class ServingEngine:
                     else:
                         still.append(i)
                 live = still
-            now = time.perf_counter()
-            for r in batch:
-                if not r.done_at:
-                    r.status = "completed"
-                    r.done_at = now
-            results.extend(batch)
+            with span("serving/retire"):
+                now = time.perf_counter()
+                for r in batch:
+                    if not r.done_at:
+                        r.status = "completed"
+                        r.done_at = now
+                    self._record_retired(r)
+                results.extend(batch)
         return results
 
     # ---------------- metrics ----------------
+
+    @staticmethod
+    def _record_retired(r: Request) -> None:
+        """Emit one request's lifecycle into the obs registry.  The same
+        quantities `latency_report` summarises — TTFT, end-to-end latency,
+        per-decoded-token latency — recorded as histograms so a fleet gets
+        the p95 without holding Request objects."""
+        obs_metrics.inc("serving." + (
+            "timed_out" if r.status == "timed_out" else "completed"
+        ))
+        n_tok = len(r.output or [])
+        if n_tok:
+            obs_metrics.inc("serving.tokens", value=n_tok)
+        if r.first_token_at > 0:
+            obs_metrics.observe(
+                "serving.ttft_us",
+                (r.first_token_at - r.submitted_at) * 1e6,
+            )
+        else:
+            obs_metrics.inc("serving.shed")
+        if r.done_at > 0:
+            obs_metrics.observe(
+                "serving.e2e_us", (r.done_at - r.submitted_at) * 1e6
+            )
+        if r.first_token_at > 0 and n_tok > 1:
+            obs_metrics.observe(
+                "serving.token_us",
+                (r.done_at - r.first_token_at) / (n_tok - 1) * 1e6,
+            )
 
     @staticmethod
     def latency_report(requests: List[Request]) -> Dict[str, float]:
         """Latency summary; zeros on an empty list (a shed-everything
         overload window is a valid report, not a crash).  Requests shed
         before serving (``first_token_at == 0``) are excluded from the
-        TTFT mean and counted in ``n_timed_out``."""
+        TTFT mean/percentiles and counted in ``n_timed_out``.
+
+        The p50/p95/p99 tails come from `repro.obs.metrics.Histogram` —
+        the same class (and the same sample definitions, see
+        `_record_retired`) behind the ``serving.ttft_us`` /
+        ``serving.token_us`` series in the process registry, so this
+        report and a telemetry export never disagree on the math."""
+        zeros = {
+            "n_requests": 0,
+            "n_timed_out": 0,
+            "ttft_mean_s": 0.0,
+            "ttft_p50_s": 0.0,
+            "ttft_p95_s": 0.0,
+            "ttft_p99_s": 0.0,
+            "latency_mean_s": 0.0,
+            "token_p50_s": 0.0,
+            "token_p95_s": 0.0,
+            "token_p99_s": 0.0,
+            "tokens_total": 0,
+            "tokens_per_s": 0.0,
+        }
         if not requests:
-            return {
-                "n_requests": 0,
-                "n_timed_out": 0,
-                "ttft_mean_s": 0.0,
-                "latency_mean_s": 0.0,
-                "tokens_total": 0,
-                "tokens_per_s": 0.0,
-            }
-        ttft = [
-            r.first_token_at - r.submitted_at
-            for r in requests
-            if r.first_token_at > 0
-        ]
+            return zeros
+        hist = obs_metrics.Histogram("latency_report")
+        for r in requests:
+            if r.first_token_at > 0:
+                hist.observe(r.first_token_at - r.submitted_at, kind="ttft")
+                n_out = len(r.output or [])
+                if n_out > 1:
+                    hist.observe(
+                        (r.done_at - r.first_token_at) / (n_out - 1),
+                        kind="token",
+                    )
+        ttft = hist.summary(kind="ttft")
+        token = hist.summary(kind="token")
         total = [r.done_at - r.submitted_at for r in requests]
         n_tok = sum(len(r.output or []) for r in requests)
         wall = max(r.done_at for r in requests) - min(r.submitted_at for r in requests)
         return {
             "n_requests": len(requests),
             "n_timed_out": sum(1 for r in requests if r.status == "timed_out"),
-            "ttft_mean_s": float(np.mean(ttft)) if ttft else 0.0,
+            "ttft_mean_s": ttft["mean"],
+            "ttft_p50_s": ttft["p50"],
+            "ttft_p95_s": ttft["p95"],
+            "ttft_p99_s": ttft["p99"],
             "latency_mean_s": float(np.mean(total)),
+            "token_p50_s": token["p50"],
+            "token_p95_s": token["p95"],
+            "token_p99_s": token["p99"],
             "tokens_total": n_tok,
             "tokens_per_s": n_tok / wall if wall > 0 else float("inf"),
         }

@@ -25,6 +25,9 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 import numpy as np
 
+from repro.obs import as_structured
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import span
 from repro.train.checkpoint import CheckpointManager
 
 __all__ = [
@@ -78,6 +81,7 @@ class StepWatchdog:
             med = float(np.median(self._times))
             if elapsed > self.threshold * med:
                 ev = StragglerEvent(step, elapsed, med)
+                obs_metrics.inc("train.straggler")
         self._times.append(elapsed)
         if len(self._times) > self.window:
             self._times.pop(0)
@@ -147,6 +151,11 @@ class TrainLoop:
     # legacy spelling of the same slot (first non-None wins)
     nonfinite_policy: Optional[CorruptionPolicy] = None
     corruption_policy: Optional[CorruptionPolicy] = None
+    # called after every committed step with the per-step metrics dict
+    # (step, loss, dt_s, nonfinite_streak, sdc_delta, lr_scale) — the
+    # machine-readable channel; external sinks should consume this, not
+    # parse the log lines
+    on_metrics: Optional[Callable[[Dict[str, Any]], None]] = None
 
     def _supports_lr_scale(self) -> bool:
         try:
@@ -166,13 +175,22 @@ class TrainLoop:
         log_every: int = 10,
         logger: Callable[[str], None] = print,
     ):
+        # every [ft]/[train] line goes through the structured logger: the
+        # sink (default: the `logger` callable, so print) still receives
+        # the human-readable string, and each line doubles as a typed
+        # `log.events{kind=...}` counter in the obs registry
+        log = as_structured(logger)
         step = start_step
         if resume:
             got_step, tree = self.ckpt.resume(target={"params": params, "opt": opt_state})
             if got_step is not None:
                 params, opt_state = tree["params"], tree["opt"]
                 step = got_step
-                logger(f"[ft] resumed from checkpoint at step {step}")
+                log.event(
+                    "ft.resume",
+                    f"[ft] resumed from checkpoint at step {step}",
+                    step=step,
+                )
 
         policy = (
             self.corruption_policy
@@ -193,9 +211,10 @@ class TrainLoop:
         if watch_sdc:
             from repro.robust import abft as _abft
 
-        def rollback(cur_step, params, opt_state, why):
+        def rollback(cur_step, params, opt_state, why, reason):
             nonlocal rollbacks, data_offset
             rollbacks += 1
+            obs_metrics.inc("train.rollback", reason=reason)
             if rollbacks > policy.max_rollbacks:
                 raise RuntimeError(
                     f"{why} persisted through {policy.max_rollbacks} "
@@ -207,13 +226,20 @@ class TrainLoop:
             )
             if got_step is not None:
                 data_offset += cur_step - got_step
-                logger(
+                log.event(
+                    "ft.rollback",
                     f"[ft] {why}: rolled back {cur_step} -> {got_step}, "
-                    f"data stream skipped ahead by {data_offset}"
+                    f"data stream skipped ahead by {data_offset}",
+                    step=cur_step,
+                    to_step=got_step,
+                    reason=reason,
                 )
                 return got_step, tree["params"], tree["opt"]
-            logger(
-                f"[ft] {why} and no checkpoint to roll back to; continuing"
+            log.event(
+                "ft.rollback_unavailable",
+                f"[ft] {why} and no checkpoint to roll back to; continuing",
+                step=cur_step,
+                reason=reason,
             )
             return cur_step, params, opt_state
 
@@ -222,18 +248,25 @@ class TrainLoop:
             if fail_at is not None and step == fail_at:
                 raise KeyboardInterrupt(f"simulated preemption at step {step}")
             t0 = time.perf_counter()
-            batch = self.batch_fn(step + data_offset)
+            with span("train/batch", step=step):
+                batch = self.batch_fn(step + data_offset)
             sdc_before = _abft.runtime_sdc_total() if watch_sdc else 0
-            if has_lr_scale and lr_scale != 1.0:
-                params, opt_state, metrics = self.train_step(
-                    params, opt_state, batch, lr_scale=lr_scale
-                )
-            else:
-                params, opt_state, metrics = self.train_step(params, opt_state, batch)
-            loss = float(metrics["loss"])
+            with span("train/step", step=step):
+                if has_lr_scale and lr_scale != 1.0:
+                    params, opt_state, metrics = self.train_step(
+                        params, opt_state, batch, lr_scale=lr_scale
+                    )
+                else:
+                    params, opt_state, metrics = self.train_step(
+                        params, opt_state, batch
+                    )
+                # float() blocks on the device value, so the span covers
+                # dispatch + execution, not just dispatch
+                loss = float(metrics["loss"])
             elapsed = time.perf_counter() - t0
             step += 1
 
+            sdc_delta = 0
             if watch_sdc:
                 # in-graph ABFT detections surface through debug callbacks;
                 # the barrier guarantees they have run before we compare
@@ -248,6 +281,7 @@ class TrainLoop:
                         step, params, opt_state,
                         f"SDC detected in step ({sdc_delta} checksum "
                         "mismatches)",
+                        "sdc",
                     )
                     streak = 0
                     lr_scale = 1.0
@@ -258,59 +292,106 @@ class TrainLoop:
             if policy is not None:
                 if not math.isfinite(loss):
                     streak += 1
+                    obs_metrics.inc("train.nonfinite")
                     if streak <= policy.skip_steps:
-                        logger(
+                        log.event(
+                            "ft.nonfinite",
                             f"[ft] nonfinite loss at step {step} "
-                            f"(streak {streak}): update skipped"
+                            f"(streak {streak}): update skipped",
+                            step=step,
+                            streak=streak,
                         )
                     elif streak <= policy.skip_steps + policy.backoff_steps:
                         if has_lr_scale:
                             lr_scale *= policy.lr_backoff
-                            logger(
+                            log.event(
+                                "ft.backoff",
                                 f"[ft] nonfinite streak {streak}: "
-                                f"lr backoff to {lr_scale:g}"
+                                f"lr backoff to {lr_scale:g}",
+                                step=step,
+                                lr_scale=lr_scale,
                             )
                         else:
-                            logger(
+                            log.event(
+                                "ft.nonfinite",
                                 f"[ft] nonfinite streak {streak}: train_step "
-                                "has no lr_scale hook, continuing to skip"
+                                "has no lr_scale hook, continuing to skip",
+                                step=step,
+                                streak=streak,
                             )
                     else:
                         step, params, opt_state = rollback(
                             step, params, opt_state,
                             f"nonfinite streak {streak}",
+                            "nonfinite",
                         )
                         streak = 0
                         lr_scale = 1.0
                 else:
                     if streak or lr_scale != 1.0:
-                        logger(f"[ft] recovered: finite loss at step {step}")
+                        log.event(
+                            "ft.recovered",
+                            f"[ft] recovered: finite loss at step {step}",
+                            step=step,
+                        )
                     streak = 0
                     lr_scale = 1.0
+
+            obs_metrics.inc("train.steps")
+            obs_metrics.observe("train.step_us", elapsed * 1e6)
+            if math.isfinite(loss):
+                obs_metrics.set_gauge("train.loss", loss)
+            if self.on_metrics is not None:
+                self.on_metrics({
+                    "step": step,
+                    "loss": loss,
+                    "dt_s": elapsed,
+                    "nonfinite_streak": streak,
+                    "sdc_delta": sdc_delta,
+                    "lr_scale": lr_scale,
+                })
 
             saved_this_step = False
             if self.watchdog is not None:
                 ev = self.watchdog.observe(step, elapsed)
                 if ev is not None:
                     if self.on_straggler == "raise":
-                        self.ckpt.maybe_save(
-                            step, {"params": params, "opt": opt_state}, force=True
-                        )
-                        self.ckpt.wait()
+                        with span("train/checkpoint", step=step):
+                            self.ckpt.maybe_save(
+                                step, {"params": params, "opt": opt_state},
+                                force=True,
+                            )
+                            self.ckpt.wait()
                         raise ev
-                    logger(f"[ft] straggler: {ev}")
+                    log.event(
+                        "ft.straggler", f"[ft] straggler: {ev}", step=step
+                    )
                     if self.on_straggler == "checkpoint":
-                        self.ckpt.maybe_save(
-                            step, {"params": params, "opt": opt_state}, force=True
-                        )
+                        with span("train/checkpoint", step=step):
+                            self.ckpt.maybe_save(
+                                step, {"params": params, "opt": opt_state},
+                                force=True,
+                            )
                         saved_this_step = True
             if not saved_this_step:
                 # a straggler-forced save above already committed this step;
                 # the periodic path would write the same tree twice
-                self.ckpt.maybe_save(step, {"params": params, "opt": opt_state})
+                with span("train/checkpoint", step=step):
+                    self.ckpt.maybe_save(
+                        step, {"params": params, "opt": opt_state}
+                    )
             if log_every and step % log_every == 0:
-                logger(f"[train] step={step} loss={loss:.4f} dt={elapsed*1e3:.1f}ms")
+                log.event(
+                    "train.step",
+                    f"[train] step={step} loss={loss:.4f} "
+                    f"dt={elapsed*1e3:.1f}ms",
+                    step=step,
+                    loss=loss,
+                )
 
-        self.ckpt.maybe_save(step, {"params": params, "opt": opt_state}, force=True)
-        self.ckpt.wait()
+        with span("train/checkpoint", step=step):
+            self.ckpt.maybe_save(
+                step, {"params": params, "opt": opt_state}, force=True
+            )
+            self.ckpt.wait()
         return params, opt_state, history

@@ -43,6 +43,7 @@ from pathlib import Path
 from typing import Dict, Optional, Tuple
 
 from repro.core.namespaces import NS_GEMM
+from repro.obs import metrics as obs_metrics
 
 try:  # unix-only; the lock degrades to best-effort elsewhere
     import fcntl
@@ -198,7 +199,13 @@ class KnobCache:
     # ---------------- storage ----------------
 
     def _quarantine_corrupt(self, err: Exception) -> None:
-        """Move an unreadable cache file aside so it never crashes again."""
+        """Move an unreadable cache file aside so it never crashes again.
+
+        The warning is deduplicated per path, but the counter fires on
+        every occurrence: recurring corruption (flaky disk, two writers
+        without the lock) is exactly what a fleet alerts on, and a
+        warn-once channel goes silent after the first event."""
+        obs_metrics.inc("tune.cache.corrupt", path=self.path)
         dest = f"{self.path}.corrupt-{int(time.time())}"
         try:
             os.replace(self.path, dest)
@@ -224,6 +231,7 @@ class KnobCache:
         meta = raw.get(META_KEY)
         stamped = meta.get("kernel_version") if isinstance(meta, dict) else None
         if stamped is not None and int(stamped) != cur and len(raw) > 1:
+            obs_metrics.inc("tune.cache.stale_purge", path=self.path)
             if self.path not in _WARNED_STALE:
                 _WARNED_STALE.add(self.path)
                 warnings.warn(
@@ -336,7 +344,9 @@ class KnobCache:
             # a host where detection failed) stay readable
             d = entries.get(self.key(m, n, k, dtype, backend, op))
         if d is None:
+            obs_metrics.inc("tune.cache.miss", op=op, backend=backend)
             return None
+        obs_metrics.inc("tune.cache.hit", op=op, backend=backend)
         return dataclasses.replace(Knobs.from_dict(d), source="cached")
 
     def put(
@@ -377,6 +387,7 @@ class KnobCache:
             # on a kernel-version bump — drop rather than trust
             del entries[key]
             self._save(drop_keys=(key,))
+            obs_metrics.inc("tune.cache.platform_purge", backend=backend)
             warn_key = (self.path, backend)
             if warn_key not in _WARNED_PLATFORM:
                 _WARNED_PLATFORM.add(warn_key)
@@ -389,6 +400,31 @@ class KnobCache:
                     stacklevel=3,
                 )
         return None
+
+    def purge_platform(self, backend: str) -> bool:
+        """Drop the persisted platform constants for ``backend`` (both the
+        device-keyed and legacy entries) so the next `repro.tune.calibrate`
+        re-fits.  The drift monitor calls this when measured kernel time
+        stops matching the calibrated model's predictions.  Returns True
+        when an entry was actually removed."""
+        entries = self._load()
+        drop = tuple(
+            k
+            for k in dict.fromkeys(
+                (
+                    self.platform_key(backend, self.device),
+                    self.platform_key(backend),
+                )
+            )
+            if k in entries
+        )
+        if not drop:
+            return False
+        for k in drop:
+            del entries[k]
+        self._save(drop_keys=drop)
+        obs_metrics.inc("tune.cache.platform_purge", backend=backend)
+        return True
 
     def put_platform(self, backend: str, constants: Dict) -> None:
         self._load()[self.platform_key(backend, self.device)] = dict(

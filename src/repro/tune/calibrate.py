@@ -343,19 +343,29 @@ def calibrate(
     the knob-cache file, and return the fit."""
     from repro.tune.tuner import _backend_name, default_cache
 
+    from repro.obs import metrics as obs_metrics
+    from repro.obs.trace import span
+
     cache = cache if cache is not None else default_cache()
     backend = _backend_name()
     if not force:
         hit = load_platform_constants(cache, backend=backend)
         if hit is not None:
             return hit
-    records = calibration_sweep(
-        shapes, dtype, base=base, measure_fn=measure_fn
-    )
-    constants = fit_constants(
-        records, base=base, backend=backend, device_kind=cache.device
-    )
-    cache.put_platform(backend, constants.as_dict())
+    with span("tune/calibrate", backend=backend):
+        records = calibration_sweep(
+            shapes, dtype, base=base, measure_fn=measure_fn
+        )
+        constants = fit_constants(
+            records, base=base, backend=backend, device_kind=cache.device
+        )
+        cache.put_platform(backend, constants.as_dict())
+        obs_metrics.inc("tune.calibrations", backend=backend)
+        obs_metrics.set_gauge(
+            "tune.calibration_fit_err",
+            constants.median_abs_rel_err,
+            backend=backend,
+        )
     return constants
 
 

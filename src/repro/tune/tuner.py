@@ -36,6 +36,9 @@ from repro.core.perf_model import (
     choose_knobs_analytical,
     simulate_gemm,
 )
+from repro.obs import drift as obs_drift
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import span
 from repro.tune.cache import KnobCache, Knobs, shape_bucket
 
 __all__ = [
@@ -504,6 +507,29 @@ def tune_gemm(
         if hit is not None:
             return hit
 
+    # sweep (cache miss or force): the span covers candidate generation,
+    # prediction ranking, and the confirmation measurements
+    with span("tune/tune_gemm", op=op):
+        obs_metrics.inc("tune.sweep", op=op, strategy=strategy)
+        return _tune_sweep(
+            m, n, k, dtype,
+            cache=cache, backend=backend, measure_fn=measure_fn,
+            max_candidates=max_candidates, op=op, strategy=strategy,
+            confirm_top=confirm_top, report=report,
+        )
+
+
+def _tune_sweep(
+    m, n, k, dtype, *,
+    cache: KnobCache,
+    backend: str,
+    measure_fn,
+    max_candidates: int,
+    op: str,
+    strategy: str,
+    confirm_top: int,
+    report: Optional[List[Dict]],
+) -> Knobs:
     if measure_fn is None:
         measure = functools.partial(measure_candidate, op=op)
     else:
@@ -565,6 +591,11 @@ def tune_gemm(
                 "predicted_s": predictions.get(i),
                 "measured_s": t,
             })
+        if predictions.get(i) is not None:
+            # every confirmation measurement doubles as a drift sample:
+            # predicted-vs-measured error per namespace feeds the
+            # staleness verdict on the calibrated constants
+            obs_drift.get_monitor().observe(op, predictions[i], t)
         if best is None or t < best.time_s:
             best = Knobs(
                 bm=cand.bm, bn=cand.bn,
@@ -600,6 +631,7 @@ def tune_gemm(
         reg = get_registry()
         cleared = reg.clear(namespace=op)
         if cleared:
+            obs_metrics.inc("tune.quarantine_lifted", cleared, op=op)
             # persist the lift too: put_health replaces the __health__|
             # set, so a fresh process no longer reloads the quarantine
             # this re-tune just healed

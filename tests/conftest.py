@@ -34,6 +34,22 @@ def fresh_health_registry():
     get_registry().reset()
 
 
+@pytest.fixture(autouse=True)
+def fresh_obs_registry():
+    """Reset the process-wide obs metrics registry and drift monitor
+    around every test (mirroring `fresh_health_registry`): counters
+    accumulated by one test must not leak into another's assertions,
+    and a drift flag raised by an injected mis-calibration must not
+    outlive the test that injected it."""
+    from repro import obs
+
+    obs.reset_all()
+    obs.set_enabled(None)
+    yield
+    obs.reset_all()
+    obs.set_enabled(None)
+
+
 def pytest_sessionfinish(session, exitstatus):
     """With REPRO_DEGRADATION_REPORT=<path> set, write the final health
     registry as JSON — the strict CI job uploads it as an artifact."""

@@ -131,7 +131,13 @@ def test_latency_report_empty_is_zeros(small_model):
         "n_requests": 0,
         "n_timed_out": 0,
         "ttft_mean_s": 0.0,
+        "ttft_p50_s": 0.0,
+        "ttft_p95_s": 0.0,
+        "ttft_p99_s": 0.0,
         "latency_mean_s": 0.0,
+        "token_p50_s": 0.0,
+        "token_p95_s": 0.0,
+        "token_p99_s": 0.0,
         "tokens_total": 0,
         "tokens_per_s": 0.0,
     }
